@@ -1,0 +1,67 @@
+//! MeshGraphNets training — the paper's training story (§6.4): the
+//! backward pass contains batch-dimension gradient reductions (Fig 2(b))
+//! and activation-grad multicast to paired gradient GEMMs (Fig 2(c));
+//! Kitsune's split reductions and spatial fusion give larger wins than
+//! inference, while gather/scatter aggregations stay bulk-sync.
+//!
+//! Run: `cargo run --release --example mgn_training`
+
+use kitsune::apps::mgn::{training, MgnConfig};
+use kitsune::graph::{OpKind, ReduceAxis};
+use kitsune::report::evaluate_app;
+use kitsune::sim::GpuConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = GpuConfig::a100();
+    let g = training(&MgnConfig::default());
+    let bwd_start = g.backward_start.unwrap();
+    let n_reduces = g
+        .compute_nodes()
+        .filter(|n| matches!(n.op, OpKind::Reduce { axis: ReduceAxis::Batch, .. }))
+        .count();
+    println!(
+        "MGN training graph: {} ops ({} forward, {} backward+opt), {} batch-grad reductions",
+        g.n_compute_ops(),
+        g.nodes()[..bwd_start].iter().filter(|n| n.op.is_compute()).count(),
+        g.nodes()[bwd_start..].iter().filter(|n| n.op.is_compute()).count(),
+        n_reduces
+    );
+
+    let eval = evaluate_app("MGN", &g, &cfg)?;
+    println!("\nend-to-end (paper Fig 14):");
+    println!("  bulk-sync {:>9.1} us", eval.bsp.sim.elapsed_s * 1e6);
+    println!(
+        "  vertical  {:>9.1} us  ({:.2}x — forward-only fusion)",
+        eval.vertical.sim.elapsed_s * 1e6,
+        eval.vertical_speedup()
+    );
+    println!(
+        "  kitsune   {:>9.1} us  ({:.2}x, traffic -{:.1}%)",
+        eval.kitsune.sim.elapsed_s * 1e6,
+        eval.kitsune_speedup(),
+        100.0 * eval.kitsune_traffic_reduction()
+    );
+
+    println!("\nper-subgraph, fwd/bwd split (paper Fig 12):");
+    let (mut fwd, mut bwd) = (Vec::new(), Vec::new());
+    for r in &eval.kitsune.regions {
+        if r.backward {
+            bwd.push(r.speedup());
+        } else {
+            fwd.push(r.speedup());
+        }
+        println!(
+            "  {:<40} {} {:>2} ops  {:.2}x",
+            r.name,
+            if r.backward { "bwd" } else { "fwd" },
+            r.n_ops,
+            r.speedup()
+        );
+    }
+    let gm = |v: &[f64]| kitsune::exec::geomean(v);
+    println!("\n  forward geomean {:.2}x | backward geomean {:.2}x", gm(&fwd), gm(&bwd));
+    println!(
+        "  (training benefits more: parallelized reductions vs the parallelism-limited baseline — paper §6.4)"
+    );
+    Ok(())
+}

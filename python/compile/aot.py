@@ -1,0 +1,129 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text**.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits one ``artifacts/<entry>.hlo.txt`` per entry point plus
+``artifacts/manifest.txt`` describing the ABI, one line per entry:
+
+    name<TAB>file<TAB>in=f32[1024,60],f32[60,256],...<TAB>out=<count>
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes (PJRT executables are shape-specialized).
+TRAIN_BATCH = 1024
+FWD_BATCH = 1024
+TILE_ROWS = 128  # coordinator streaming tile
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def param_specs():
+    return [spec(*s) for s in model.PARAM_SHAPES]
+
+
+def entries():
+    """(name, fn, example_args) for every AOT entry point."""
+    p = param_specs()
+    h = model.HIDDEN
+    return [
+        # Full forward pass (quickstart / nerf_inference examples).
+        (
+            "nerf_forward",
+            lambda x, *params: model.forward(x, *params, use_pallas=False),
+            [spec(FWD_BATCH, model.IN_DIM), *p],
+        ),
+        # Forward with the L1 Pallas kernel inlined (interpret mode lowers
+        # to plain HLO, so the Rust CPU client can run it — numerics must
+        # match nerf_forward exactly; pytest enforces this).
+        (
+            "nerf_forward_pallas",
+            lambda x, *params: model.forward(x, *params, use_pallas=True),
+            [spec(FWD_BATCH, model.IN_DIM), *p],
+        ),
+        # One SGD training step (e2e_train example).
+        (
+            "train_step",
+            model.train_step,
+            [spec(TRAIN_BATCH, model.IN_DIM), spec(TRAIN_BATCH, model.OUT_DIM), *p],
+        ),
+        # Spatial-pipeline stages (llama_serving/coordinator demo): tile in,
+        # tile out, weights as trailing args.
+        (
+            "stage_trunk0",
+            model.stage_trunk0,
+            [spec(TILE_ROWS, model.IN_DIM), p[0], p[1], p[2], p[3]],
+        ),
+        (
+            "stage_trunk1",
+            model.stage_trunk1,
+            [spec(TILE_ROWS, h), p[4], p[5]],
+        ),
+        (
+            "stage_head",
+            model.stage_head,
+            [spec(TILE_ROWS, h), p[6], p[7]],
+        ),
+    ]
+
+
+def fmt_spec(s) -> str:
+    dt = jnp.dtype(s.dtype).name
+    return f"{dt}[{','.join(str(d) for d in s.shape)}]"
+
+
+def n_outputs(fn, example_args) -> int:
+    out = jax.eval_shape(fn, *example_args)
+    if isinstance(out, (tuple, list)):
+        return len(out)
+    return 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, example_args in entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ",".join(fmt_spec(s) for s in example_args)
+        outs = n_outputs(fn, example_args)
+        manifest.append(f"{name}\t{name}.hlo.txt\tin={ins}\tout={outs}")
+        print(f"  {name}: {len(text)} chars, {len(example_args)} inputs, {outs} outputs")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

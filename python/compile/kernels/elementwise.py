@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: fused elementwise epilogue stage (bias + activation).
+
+The SIMT-class pipeline stage of the paper's spatial pipelines: consumes a
+tile from the producer GEMM and applies bias + nonlinearity before pushing
+downstream. Streams row tiles through VMEM.
+"""
+
+import functools
+
+import jax
+import jax.nn
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_M = 128
+
+
+def _kernel(x_ref, b_ref, o_ref, *, kind):
+    y = x_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    if kind == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif kind == "gelu":
+        y = jax.nn.gelu(y, approximate=True)
+    elif kind == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    else:
+        raise ValueError(f"unknown activation {kind}")
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "tile_m"))
+def bias_act(x, b, kind="relu", tile_m=DEFAULT_TILE_M):
+    """``act(x + b)`` streamed over row tiles. x: [M, N], b: [N]."""
+    m, n = x.shape
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0, f"M={m} not a multiple of tile_m={tile_m}"
+    return pl.pallas_call(
+        functools.partial(_kernel, kind=kind),
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, b)

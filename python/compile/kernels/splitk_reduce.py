@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: split-K GEMM with a parallel partial-sum reduction.
+
+The paper's Fig 2(b): reductions (split-K GEMMs, batch-dimension gradient
+sums) starve for parallelism under BSP. Kitsune splits the reduction
+dimension across CTAs and funnels partials through queues. On TPU the
+same insight maps to a grid over K-slabs with an accumulating output
+block: slab ``j`` computes ``x[:, j] @ w[j, :]`` on the MXU and adds it
+into the VMEM-resident output tile — a many-to-one dataflow expressed by
+the grid schedule instead of a queue.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """Grid step j: accumulate one K-slab's partial product."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32)
+    )
+    o_ref[...] = o_ref[...] + part.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits",))
+def splitk_matmul(x, w, n_splits=4):
+    """``x[M,K] @ w[K,N]`` with K partitioned into ``n_splits`` slabs."""
+    m, k = x.shape
+    _, n = w.shape
+    n_splits = min(n_splits, k)
+    assert k % n_splits == 0, f"K={k} not a multiple of n_splits={n_splits}"
+    slab = k // n_splits
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_splits,),
+        in_specs=[
+            pl.BlockSpec((m, slab), lambda j: (0, j)),
+            pl.BlockSpec((slab, n), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _reduce_kernel(x_ref, o_ref):
+    """Accumulate one batch slab into the running sum."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = o_ref[...] + jnp.sum(
+        x_ref[...].astype(jnp.float32), axis=0
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits",))
+def batch_reduce(x, n_splits=8):
+    """Gradient-style ``sum(x, axis=0)`` as a parallel fan-in tree."""
+    m, n = x.shape
+    n_splits = min(n_splits, m)
+    assert m % n_splits == 0, f"M={m} not a multiple of n_splits={n_splits}"
+    slab = m // n_splits
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(n_splits,),
+        in_specs=[pl.BlockSpec((slab, n), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((n,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,104 @@
+"""L2: the JAX model — a NeRF-class MLP (the paper's hidden-dim-256
+challenge network), its loss, and an SGD train step.
+
+Build-time only: ``aot.py`` lowers the jitted entry points to HLO text
+that the Rust runtime executes through PJRT. Nothing here runs on the
+request path.
+
+Two forward paths:
+* ``forward(..., use_pallas=True)`` routes the trunk's Linear->ReLU->Linear
+  pairs through the L1 ``fused_mlp`` Pallas kernel (VMEM-resident hidden
+  tile — the Kitsune schedule);
+* ``use_pallas=False`` is the pure-jnp reference, used by ``jax.grad`` in
+  the train step and as the pytest oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise, fused_mlp, ref
+
+# NeRF-class configuration (scaled for CPU-PJRT e2e training).
+IN_DIM = 60  # positional encoding width
+HIDDEN = 256
+OUT_DIM = 3
+LR = 1e-2
+
+# Parameter list layout (flat, deterministic — the AOT ABI):
+#   w1[IN,H] b1[H] w2[H,H] b2[H] w3[H,H] b3[H] w4[H,OUT] b4[OUT]
+PARAM_SHAPES = [
+    (IN_DIM, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, HIDDEN),
+    (HIDDEN,),
+    (HIDDEN, OUT_DIM),
+    (OUT_DIM,),
+]
+
+
+def init_params(key):
+    """He-initialized flat parameter list."""
+    params = []
+    for shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def forward(x, *params, use_pallas=False):
+    """MLP forward: trunk of three hidden layers + linear head + sigmoid."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    if use_pallas:
+        # Trunk pairs through the L1 kernel: hidden tiles stay in VMEM.
+        h = fused_mlp.fused_mlp(x, w1, b1, w2, b2)
+        h = jnp.maximum(h, 0.0)
+        h = jnp.maximum(h @ w3 + b3, 0.0)
+        y = elementwise.bias_act(h @ w4, b4, kind="sigmoid")
+    else:
+        h = jnp.maximum(ref.fused_mlp(x, w1, b1, w2, b2), 0.0)
+        h = jnp.maximum(h @ w3 + b3, 0.0)
+        y = ref.bias_act(h @ w4, b4, kind="sigmoid")
+    return y
+
+
+def loss_fn(params, x, y):
+    """Photometric MSE (NeRF's training loss)."""
+    pred = forward(x, *params, use_pallas=False)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_step(x, y, *params):
+    """One SGD step. AOT ABI: ``(x, y, *params) -> (loss, *new_params)``."""
+    loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y)
+    new_params = [p - LR * g for p, g in zip(params, grads)]
+    return (loss, *new_params)
+
+
+# --- Spatial-pipeline stage functions (the coordinator's stage kernels) ---
+# The Rust coordinator streams row tiles through ring queues between these
+# three stages — a host-level realization of the paper's execution model,
+# each stage a separately compiled XLA executable.
+
+
+def stage_trunk0(x, w1, b1, w2, b2):
+    """Pipeline stage 0: the fused-MLP producer (TensorCore-class)."""
+    return jnp.maximum(ref.fused_mlp(x, w1, b1, w2, b2), 0.0)
+
+
+def stage_trunk1(h, w3, b3):
+    """Pipeline stage 1: mid trunk layer."""
+    return jnp.maximum(h @ w3 + b3, 0.0)
+
+
+def stage_head(h, w4, b4):
+    """Pipeline stage 2: color head + sigmoid (SIMT-class epilogue)."""
+    return ref.bias_act(h @ w4, b4, kind="sigmoid")

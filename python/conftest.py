@@ -1,0 +1,6 @@
+"""Make the `compile` package importable regardless of pytest's CWD
+(supports both `cd python && pytest tests/` and `pytest python/tests/`)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

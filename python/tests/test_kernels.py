@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed numpy generates data.
+This is the core correctness signal for the kernels the AOT artifacts
+embed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, fused_mlp, ref, splitk_reduce
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+TOL_BF16 = dict(rtol=2e-2, atol=2e-2)
+
+
+class TestFusedMlp:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        k=st.sampled_from([8, 60, 64]),
+        h=st.sampled_from([32, 128, 256]),
+        n=st.sampled_from([3, 16, 64]),
+        tile_m=st.sampled_from([32, 64, 128]),
+    )
+    def test_matches_ref_f32(self, tiles, k, h, n, tile_m):
+        m = tiles * tile_m
+        x, w1, b1 = randn(m, k), randn(k, h), randn(h)
+        w2, b2 = randn(h, n), randn(n)
+        got = fused_mlp.fused_mlp(x, w1, b1, w2, b2, tile_m=tile_m)
+        want = ref.fused_mlp(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_bf16_inputs(self):
+        m, k, h, n = 128, 60, 256, 3
+        x = randn(m, k).astype(jnp.bfloat16)
+        w1, b1 = randn(k, h).astype(jnp.bfloat16), randn(h).astype(jnp.bfloat16)
+        w2, b2 = randn(h, n).astype(jnp.bfloat16), randn(n).astype(jnp.bfloat16)
+        got = fused_mlp.fused_mlp(x, w1, b1, w2, b2)
+        want = ref.fused_mlp(
+            x.astype(jnp.float32),
+            w1.astype(jnp.float32),
+            b1.astype(jnp.float32),
+            w2.astype(jnp.float32),
+            b2.astype(jnp.float32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want), **TOL_BF16
+        )
+
+    def test_rejects_ragged_m(self):
+        with pytest.raises(AssertionError):
+            fused_mlp.fused_mlp(
+                randn(100, 8), randn(8, 16), randn(16), randn(16, 4), randn(4),
+                tile_m=64,
+            )
+
+    def test_relu_actually_clamps(self):
+        # All-negative first-layer output => second GEMM sees zeros.
+        x = jnp.ones((128, 8))
+        w1 = -jnp.ones((8, 16))
+        b1 = jnp.zeros(16)
+        w2, b2 = randn(16, 4), randn(4)
+        got = fused_mlp.fused_mlp(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(
+            np.asarray(got), np.tile(np.asarray(b2), (128, 1)), **TOL
+        )
+
+
+class TestSplitK:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([16, 64, 128]),
+        k=st.sampled_from([32, 64, 256]),
+        n=st.sampled_from([8, 64, 128]),
+        n_splits=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_matches_ref(self, m, k, n, n_splits):
+        if k % n_splits:
+            n_splits = 1
+        x, w = randn(m, k), randn(k, n)
+        got = splitk_reduce.splitk_matmul(x, w, n_splits=n_splits)
+        want = ref.splitk_matmul(x, w, n_splits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_split_count_invariant(self):
+        # Fig 2(b): the reduction tree's width must not change the result.
+        x, w = randn(64, 256), randn(256, 32)
+        base = splitk_reduce.splitk_matmul(x, w, n_splits=1)
+        for s in (2, 4, 8, 16):
+            got = splitk_reduce.splitk_matmul(x, w, n_splits=s)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(base), rtol=1e-4, atol=1e-4
+            )
+
+
+class TestBatchReduce:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 64, 512]),
+        n=st.sampled_from([16, 256]),
+        n_splits=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_matches_ref(self, m, n, n_splits):
+        if m % n_splits:
+            n_splits = 1
+        x = randn(m, n)
+        got = splitk_reduce.batch_reduce(x, n_splits=n_splits)
+        want = ref.batch_reduce(x)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestBiasAct:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        n=st.sampled_from([16, 64, 256]),
+        kind=st.sampled_from(["relu", "gelu", "sigmoid"]),
+    )
+    def test_matches_ref(self, tiles, n, kind):
+        m = tiles * 64
+        x, b = randn(m, n), randn(n)
+        got = elementwise.bias_act(x, b, kind=kind, tile_m=64)
+        want = ref.bias_act(x, b, kind=kind)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            elementwise.bias_act(randn(64, 8), randn(8), kind="tanhh")

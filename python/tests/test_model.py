@@ -1,0 +1,71 @@
+"""L2 correctness: model shapes, pallas-vs-ref forward equivalence,
+train-step descent, and pipeline-stage composition == monolithic forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def data(batch=256):
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (batch, model.IN_DIM), jnp.float32)
+    y = jax.nn.sigmoid(jax.random.normal(ky, (batch, model.OUT_DIM), jnp.float32))
+    return x, y
+
+
+def test_param_shapes():
+    params = model.init_params(KEY)
+    assert [p.shape for p in params] == [tuple(s) for s in model.PARAM_SHAPES]
+
+
+def test_forward_shape_and_range():
+    params = model.init_params(KEY)
+    x, _ = data()
+    y = model.forward(x, *params)
+    assert y.shape == (256, model.OUT_DIM)
+    assert np.all(np.asarray(y) >= 0.0) and np.all(np.asarray(y) <= 1.0)
+
+
+def test_pallas_forward_matches_ref():
+    """The L1-kernel-backed forward must equal the pure-jnp forward —
+    the whole-model analog of the kernel-vs-ref tests."""
+    params = model.init_params(KEY)
+    x, _ = data(512)
+    y_ref = model.forward(x, *params, use_pallas=False)
+    y_pal = model.forward(x, *params, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(y_pal), np.asarray(y_ref), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_train_step_descends():
+    params = model.init_params(KEY)
+    x, y = data(512)
+    losses = []
+    for _ in range(30):
+        loss, *params = model.train_step(x, y, *params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_stage_composition_equals_forward():
+    """Streaming the three pipeline stages over row tiles must reproduce
+    the monolithic forward exactly — the property the Rust coordinator
+    relies on."""
+    params = model.init_params(KEY)
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    x, _ = data(512)
+    want = model.forward(x, *params)
+    tile = 128
+    outs = []
+    for i in range(0, x.shape[0], tile):
+        t = x[i : i + tile]
+        h0 = model.stage_trunk0(t, w1, b1, w2, b2)
+        h1 = model.stage_trunk1(h0, w3, b3)
+        outs.append(model.stage_head(h1, w4, b4))
+    got = jnp.concatenate(outs, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)

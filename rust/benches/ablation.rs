@@ -1,0 +1,12 @@
+//! Bench: ablation of Kitsune's design choices (dual-arbiter scheduler,
+//! queue depth, tile granularity, ILP load balancing) — the DESIGN.md §4
+//! decisions, each knocked out independently.
+use kitsune::bench::bench;
+use kitsune::report::ablation_table;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    println!("{}", ablation_table(&cfg).unwrap());
+    bench("ablation/full-matrix", 0, 3, || ablation_table(&cfg).unwrap());
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig 10 (inference subgraph speedups incl.
+//! hardware sensitivity) and time the per-app evaluation.
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+
+fn main() {
+    let cfgs = report::sensitivity_configs();
+    let names: Vec<String> = cfgs.iter().map(|c| c.name.clone()).collect();
+    let suite = apps::inference_suite();
+    let evals: Vec<_> = cfgs
+        .iter()
+        .map(|c| report::evaluate_suite(&suite, c).unwrap())
+        .collect();
+    println!(
+        "{}",
+        report::subgraph_speedups(
+            "Fig 10. Inference subgraph speedups over bulk-sync (with sensitivity).",
+            &names,
+            &evals,
+            false
+        )
+    );
+    let (name, g) = &suite[3]; // NERF
+    bench("fig10/evaluate-nerf", 1, 10, || {
+        report::evaluate_app(name, g, &cfgs[0]).unwrap()
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Fig 11 (inference end-to-end speedups) and
+//! time the three-way evaluation per application.
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    let suite = apps::inference_suite();
+    let evals = report::evaluate_suite(&suite, &cfg).unwrap();
+    println!(
+        "{}",
+        report::e2e_speedups("Fig 11. Inference end-to-end speedup over bulk-sync.", &evals)
+    );
+    for (name, g) in suite.iter() {
+        bench(&format!("fig11/eval-{name}"), 1, 3, || {
+            report::evaluate_app(name, g, &cfg).unwrap()
+        });
+    }
+}

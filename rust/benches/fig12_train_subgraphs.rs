@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig 12 (training subgraph speedups, fwd/bwd
+//! split, incl. sensitivity).
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+
+fn main() {
+    let cfgs = report::sensitivity_configs();
+    let names: Vec<String> = cfgs.iter().map(|c| c.name.clone()).collect();
+    let suite = apps::training_suite();
+    let evals: Vec<_> = cfgs
+        .iter()
+        .map(|c| report::evaluate_suite(&suite, c).unwrap())
+        .collect();
+    println!(
+        "{}",
+        report::subgraph_speedups(
+            "Fig 12. Training subgraph speedups over bulk-sync (with sensitivity).",
+            &names,
+            &evals,
+            true
+        )
+    );
+    let (name, g) = &suite[3]; // NERF training
+    bench("fig12/evaluate-nerf-train", 1, 5, || {
+        report::evaluate_app(name, g, &cfgs[0]).unwrap()
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig 14 (training end-to-end speedups).
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    let suite = apps::training_suite();
+    let evals = report::evaluate_suite(&suite, &cfg).unwrap();
+    println!(
+        "{}",
+        report::e2e_speedups("Fig 14. Training end-to-end speedup over bulk-sync.", &evals)
+    );
+    bench("fig14/full-training-suite", 1, 3, || {
+        report::evaluate_suite(&suite, &cfg).unwrap()
+    });
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig 5 (queue bandwidth vs payload, sync
+//! on/off) and time the analytic model sweep.
+use kitsune::bench::bench;
+use kitsune::queue::QueueModel;
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    println!("{}", report::fig5(&cfg));
+    let model = QueueModel::new(cfg);
+    bench("fig5/sweep-54-queues", 3, 100, || model.fig5_sweep(54));
+    bench("fig5/single-point", 3, 1000, || model.evaluate(128 * 1024, 54, true));
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Figs 3 and 13 (runtime in SM x DRAM
+//! utilization quadrants, baseline vs Kitsune).
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    let inf = report::evaluate_suite(&apps::inference_suite(), &cfg).unwrap();
+    let tr = report::evaluate_suite(&apps::training_suite(), &cfg).unwrap();
+    println!("{}", report::fig3(&inf, &tr));
+    println!("{}", report::fig13(&inf, &tr));
+    let (name, g) = &apps::inference_suite()[2]; // MGN
+    bench("fig3+13/evaluate-mgn", 1, 5, || {
+        report::evaluate_app(name, g, &cfg).unwrap()
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench: the real host ring queue (the §4.1 primitive itself) —
+//! SPSC/MPMC handoff rate and payload bandwidth, the host-level analog
+//! of the paper's silicon queue microbenchmark.
+use kitsune::bench::{bench, black_box};
+use kitsune::queue::RingQueue;
+use std::sync::Arc;
+use std::thread;
+
+fn spsc_throughput(payload_f32: usize, n_msgs: usize, capacity: usize) -> f64 {
+    let q: Arc<RingQueue<Vec<f32>>> = RingQueue::with_capacity(capacity);
+    let p = Arc::clone(&q);
+    let t0 = std::time::Instant::now();
+    let producer = thread::spawn(move || {
+        let tile = vec![1.0f32; payload_f32];
+        for _ in 0..n_msgs {
+            p.push(tile.clone()).unwrap();
+        }
+        p.close();
+    });
+    let mut sum = 0.0f32;
+    while let Some(v) = q.pop() {
+        sum += v[0];
+    }
+    producer.join().unwrap();
+    black_box(sum);
+    let secs = t0.elapsed().as_secs_f64();
+    (n_msgs * payload_f32 * 4) as f64 / secs
+}
+
+fn main() {
+    println!("host ring queue bandwidth (SPSC, double-buffered cap=2 vs cap=8):");
+    for payload in [256usize, 4096, 16384, 65536] {
+        let bw2 = spsc_throughput(payload, 2000, 2);
+        let bw8 = spsc_throughput(payload, 2000, 8);
+        println!(
+            "  payload {:>7}B  cap2 {:>8.1} MB/s   cap8 {:>8.1} MB/s",
+            payload * 4,
+            bw2 / 1e6,
+            bw8 / 1e6
+        );
+    }
+    bench("queue_host/handoff-64KB", 1, 10, || {
+        spsc_throughput(16384, 500, 8)
+    });
+    bench("queue_host/handoff-1KB", 1, 10, || spsc_throughput(256, 2000, 8));
+}

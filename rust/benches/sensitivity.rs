@@ -1,0 +1,24 @@
+//! Bench: regenerate the §6 hardware-synergy study (2x SMs / 2x L2 BW
+//! with DRAM fixed) — the paper's headline 47%/27% Kitsune gains vs
+//! 18-26% for baseline execution.
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::report;
+
+fn main() {
+    let cfgs = report::sensitivity_configs();
+    let names: Vec<String> = cfgs.iter().map(|c| c.name.clone()).collect();
+    for (title, suite) in [
+        ("Inference", apps::inference_suite()),
+        ("Training", apps::training_suite()),
+    ] {
+        let evals: Vec<_> = cfgs
+            .iter()
+            .map(|c| report::evaluate_suite(&suite, c).unwrap())
+            .collect();
+        println!("== {title} ==\n{}", report::sensitivity(&names, &evals));
+    }
+    bench("sensitivity/one-config-inference", 1, 3, || {
+        report::evaluate_suite(&apps::inference_suite(), &cfgs[1]).unwrap()
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Table 2 (fusion coverage + traffic reduction)
+//! and time the full compiler+simulator evaluation behind it.
+use kitsune::apps;
+use kitsune::bench::bench;
+use kitsune::compiler::{compile, SelectOptions};
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() {
+    let cfg = GpuConfig::a100();
+    let inf = report::evaluate_suite(&apps::inference_suite(), &cfg).unwrap();
+    let tr = report::evaluate_suite(&apps::training_suite(), &cfg).unwrap();
+    println!("{}", report::table2(&inf, &tr));
+    let nerf = apps::nerf::inference(&apps::nerf::NerfConfig::default());
+    bench("table2/compile-nerf", 2, 50, || {
+        compile(&nerf, &cfg, &SelectOptions::default()).unwrap()
+    });
+    bench("table2/full-inference-suite", 1, 5, || {
+        report::evaluate_suite(&apps::inference_suite(), &cfg).unwrap()
+    });
+}

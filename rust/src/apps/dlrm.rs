@@ -1,0 +1,113 @@
+//! DLRM (Naumov et al., 2019) — "Predicting ad clicks" (paper Table 1).
+//!
+//! Bottom MLP over dense features, embedding-bag gathers for sparse
+//! features (excluded from sf-nodes per §5.1 — they index across all
+//! data), pairwise feature interaction (batched dot products, the op whose
+//! backward dominates DLRM training per §6.4), and a top MLP to the CTR
+//! logit.
+
+use crate::graph::{EwKind, Graph, GraphBuilder, GraphKind};
+use crate::graph::{training_graph, AutodiffOptions};
+
+/// Model configuration (MLPerf-style small DLRM).
+#[derive(Debug, Clone)]
+pub struct DlrmConfig {
+    pub batch: usize,
+    pub dense_features: usize,
+    pub embedding_dim: usize,
+    pub n_embedding_bags: usize,
+    pub table_rows: usize,
+    pub bottom_mlp: Vec<usize>,
+    pub top_mlp: Vec<usize>,
+}
+
+impl Default for DlrmConfig {
+    fn default() -> Self {
+        DlrmConfig {
+            batch: 2048,
+            dense_features: 13,
+            embedding_dim: 128,
+            n_embedding_bags: 2, // grouped embedding-bag kernels
+            table_rows: 1_000_000,
+            bottom_mlp: vec![512, 256, 128],
+            top_mlp: vec![1024, 1024, 512, 1],
+        }
+    }
+}
+
+/// Forward (inference) graph.
+pub fn inference(cfg: &DlrmConfig) -> Graph {
+    build(cfg, false)
+}
+
+/// Training graph: forward + BCE loss + backward + optimizer.
+pub fn training(cfg: &DlrmConfig) -> Graph {
+    let fwd = build(cfg, true);
+    training_graph(&fwd, AutodiffOptions::default())
+}
+
+fn build(cfg: &DlrmConfig, with_loss: bool) -> Graph {
+    let mut b = GraphBuilder::new("dlrm", GraphKind::Inference);
+    // Bottom MLP over dense features.
+    let dense = b.input(&[cfg.batch, cfg.dense_features], "dense");
+    let mut x = dense;
+    for (i, &w) in cfg.bottom_mlp.iter().enumerate() {
+        x = b.linear(x, w, true, &format!("bot.{i}"));
+        x = b.relu(x, &format!("bot.{i}.relu"));
+    }
+    // Sparse features: grouped embedding-bag gathers (excluded ops).
+    let mut feats = vec![x];
+    for t in 0..cfg.n_embedding_bags {
+        let idx = b.input(&[cfg.batch], &format!("sparse.{t}"));
+        let e = b.gather(idx, cfg.table_rows, cfg.embedding_dim, &format!("emb.{t}"));
+        feats.push(e);
+    }
+    // Pairwise feature interaction (Z = X·Xᵀ lower triangle).
+    let cat = b.concat(&feats, "feat_cat");
+    let n_feat = 1 + cfg.n_embedding_bags;
+    let inter = b.interaction(cat, n_feat, cfg.embedding_dim, "interaction");
+    // Top MLP over [bottom_out, interactions].
+    let top_in = b.concat(&[x, inter], "top_cat");
+    let mut y = top_in;
+    let last = cfg.top_mlp.len() - 1;
+    for (i, &w) in cfg.top_mlp.iter().enumerate() {
+        y = b.linear(y, w, true, &format!("top.{i}"));
+        if i < last {
+            y = b.relu(y, &format!("top.{i}.relu"));
+        }
+    }
+    let logit = b.ew1(EwKind::Sigmoid, y, "sigmoid");
+    if with_loss {
+        b.loss(logit, "bce_loss");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_op_count_near_paper() {
+        // Paper Table 2: DLRM inference has 21 ops.
+        let g = inference(&DlrmConfig::default());
+        let n = g.n_compute_ops();
+        assert!((18..=26).contains(&n), "DLRM inference ops = {n}");
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn training_op_count_near_paper() {
+        // Paper Table 2: DLRM training has 59 ops.
+        let g = training(&DlrmConfig::default());
+        let n = g.n_compute_ops();
+        assert!((45..=75).contains(&n), "DLRM training ops = {n}");
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn has_excluded_gathers() {
+        let g = inference(&DlrmConfig::default());
+        assert!(g.compute_nodes().any(|n| n.op.excluded_from_subgraphs()));
+    }
+}

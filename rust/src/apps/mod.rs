@@ -1,0 +1,61 @@
+//! The paper's five challenge applications (Table 1) as graph builders:
+//! DLRM, MeshGraphNets, NeRF, GraphCast, Llama-3-8B (ctx / tok / train).
+//!
+//! Shapes follow each model's published configuration, scaled where needed
+//! for simulation tractability (documented per module); operator counts
+//! land in the bands of the paper's Table 2.
+
+pub mod dlrm;
+pub mod graphcast;
+pub mod llama;
+pub mod mgn;
+pub mod nerf;
+
+use crate::graph::Graph;
+
+/// Llama prefill sequence length used across the evaluation.
+pub const LLAMA_SEQ: usize = 2048;
+
+/// The inference evaluation suite — the six bars of Figs 3/10/11/13.
+pub fn inference_suite() -> Vec<(String, Graph)> {
+    vec![
+        ("DLRM".into(), dlrm::inference(&dlrm::DlrmConfig::default())),
+        ("GRC".into(), graphcast::inference(&graphcast::GraphCastConfig::default())),
+        ("MGN".into(), mgn::inference(&mgn::MgnConfig::default())),
+        ("NERF".into(), nerf::inference(&nerf::NerfConfig::default())),
+        ("LL-CTX".into(), llama::inference(&llama::LlamaConfig::context(LLAMA_SEQ))),
+        ("LL-TOK".into(), llama::inference(&llama::LlamaConfig::decode(LLAMA_SEQ))),
+    ]
+}
+
+/// The training evaluation suite — the five bars of Figs 12/14.
+pub fn training_suite() -> Vec<(String, Graph)> {
+    vec![
+        ("DLRM".into(), dlrm::training(&dlrm::DlrmConfig::default())),
+        ("GRC".into(), graphcast::training(&graphcast::GraphCastConfig::default())),
+        ("MGN".into(), mgn::training(&mgn::MgnConfig::default())),
+        ("NERF".into(), nerf::training(&nerf::NerfConfig::default())),
+        ("LLAMA".into(), llama::training(&llama::LlamaConfig::context(LLAMA_SEQ))),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_are_complete_and_valid() {
+        let inf = inference_suite();
+        assert_eq!(inf.len(), 6);
+        for (name, g) in &inf {
+            assert!(g.validate().is_empty(), "{name}: {:?}", g.validate());
+            assert!(g.n_compute_ops() > 10, "{name}");
+        }
+        let tr = training_suite();
+        assert_eq!(tr.len(), 5);
+        for (name, g) in &tr {
+            assert!(g.validate().is_empty(), "{name}");
+            assert!(g.backward_start.is_some(), "{name} has no backward pass");
+        }
+    }
+}

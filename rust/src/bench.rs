@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, mean/min/max/σ reporting, and a no-inline sink.
+//!
+//! Every `rust/benches/*.rs` target (one per paper table/figure) uses
+//! this: it both *times* the experiment driver and *prints* the
+//! regenerated table/figure, so `cargo bench` reproduces the paper's
+//! evaluation artifacts end to end.
+
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Stats {
+    fn from_samples(samples: &[f64]) -> Stats {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        Stats {
+            iters: samples.len(),
+            mean_s: mean,
+            min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().copied().fold(0.0, f64::max),
+            stddev_s: var.sqrt(),
+        }
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations,
+/// printing a criterion-style line.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let st = Stats::from_samples(&samples);
+    println!(
+        "bench {name:<42} {:>12} mean  [{} .. {}]  σ {}  ({} iters)",
+        fmt_t(st.mean_s),
+        fmt_t(st.min_s),
+        fmt_t(st.max_s),
+        fmt_t(st.stddev_s),
+        st.iters
+    );
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let st = bench("noop", 1, 5, || 42u64);
+        assert_eq!(st.iters, 5);
+        assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+}

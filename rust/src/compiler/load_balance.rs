@@ -1,0 +1,174 @@
+//! §5.3 load balancing (Algorithm 2): allocate CTAs to pipeline stages via
+//! the max-min ILP, over-subscribing SMs with one SIMT-heavy and one
+//! TensorCore-heavy CTA each.
+
+use super::pipeline::{PipelineSpec, StageSpec};
+use crate::graph::{Graph, ResourceClass};
+use crate::ilp::{solve_maxmin, AllocVar, Allocation};
+use crate::perfmodel;
+use crate::sim::GpuConfig;
+use anyhow::{anyhow, Result};
+
+/// A load-balanced pipeline: the design plus its CTA allocation.
+#[derive(Debug, Clone)]
+pub struct BalancedPipeline {
+    pub spec: PipelineSpec,
+    /// CTAs per stage (the ILP's `a_i`).
+    pub alloc: Vec<usize>,
+    /// ILP objective: sf-node iterations/second before the DRAM/L2 caps.
+    pub ilp_throughput: f64,
+    /// Post-cap estimate (the `thrpt * Bytes < Peak` rows of Algorithm 2).
+    pub est_throughput: f64,
+}
+
+/// Stage-level work summary used to form the ILP coefficients.
+#[derive(Debug, Clone)]
+pub struct StageWork {
+    pub flops: f64,
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub u: f64,
+    pub class: ResourceClass,
+    pub natural_ctas: usize,
+}
+
+/// Sum work across a stage's member nodes under the pipeline's I/O
+/// placement (`io_of` maps node-local placement decisions; see lower.rs).
+pub fn stage_work(
+    g: &Graph,
+    stage: &StageSpec,
+    io_of: impl Fn(crate::graph::NodeId) -> perfmodel::IoPlacement,
+) -> StageWork {
+    let mut flops = 0.0;
+    let mut dram = 0.0;
+    let mut l2 = 0.0;
+    for &nid in &stage.nodes {
+        let node = g.node(nid);
+        flops += node.flops();
+        let (d, l) = perfmodel::traffic(node, g, &io_of(nid));
+        dram += d;
+        l2 += l;
+    }
+    let anchor = g.node(stage.nodes[0]);
+    let natural = perfmodel::natural_ctas(anchor) * stage.parallel_split;
+    StageWork {
+        flops,
+        dram_bytes: dram,
+        l2_bytes: l2,
+        u: perfmodel::pipe_utilization(anchor),
+        class: stage.class,
+        natural_ctas: natural.max(1),
+    }
+}
+
+/// Algorithm 2. `works[i]` describes stage `i`'s per-sf-iteration work.
+pub fn balance(
+    spec: &PipelineSpec,
+    works: &[StageWork],
+    cfg: &GpuConfig,
+) -> Result<BalancedPipeline> {
+    assert_eq!(spec.stages.len(), works.len());
+    // Per-CTA sustainable L2/DRAM bandwidth (a single CTA has bounded
+    // memory-level parallelism; ~L2_bw / #SMs).
+    let per_cta_bw = cfg.l2_bw / cfg.sm_count as f64;
+
+    let vars: Vec<AllocVar> = works
+        .iter()
+        .map(|w| {
+            let pipe = match w.class {
+                ResourceClass::Tensor => cfg.tensor_flops_per_sm(),
+                ResourceClass::Simt => cfg.simt_flops_per_sm(),
+            };
+            // One-CTA stage time: compute at `u` of its pipe share
+            // (s_i = 1/u is already reflected: time uses compute only —
+            // memory round trips are gone in spatial mode, enforced
+            // globally by the bandwidth caps below).
+            let t_compute = w.flops / (pipe * w.u).max(1.0);
+            let t_mem = (w.dram_bytes + w.l2_bytes) / per_cta_bw;
+            let t = t_compute.max(t_mem).max(1e-12);
+            AllocVar {
+                coeff: 1.0 / t,
+                class: match w.class {
+                    ResourceClass::Tensor => 0,
+                    ResourceClass::Simt => 1,
+                },
+                cap: w.natural_ctas.min(cfg.sm_count),
+            }
+        })
+        .collect();
+
+    let budgets = [cfg.sm_count, cfg.sm_count];
+    let Allocation { a, throughput } = solve_maxmin(&vars, &budgets)
+        .ok_or_else(|| anyhow!("sf-node {} unbalanceable: too many stages", spec.sf_id))?;
+
+    // Algorithm 2's bandwidth rows: thrpt * Bytes < Peak.
+    let dram_bytes: f64 = works.iter().map(|w| w.dram_bytes).sum();
+    let l2_bytes: f64 = works.iter().map(|w| w.l2_bytes).sum();
+    let mut est = throughput;
+    if dram_bytes > 0.0 {
+        est = est.min(cfg.dram_bw / dram_bytes);
+    }
+    if l2_bytes > 0.0 {
+        est = est.min(cfg.l2_bw / l2_bytes);
+    }
+
+    Ok(BalancedPipeline { spec: spec.clone(), alloc: a, ilp_throughput: throughput, est_throughput: est })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::patterns::PatternLib;
+    use crate::compiler::pipeline::design_pipeline;
+    use crate::compiler::subgraph::{select_subgraphs, SelectOptions};
+    use crate::graph::{EwKind, GraphBuilder, GraphKind};
+    use crate::perfmodel::IoPlacement;
+
+    fn balanced_mlp() -> (BalancedPipeline, usize) {
+        let mut b = GraphBuilder::new("mlp", GraphKind::Inference);
+        let x = b.input(&[4096, 1024], "x");
+        b.mlp(x, &[4096, 4096, 1024], EwKind::Gelu, false, "ffn");
+        let g = b.finish();
+        let sel = select_subgraphs(&g, &PatternLib::standard(), &SelectOptions::default());
+        assert_eq!(sel.sf_nodes.len(), 1);
+        let spec = design_pipeline(&g, &sel.sf_nodes[0]);
+        let works: Vec<StageWork> = spec
+            .stages
+            .iter()
+            .map(|s| stage_work(&g, s, |nid| IoPlacement::bsp(g.node(nid).inputs.len())))
+            .collect();
+        let cfg = GpuConfig::a100();
+        let n_stages = spec.stages.len();
+        (balance(&spec, &works, &cfg).unwrap(), n_stages)
+    }
+
+    #[test]
+    fn allocation_covers_every_stage() {
+        let (bp, n) = balanced_mlp();
+        assert_eq!(bp.alloc.len(), n);
+        assert!(bp.alloc.iter().all(|&a| a >= 1));
+    }
+
+    #[test]
+    fn class_budgets_respected() {
+        let (bp, _) = balanced_mlp();
+        let cfg = GpuConfig::a100();
+        let mut per_class = [0usize; 2];
+        for (s, &a) in bp.spec.stages.iter().zip(&bp.alloc) {
+            per_class[match s.class {
+                ResourceClass::Tensor => 0,
+                ResourceClass::Simt => 1,
+            }] += a;
+        }
+        assert!(per_class[0] <= cfg.sm_count, "{per_class:?}");
+        assert!(per_class[1] <= cfg.sm_count, "{per_class:?}");
+    }
+
+    #[test]
+    fn throughput_positive_and_capped() {
+        let (bp, _) = balanced_mlp();
+        assert!(bp.ilp_throughput > 0.0);
+        assert!(bp.est_throughput > 0.0);
+        assert!(bp.est_throughput <= bp.ilp_throughput + 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! The Kitsune compiler (paper §5, Fig 7): subgraph selection → pipeline
+//! design → load balance → lowering to spatial pipelines.
+//!
+//! The paper implements this as a PyTorch Dynamo backend; here the
+//! captured graph is [`crate::graph::Graph`] and the output is a set of
+//! simulator-/coordinator-ready [`crate::sim::PipelineDesc`]s plus a
+//! topological execution plan.
+
+pub mod patterns;
+pub mod subgraph;
+pub mod pipeline;
+pub mod load_balance;
+pub mod lower;
+
+pub use load_balance::{balance, stage_work, BalancedPipeline, StageWork};
+pub use lower::{compile, dataflow_io, lower_sf_node, CompiledApp, LoweredPipeline, PlanItem};
+pub use patterns::{encode, letter, Pattern, PatternLib};
+pub use pipeline::{design_pipeline, PipelineSpec, QueueEdge, StageSpec};
+pub use subgraph::{select_subgraphs, SelectOptions, Selection, SfNode};

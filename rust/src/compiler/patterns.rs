@@ -1,0 +1,179 @@
+//! §5.1 pattern library: "essentially a set of regular expressions that
+//! express patterns including those seen in Figure 2", matched against the
+//! deterministic topological linearization of the captured graph.
+//!
+//! Each compute node is encoded as one letter; a pattern is a regex over
+//! the letter string of *selectable* nodes (excluded nodes — gathers,
+//! scatters — act as hard separators, exactly the paper's exclusion
+//! rules).
+
+use crate::graph::{Graph, Node, NodeId, OpKind};
+use regex::Regex;
+
+/// One-letter encoding of an operator for pattern matching.
+pub fn letter(node: &Node) -> char {
+    match &node.op {
+        OpKind::Matmul { .. } => 'M',
+        OpKind::Elementwise(_) => 'E',
+        OpKind::Reduce { .. } => 'R',
+        OpKind::Softmax => 'S',
+        OpKind::LayerNorm => 'L',
+        OpKind::Concat { .. } => 'C',
+        OpKind::Interaction { .. } => 'I',
+        OpKind::Loss => 'O',
+        OpKind::OptimizerUpdate => 'U',
+        OpKind::Gather { .. } => 'G',
+        OpKind::Scatter => 'X',
+        OpKind::Input | OpKind::Param | OpKind::Queue { .. } => '_',
+    }
+}
+
+/// A named subgraph pattern.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub name: &'static str,
+    pub regex: Regex,
+}
+
+impl Pattern {
+    fn new(name: &'static str, re: &str) -> Self {
+        Pattern { name, regex: Regex::new(re).expect("pattern regex") }
+    }
+}
+
+/// The pattern library. "Adding new patterns is a trivial task of adding
+/// to our pattern library" — push another entry.
+#[derive(Debug, Clone)]
+pub struct PatternLib {
+    pub patterns: Vec<Pattern>,
+}
+
+impl PatternLib {
+    /// Patterns covering the paper's Fig 2 archetypes plus the composites
+    /// its five applications exhibit (MLP chains, attention blocks,
+    /// concat-fed MLPs, normalization-led blocks, gradient pipelines).
+    pub fn standard() -> Self {
+        PatternLib {
+            patterns: vec![
+                // Attention block: QKV projections, rope, score GEMM,
+                // softmax, context GEMM, output projection.
+                Pattern::new("attention", r"M+E*M?E*MS[ME]+"),
+                // Fig 2(a): linear chains with elementwise between —
+                // MLPs / transformer FFNs, optionally concat- or norm-led,
+                // optionally ending in loss.
+                Pattern::new("mlp_chain", r"[LC]?M(E+M)+E*O?"),
+                // GEMM + epilogue elementwise (+ optional reduce tail).
+                Pattern::new("gemm_epilogue", r"[LC]?ME+R?O?"),
+                // Fig 2(c): multicast — elementwise grad feeding two GEMMs
+                // (+ batch-reduce bias grads, Fig 2(b)).
+                Pattern::new("grad_multicast", r"E+M+R?M*R?"),
+                // Fig 2(b): reduction pipelines (split-K / batch grads).
+                Pattern::new("reduce_tree", r"[ME]+R+[EU]*"),
+                // Normalization-led block (layernorm/softmax + GEMMs).
+                Pattern::new("norm_block", r"[LS][ME]+"),
+                // Elementwise + optimizer tail (training epilogues).
+                Pattern::new("ew_chain", r"E{2,}[RUO]*"),
+                // Interaction-centered block (DLRM).
+                Pattern::new("interaction_block", r"[CE]*I[ME]*"),
+                // Pure GEMM pair (back-to-back projections).
+                Pattern::new("gemm_pair", r"MM+"),
+            ],
+        }
+    }
+
+    /// All candidate intervals `[start, end)` (in selectable-index space)
+    /// matched by any pattern on `s`, labeled with the pattern name.
+    pub fn matches(&self, s: &str) -> Vec<(usize, usize, &'static str)> {
+        let mut out = Vec::new();
+        for p in &self.patterns {
+            for m in p.regex.find_iter(s) {
+                if m.end() > m.start() + 1 {
+                    out.push((m.start(), m.end(), p.name));
+                }
+            }
+        }
+        // Deterministic order: by start, then longest first.
+        out.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        out
+    }
+}
+
+/// Encode the graph's compute nodes in topological order.
+/// Returns `(letters, node_ids)` — excluded nodes are encoded as `'|'`
+/// separators so no pattern can span them.
+pub fn encode(g: &Graph) -> (String, Vec<NodeId>) {
+    let mut s = String::new();
+    let mut ids = Vec::new();
+    for n in g.nodes() {
+        if !n.op.is_compute() {
+            continue;
+        }
+        if n.op.excluded_from_subgraphs() {
+            s.push('|');
+        } else {
+            s.push(letter(n));
+        }
+        ids.push(n.id);
+    }
+    (s, ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, GraphKind};
+
+    #[test]
+    fn letters_cover_ops() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[8, 16], "x");
+        let y = b.linear(x, 16, false, "l");
+        let _z = b.relu(y, "r");
+        let g = b.finish();
+        let (s, ids) = encode(&g);
+        assert_eq!(s, "ME");
+        assert_eq!(ids.len(), 2);
+    }
+
+    #[test]
+    fn excluded_ops_are_separators() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let idx = b.input(&[128], "idx");
+        let e = b.gather(idx, 1000, 64, "emb");
+        let y = b.linear(e, 64, false, "l");
+        let _ = b.relu(y, "r");
+        let g = b.finish();
+        let (s, _) = encode(&g);
+        assert_eq!(s, "|ME");
+    }
+
+    #[test]
+    fn mlp_chain_matches() {
+        let lib = PatternLib::standard();
+        let ms = lib.matches("MEMEMEM");
+        assert!(ms.iter().any(|&(s, e, n)| s == 0 && e == 7 && n == "mlp_chain"), "{ms:?}");
+    }
+
+    #[test]
+    fn attention_matches() {
+        let lib = PatternLib::standard();
+        // q,k,v GEMMs, 2 rope, score GEMM, softmax, ctx GEMM, out GEMM
+        let ms = lib.matches("MMMEEMSMM");
+        assert!(ms.iter().any(|&(s, e, _)| s == 0 && e == 9), "{ms:?}");
+    }
+
+    #[test]
+    fn separator_blocks_span() {
+        let lib = PatternLib::standard();
+        let ms = lib.matches("ME|ME");
+        assert!(ms.iter().all(|&(s, e, _)| !(s < 2 && e > 3)), "{ms:?}");
+    }
+
+    #[test]
+    fn grad_multicast_matches() {
+        let lib = PatternLib::standard();
+        // act-grad ew feeding dgrad + wgrad GEMMs + bias reduce
+        let ms = lib.matches("EMMR");
+        assert!(ms.iter().any(|&(s, e, n)| s == 0 && e == 4 && n == "grad_multicast"), "{ms:?}");
+    }
+}

@@ -1,0 +1,220 @@
+//! §5.2 pipeline design (Algorithm 1): turn an sf-node into pipeline
+//! stages connected by queue edges — splitting reductions into parallel
+//! fan-in trees, fusing trivially-fusable epilogues, and inserting a queue
+//! for every intermediate that stays on chip.
+
+use super::subgraph::SfNode;
+use crate::graph::{Graph, NodeId, OpKind, ResourceClass};
+use std::collections::HashMap;
+
+/// Fan-in width cap for split reductions (the queue many-to-one pattern).
+pub const MAX_REDUCE_SPLIT: usize = 32;
+/// Reductions narrower than this are not worth splitting.
+pub const MIN_SPLIT_FACTOR: usize = 16;
+
+/// One pipeline stage: one operator, or an operator plus epilogue-fused
+/// elementwise followers.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Member nodes in topo order; `nodes[0]` is the anchor.
+    pub nodes: Vec<NodeId>,
+    pub class: ResourceClass,
+    /// >1 for a split reduction: the stage is a parallel fan-in tree of
+    /// this width (Algorithm 1's `SplitReduction`), raising its
+    /// parallelism cap from "a small number of CTAs" to `split`.
+    pub parallel_split: usize,
+}
+
+/// A queue edge between stages, carrying the output of `producer_node`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueEdge {
+    pub from_stage: usize,
+    pub to_stage: usize,
+    pub producer_node: NodeId,
+}
+
+/// Pipeline design output for one sf-node.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub sf_id: usize,
+    pub pattern: String,
+    pub stages: Vec<StageSpec>,
+    pub edges: Vec<QueueEdge>,
+}
+
+impl PipelineSpec {
+    pub fn n_nodes(&self) -> usize {
+        self.stages.iter().map(|s| s.nodes.len()).sum()
+    }
+}
+
+/// Algorithm 1: design the pipeline for one sf-node.
+pub fn design_pipeline(g: &Graph, sf: &SfNode) -> PipelineSpec {
+    let member: HashMap<NodeId, usize> =
+        sf.nodes.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+
+    // 1. Assign each member node a provisional stage.
+    //    Epilogue fusion: an elementwise op whose sole producer-in-sf is a
+    //    GEMM stage with no other sf-consumer merges into that stage
+    //    ("if the work done between two nodes is trivially fusable, fuse
+    //    them using epilogue fusion").
+    let mut stage_of: HashMap<NodeId, usize> = HashMap::new();
+    let mut stages: Vec<StageSpec> = Vec::new();
+    for &nid in &sf.nodes {
+        let node = g.node(nid);
+        let mut fused_into: Option<usize> = None;
+        if matches!(node.op, OpKind::Elementwise(_)) {
+            // Producers inside the sf-node.
+            let sf_inputs: Vec<NodeId> = node
+                .inputs
+                .iter()
+                .copied()
+                .filter(|i| member.contains_key(i))
+                .collect();
+            if sf_inputs.len() == 1 {
+                let p = sf_inputs[0];
+                let p_stage = stage_of.get(&p).copied();
+                if let Some(ps) = p_stage {
+                    let anchor = g.node(stages[ps].nodes[0]);
+                    let single_consumer = g
+                        .consumers(p)
+                        .iter()
+                        .filter(|c| member.contains_key(c))
+                        .count()
+                        == 1;
+                    if matches!(anchor.op, OpKind::Matmul { .. }) && single_consumer {
+                        fused_into = Some(ps);
+                    }
+                }
+            }
+        }
+        match fused_into {
+            Some(ps) => {
+                stages[ps].nodes.push(nid);
+                stage_of.insert(nid, ps);
+            }
+            None => {
+                // 2. SplitReduction: wide reductions become parallel
+                //    fan-in stages (Fig 2(b) / Algorithm 1 lines 2-6).
+                let split = match &node.op {
+                    OpKind::Reduce { factor, .. } if *factor >= MIN_SPLIT_FACTOR => {
+                        (*factor).min(MAX_REDUCE_SPLIT)
+                    }
+                    _ => 1,
+                };
+                let idx = stages.len();
+                stages.push(StageSpec {
+                    nodes: vec![nid],
+                    class: node.resource_class(),
+                    parallel_split: split,
+                });
+                stage_of.insert(nid, idx);
+            }
+        }
+    }
+
+    // 3. CreateQueue: one queue edge per intra-sf producer→consumer stage
+    //    pair (multicast = several edges from one producer, Fig 2(c)).
+    let mut edges: Vec<QueueEdge> = Vec::new();
+    for &nid in &sf.nodes {
+        let to_stage = stage_of[&nid];
+        for &inp in &g.node(nid).inputs {
+            if let Some(&from_stage) = stage_of.get(&inp) {
+                if from_stage != to_stage {
+                    let e = QueueEdge { from_stage, to_stage, producer_node: inp };
+                    if !edges.contains(&e) {
+                        edges.push(e);
+                    }
+                }
+            }
+        }
+    }
+
+    PipelineSpec { sf_id: sf.id, pattern: sf.pattern.clone(), stages, edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::patterns::PatternLib;
+    use crate::compiler::subgraph::{select_subgraphs, SelectOptions};
+    use crate::graph::{training_graph, AutodiffOptions, EwKind, GraphBuilder, GraphKind};
+
+    fn designed(g: &Graph) -> Vec<PipelineSpec> {
+        let sel = select_subgraphs(g, &PatternLib::standard(), &SelectOptions::default());
+        sel.sf_nodes.iter().map(|sf| design_pipeline(g, sf)).collect()
+    }
+
+    #[test]
+    fn mlp_epilogue_fuses_relu_into_gemm() {
+        let mut b = GraphBuilder::new("mlp", GraphKind::Inference);
+        let x = b.input(&[1024, 256], "x");
+        b.mlp(x, &[1024, 256], EwKind::Relu, false, "ffn");
+        let g = b.finish();
+        let ps = designed(&g);
+        assert_eq!(ps.len(), 1);
+        let p = &ps[0];
+        // linear+relu fuse -> 2 stages (gemm+epilogue, gemm), 1 queue edge.
+        assert_eq!(p.stages.len(), 2, "{p:?}");
+        assert_eq!(p.stages[0].nodes.len(), 2);
+        assert_eq!(p.edges.len(), 1);
+    }
+
+    #[test]
+    fn multicast_gets_two_edges() {
+        // One ew output feeding two GEMMs (Fig 2(c)).
+        let mut b = GraphBuilder::new("mc", GraphKind::Inference);
+        let x = b.input(&[512, 512], "x");
+        let e = b.relu(x, "act");
+        let m1 = b.linear(e, 512, false, "g1");
+        let _m2 = b.linear(e, 512, false, "g2");
+        let _ = b.ew2(EwKind::Add, m1, _m2, "join");
+        let g = b.finish();
+        let ps = designed(&g);
+        assert_eq!(ps.len(), 1, "{ps:?}");
+        let p = &ps[0];
+        let from_act: Vec<_> = p
+            .edges
+            .iter()
+            .filter(|ed| ed.producer_node == e)
+            .collect();
+        assert_eq!(from_act.len(), 2, "{p:?}");
+    }
+
+    #[test]
+    fn training_reductions_get_split() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[4096, 512], "x");
+        let h = b.linear(x, 512, true, "fc");
+        let a = b.relu(h, "act");
+        b.loss(a, "loss");
+        let fwd = b.finish();
+        let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
+        let ps = designed(&tg);
+        let split_stages: Vec<_> = ps
+            .iter()
+            .flat_map(|p| &p.stages)
+            .filter(|s| s.parallel_split > 1)
+            .collect();
+        assert!(
+            !split_stages.is_empty(),
+            "bias grad reduce should be split: {ps:#?}"
+        );
+        assert!(split_stages.iter().all(|s| s.parallel_split <= MAX_REDUCE_SPLIT));
+    }
+
+    #[test]
+    fn edges_reference_valid_stages() {
+        let mut b = GraphBuilder::new("mlp", GraphKind::Inference);
+        let x = b.input(&[2048, 256], "x");
+        b.mlp(x, &[1024, 1024, 256], EwKind::Gelu, true, "net");
+        let g = b.finish();
+        for p in designed(&g) {
+            for e in &p.edges {
+                assert!(e.from_stage < p.stages.len());
+                assert!(e.to_stage < p.stages.len());
+                assert!(e.from_stage < e.to_stage, "queues flow forward: {e:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! §5.1 subgraph selection: pick sf-nodes (spatially-fused groups) from
+//! the captured graph by pattern matching over the topological order,
+//! subject to the paper's constraints — excluded node classes and
+//! contiguity in the sense of Tarnawski et al. [47]: "there must be no
+//! edge which exits the subgraph with a downstream edge that reenters it".
+
+use super::patterns::{encode, PatternLib};
+use crate::graph::{Graph, NodeId};
+use std::collections::HashSet;
+
+/// A selected spatially-fused group of operators.
+#[derive(Debug, Clone)]
+pub struct SfNode {
+    pub id: usize,
+    /// Member nodes in topological order.
+    pub nodes: Vec<NodeId>,
+    /// Which pattern seeded the group.
+    pub pattern: String,
+}
+
+/// Output of subgraph selection.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub sf_nodes: Vec<SfNode>,
+    /// Compute nodes left to run bulk-synchronous.
+    pub unfused: Vec<NodeId>,
+}
+
+impl Selection {
+    /// Fraction of compute ops covered by sf-nodes (Table 2 "Coverage").
+    pub fn coverage(&self, g: &Graph) -> f64 {
+        let fused: usize = self.sf_nodes.iter().map(|s| s.nodes.len()).sum();
+        let total = g.n_compute_ops();
+        if total == 0 {
+            0.0
+        } else {
+            fused as f64 / total as f64
+        }
+    }
+
+    pub fn n_fused_ops(&self) -> usize {
+        self.sf_nodes.iter().map(|s| s.nodes.len()).sum()
+    }
+}
+
+/// Selection options.
+#[derive(Debug, Clone)]
+pub struct SelectOptions {
+    /// Maximum operators per sf-node (queue footprint / co-residency cap).
+    pub max_stages: usize,
+    /// Minimum operators for a group to be worth a spatial pipeline.
+    pub min_stages: usize,
+}
+
+impl Default for SelectOptions {
+    fn default() -> Self {
+        SelectOptions { max_stages: 24, min_stages: 2 }
+    }
+}
+
+/// Run subgraph selection over `g` with the given pattern library.
+pub fn select_subgraphs(g: &Graph, lib: &PatternLib, opts: &SelectOptions) -> Selection {
+    let (letters, ids) = encode(g);
+    let matches = lib.matches(&letters);
+
+    // Greedy non-overlapping pick: matches are sorted (start asc, longest
+    // first); take a match when it does not overlap anything taken.
+    let mut taken: Vec<(usize, usize, &'static str)> = Vec::new();
+    let mut covered = vec![false; letters.len()];
+    for (s, e, name) in matches {
+        if (s..e).any(|i| covered[i]) {
+            continue;
+        }
+        for c in covered.iter_mut().take(e).skip(s) {
+            *c = true;
+        }
+        taken.push((s, e, name));
+    }
+    taken.sort_by_key(|t| t.0);
+
+    // Merge adjacent intervals when a data edge connects them (builds the
+    // long pipelines the paper fuses in e.g. NeRF — 100% coverage).
+    let mut merged: Vec<(usize, usize, String)> = Vec::new();
+    for (s, e, name) in taken {
+        if let Some(last) = merged.last_mut() {
+            if last.1 == s && connected_across(g, &ids[last.0..last.1], &ids[s..e]) {
+                last.1 = e;
+                last.2 = format!("{}+{}", last.2, name);
+                continue;
+            }
+        }
+        merged.push((s, e, name.to_string()));
+    }
+
+    // Enforce contiguity and stage caps; split where violated.
+    let mut sf_nodes = Vec::new();
+    let mut fused_set: HashSet<NodeId> = HashSet::new();
+    for (s, e, pattern) in merged {
+        let nodes: Vec<NodeId> = ids[s..e].to_vec();
+        for part in split_contiguous(g, &nodes, opts.max_stages) {
+            if part.len() < opts.min_stages {
+                continue;
+            }
+            fused_set.extend(part.iter().copied());
+            sf_nodes.push(SfNode { id: sf_nodes.len(), nodes: part, pattern: pattern.clone() });
+        }
+    }
+
+    let unfused: Vec<NodeId> = g
+        .nodes()
+        .iter()
+        .filter(|n| n.op.is_compute() && !fused_set.contains(&n.id))
+        .map(|n| n.id)
+        .collect();
+    Selection { sf_nodes, unfused }
+}
+
+/// Is there a direct data edge between the two node sets?
+fn connected_across(g: &Graph, a: &[NodeId], b: &[NodeId]) -> bool {
+    let aset: HashSet<NodeId> = a.iter().copied().collect();
+    b.iter().any(|&nb| g.node(nb).inputs.iter().any(|i| aset.contains(i)))
+}
+
+/// Check the Tarnawski contiguity condition for `nodes`; split the group
+/// at violations and at the `max_stages` cap. Each returned part is
+/// contiguous and within cap.
+fn split_contiguous(g: &Graph, nodes: &[NodeId], max_stages: usize) -> Vec<Vec<NodeId>> {
+    let mut parts: Vec<Vec<NodeId>> = Vec::new();
+    let mut current: Vec<NodeId> = Vec::new();
+    for &n in nodes {
+        current.push(n);
+        if current.len() >= max_stages || violates_contiguity(g, &current) {
+            if violates_contiguity(g, &current) {
+                // The newest node introduced the re-entry: close the group
+                // before it and start fresh.
+                current.pop();
+                if !current.is_empty() {
+                    parts.push(std::mem::take(&mut current));
+                }
+                current.push(n);
+            } else {
+                parts.push(std::mem::take(&mut current));
+            }
+        }
+    }
+    if !current.is_empty() {
+        parts.push(current);
+    }
+    parts
+}
+
+/// True if some path exits the set and re-enters it.
+pub fn violates_contiguity(g: &Graph, nodes: &[NodeId]) -> bool {
+    let set: HashSet<NodeId> = nodes.iter().copied().collect();
+    let lo = nodes.iter().map(|n| n.0).min().unwrap_or(0);
+    let hi = nodes.iter().map(|n| n.0).max().unwrap_or(0);
+    // Only nodes inside the topo window can be on an exit-reenter path.
+    // reach_from_set[v] = v is reachable from the set via nodes outside it.
+    let mut reach = vec![false; hi + 1];
+    for v in lo..=hi {
+        let id = NodeId(v);
+        if set.contains(&id) {
+            continue;
+        }
+        let mut from_set = false;
+        for &i in &g.node(id).inputs {
+            if set.contains(&i) || (i.0 >= lo && i.0 <= hi && reach.get(i.0) == Some(&true)) {
+                from_set = true;
+                break;
+            }
+        }
+        reach[v] = from_set;
+        if from_set {
+            // Does v feed back into the set?
+            if g.consumers(id).iter().any(|c| set.contains(c)) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EwKind, GraphBuilder, GraphKind};
+
+    fn mlp_graph(layers: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", GraphKind::Inference);
+        let x = b.input(&[1024, 256], "x");
+        let widths: Vec<usize> = (0..layers).map(|_| 256).collect();
+        b.mlp(x, &widths, EwKind::Relu, false, "net");
+        b.finish()
+    }
+
+    #[test]
+    fn mlp_fully_selected() {
+        let g = mlp_graph(4);
+        let sel = select_subgraphs(&g, &PatternLib::standard(), &SelectOptions::default());
+        assert_eq!(sel.sf_nodes.len(), 1);
+        assert!((sel.coverage(&g) - 1.0).abs() < 1e-9, "coverage {}", sel.coverage(&g));
+        assert!(sel.unfused.is_empty());
+    }
+
+    #[test]
+    fn gather_breaks_selection() {
+        let mut b = GraphBuilder::new("emb", GraphKind::Inference);
+        let x = b.input(&[1024, 256], "x");
+        let h = b.linear(x, 256, false, "pre");
+        let a = b.relu(h, "act");
+        let idx = b.input(&[1024], "idx");
+        let e = b.gather(idx, 50_000, 64, "emb");
+        let cat = b.concat(&[a, e], "cat");
+        let _ = b.linear(cat, 128, false, "post");
+        let g = b.finish();
+        let sel = select_subgraphs(&g, &PatternLib::standard(), &SelectOptions::default());
+        // Gather itself must never be fused.
+        for sf in &sel.sf_nodes {
+            for &n in &sf.nodes {
+                assert!(!g.node(n).op.excluded_from_subgraphs());
+            }
+        }
+        assert!(sel.coverage(&g) < 1.0);
+    }
+
+    #[test]
+    fn contiguity_violation_detected() {
+        // a -> b -> c and a -> x -> c with x outside the set {a,b,c}\{x}:
+        // selecting {a, c} with b outside violates; {a,b,c} is fine.
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[64, 64], "x");
+        let a = b.linear(x, 64, false, "a");
+        let mid = b.relu(a, "mid");
+        let c = b.ew2(EwKind::Add, a, mid, "c");
+        let g = b.finish();
+        assert!(violates_contiguity(&g, &[a, c]));
+        assert!(!violates_contiguity(&g, &[a, mid, c]));
+    }
+
+    #[test]
+    fn max_stages_splits_groups() {
+        let g = mlp_graph(32); // 63 compute ops
+        let opts = SelectOptions { max_stages: 8, min_stages: 2 };
+        let sel = select_subgraphs(&g, &PatternLib::standard(), &opts);
+        assert!(sel.sf_nodes.len() > 1);
+        for sf in &sel.sf_nodes {
+            assert!(sf.nodes.len() <= 8);
+        }
+        assert!(sel.coverage(&g) > 0.9);
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let g = mlp_graph(6);
+        let a = select_subgraphs(&g, &PatternLib::standard(), &SelectOptions::default());
+        let b = select_subgraphs(&g, &PatternLib::standard(), &SelectOptions::default());
+        let na: Vec<_> = a.sf_nodes.iter().map(|s| s.nodes.clone()).collect();
+        let nb: Vec<_> = b.sf_nodes.iter().map(|s| s.nodes.clone()).collect();
+        assert_eq!(na, nb);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the real spatial-pipeline runtime.
+//!
+//! The simulator (`crate::sim`) answers the paper's *timing* questions;
+//! this module demonstrates the *execution model* for real — AOT-compiled
+//! XLA stage kernels co-resident as threads, communicating tiles through
+//! the §4.1 acquire/release ring queues with backpressure, tagged with
+//! the §4.2 SIMT/TENSOR resource classes.
+
+pub mod cli;
+pub mod pipeline;
+pub mod runner;
+
+pub use pipeline::{PipelineBuilder, SpatialPipeline, StageSpec};
+pub use runner::{run_serial, run_streaming, PipelineRun, StageMetrics};

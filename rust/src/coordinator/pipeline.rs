@@ -1,0 +1,122 @@
+//! The `cudaPipeline` analog (paper Fig 6): declare a collection of
+//! stage kernels that must be co-resident, each tagged with the dynamic
+//! resource class it needs, connected by ring queues.
+//!
+//! On the GPU the stages are CUDA kernels and the queues live in L2; in
+//! this host-level realization the stages are AOT-compiled XLA
+//! executables (see `python/compile/aot.py`) and the queues are the
+//! lock-free rings of [`crate::queue::host`] — the same acquire/release
+//! protocol, same execution model: a stage runs when data is available
+//! in its input queue and stalls when its output queue is full.
+
+use crate::graph::ResourceClass;
+use crate::runtime::Tensor;
+
+/// One pipeline stage: an artifact entry plus bound weights.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    /// Artifact entry name (manifest.txt).
+    pub entry: String,
+    /// Fig 6's kernel-header resource tag (SIMT / TENSOR).
+    pub class: ResourceClass,
+    /// Trailing executable arguments (weights), bound at configure time.
+    pub weights: Vec<Tensor>,
+    /// Worker threads for this stage — the host analog of the ILP's
+    /// per-stage CTA allocation `a_i`.
+    pub workers: usize,
+}
+
+/// A declared spatial pipeline (linear chain of stages).
+#[derive(Debug, Clone)]
+pub struct SpatialPipeline {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+    /// Ring-queue capacity between adjacent stages (entries; 2 =
+    /// double-buffering, as in paper Fig 4).
+    pub queue_capacity: usize,
+}
+
+/// Builder mirroring the Fig 6 host-code flow:
+/// `cudaPipelineCreate` → `cudaPipelineAddKernel` → launch.
+pub struct PipelineBuilder {
+    pipeline: SpatialPipeline,
+}
+
+impl SpatialPipeline {
+    pub fn builder(name: impl Into<String>) -> PipelineBuilder {
+        PipelineBuilder {
+            pipeline: SpatialPipeline {
+                name: name.into(),
+                stages: Vec::new(),
+                queue_capacity: 8,
+            },
+        }
+    }
+}
+
+impl PipelineBuilder {
+    /// `cudaPipelineAddKernel(pipe, kernel, type, ...)`.
+    pub fn add_stage(
+        mut self,
+        name: impl Into<String>,
+        entry: impl Into<String>,
+        class: ResourceClass,
+        weights: Vec<Tensor>,
+    ) -> Self {
+        self.pipeline.stages.push(StageSpec {
+            name: name.into(),
+            entry: entry.into(),
+            class,
+            weights,
+            workers: 1,
+        });
+        self
+    }
+
+    /// Set the worker count (`a_i`) of the most recently added stage.
+    pub fn workers(mut self, n: usize) -> Self {
+        if let Some(s) = self.pipeline.stages.last_mut() {
+            s.workers = n.max(1);
+        }
+        self
+    }
+
+    pub fn queue_capacity(mut self, entries: usize) -> Self {
+        self.pipeline.queue_capacity = entries.max(2);
+        self
+    }
+
+    pub fn build(self) -> SpatialPipeline {
+        assert!(
+            !self.pipeline.stages.is_empty(),
+            "pipeline needs at least one stage"
+        );
+        self.pipeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let p = SpatialPipeline::builder("demo")
+            .add_stage("a", "stage_trunk0", ResourceClass::Tensor, vec![])
+            .workers(2)
+            .add_stage("b", "stage_head", ResourceClass::Simt, vec![])
+            .queue_capacity(4)
+            .build();
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!(p.stages[0].workers, 2);
+        assert_eq!(p.stages[1].workers, 1);
+        assert_eq!(p.queue_capacity, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one stage")]
+    fn empty_pipeline_panics() {
+        let _ = SpatialPipeline::builder("x").build();
+    }
+}

@@ -1,0 +1,227 @@
+//! Streaming pipeline runner: one thread pool per stage, stages linked by
+//! the §4.1 ring queues, executing real AOT-compiled XLA stage kernels.
+//!
+//! This is the host-level realization of Kitsune's execution model: a
+//! stage worker acquires a tile from its input queue (spinning when
+//! empty), runs its compiled kernel, and releases the result into the
+//! next queue (stalling when full — backpressure). The first stage reads
+//! the caller-supplied input stream; the last writes the output stream.
+
+use super::pipeline::SpatialPipeline;
+use crate::graph::ResourceClass;
+use crate::queue::RingQueue;
+use crate::runtime::{ArtifactStore, Tensor};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A sequence-tagged tile flowing through the queues (tags let multi-
+/// worker stages process out of order; the sink restores order).
+type Tile = (usize, Tensor);
+
+/// Per-stage runtime metrics.
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    pub name: String,
+    pub class: ResourceClass,
+    pub workers: usize,
+    pub tiles: usize,
+    /// Seconds spent executing the stage kernel.
+    pub busy_s: f64,
+    /// Seconds spent blocked on empty input / full output queues.
+    pub wait_s: f64,
+}
+
+impl StageMetrics {
+    /// Fraction of wall time this stage's workers were busy.
+    pub fn utilization(&self) -> f64 {
+        let tot = self.busy_s + self.wait_s;
+        if tot > 0.0 {
+            self.busy_s / tot
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Result of one streaming run.
+#[derive(Debug, Clone)]
+pub struct PipelineRun {
+    /// Outputs in input order.
+    pub outputs: Vec<Tensor>,
+    pub metrics: Vec<StageMetrics>,
+    pub elapsed_s: f64,
+    pub tiles: usize,
+}
+
+impl PipelineRun {
+    pub fn tiles_per_sec(&self) -> f64 {
+        self.tiles as f64 / self.elapsed_s.max(1e-12)
+    }
+}
+
+/// `&ArtifactStore` shared across stage threads. PJRT's C API is
+/// thread-safe for concurrent `Execute` calls on one client (the CPU
+/// plugin serializes internally where needed); the wrapper only exists
+/// because the raw-pointer-holding xla types don't derive Send/Sync.
+struct SharedStore<'a>(&'a ArtifactStore);
+unsafe impl Send for SharedStore<'_> {}
+unsafe impl Sync for SharedStore<'_> {}
+
+/// Run `inputs` through the pipeline, streaming tiles through the ring
+/// queues. Returns outputs in input order plus per-stage metrics.
+pub fn run_streaming(
+    store: &ArtifactStore,
+    pipeline: &SpatialPipeline,
+    inputs: Vec<Tensor>,
+) -> Result<PipelineRun> {
+    let n_stages = pipeline.stages.len();
+    let n_tiles = inputs.len();
+    // Queues: q[0] feeds stage 0, q[i+1] connects stage i -> i+1,
+    // q[n] collects outputs.
+    let queues: Vec<Arc<RingQueue<Tile>>> = (0..=n_stages)
+        .map(|_| RingQueue::with_capacity(pipeline.queue_capacity))
+        .collect();
+    let failed = Arc::new(AtomicBool::new(false));
+
+    let start = Instant::now();
+    let shared = SharedStore(store);
+    let mut metrics: Vec<StageMetrics> = pipeline
+        .stages
+        .iter()
+        .map(|s| StageMetrics {
+            name: s.name.clone(),
+            class: s.class,
+            workers: s.workers,
+            tiles: 0,
+            busy_s: 0.0,
+            wait_s: 0.0,
+        })
+        .collect();
+
+    let mut outputs: Vec<Option<Tensor>> = vec![None; n_tiles];
+    std::thread::scope(|scope| -> Result<()> {
+        let shared = &shared;
+        let failed = &failed;
+        // Stage workers. The *last* worker of a stage to exit closes the
+        // downstream queue (countdown latch), so sibling workers' pushes
+        // are never cut off.
+        let mut handles = Vec::new();
+        for (si, stage) in pipeline.stages.iter().enumerate() {
+            let remaining = Arc::new(std::sync::atomic::AtomicUsize::new(stage.workers));
+            for _ in 0..stage.workers {
+                let in_q = Arc::clone(&queues[si]);
+                let out_q = Arc::clone(&queues[si + 1]);
+                let remaining = Arc::clone(&remaining);
+                let entry = stage.entry.clone();
+                let weights = stage.weights.clone();
+                handles.push((si, scope.spawn(move || -> Result<(usize, f64, f64)> {
+                    let mut tiles = 0usize;
+                    let mut busy = 0.0f64;
+                    let mut wait = 0.0f64;
+                    loop {
+                        let w0 = Instant::now();
+                        let Some((seq, tile)) = in_q.pop() else { break };
+                        wait += w0.elapsed().as_secs_f64();
+                        let b0 = Instant::now();
+                        let mut args = Vec::with_capacity(1 + weights.len());
+                        args.push(tile);
+                        args.extend(weights.iter().cloned());
+                        let out = match shared.0.run_f32(&entry, &args) {
+                            Ok(mut outs) => outs
+                                .drain(..1)
+                                .next()
+                                .ok_or_else(|| anyhow!("{entry}: no output"))?,
+                            Err(e) => {
+                                failed.store(true, Ordering::Release);
+                                in_q.close();
+                                out_q.close();
+                                return Err(e);
+                            }
+                        };
+                        busy += b0.elapsed().as_secs_f64();
+                        tiles += 1;
+                        let w1 = Instant::now();
+                        if out_q.push((seq, out)).is_err() {
+                            break; // downstream closed (failure path)
+                        }
+                        wait += w1.elapsed().as_secs_f64();
+                    }
+                    // Countdown latch: only the stage's last worker closes.
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        out_q.close();
+                    }
+                    Ok((tiles, busy, wait))
+                })));
+            }
+        }
+
+        // Feed the source queue from its own thread — the sink must be
+        // drained concurrently or the bounded queues fill up and the
+        // whole pipeline deadlocks (backpressure reaches the feeder).
+        let src = Arc::clone(&queues[0]);
+        let feeder = scope.spawn(move || {
+            for (seq, t) in inputs.into_iter().enumerate() {
+                if src.push((seq, t)).is_err() {
+                    break;
+                }
+            }
+            src.close();
+        });
+
+        // Drain the sink.
+        while let Some((seq, t)) = queues[n_stages].pop() {
+            outputs[seq] = Some(t);
+        }
+        feeder.join().map_err(|_| anyhow!("feeder panicked"))?;
+
+        for (si, h) in handles {
+            let (tiles, busy, wait) = h.join().map_err(|_| anyhow!("stage panicked"))??;
+            metrics[si].tiles += tiles;
+            metrics[si].busy_s += busy;
+            metrics[si].wait_s += wait;
+        }
+        Ok(())
+    })?;
+
+    if failed.load(Ordering::Acquire) {
+        return Err(anyhow!("pipeline stage failed"));
+    }
+    let outputs: Option<Vec<Tensor>> = outputs.into_iter().collect();
+    Ok(PipelineRun {
+        outputs: outputs.ok_or_else(|| anyhow!("missing output tiles"))?,
+        metrics,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        tiles: n_tiles,
+    })
+}
+
+/// Serial baseline: the same stages run back-to-back in one thread —
+/// the host analog of bulk-synchronous execution, for speedup reporting.
+pub fn run_serial(
+    store: &ArtifactStore,
+    pipeline: &SpatialPipeline,
+    inputs: Vec<Tensor>,
+) -> Result<PipelineRun> {
+    let start = Instant::now();
+    let n_tiles = inputs.len();
+    let mut outputs = Vec::with_capacity(n_tiles);
+    for t in inputs {
+        let mut cur = t;
+        for stage in &pipeline.stages {
+            let mut args = Vec::with_capacity(1 + stage.weights.len());
+            args.push(cur);
+            args.extend(stage.weights.iter().cloned());
+            let mut outs = store.run_f32(&stage.entry, &args)?;
+            cur = outs.drain(..1).next().ok_or_else(|| anyhow!("no output"))?;
+        }
+        outputs.push(cur);
+    }
+    Ok(PipelineRun {
+        outputs,
+        metrics: Vec::new(),
+        elapsed_s: start.elapsed().as_secs_f64(),
+        tiles: n_tiles,
+    })
+}

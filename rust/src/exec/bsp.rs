@@ -1,0 +1,86 @@
+//! Bulk-synchronous execution — the unfused PyTorch baseline: one kernel
+//! per operator, global barrier and launch overhead between kernels.
+
+use super::report::{ExecMode, ExecReport};
+use crate::graph::{Graph, NodeId};
+use crate::perfmodel;
+use crate::sim::{Engine, SimReport};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Kernel launch + barrier overhead between BSP operators (driver +
+/// grid-drain; the cost vertical fusion amortizes).
+pub const LAUNCH_OVERHEAD_S: f64 = 4e-6;
+
+/// Run the whole graph bulk-synchronously. Also returns per-node times,
+/// which the other backends use as their speedup baselines.
+pub fn run_bsp_detailed(g: &Graph, engine: &Engine) -> Result<(ExecReport, HashMap<NodeId, f64>)> {
+    let mut total = SimReport::default();
+    let mut per_node = HashMap::new();
+    for node in g.compute_nodes() {
+        let k = perfmodel::bsp_kernel(node, g, &engine.cfg);
+        let mut r = engine.run_kernel(&k)?;
+        r.elapsed_s += LAUNCH_OVERHEAD_S;
+        // The launch/barrier gap is idle time (both resources low).
+        r.quadrants.add_sample(0.0, 0.0, LAUNCH_OVERHEAD_S);
+        per_node.insert(node.id, r.elapsed_s);
+        total = total.chain(&r);
+    }
+    let unfused_s = total.elapsed_s;
+    Ok((
+        ExecReport {
+            mode: ExecMode::Bsp,
+            app: g.name.clone(),
+            sim: total,
+            regions: Vec::new(),
+            unfused_s,
+        },
+        per_node,
+    ))
+}
+
+/// Convenience wrapper without the per-node map.
+pub fn run_bsp(g: &Graph, engine: &Engine) -> Result<ExecReport> {
+    Ok(run_bsp_detailed(g, engine)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EwKind, GraphBuilder, GraphKind};
+    use crate::sim::{GpuConfig, SchedPolicy};
+
+    fn engine() -> Engine {
+        Engine::new(GpuConfig::a100(), SchedPolicy::RoundRobin)
+    }
+
+    fn mlp() -> Graph {
+        let mut b = GraphBuilder::new("m", GraphKind::Inference);
+        let x = b.input(&[2048, 512], "x");
+        b.mlp(x, &[2048, 512], EwKind::Relu, false, "net");
+        b.finish()
+    }
+
+    #[test]
+    fn bsp_times_every_compute_node() {
+        let g = mlp();
+        let (rep, per_node) = run_bsp_detailed(&g, &engine()).unwrap();
+        assert_eq!(per_node.len(), g.n_compute_ops());
+        let sum: f64 = per_node.values().sum();
+        assert!((sum - rep.sim.elapsed_s).abs() / sum < 1e-9);
+    }
+
+    #[test]
+    fn bsp_includes_launch_overhead() {
+        let g = mlp();
+        let (rep, _) = run_bsp_detailed(&g, &engine()).unwrap();
+        assert!(rep.sim.elapsed_s > g.n_compute_ops() as f64 * LAUNCH_OVERHEAD_S);
+    }
+
+    #[test]
+    fn bsp_flops_match_graph() {
+        let g = mlp();
+        let (rep, _) = run_bsp_detailed(&g, &engine()).unwrap();
+        assert!((rep.sim.flops - g.total_flops()).abs() / g.total_flops() < 1e-3);
+    }
+}

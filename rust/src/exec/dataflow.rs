@@ -1,0 +1,103 @@
+//! Kitsune dataflow execution: run the compiled plan — spatial pipelines
+//! through the dual-arbiter simulator, leftover operators bulk-sync.
+
+use super::bsp::LAUNCH_OVERHEAD_S;
+use super::report::{ExecMode, ExecReport, RegionResult};
+use crate::compiler::{CompiledApp, PlanItem};
+use crate::graph::Graph;
+use crate::perfmodel;
+use crate::sim::{Engine, SimReport};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Execute a compiled application under Kitsune dataflow.
+/// `per_node_bsp` supplies BSP per-op times for region speedups.
+pub fn run_dataflow(
+    g: &Graph,
+    app: &CompiledApp,
+    engine: &Engine,
+    per_node_bsp: &HashMap<crate::graph::NodeId, f64>,
+) -> Result<ExecReport> {
+    let mut total = SimReport::default();
+    let mut regions = Vec::new();
+    let mut unfused_s = 0.0;
+
+    for item in &app.plan {
+        match item {
+            PlanItem::Pipeline(pi) => {
+                let lp = &app.pipelines[*pi];
+                let mut r = engine.run_pipeline(&lp.desc)?;
+                // One spatial-pipeline launch (cudaPipelineLaunch, Fig 6).
+                r.elapsed_s += LAUNCH_OVERHEAD_S;
+                r.quadrants.add_sample(0.0, 0.0, LAUNCH_OVERHEAD_S);
+                let bsp_s: f64 = lp.nodes.iter().map(|n| per_node_bsp[n]).sum();
+                regions.push(RegionResult {
+                    name: lp.desc.name.clone(),
+                    n_ops: lp.nodes.len(),
+                    elapsed_s: r.elapsed_s,
+                    bsp_s,
+                    backward: lp.nodes.iter().any(|&n| g.is_backward(n)),
+                });
+                total = total.chain(&r);
+            }
+            PlanItem::Bsp(nid) => {
+                let node = g.node(*nid);
+                let k = perfmodel::bsp_kernel(node, g, &engine.cfg);
+                let mut r = engine.run_kernel(&k)?;
+                r.elapsed_s += LAUNCH_OVERHEAD_S;
+                unfused_s += r.elapsed_s;
+                total = total.chain(&r);
+            }
+        }
+    }
+
+    Ok(ExecReport {
+        mode: ExecMode::Kitsune,
+        app: g.name.clone(),
+        sim: total,
+        regions,
+        unfused_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, SelectOptions};
+    use crate::exec::bsp::run_bsp_detailed;
+    use crate::graph::{EwKind, GraphBuilder, GraphKind};
+    use crate::sim::{GpuConfig, SchedPolicy};
+
+    fn ffn() -> Graph {
+        let mut b = GraphBuilder::new("ffn", GraphKind::Inference);
+        let x = b.input(&[4096, 1024], "x");
+        b.mlp(x, &[4096, 4096, 1024], EwKind::Gelu, false, "ffn");
+        b.finish()
+    }
+
+    #[test]
+    fn dataflow_beats_bsp_on_mlp() {
+        let g = ffn();
+        let cfg = GpuConfig::a100();
+        let app = compile(&g, &cfg, &SelectOptions::default()).unwrap();
+        let bsp_engine = Engine::new(cfg.clone(), SchedPolicy::RoundRobin);
+        let df_engine = Engine::new(cfg, SchedPolicy::DualArbiter);
+        let (bsp, per_node) = run_bsp_detailed(&g, &bsp_engine).unwrap();
+        let df = run_dataflow(&g, &app, &df_engine, &per_node).unwrap();
+        let speedup = df.speedup_over(&bsp);
+        assert!(speedup > 1.0, "kitsune speedup {speedup}");
+        assert!(df.traffic_reduction_vs(&bsp) > 0.2, "{}", df.traffic_reduction_vs(&bsp));
+    }
+
+    #[test]
+    fn regions_cover_fused_nodes() {
+        let g = ffn();
+        let cfg = GpuConfig::a100();
+        let app = compile(&g, &cfg, &SelectOptions::default()).unwrap();
+        let e = Engine::new(cfg, SchedPolicy::DualArbiter);
+        let (_, per_node) = run_bsp_detailed(&g, &e).unwrap();
+        let df = run_dataflow(&g, &app, &e, &per_node).unwrap();
+        let region_ops: usize = df.regions.iter().map(|r| r.n_ops).sum();
+        assert_eq!(region_ops, app.n_fused_ops());
+    }
+}

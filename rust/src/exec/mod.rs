@@ -1,0 +1,13 @@
+//! Execution-model backends over the simulator: bulk-synchronous (BSP),
+//! vertical fusion (composite SOTA baseline), and Kitsune dataflow —
+//! the three columns of the paper's evaluation.
+
+pub mod bsp;
+pub mod vertical;
+pub mod dataflow;
+pub mod report;
+
+pub use bsp::{run_bsp, run_bsp_detailed, LAUNCH_OVERHEAD_S};
+pub use dataflow::run_dataflow;
+pub use report::{geomean, ExecMode, ExecReport, RegionResult};
+pub use vertical::{run_vertical, vf_groups, VfGroup};

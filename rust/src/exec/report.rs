@@ -1,0 +1,124 @@
+//! Execution reports shared by the three backends.
+
+use crate::sim::SimReport;
+
+/// Which execution model produced a report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Bulk-synchronous (unfused PyTorch) — the paper's baseline.
+    Bsp,
+    /// State-of-art vertical fusion (TensorRT ∪ AStitch ∪ Welder model).
+    Vertical,
+    /// Kitsune spatial dataflow.
+    Kitsune,
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecMode::Bsp => write!(f, "bulk-sync"),
+            ExecMode::Vertical => write!(f, "vertical"),
+            ExecMode::Kitsune => write!(f, "kitsune"),
+        }
+    }
+}
+
+/// Result for one fused region (sf-node / vertical group) — rows of the
+/// paper's Fig 10/12 subgraph charts.
+#[derive(Debug, Clone)]
+pub struct RegionResult {
+    pub name: String,
+    /// Ops covered by the region.
+    pub n_ops: usize,
+    /// Time under this execution mode.
+    pub elapsed_s: f64,
+    /// Time the same ops take under plain BSP (for speedup).
+    pub bsp_s: f64,
+    /// Whether the region ran in the backward pass (training splits).
+    pub backward: bool,
+}
+
+impl RegionResult {
+    pub fn speedup(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.bsp_s / self.elapsed_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Whole-application execution result.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub mode: ExecMode,
+    pub app: String,
+    pub sim: SimReport,
+    /// Fused regions (empty for pure BSP).
+    pub regions: Vec<RegionResult>,
+    /// Time spent in operators running bulk-synchronously (the gray
+    /// portions of the paper's Fig 11 timelines).
+    pub unfused_s: f64,
+}
+
+impl ExecReport {
+    /// End-to-end speedup of this report over a baseline report.
+    pub fn speedup_over(&self, baseline: &ExecReport) -> f64 {
+        baseline.sim.elapsed_s / self.sim.elapsed_s.max(1e-30)
+    }
+
+    /// Traffic reduction vs a baseline (Table 2's "Traffic Red." column).
+    pub fn traffic_reduction_vs(&self, baseline: &ExecReport) -> f64 {
+        if baseline.sim.dram_bytes <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.sim.dram_bytes / baseline.sim.dram_bytes
+    }
+
+    /// Fraction of runtime covered by fused regions.
+    pub fn region_time_coverage(&self) -> f64 {
+        let fused: f64 = self.regions.iter().map(|r| r.elapsed_s).sum();
+        let total = self.sim.elapsed_s.max(1e-30);
+        (fused / total).min(1.0)
+    }
+
+    /// Geomean speedup of the fused regions.
+    pub fn region_geomean_speedup(&self) -> f64 {
+        if self.regions.is_empty() {
+            return 1.0;
+        }
+        let log_sum: f64 = self.regions.iter().map(|r| r.speedup().max(1e-12).ln()).sum();
+        (log_sum / self.regions.len() as f64).exp()
+    }
+}
+
+/// Geometric mean helper for cross-application summaries.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_math() {
+        let r = RegionResult {
+            name: "r".into(),
+            n_ops: 3,
+            elapsed_s: 0.5,
+            bsp_s: 1.0,
+            backward: false,
+        };
+        assert!((r.speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[]) - 1.0).abs() < 1e-12);
+    }
+}

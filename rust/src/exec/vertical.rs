@@ -1,0 +1,263 @@
+//! Vertical-fusion execution — the paper's state-of-art baseline, a
+//! composite of TensorRT, AStitch and Welder mechanisms (§6.1):
+//!
+//! * operators fuse into a single "mega kernel" along single-consumer
+//!   producer chains, temporally multiplexing the SM between regions;
+//! * intermediate tiles stay in shared memory / registers when they fit;
+//!   when the hidden dimension overruns the scratchpad (Fig 2(a):
+//!   `N >= 768` fp32 on A100's 192 KB), the tile **spills** to DRAM and
+//!   the consumer pays the round-trip latency;
+//! * reductions cannot be parallelized beyond their natural CTA count
+//!   (Fig 2(b)) and break fusion;
+//! * the forward pass only — "none of the academic work or TensorRT have
+//!   demonstrated execution of training" (paper footnote 2); backward
+//!   nodes run bulk-synchronously.
+
+use super::bsp::LAUNCH_OVERHEAD_S;
+use super::report::{ExecMode, ExecReport, RegionResult};
+use crate::graph::{Graph, Node, NodeId, OpKind};
+use crate::perfmodel::{self, IoPlacement, Loc};
+use crate::sim::{Engine, SimReport};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Max operators per vertically fused kernel (code-size/register limits).
+pub const MAX_VF_GROUP: usize = 8;
+
+/// A vertical fusion group: consecutive chain of node ids.
+#[derive(Debug, Clone)]
+pub struct VfGroup {
+    pub nodes: Vec<NodeId>,
+    /// Edges (by consumer index into `nodes`) that spill to DRAM.
+    pub spilled: Vec<bool>,
+}
+
+/// Can this op participate in a vertically fused kernel?
+fn vf_fusable(node: &Node) -> bool {
+    matches!(
+        node.op,
+        OpKind::Matmul { .. }
+            | OpKind::Elementwise(_)
+            | OpKind::Softmax
+            | OpKind::LayerNorm
+            | OpKind::Concat { .. }
+    )
+}
+
+/// Does the intermediate between `prod` and its consumer fit on chip for
+/// a data-parallel VF tile? (Fig 2(a) criterion.)
+fn edge_spills(prod: &Node, cfg: &crate::sim::GpuConfig) -> bool {
+    let hidden = prod.out.shape.trailing();
+    perfmodel::vf_tile_spills(hidden, prod.out.dtype.size_bytes(), cfg)
+}
+
+/// Partition the eligible (forward-pass) nodes into fusion groups.
+pub fn vf_groups(g: &Graph, cfg: &crate::sim::GpuConfig) -> Vec<VfGroup> {
+    let fwd_end = g.backward_start.unwrap_or(g.len());
+    let mut groups: Vec<VfGroup> = Vec::new();
+    let mut current: Vec<NodeId> = Vec::new();
+    let mut spilled: Vec<bool> = Vec::new();
+
+    let mut flush = |current: &mut Vec<NodeId>, spilled: &mut Vec<bool>| {
+        if current.len() >= 2 {
+            groups.push(VfGroup { nodes: std::mem::take(current), spilled: std::mem::take(spilled) });
+        } else {
+            current.clear();
+            spilled.clear();
+        }
+    };
+
+    for node in g.nodes() {
+        if node.id.0 >= fwd_end {
+            break;
+        }
+        if !node.op.is_compute() {
+            continue;
+        }
+        if !vf_fusable(node) || current.len() >= MAX_VF_GROUP {
+            flush(&mut current, &mut spilled);
+            if !vf_fusable(node) {
+                continue;
+            }
+        }
+        // Chain rule: the node must consume the previous member's output,
+        // and that output must have no other consumer (pure chain — VF
+        // cannot multicast across CTAs). A GEMM can only *anchor* a group:
+        // GEMM→GEMM chains are beyond TensorRT-class epilogue fusion, and
+        // Welder/AStitch-style stitching across a second GEMM forces the
+        // intermediate tile through memory anyway (Fig 2(a)) — modeled by
+        // starting a new group (with a spill if the tile overruns smem).
+        let is_gemm = matches!(node.op, OpKind::Matmul { .. });
+        if let Some(&prev) = current.last() {
+            let consumes_prev = node.inputs.contains(&prev);
+            let prev_single = g.consumers(prev).len() == 1;
+            if consumes_prev && prev_single && !is_gemm {
+                spilled.push(edge_spills(g.node(prev), cfg));
+                current.push(node.id);
+            } else {
+                flush(&mut current, &mut spilled);
+                current.push(node.id);
+            }
+        } else {
+            current.push(node.id);
+        }
+    }
+    flush(&mut current, &mut spilled);
+    groups
+}
+
+/// Execute the graph under vertical fusion.
+/// `per_node_bsp` supplies the BSP baseline times for region speedups.
+pub fn run_vertical(
+    g: &Graph,
+    engine: &Engine,
+    per_node_bsp: &HashMap<NodeId, f64>,
+) -> Result<ExecReport> {
+    let cfg = &engine.cfg;
+    let groups = vf_groups(g, cfg);
+    let in_group: HashMap<NodeId, usize> = groups
+        .iter()
+        .enumerate()
+        .flat_map(|(gi, grp)| grp.nodes.iter().map(move |&n| (n, gi)))
+        .collect();
+
+    let mut total = SimReport::default();
+    let mut regions = Vec::new();
+    let mut unfused_s = 0.0;
+    let mut done_groups: Vec<bool> = vec![false; groups.len()];
+
+    for node in g.compute_nodes() {
+        match in_group.get(&node.id) {
+            Some(&gi) => {
+                if done_groups[gi] {
+                    continue;
+                }
+                done_groups[gi] = true;
+                let grp = &groups[gi];
+                // Fused kernel: members run as temporally-multiplexed
+                // regions — sequential, sharing one launch; internal edges
+                // free (smem) or spilled (DRAM + round trip).
+                let mut group_sim = SimReport::default();
+                for (i, &nid) in grp.nodes.iter().enumerate() {
+                    let n = g.node(nid);
+                    let mut io = IoPlacement::bsp(n.inputs.len());
+                    // Input from the previous member: on-chip or spilled.
+                    if i > 0 {
+                        let prev = grp.nodes[i - 1];
+                        let spill = grp.spilled[i - 1];
+                        for (slot, &inp) in n.inputs.iter().enumerate() {
+                            if inp == prev {
+                                io.ins[slot] = if spill { Loc::Dram } else { Loc::Smem };
+                            }
+                        }
+                    }
+                    // Output to the next member: on-chip or spilled.
+                    if i + 1 < grp.nodes.len() && !grp.spilled[i] {
+                        io.out = Loc::Smem;
+                    }
+                    let k = perfmodel::kernel_with_io(n, g, cfg, &io);
+                    let latency = if i > 0 && grp.spilled[i - 1] { cfg.dram_latency_s } else { 0.0 };
+                    let r = engine.run_kernel_with_latency(&k, latency)?;
+                    group_sim = group_sim.chain(&r);
+                }
+                group_sim.elapsed_s += LAUNCH_OVERHEAD_S; // one launch per group
+                group_sim.quadrants.add_sample(0.0, 0.0, LAUNCH_OVERHEAD_S);
+                let bsp_s: f64 = grp.nodes.iter().map(|n| per_node_bsp[n]).sum();
+                regions.push(RegionResult {
+                    name: format!("vf{}", gi),
+                    n_ops: grp.nodes.len(),
+                    elapsed_s: group_sim.elapsed_s,
+                    bsp_s,
+                    backward: false,
+                });
+                total = total.chain(&group_sim);
+            }
+            None => {
+                let k = perfmodel::bsp_kernel(node, g, cfg);
+                let mut r = engine.run_kernel(&k)?;
+                r.elapsed_s += LAUNCH_OVERHEAD_S;
+                r.quadrants.add_sample(0.0, 0.0, LAUNCH_OVERHEAD_S);
+                unfused_s += r.elapsed_s;
+                total = total.chain(&r);
+            }
+        }
+    }
+
+    Ok(ExecReport {
+        mode: ExecMode::Vertical,
+        app: g.name.clone(),
+        sim: total,
+        regions,
+        unfused_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::bsp::run_bsp_detailed;
+    use crate::graph::{training_graph, AutodiffOptions, EwKind, GraphBuilder, GraphKind};
+    use crate::sim::{GpuConfig, SchedPolicy};
+
+    fn engine() -> Engine {
+        Engine::new(GpuConfig::a100(), SchedPolicy::RoundRobin)
+    }
+
+    fn small_mlp(hidden: usize) -> Graph {
+        let mut b = GraphBuilder::new("m", GraphKind::Inference);
+        let x = b.input(&[4096, 256], "x");
+        b.mlp(x, &[hidden, 256], EwKind::Relu, false, "net");
+        b.finish()
+    }
+
+    #[test]
+    fn groups_form_chains() {
+        // GEMM-anchored epilogue fusion: [linear relu] fuse; the second
+        // linear starts a new (singleton, hence dropped) group.
+        let g = small_mlp(256);
+        let groups = vf_groups(&g, &GpuConfig::a100());
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].nodes.len(), 2); // linear + relu epilogue
+    }
+
+    #[test]
+    fn narrow_hidden_stays_on_chip_wide_spills() {
+        let cfg = GpuConfig::a100();
+        let narrow = vf_groups(&small_mlp(256), &cfg);
+        assert!(narrow[0].spilled.iter().all(|&s| !s), "{narrow:?}");
+        let wide = vf_groups(&small_mlp(4096), &cfg);
+        assert!(wide[0].spilled.iter().any(|&s| s), "{wide:?}");
+    }
+
+    #[test]
+    fn vertical_beats_bsp_on_fusable_graph() {
+        let g = small_mlp(256);
+        let e = engine();
+        let (bsp, per_node) = run_bsp_detailed(&g, &e).unwrap();
+        let vf = run_vertical(&g, &e, &per_node).unwrap();
+        assert!(
+            vf.sim.elapsed_s < bsp.sim.elapsed_s,
+            "vf {} vs bsp {}",
+            vf.sim.elapsed_s,
+            bsp.sim.elapsed_s
+        );
+        assert!(vf.traffic_reduction_vs(&bsp) > 0.0);
+    }
+
+    #[test]
+    fn backward_pass_not_fused() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[1024, 256], "x");
+        let h = b.mlp(x, &[256, 64], EwKind::Relu, false, "net");
+        b.loss(h, "loss");
+        let fwd = b.finish();
+        let tg = training_graph(&fwd, AutodiffOptions::default());
+        let groups = vf_groups(&tg, &GpuConfig::a100());
+        let bwd_start = tg.backward_start.unwrap();
+        for grp in &groups {
+            for &n in &grp.nodes {
+                assert!(n.0 < bwd_start, "backward node fused by VF");
+            }
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Reverse-mode autodiff over the operator graph.
+//!
+//! Stands in for PyTorch autograd + Dynamo's backward-graph capture: given a
+//! forward graph, emit `forward ++ backward (++ optimizer)` as one training
+//! graph. The backward region reproduces the structures the paper calls out:
+//!
+//! * weight-gradient GEMMs whose contraction runs over the batch dimension
+//!   (split-K / Fig 2(b) parallel-reduction opportunity),
+//! * bias gradients as explicit batch [`OpKind::Reduce`] nodes,
+//! * activation-gradient nodes that *multicast* to two gradient GEMMs
+//!   (Fig 2(c)) — this falls out of the VJP rules, it is not special-cased.
+
+use super::graph::{Graph, GraphKind, NodeId};
+use super::op::{EwKind, OpKind, ReduceAxis};
+use super::tensor::TensorDesc;
+use std::collections::HashMap;
+
+/// Options for training-graph generation.
+#[derive(Debug, Clone, Copy)]
+pub struct AutodiffOptions {
+    /// Append one [`OpKind::OptimizerUpdate`] per parameter (SGD/Adam step).
+    pub optimizer_updates: bool,
+}
+
+impl Default for AutodiffOptions {
+    fn default() -> Self {
+        AutodiffOptions { optimizer_updates: true }
+    }
+}
+
+/// Build the training graph for `fwd`.
+///
+/// The forward nodes are replayed first (same ids, same order), then
+/// `backward_start` marks the boundary and backward/optimizer nodes follow.
+pub fn training_graph(fwd: &Graph, opts: AutodiffOptions) -> Graph {
+    let mut g = Graph::new(format!("{}-train", fwd.name), GraphKind::Training);
+    // Replay forward nodes; ids are preserved because insertion order is id.
+    for n in fwd.nodes() {
+        let id = g.add(n.op.clone(), &n.inputs, n.out.clone(), n.name.clone());
+        debug_assert_eq!(id, n.id);
+    }
+    g.backward_start = Some(g.len());
+
+    let mut diff = Diff { g, grads: HashMap::new(), param_grads: Vec::new() };
+
+    // Seed: if the terminal compute node is a Loss, seed its input with the
+    // loss-grad op; otherwise inject a synthetic `dout` input for the last
+    // node's output (subgraph-level training capture).
+    let last = NodeId(fwd.len() - 1);
+    match &fwd.node(last).op {
+        OpKind::Loss => {
+            let seed = diff.g.add(
+                OpKind::Elementwise(EwKind::Scale),
+                &[last],
+                fwd.node(fwd.node(last).inputs[0]).out.clone(),
+                "loss_grad",
+            );
+            diff.accumulate(fwd.node(last).inputs[0], seed);
+        }
+        _ => {
+            let dout = diff.g.add(OpKind::Input, &[], fwd.node(last).out.clone(), "dout");
+            diff.accumulate(last, dout);
+        }
+    }
+
+    // Reverse-topological sweep emitting VJPs.
+    for idx in (0..fwd.len()).rev() {
+        let id = NodeId(idx);
+        let Some(&dy) = diff.grads.get(&id) else { continue };
+        diff.vjp(fwd, id, dy);
+    }
+
+    if opts.optimizer_updates {
+        let param_grads = std::mem::take(&mut diff.param_grads);
+        for (param, grad) in param_grads {
+            let out = diff.g.node(param).out.clone();
+            let name = format!("{}.optstep", diff.g.node(param).name);
+            diff.g.add(OpKind::OptimizerUpdate, &[param, grad], out, name);
+        }
+    }
+
+    debug_assert!(diff.g.validate().is_empty(), "{:?}", diff.g.validate());
+    diff.g
+}
+
+struct Diff {
+    g: Graph,
+    grads: HashMap<NodeId, NodeId>,
+    param_grads: Vec<(NodeId, NodeId)>,
+}
+
+impl Diff {
+    /// Record `grad` as (part of) d/d`target`, emitting an accumulation Add
+    /// when the target already has a gradient (fan-out in the forward pass).
+    fn accumulate(&mut self, target: NodeId, grad: NodeId) {
+        if let Some(&prev) = self.grads.get(&target) {
+            let out = self.g.node(grad).out.clone();
+            let sum = self.g.add(
+                OpKind::Elementwise(EwKind::Add),
+                &[prev, grad],
+                out,
+                format!("accum_grad.{}", target.0),
+            );
+            self.grads.insert(target, sum);
+        } else {
+            self.grads.insert(target, grad);
+        }
+        if matches!(self.g.node(target).op, OpKind::Param) {
+            // Track latest accumulated grad for the optimizer pass.
+            let g = self.grads[&target];
+            if let Some(e) = self.param_grads.iter_mut().find(|(p, _)| *p == target) {
+                e.1 = g;
+            } else {
+                self.param_grads.push((target, g));
+            }
+        }
+    }
+
+    fn desc_of(&self, id: NodeId) -> TensorDesc {
+        self.g.node(id).out.clone()
+    }
+
+    /// Emit the vector-Jacobian product of node `id` given output grad `dy`.
+    fn vjp(&mut self, fwd: &Graph, id: NodeId, dy: NodeId) {
+        let node = fwd.node(id).clone();
+        let nm = |s: &str| format!("{}.{}", node.name, s);
+        match node.op {
+            OpKind::Matmul { b, m, n, k } => {
+                let x = node.inputs[0];
+                let w = node.inputs[1];
+                // dX = dY @ W^T : [b,m,n] x [n,k]
+                let dx = self.g.add(
+                    OpKind::Matmul { b, m, n: k, k: n },
+                    &[dy, w],
+                    self.desc_of(x),
+                    nm("dgrad"),
+                );
+                self.accumulate(x, dx);
+                // dW = X^T @ dY : contraction over b*m — the batch-dimension
+                // reduction the paper's split-K pipeline parallelizes.
+                let dw = self.g.add(
+                    OpKind::Matmul { b: 1, m: k, n, k: b * m },
+                    &[x, dy],
+                    self.desc_of(w),
+                    nm("wgrad"),
+                );
+                self.accumulate(w, dw);
+                // Folded bias (addmm): gradient is an explicit batch
+                // reduction of dy — the paper's Fig 2(b) pattern.
+                if let Some(&bias) = node.inputs.get(2) {
+                    let db = self.g.add(
+                        OpKind::Reduce { axis: ReduceAxis::Batch, factor: b * m },
+                        &[dy],
+                        self.desc_of(bias),
+                        nm("bias_grad"),
+                    );
+                    self.accumulate(bias, db);
+                }
+            }
+            OpKind::Elementwise(EwKind::Add) => {
+                let a = node.inputs[0];
+                let bb = node.inputs[1];
+                // Residual/bias add: grads flow through; a broadcast bias
+                // parameter gets an explicit batch reduction (Fig 2(b)).
+                self.accumulate(a, dy);
+                let a_numel = self.g.node(a).out.numel();
+                let b_numel = self.g.node(bb).out.numel();
+                if b_numel < a_numel {
+                    let factor = a_numel / b_numel.max(1);
+                    let db = self.g.add(
+                        OpKind::Reduce { axis: ReduceAxis::Batch, factor },
+                        &[dy],
+                        self.desc_of(bb),
+                        nm("bias_grad"),
+                    );
+                    self.accumulate(bb, db);
+                } else {
+                    self.accumulate(bb, dy);
+                }
+            }
+            OpKind::Elementwise(EwKind::Sub) => {
+                let a = node.inputs[0];
+                let bb = node.inputs[1];
+                self.accumulate(a, dy);
+                let neg = self.g.add(
+                    OpKind::Elementwise(EwKind::Scale),
+                    &[dy],
+                    self.desc_of(bb),
+                    nm("neg_grad"),
+                );
+                self.accumulate(bb, neg);
+            }
+            OpKind::Elementwise(EwKind::Mul) => {
+                let a = node.inputs[0];
+                let bb = node.inputs[1];
+                let da = self.g.add(
+                    OpKind::Elementwise(EwKind::Mul),
+                    &[dy, bb],
+                    self.desc_of(a),
+                    nm("mul_grad_a"),
+                );
+                self.accumulate(a, da);
+                let db = self.g.add(
+                    OpKind::Elementwise(EwKind::Mul),
+                    &[dy, a],
+                    self.desc_of(bb),
+                    nm("mul_grad_b"),
+                );
+                self.accumulate(bb, db);
+            }
+            OpKind::Elementwise(kind) => {
+                // Unary activation (or binary mask-style): dx = dy * f'(x).
+                // The fwd input is re-read here — the Fig 2(c) multicast.
+                let x = node.inputs[0];
+                let dx = self.g.add(
+                    OpKind::Elementwise(EwKind::ActGrad),
+                    &[dy, x],
+                    self.desc_of(x),
+                    nm(&format!("{kind:?}_bwd").to_lowercase()),
+                );
+                self.accumulate(x, dx);
+            }
+            OpKind::Softmax => {
+                let x = node.inputs[0];
+                // rowsum(dy * y) then dx = y * (dy - rowsum)
+                let t = self.g.node(x).out.shape.trailing();
+                let mut dims = self.g.node(x).out.shape.dims().to_vec();
+                *dims.last_mut().unwrap() = 1;
+                let rowsum = self.g.add(
+                    OpKind::Reduce { axis: ReduceAxis::Feature, factor: t },
+                    &[dy, id],
+                    TensorDesc::new(&dims, self.g.node(x).out.dtype),
+                    nm("softmax_rowsum"),
+                );
+                let dx = self.g.add(
+                    OpKind::Elementwise(EwKind::ActGrad),
+                    &[dy, rowsum],
+                    self.desc_of(x),
+                    nm("softmax_bwd"),
+                );
+                self.accumulate(x, dx);
+            }
+            OpKind::LayerNorm => {
+                let x = node.inputs[0];
+                let t = self.g.node(x).out.shape.trailing();
+                let mut dims = self.g.node(x).out.shape.dims().to_vec();
+                *dims.last_mut().unwrap() = 1;
+                let stats = self.g.add(
+                    OpKind::Reduce { axis: ReduceAxis::Feature, factor: t },
+                    &[dy, x],
+                    TensorDesc::new(&dims, self.g.node(x).out.dtype),
+                    nm("ln_stats_bwd"),
+                );
+                let dx = self.g.add(
+                    OpKind::Elementwise(EwKind::ActGrad),
+                    &[dy, stats],
+                    self.desc_of(x),
+                    nm("ln_bwd"),
+                );
+                self.accumulate(x, dx);
+            }
+            OpKind::Concat { n_inputs } => {
+                for i in 0..n_inputs {
+                    let src = node.inputs[i];
+                    let slice = self.g.add(
+                        OpKind::Elementwise(EwKind::Cast),
+                        &[dy],
+                        self.desc_of(src),
+                        nm(&format!("slice_grad.{i}")),
+                    );
+                    self.accumulate(src, slice);
+                }
+            }
+            OpKind::Gather { .. } => {
+                // Embedding backward: scatter-add into the table. Excluded
+                // from sf-nodes (§5.1) but present in the training graph.
+                let table = node.inputs[1];
+                let ds = self.g.add(OpKind::Scatter, &[dy], self.desc_of(table), nm("scatter_grad"));
+                self.accumulate(table, ds);
+            }
+            OpKind::Interaction { features, dim } => {
+                let x = node.inputs[0];
+                let dx = self.g.add(
+                    OpKind::Interaction { features, dim },
+                    &[dy],
+                    self.desc_of(x),
+                    nm("interaction_bwd"),
+                );
+                self.accumulate(x, dx);
+            }
+            OpKind::Reduce { .. } => {
+                // Broadcast the grad back to the un-reduced shape.
+                let x = node.inputs[0];
+                let bx = self.g.add(
+                    OpKind::Elementwise(EwKind::Scale),
+                    &[dy],
+                    self.desc_of(x),
+                    nm("bcast_grad"),
+                );
+                self.accumulate(x, bx);
+            }
+            OpKind::Loss | OpKind::Input | OpKind::Param => {}
+            OpKind::Scatter | OpKind::OptimizerUpdate | OpKind::Queue { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::op::ResourceClass;
+
+    fn linear_relu_graph() -> Graph {
+        let mut b = GraphBuilder::new("lr", GraphKind::Inference);
+        let x = b.input(&[64, 128], "x");
+        let h = b.linear(x, 256, true, "fc1");
+        let a = b.relu(h, "act");
+        let y = b.linear(a, 10, false, "fc2");
+        b.loss(y, "loss");
+        b.finish()
+    }
+
+    #[test]
+    fn training_graph_valid_and_larger() {
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions::default());
+        assert!(tg.validate().is_empty(), "{:?}", tg.validate());
+        assert!(tg.n_compute_ops() > 2 * fwd.n_compute_ops());
+        assert_eq!(tg.kind, GraphKind::Training);
+        assert!(tg.backward_start.is_some());
+    }
+
+    #[test]
+    fn wgrad_contracts_over_batch() {
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
+        // Find the fc1 wgrad GEMM: must contract over the batch (k = 64).
+        let wgrad = tg
+            .nodes()
+            .iter()
+            .find(|n| n.name == "fc1.wgrad")
+            .expect("fc1 wgrad emitted");
+        match wgrad.op {
+            OpKind::Matmul { k, .. } => assert_eq!(k, 64),
+            ref other => panic!("wgrad is {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bias_grad_is_batch_reduce() {
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
+        let bias_grad = tg
+            .nodes()
+            .iter()
+            .find(|n| n.name == "fc1.bias_grad")
+            .expect("bias grad emitted");
+        match bias_grad.op {
+            OpKind::Reduce { axis: ReduceAxis::Batch, factor } => assert_eq!(factor, 64),
+            ref other => panic!("bias grad is {other:?}"),
+        }
+    }
+
+    #[test]
+    fn act_grad_multicasts_to_two_gemms() {
+        // Fig 2(c): the activation-grad output feeds the dgrad GEMM of fc2's
+        // input *and* fc2's wgrad GEMM.
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
+        let act_bwd = tg
+            .nodes()
+            .iter()
+            .find(|n| n.name.contains("relu_bwd") || n.name.contains("act.relu_bwd"))
+            .expect("relu bwd emitted");
+        // Its *input* dy (the fc2 dgrad output) must have fanned out; more
+        // directly: the saved fwd activation `act` output feeds relu fwd
+        // consumer AND the fc2 wgrad GEMM.
+        let act_fwd = tg.nodes().iter().find(|n| n.name == "act").unwrap();
+        let consumers = tg.consumers(act_fwd.id);
+        let gemm_consumers = consumers
+            .iter()
+            .filter(|&&c| matches!(tg.node(c).op, OpKind::Matmul { .. }))
+            .count();
+        assert!(gemm_consumers >= 2, "activation should feed ≥2 GEMMs, got {consumers:?}");
+        let _ = act_bwd;
+    }
+
+    #[test]
+    fn optimizer_updates_one_per_param() {
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: true });
+        let n_params = fwd
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Param))
+            .count();
+        let n_updates = tg
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::OptimizerUpdate))
+            .count();
+        assert_eq!(n_params, n_updates);
+    }
+
+    #[test]
+    fn backward_has_tensor_and_simt_work() {
+        let fwd = linear_relu_graph();
+        let tg = training_graph(&fwd, AutodiffOptions::default());
+        let start = tg.backward_start.unwrap();
+        let bwd: Vec<_> = tg.nodes()[start..].iter().filter(|n| n.op.is_compute()).collect();
+        assert!(bwd.iter().any(|n| n.resource_class() == ResourceClass::Tensor));
+        assert!(bwd.iter().any(|n| n.resource_class() == ResourceClass::Simt));
+    }
+}

@@ -1,0 +1,231 @@
+//! Ergonomic graph construction — the role PyTorch model code plays in the
+//! paper (the compiler sees only the captured graph, never this builder).
+
+use super::graph::{Graph, GraphKind, NodeId};
+use super::op::{EwKind, OpKind, ReduceAxis};
+use super::tensor::{DType, TensorDesc};
+
+/// Builder over a [`Graph`] with convenience composites (linear layers,
+/// MLPs, attention blocks) that lower to the aten-level ops the paper's
+/// compiler consumes.
+pub struct GraphBuilder {
+    pub g: Graph,
+    pub dtype: DType,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, kind: GraphKind) -> Self {
+        GraphBuilder { g: Graph::new(name, kind), dtype: DType::BF16 }
+    }
+
+    pub fn finish(self) -> Graph {
+        debug_assert!(self.g.validate().is_empty(), "{:?}", self.g.validate());
+        self.g
+    }
+
+    fn desc(&self, dims: &[usize]) -> TensorDesc {
+        TensorDesc::new(dims, self.dtype)
+    }
+
+    pub fn out_dims(&self, id: NodeId) -> Vec<usize> {
+        self.g.node(id).out.shape.dims().to_vec()
+    }
+
+    /// Graph input (activation arriving from DRAM / preceding subgraph).
+    pub fn input(&mut self, dims: &[usize], name: &str) -> NodeId {
+        let d = self.desc(dims);
+        self.g.add(OpKind::Input, &[], d, name)
+    }
+
+    /// Learned parameter.
+    pub fn param(&mut self, dims: &[usize], name: &str) -> NodeId {
+        let d = self.desc(dims);
+        self.g.add(OpKind::Param, &[], d, name)
+    }
+
+    /// `y = x @ W (+ b)` — x: `[..., k]`, W: `[k, n]`. Lowers to a single
+    /// `addmm`-style node (bias folded as a third input), matching how
+    /// PyTorch/Dynamo captures `nn.Linear` as one aten op.
+    /// Convention: `inputs[0]` is the activation, `inputs[1]` the weight,
+    /// optional `inputs[2]` the bias (autodiff relies on this ordering).
+    pub fn linear(&mut self, x: NodeId, n: usize, bias: bool, name: &str) -> NodeId {
+        let xd = self.out_dims(x);
+        let k = *xd.last().expect("linear input needs rank >= 1");
+        let m: usize = xd[..xd.len() - 1].iter().product::<usize>().max(1);
+        let w = self.param(&[k, n], &format!("{name}.w"));
+        let mut od = xd.clone();
+        *od.last_mut().unwrap() = n;
+        let out = self.desc(&od);
+        let mut inputs = vec![x, w];
+        if bias {
+            inputs.push(self.param(&[n], &format!("{name}.b")));
+        }
+        self.g.add(OpKind::Matmul { b: 1, m, n, k }, &inputs, out, name)
+    }
+
+    /// Explicit batched matmul `a[b,m,k] @ c[k,n]` for attention scores etc.
+    pub fn matmul(&mut self, a: NodeId, c: NodeId, b: usize, m: usize, n: usize, k: usize, name: &str) -> NodeId {
+        let out = if b == 1 { self.desc(&[m, n]) } else { self.desc(&[b, m, n]) };
+        self.g.add(OpKind::Matmul { b, m, n, k }, &[a, c], out, name)
+    }
+
+    pub fn ew1(&mut self, kind: EwKind, x: NodeId, name: &str) -> NodeId {
+        let out = self.g.node(x).out.clone();
+        self.g.add(OpKind::Elementwise(kind), &[x], out, name)
+    }
+
+    pub fn ew2(&mut self, kind: EwKind, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        let out = self.g.node(a).out.clone();
+        self.g.add(OpKind::Elementwise(kind), &[a, b], out, name)
+    }
+
+    pub fn relu(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.ew1(EwKind::Relu, x, name)
+    }
+
+    pub fn layernorm(&mut self, x: NodeId, name: &str) -> NodeId {
+        let out = self.g.node(x).out.clone();
+        self.g.add(OpKind::LayerNorm, &[x], out, name)
+    }
+
+    pub fn softmax(&mut self, x: NodeId, name: &str) -> NodeId {
+        let out = self.g.node(x).out.clone();
+        self.g.add(OpKind::Softmax, &[x], out, name)
+    }
+
+    /// Reduce over `axis` by `factor`, producing `out_dims`.
+    pub fn reduce(&mut self, x: NodeId, axis: ReduceAxis, factor: usize, out_dims: &[usize], name: &str) -> NodeId {
+        let out = self.desc(out_dims);
+        self.g.add(OpKind::Reduce { axis, factor }, &[x], out, name)
+    }
+
+    /// Concat along the trailing dimension.
+    pub fn concat(&mut self, xs: &[NodeId], name: &str) -> NodeId {
+        assert!(!xs.is_empty());
+        let mut dims = self.out_dims(xs[0]);
+        let total: usize = xs.iter().map(|&x| *self.out_dims(x).last().unwrap()).sum();
+        *dims.last_mut().unwrap() = total;
+        let out = self.desc(&dims);
+        self.g.add(OpKind::Concat { n_inputs: xs.len() }, xs, out, name)
+    }
+
+    /// Embedding gather: `[batch] -> [batch, dim]` per table.
+    pub fn gather(&mut self, idx: NodeId, table_rows: usize, dim: usize, name: &str) -> NodeId {
+        let batch = self.out_dims(idx)[0];
+        let table = self.param(&[table_rows, dim], &format!("{name}.table"));
+        let out = self.desc(&[batch, dim]);
+        self.g.add(OpKind::Gather { table_rows }, &[idx, table], out, name)
+    }
+
+    /// DLRM pairwise feature interaction over `features` vectors of `dim`.
+    pub fn interaction(&mut self, x: NodeId, features: usize, dim: usize, name: &str) -> NodeId {
+        let batch = self.out_dims(x)[0];
+        let out = self.desc(&[batch, features * (features + 1) / 2]);
+        self.g.add(OpKind::Interaction { features, dim }, &[x], out, name)
+    }
+
+    /// Scalar loss head.
+    pub fn loss(&mut self, x: NodeId, name: &str) -> NodeId {
+        let out = TensorDesc::f32(&[1]);
+        self.g.add(OpKind::Loss, &[x], out, name)
+    }
+
+    /// `layers`-deep MLP with uniform hidden width and an activation
+    /// between layers — the paper's Fig 2(a) pattern generator.
+    pub fn mlp(
+        &mut self,
+        mut x: NodeId,
+        widths: &[usize],
+        act: EwKind,
+        bias: bool,
+        name: &str,
+    ) -> NodeId {
+        for (i, &w) in widths.iter().enumerate() {
+            x = self.linear(x, w, bias, &format!("{name}.{i}.linear"));
+            if i + 1 < widths.len() {
+                x = self.ew1(act, x, &format!("{name}.{i}.act"));
+            }
+        }
+        x
+    }
+
+    /// Multi-head self-attention at aten granularity: QKV projection,
+    /// score matmul, softmax, value matmul, output projection.
+    pub fn attention(&mut self, x: NodeId, seq: usize, d_model: usize, heads: usize, name: &str) -> NodeId {
+        let dh = d_model / heads;
+        let q = self.linear(x, d_model, false, &format!("{name}.q"));
+        let k = self.linear(x, d_model, false, &format!("{name}.k"));
+        let v = self.linear(x, d_model, false, &format!("{name}.v"));
+        let rq = self.ew1(EwKind::Rope, q, &format!("{name}.rope_q"));
+        let rk = self.ew1(EwKind::Rope, k, &format!("{name}.rope_k"));
+        // scores: [heads, seq, seq]
+        let scores = self.g.add(
+            OpKind::Matmul { b: heads, m: seq, n: seq, k: dh },
+            &[rq, rk],
+            self.desc(&[heads, seq, seq]),
+            format!("{name}.scores"),
+        );
+        let probs = self.softmax(scores, &format!("{name}.softmax"));
+        let ctx = self.g.add(
+            OpKind::Matmul { b: heads, m: seq, n: dh, k: seq },
+            &[probs, v],
+            self.desc(&[seq, d_model]),
+            format!("{name}.ctx"),
+        );
+        self.linear(ctx, d_model, false, &format!("{name}.out"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_shapes() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[32, 64], "x");
+        let y = b.linear(x, 128, true, "fc");
+        assert_eq!(b.out_dims(y), vec![32, 128]);
+        let g = b.finish();
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn mlp_composition() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[16, 256], "x");
+        let y = b.mlp(x, &[1024, 256], EwKind::Relu, false, "ffn");
+        assert_eq!(b.out_dims(y), vec![16, 256]);
+        let g = b.finish();
+        // 2 matmuls + 1 act
+        assert_eq!(g.n_compute_ops(), 3);
+    }
+
+    #[test]
+    fn concat_trailing() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[8, 60], "x");
+        let y = b.input(&[8, 4], "y");
+        let c = b.concat(&[x, y], "cat");
+        assert_eq!(b.out_dims(c), vec![8, 64]);
+    }
+
+    #[test]
+    fn attention_op_count() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[128, 512], "x");
+        let _ = b.attention(x, 128, 512, 8, "attn");
+        let g = b.finish();
+        // 4 linears + 2 rope + 2 bmm + softmax = 9 compute ops
+        assert_eq!(g.n_compute_ops(), 9);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn interaction_output_shape() {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[2048, 27 * 128], "feat");
+        let y = b.interaction(x, 27, 128, "int");
+        assert_eq!(b.out_dims(y), vec![2048, 27 * 28 / 2]);
+    }
+}

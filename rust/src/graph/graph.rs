@@ -1,0 +1,301 @@
+//! The operator graph: a DAG of [`Node`]s, analogous to the FX graph
+//! PyTorch Dynamo hands the paper's compiler backend.
+//!
+//! Nodes are stored in construction order, which is a valid topological
+//! order (builders may only reference already-inserted nodes). The paper's
+//! §5.1 pattern matcher deliberately "operates at the topological order
+//! which linearizes the graph into a list in PyTorch Dynamo (which is
+//! deterministic)" — we preserve exactly that property.
+
+use super::op::{OpKind, ResourceClass};
+use super::tensor::TensorDesc;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Index of a node within its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// One operator instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: OpKind,
+    /// Data inputs (producers), in operator-argument order.
+    pub inputs: Vec<NodeId>,
+    /// Single output descriptor (multi-consumer = fan-out edges).
+    pub out: TensorDesc,
+    /// Human-readable name, e.g. `"ffn.0.linear"`.
+    pub name: String,
+}
+
+impl Node {
+    pub fn resource_class(&self) -> ResourceClass {
+        self.op.resource_class()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.op.flops(&self.out)
+    }
+}
+
+/// Whether a graph is a forward-only (inference) capture or includes the
+/// backward pass (training), mirroring Dynamo's fwd/bwd graph extraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    Inference,
+    Training,
+}
+
+/// A DAG of operators in deterministic topological order.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub kind: GraphKind,
+    nodes: Vec<Node>,
+    /// Consumers of each node (reverse edges), kept in sync on insert.
+    consumers: Vec<Vec<NodeId>>,
+    /// First backward-pass node index, if `kind == Training`.
+    pub backward_start: Option<usize>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, kind: GraphKind) -> Self {
+        Graph {
+            name: name.into(),
+            kind,
+            nodes: Vec::new(),
+            consumers: Vec::new(),
+            backward_start: None,
+        }
+    }
+
+    /// Insert a node whose inputs must already exist. Returns its id.
+    ///
+    /// # Panics
+    /// Panics if any input id is out of range (forward reference), which
+    /// would break the topological-order invariant.
+    pub fn add(
+        &mut self,
+        op: OpKind,
+        inputs: &[NodeId],
+        out: TensorDesc,
+        name: impl Into<String>,
+    ) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        for &i in inputs {
+            assert!(
+                i.0 < self.nodes.len(),
+                "forward reference {i} while adding node {id}"
+            );
+            self.consumers[i.0].push(id);
+        }
+        self.nodes.push(Node {
+            id,
+            op,
+            inputs: inputs.to_vec(),
+            out,
+            name: name.into(),
+        });
+        self.consumers.push(Vec::new());
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Consumers (fan-out) of a node. Fan-out > 1 is the paper's Fig 2(c)
+    /// multicast pattern.
+    pub fn consumers(&self, id: NodeId) -> &[NodeId] {
+        &self.consumers[id.0]
+    }
+
+    /// Ids in topological order (construction order by invariant).
+    pub fn topo_order(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.nodes.len()).map(NodeId)
+    }
+
+    /// Compute operators only (excludes Input/Param/Queue).
+    pub fn compute_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.op.is_compute())
+    }
+
+    /// Number of compute operators — the paper's Table 2 "# Ops" column.
+    pub fn n_compute_ops(&self) -> usize {
+        self.compute_nodes().count()
+    }
+
+    /// Whether `id` belongs to the backward pass of a training graph.
+    pub fn is_backward(&self, id: NodeId) -> bool {
+        match self.backward_start {
+            Some(start) => id.0 >= start,
+            None => false,
+        }
+    }
+
+    /// Validate DAG invariants: inputs precede uses, consumer lists match,
+    /// arity is plausible. Returns the list of violations (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut seen_consumers: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i.0 >= n.id.0 {
+                    errs.push(format!("node {} uses non-preceding input {}", n.id, i));
+                }
+                seen_consumers.entry(i).or_default().push(n.id);
+            }
+            match &n.op {
+                OpKind::Input | OpKind::Param => {
+                    if !n.inputs.is_empty() {
+                        errs.push(format!("source node {} has inputs", n.id));
+                    }
+                }
+                OpKind::Concat { n_inputs } => {
+                    if n.inputs.len() != *n_inputs {
+                        errs.push(format!(
+                            "concat {} declares {} inputs, has {}",
+                            n.id,
+                            n_inputs,
+                            n.inputs.len()
+                        ));
+                    }
+                }
+                _ => {
+                    if n.op.is_compute() && n.inputs.is_empty() {
+                        errs.push(format!("compute node {} ({}) has no inputs", n.id, n.op));
+                    }
+                }
+            }
+        }
+        for (id, mut want) in seen_consumers {
+            want.sort();
+            let mut got = self.consumers[id.0].clone();
+            got.sort();
+            if want != got {
+                errs.push(format!("consumer list mismatch at {id}"));
+            }
+        }
+        errs
+    }
+
+    /// Total FLOPs over compute nodes.
+    pub fn total_flops(&self) -> f64 {
+        self.compute_nodes().map(|n| n.flops()).sum()
+    }
+
+    /// Pretty multi-line dump (for `kitsune apps --dump`).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("graph {} ({:?}, {} nodes)\n", self.name, self.kind, self.len()));
+        for n in &self.nodes {
+            let ins: Vec<String> = n.inputs.iter().map(|i| i.to_string()).collect();
+            s.push_str(&format!(
+                "  {} = {} ({}) -> {}  # {}\n",
+                n.id,
+                n.op,
+                ins.join(", "),
+                n.out,
+                n.name
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::EwKind;
+    use crate::graph::tensor::TensorDesc;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("t", GraphKind::Inference);
+        let x = g.add(OpKind::Input, &[], TensorDesc::bf16(&[8, 16]), "x");
+        let w = g.add(OpKind::Param, &[], TensorDesc::bf16(&[16, 32]), "w");
+        let mm = g.add(
+            OpKind::Matmul { b: 1, m: 8, n: 32, k: 16 },
+            &[x, w],
+            TensorDesc::bf16(&[8, 32]),
+            "mm",
+        );
+        g.add(
+            OpKind::Elementwise(EwKind::Relu),
+            &[mm],
+            TensorDesc::bf16(&[8, 32]),
+            "relu",
+        );
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.n_compute_ops(), 2);
+    }
+
+    #[test]
+    fn consumers_tracked() {
+        let g = tiny();
+        assert_eq!(g.consumers(NodeId(2)), &[NodeId(3)]);
+        assert_eq!(g.consumers(NodeId(0)), &[NodeId(2)]);
+        assert!(g.consumers(NodeId(3)).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "forward reference")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new("bad", GraphKind::Inference);
+        g.add(
+            OpKind::Elementwise(EwKind::Relu),
+            &[NodeId(5)],
+            TensorDesc::bf16(&[1]),
+            "bad",
+        );
+    }
+
+    #[test]
+    fn topo_order_is_insertion_order() {
+        let g = tiny();
+        let ids: Vec<usize> = g.topo_order().map(|i| i.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn backward_marking() {
+        let mut g = tiny();
+        g.kind = GraphKind::Training;
+        g.backward_start = Some(3);
+        assert!(!g.is_backward(NodeId(2)));
+        assert!(g.is_backward(NodeId(3)));
+    }
+
+    #[test]
+    fn flops_sum() {
+        let g = tiny();
+        let mm_flops = 2.0 * 8.0 * 32.0 * 16.0;
+        let relu_flops = 8.0 * 32.0;
+        assert_eq!(g.total_flops(), mm_flops + relu_flops);
+    }
+}

@@ -1,0 +1,16 @@
+//! Operator-graph IR — the role PyTorch Dynamo's captured FX graph plays in
+//! the paper's compiler stack (§5), plus reverse-mode autodiff so training
+//! graphs exist without PyTorch.
+
+pub mod tensor;
+pub mod op;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod builder;
+pub mod autodiff;
+
+pub use autodiff::{training_graph, AutodiffOptions};
+pub use builder::GraphBuilder;
+pub use graph::{Graph, GraphKind, Node, NodeId};
+pub use op::{EwKind, OpKind, ReduceAxis, ResourceClass};
+pub use tensor::{DType, Shape, TensorDesc};

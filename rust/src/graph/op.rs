@@ -1,0 +1,252 @@
+//! Operator definitions for the DL graph IR.
+//!
+//! Operators are modeled at the granularity the paper's compiler works at
+//! (PyTorch/Dynamo aten-level): GEMM-family ops that can use TensorCores,
+//! and SIMT-family ops (elementwise, reductions, normalization, gathers).
+//! Each op knows its FLOP count and byte traffic, which feed the
+//! [`crate::perfmodel`] roofline and the simulator.
+
+use super::tensor::TensorDesc;
+use std::fmt;
+
+/// The dynamic resource an op's kernel primarily occupies — the paper's
+/// §4.2 kernel-header tag consumed by the dual-arbiter grid scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceClass {
+    /// GEMM-family: issues to TensorCores (MXU on TPU).
+    Tensor,
+    /// Everything else: SIMT/vector pipelines.
+    Simt,
+}
+
+impl fmt::Display for ResourceClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ResourceClass::Tensor => write!(f, "TENSOR"),
+            ResourceClass::Simt => write!(f, "SIMT"),
+        }
+    }
+}
+
+/// Elementwise operator kinds (unary and binary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Relu,
+    Gelu,
+    Silu,
+    Sigmoid,
+    Tanh,
+    Add,
+    Sub,
+    Mul,
+    /// Backward of an activation: grad * f'(saved input).
+    ActGrad,
+    /// Dropout / masking style op.
+    Mask,
+    /// Type cast (bf16 <-> f32).
+    Cast,
+    /// Positional / rotary embedding application.
+    Rope,
+    Exp,
+    Scale,
+}
+
+impl EwKind {
+    /// Number of data inputs consumed.
+    pub fn arity(self) -> usize {
+        match self {
+            EwKind::Add | EwKind::Sub | EwKind::Mul | EwKind::ActGrad | EwKind::Mask => 2,
+            _ => 1,
+        }
+    }
+
+    /// Rough FLOPs per output element (transcendentals cost more SIMT work).
+    pub fn flops_per_elem(self) -> f64 {
+        match self {
+            EwKind::Relu | EwKind::Mask | EwKind::Cast => 1.0,
+            EwKind::Add | EwKind::Sub | EwKind::Mul | EwKind::Scale => 1.0,
+            EwKind::ActGrad => 2.0,
+            EwKind::Sigmoid | EwKind::Tanh | EwKind::Exp => 4.0,
+            EwKind::Gelu | EwKind::Silu => 8.0,
+            EwKind::Rope => 6.0,
+        }
+    }
+}
+
+/// What a [`OpKind::Reduce`] reduces over — the paper distinguishes batch
+/// reductions (gradient accumulation, Fig 2(b)) from feature reductions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceAxis {
+    /// Reduce over the batch/leading dimension (weight-gradient style).
+    Batch,
+    /// Reduce over the trailing/feature dimension (softmax-denominator style).
+    Feature,
+    /// Reduce over split-K partial sums produced by a partitioned GEMM.
+    SplitK,
+}
+
+/// Operator kinds at DL-framework granularity.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input (activation from a preceding subgraph / host).
+    Input,
+    /// Learned parameter resident in DRAM.
+    Param,
+    /// GEMM: `[b, m, k] x [k, n] -> [b, m, n]` (b=1 for plain 2-D).
+    /// `Linear`, attention score/value matmuls, and convolution (im2col)
+    /// all lower to this — as the paper notes, "GEMMs are colloquially used
+    /// to express the entirety of work done by these operators".
+    Matmul { b: usize, m: usize, n: usize, k: usize },
+    /// Elementwise map over the output shape.
+    Elementwise(EwKind),
+    /// Reduction (sum unless noted) over `axis`, `factor`-way.
+    Reduce { axis: ReduceAxis, factor: usize },
+    /// Row softmax over the trailing dimension.
+    Softmax,
+    /// LayerNorm / RMSNorm over the trailing dimension.
+    LayerNorm,
+    /// Embedding-table gather (DLRM sparse features, GNN node gathers).
+    /// Excluded from sf-nodes by the paper's §5.1 rules.
+    Gather { table_rows: usize },
+    /// Scatter-add (embedding backward, GNN message aggregation).
+    Scatter,
+    /// Concatenation of inputs along the trailing dim (NeRF skip links,
+    /// DLRM feature interaction input, MGN edge features).
+    Concat { n_inputs: usize },
+    /// Batched pairwise dot-product feature interaction (DLRM).
+    Interaction { features: usize, dim: usize },
+    /// Loss head (cross-entropy / MSE): produces scalar + grad seed.
+    Loss,
+    /// Optimizer update (SGD/Adam step) applied to a parameter.
+    OptimizerUpdate,
+    /// Inter-stage ring queue inserted by pipeline design (§5.2).
+    /// Not a compute op: payload tiles flow producer→consumer through L2.
+    Queue { payload_bytes: usize, entries: usize },
+}
+
+impl OpKind {
+    /// Short mnemonic used by pattern matching (§5.1) and reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input => "in",
+            OpKind::Param => "param",
+            OpKind::Matmul { .. } => "matmul",
+            OpKind::Elementwise(_) => "ew",
+            OpKind::Reduce { .. } => "reduce",
+            OpKind::Softmax => "softmax",
+            OpKind::LayerNorm => "layernorm",
+            OpKind::Gather { .. } => "gather",
+            OpKind::Scatter => "scatter",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Interaction { .. } => "interaction",
+            OpKind::Loss => "loss",
+            OpKind::OptimizerUpdate => "optstep",
+            OpKind::Queue { .. } => "queue",
+        }
+    }
+
+    /// Is this a compute operator (occupies SMs), as opposed to a graph
+    /// placeholder (Input/Param) or a queue node?
+    pub fn is_compute(&self) -> bool {
+        !matches!(self, OpKind::Input | OpKind::Param | OpKind::Queue { .. })
+    }
+
+    /// Resource class for the §4.2 scheduler tag.
+    pub fn resource_class(&self) -> ResourceClass {
+        match self {
+            OpKind::Matmul { .. } | OpKind::Interaction { .. } => ResourceClass::Tensor,
+            _ => ResourceClass::Simt,
+        }
+    }
+
+    /// FLOPs performed by the op, given its output descriptor.
+    pub fn flops(&self, out: &TensorDesc) -> f64 {
+        match self {
+            OpKind::Matmul { b, m, n, k } => 2.0 * (*b as f64) * (*m as f64) * (*n as f64) * (*k as f64),
+            OpKind::Elementwise(ew) => ew.flops_per_elem() * out.numel() as f64,
+            OpKind::Reduce { factor, .. } => (*factor as f64) * out.numel() as f64,
+            OpKind::Softmax => 8.0 * out.numel() as f64,
+            OpKind::LayerNorm => 8.0 * out.numel() as f64,
+            OpKind::Gather { .. } => out.numel() as f64,
+            OpKind::Scatter => 2.0 * out.numel() as f64,
+            OpKind::Concat { .. } => out.numel() as f64,
+            OpKind::Interaction { features, dim } => {
+                // pairwise dots: batch * F*F * dim MACs, batch = leading
+                2.0 * out.shape.leading() as f64 * (*features as f64) * (*features as f64) * (*dim as f64)
+            }
+            OpKind::Loss => 10.0 * out.numel() as f64,
+            OpKind::OptimizerUpdate => 4.0 * out.numel() as f64,
+            OpKind::Input | OpKind::Param | OpKind::Queue { .. } => 0.0,
+        }
+    }
+
+    /// True for ops the paper's §5.1 rules exclude from sf-nodes:
+    /// "nodes that are bulk-sync friendly and nodes that index / gather
+    /// across all data".
+    pub fn excluded_from_subgraphs(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Gather { .. } | OpKind::Scatter | OpKind::Input | OpKind::Param
+        )
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpKind::Matmul { b, m, n, k } => write!(f, "matmul[b{b} {m}x{k}x{n}]"),
+            OpKind::Elementwise(ew) => write!(f, "ew:{ew:?}"),
+            OpKind::Reduce { axis, factor } => write!(f, "reduce:{axis:?}x{factor}"),
+            OpKind::Queue { payload_bytes, entries } => {
+                write!(f, "queue[{}KBx{}]", payload_bytes / 1024, entries)
+            }
+            other => write!(f, "{}", other.mnemonic()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::TensorDesc;
+
+    #[test]
+    fn matmul_flops() {
+        let op = OpKind::Matmul { b: 1, m: 128, n: 256, k: 64 };
+        let out = TensorDesc::bf16(&[128, 256]);
+        assert_eq!(op.flops(&out), 2.0 * 128.0 * 256.0 * 64.0);
+    }
+
+    #[test]
+    fn resource_classes() {
+        assert_eq!(OpKind::Matmul { b: 1, m: 1, n: 1, k: 1 }.resource_class(), ResourceClass::Tensor);
+        assert_eq!(OpKind::Elementwise(EwKind::Relu).resource_class(), ResourceClass::Simt);
+        assert_eq!(OpKind::Softmax.resource_class(), ResourceClass::Simt);
+        assert_eq!(
+            OpKind::Interaction { features: 26, dim: 128 }.resource_class(),
+            ResourceClass::Tensor
+        );
+    }
+
+    #[test]
+    fn exclusion_rules() {
+        assert!(OpKind::Gather { table_rows: 10 }.excluded_from_subgraphs());
+        assert!(OpKind::Scatter.excluded_from_subgraphs());
+        assert!(!OpKind::Matmul { b: 1, m: 1, n: 1, k: 1 }.excluded_from_subgraphs());
+        assert!(!OpKind::Softmax.excluded_from_subgraphs());
+    }
+
+    #[test]
+    fn queue_is_not_compute() {
+        assert!(!OpKind::Queue { payload_bytes: 65536, entries: 2 }.is_compute());
+        assert!(!OpKind::Input.is_compute());
+        assert!(OpKind::Loss.is_compute());
+    }
+
+    #[test]
+    fn ew_arity() {
+        assert_eq!(EwKind::Add.arity(), 2);
+        assert_eq!(EwKind::Relu.arity(), 1);
+        assert_eq!(EwKind::ActGrad.arity(), 2);
+    }
+}

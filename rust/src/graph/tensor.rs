@@ -1,0 +1,171 @@
+//! Tensor descriptors: dtypes and shapes for the operator-graph IR.
+
+use std::fmt;
+
+/// Element datatype. The paper's production scenarios are TensorCore
+/// (bf16/fp16) GEMMs with fp32 accumulation; we default to BF16 activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+        }
+    }
+
+    /// Whether this dtype is eligible for TensorCore (MXU) issue.
+    pub fn tensor_core_eligible(self) -> bool {
+        matches!(self, DType::BF16 | DType::F16)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A dense row-major shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product::<usize>().max(if self.0.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Leading (batch-like) dimension, or 1 for scalars.
+    pub fn leading(&self) -> usize {
+        self.0.first().copied().unwrap_or(1)
+    }
+
+    /// Trailing (feature-like) dimension, or 1 for scalars.
+    pub fn trailing(&self) -> usize {
+        self.0.last().copied().unwrap_or(1)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Full tensor descriptor: shape + dtype.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorDesc {
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+impl TensorDesc {
+    pub fn new(dims: &[usize], dtype: DType) -> Self {
+        TensorDesc { shape: Shape::new(dims), dtype }
+    }
+
+    pub fn bf16(dims: &[usize]) -> Self {
+        Self::new(dims, DType::BF16)
+    }
+
+    pub fn f32(dims: &[usize]) -> Self {
+        Self::new(dims, DType::F32)
+    }
+
+    /// Total size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.shape.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+}
+
+impl fmt::Display for TensorDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.dtype, self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::I32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn tensor_core_eligibility() {
+        assert!(DType::BF16.tensor_core_eligible());
+        assert!(DType::F16.tensor_core_eligible());
+        assert!(!DType::F32.tensor_core_eligible());
+    }
+
+    #[test]
+    fn shape_numel() {
+        assert_eq!(Shape::new(&[2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::new(&[]).numel(), 1);
+        assert_eq!(Shape::new(&[5]).numel(), 5);
+    }
+
+    #[test]
+    fn shape_leading_trailing() {
+        let s = Shape::new(&[8, 128, 256]);
+        assert_eq!(s.leading(), 8);
+        assert_eq!(s.trailing(), 256);
+        assert_eq!(s.rank(), 3);
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        let t = TensorDesc::bf16(&[1024, 768]);
+        assert_eq!(t.bytes(), 1024 * 768 * 2);
+        let t = TensorDesc::f32(&[1024, 768]);
+        assert_eq!(t.bytes(), 1024 * 768 * 4);
+    }
+
+    #[test]
+    fn display() {
+        let t = TensorDesc::bf16(&[4, 5]);
+        assert_eq!(format!("{t}"), "bf16[4,5]");
+    }
+}

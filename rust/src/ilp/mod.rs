@@ -1,0 +1,220 @@
+//! Exact solver for the paper's §5.3 load-balancing ILP (Algorithm 2).
+//!
+//! The ILP has a special max-min structure:
+//!
+//! ```text
+//! maximize   thrpt
+//! s.t.       thrpt <= c_i * a_i          (c_i = r·s·t coefficient)
+//!            sum_{i in class C} a_i = B_C  (one budget per resource class)
+//!            1 <= a_i <= cap_i
+//! ```
+//!
+//! For this structure, binary search over `thrpt` with a greedy
+//! feasibility check (`a_i = clamp(ceil(thrpt / c_i))`) is *exact*: the
+//! feasibility region in `thrpt` is a half-line, and for a fixed `thrpt`
+//! the elementwise-minimal allocation is feasible iff any allocation is.
+//! No external solver dependency needed.
+
+/// One variable of the allocation problem.
+#[derive(Debug, Clone)]
+pub struct AllocVar {
+    /// Throughput coefficient: stage throughput = `coeff * a_i`.
+    pub coeff: f64,
+    /// Which budget (resource class) this variable draws from.
+    pub class: usize,
+    /// Upper bound on `a_i` (e.g. the stage's natural CTA count).
+    pub cap: usize,
+}
+
+/// Result of the max-min allocation.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Chosen `a_i`, parallel to the input vars.
+    pub a: Vec<usize>,
+    /// Achieved `min_i coeff_i * a_i`.
+    pub throughput: f64,
+}
+
+/// Solve the max-min allocation. `budgets[c]` is the total CTAs available
+/// to class `c`. Budgets are treated as *at most* (the paper writes
+/// equality; leftover CTAs are then distributed to the bottleneck stages,
+/// which preserves optimality while consuming the full budget).
+///
+/// Returns `None` when infeasible (more variables in a class than budget).
+pub fn solve_maxmin(vars: &[AllocVar], budgets: &[usize]) -> Option<Allocation> {
+    if vars.is_empty() {
+        return Some(Allocation { a: vec![], throughput: f64::INFINITY });
+    }
+    let n_classes = budgets.len();
+    for (c, &b) in budgets.iter().enumerate() {
+        let need: usize = vars.iter().filter(|v| v.class == c).count();
+        if need > b {
+            return None;
+        }
+    }
+    for v in vars {
+        assert!(v.class < n_classes, "class out of range");
+        assert!(v.cap >= 1, "cap must allow at least one CTA");
+        assert!(v.coeff > 0.0, "coefficient must be positive");
+    }
+
+    // The objective is capped by every variable maxing its cap.
+    let hi_bound = vars
+        .iter()
+        .map(|v| v.coeff * v.cap as f64)
+        .fold(f64::INFINITY, f64::min);
+
+    let feasible = |thrpt: f64| -> Option<Vec<usize>> {
+        let mut a = Vec::with_capacity(vars.len());
+        let mut used = vec![0usize; n_classes];
+        for v in vars {
+            let need = (thrpt / v.coeff).ceil().max(1.0) as usize;
+            if need > v.cap {
+                return None;
+            }
+            used[v.class] += need;
+            a.push(need);
+        }
+        for c in 0..n_classes {
+            if used[c] > budgets[c] {
+                return None;
+            }
+        }
+        Some(a)
+    };
+
+    // Binary search on thrpt over [lo, hi].
+    let mut lo = 0.0f64;
+    let mut hi = hi_bound;
+    if feasible(hi).is_some() {
+        lo = hi;
+    } else {
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid).is_some() {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+    }
+    let mut a = feasible(lo)?;
+
+    // Distribute leftover budget to current bottlenecks (paper's equality
+    // constraint: all SMs get used).
+    loop {
+        let mut used = vec![0usize; n_classes];
+        for (v, &ai) in vars.iter().zip(&a) {
+            used[v.class] += ai;
+        }
+        // Pick the stage with the lowest current throughput that can still
+        // grow within its class budget and cap.
+        let mut best: Option<usize> = None;
+        for (i, v) in vars.iter().enumerate() {
+            if a[i] < v.cap && used[v.class] < budgets[v.class] {
+                let t = v.coeff * a[i] as f64;
+                if best.map_or(true, |b| t < vars[b].coeff * a[b] as f64) {
+                    best = Some(i);
+                }
+            }
+        }
+        match best {
+            Some(i) => a[i] += 1,
+            None => break,
+        }
+    }
+
+    let throughput = vars
+        .iter()
+        .zip(&a)
+        .map(|(v, &ai)| v.coeff * ai as f64)
+        .fold(f64::INFINITY, f64::min);
+    Some(Allocation { a, throughput })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn var(coeff: f64, class: usize, cap: usize) -> AllocVar {
+        AllocVar { coeff, class, cap }
+    }
+
+    #[test]
+    fn single_stage_takes_full_budget() {
+        let alloc = solve_maxmin(&[var(1.0, 0, 1000)], &[108]).unwrap();
+        assert_eq!(alloc.a, vec![108]);
+        assert!((alloc.throughput - 108.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_stages_split_evenly() {
+        let alloc = solve_maxmin(&[var(1.0, 0, 1000), var(1.0, 0, 1000)], &[108]).unwrap();
+        assert_eq!(alloc.a.iter().sum::<usize>(), 108);
+        assert!((alloc.a[0] as i64 - alloc.a[1] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn slow_stage_gets_more_ctas() {
+        // Stage 0 is 4x slower per CTA: it should get ~4x the CTAs.
+        let alloc = solve_maxmin(&[var(0.25, 0, 1000), var(1.0, 0, 1000)], &[100]).unwrap();
+        assert_eq!(alloc.a.iter().sum::<usize>(), 100);
+        assert!(alloc.a[0] >= 75 && alloc.a[0] <= 85, "{:?}", alloc.a);
+    }
+
+    #[test]
+    fn classes_have_independent_budgets() {
+        // Tensor (class 0) and SIMT (class 1) each get their own #SMs —
+        // the paper's over-subscription for heterogeneous overlap.
+        let alloc = solve_maxmin(
+            &[var(1.0, 0, 1000), var(1.0, 1, 1000)],
+            &[108, 108],
+        )
+        .unwrap();
+        assert_eq!(alloc.a, vec![108, 108]);
+    }
+
+    #[test]
+    fn caps_respected() {
+        let alloc = solve_maxmin(&[var(1.0, 0, 4), var(1.0, 0, 1000)], &[108]).unwrap();
+        assert_eq!(alloc.a[0], 4);
+        assert_eq!(alloc.a[1], 104);
+    }
+
+    #[test]
+    fn infeasible_when_more_stages_than_budget() {
+        let vars: Vec<_> = (0..5).map(|_| var(1.0, 0, 10)).collect();
+        assert!(solve_maxmin(&vars, &[4]).is_none());
+    }
+
+    #[test]
+    fn maxmin_optimality_vs_bruteforce() {
+        // Exhaustive check on a small instance: 3 stages, budget 12.
+        let vars = [var(0.5, 0, 12), var(1.0, 0, 12), var(2.0, 0, 12)];
+        let got = solve_maxmin(&vars, &[12]).unwrap();
+        let mut best = 0.0f64;
+        for a0 in 1..=10 {
+            for a1 in 1..=(11 - a0) {
+                let a2 = 12 - a0 - a1;
+                if a2 < 1 {
+                    continue;
+                }
+                let t = (0.5 * a0 as f64).min(1.0 * a1 as f64).min(2.0 * a2 as f64);
+                best = best.max(t);
+            }
+        }
+        assert!(
+            (got.throughput - best).abs() < 1e-9,
+            "solver {} vs brute force {best}",
+            got.throughput
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let vars = [var(0.3, 0, 50), var(1.7, 0, 50), var(0.9, 1, 50)];
+        let a = solve_maxmin(&vars, &[30, 20]).unwrap();
+        let b = solve_maxmin(&vars, &[30, 20]).unwrap();
+        assert_eq!(a.a, b.a);
+    }
+}

@@ -1,0 +1,40 @@
+//! # Kitsune — dataflow execution on GPUs, reproduced
+//!
+//! Full reproduction of *"Kitsune: Enabling Dataflow Execution on GPUs"*
+//! (Davies, Crago, Sankaralingam, Keckler — NVIDIA, 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's pieces map onto this crate as follows:
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | §4.1 ring-queue primitive (L2-resident, atomics) | [`queue`] |
+//! | §4.2 dual-arbiter grid scheduler | [`sim::scheduler`] |
+//! | §5.1 subgraph selection (pattern matching) | [`compiler::patterns`], [`compiler::subgraph`] |
+//! | §5.2 pipeline design (Algorithm 1) | [`compiler::pipeline`] |
+//! | §5.3 load balancing ILP (Algorithm 2) | [`compiler::load_balance`], [`ilp`] |
+//! | §6 NVAS-based evaluation | [`sim`], [`exec`] |
+//! | 5 applications (DLRM, MGN, NeRF, GraphCast, Llama-3-8B) | [`apps`] |
+//! | PyTorch-Dynamo graph capture | [`graph`] (IR + reverse-mode autodiff) |
+//! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real, tokio + PJRT) |
+//!
+//! Python (JAX + Pallas) appears only at build time: `python/compile/aot.py`
+//! lowers the L2 model and L1 kernels to HLO *text* under `artifacts/`, which
+//! [`runtime`] loads through the PJRT C API (the `xla` crate). Nothing on the
+//! request path imports Python.
+
+pub mod graph;
+pub mod apps;
+pub mod sim;
+pub mod queue;
+pub mod perfmodel;
+pub mod ilp;
+pub mod compiler;
+pub mod exec;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,199 @@
+//! `kitsune` — CLI for the Kitsune reproduction.
+//!
+//! One subcommand per paper table/figure plus utilities:
+//!
+//! ```text
+//! kitsune table1|table2|fig3|fig5|fig10|fig11|fig12|fig13|fig14|sensitivity
+//! kitsune all             # every experiment in order
+//! kitsune apps [--dump]   # application graph inventory
+//! kitsune compile <app>   # show compiler output for one app
+//! kitsune serve ...       # run the real coordinator on AOT artifacts
+//! ```
+
+use anyhow::{bail, Result};
+use kitsune::apps;
+use kitsune::compiler::{compile, SelectOptions};
+use kitsune::report;
+use kitsune::sim::GpuConfig;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<&str> = args.iter().skip(1).map(String::as_str).collect();
+    match cmd {
+        "table1" => print!("{}", report::table1()),
+        "table2" => cmd_table2()?,
+        "fig3" => cmd_fig3()?,
+        "fig5" => print!("{}", report::fig5(&GpuConfig::a100())),
+        "fig10" => cmd_subgraphs(false)?,
+        "fig11" => cmd_e2e(false)?,
+        "fig12" => cmd_subgraphs(true)?,
+        "fig13" => cmd_fig13()?,
+        "fig14" => cmd_e2e(true)?,
+        "sensitivity" => cmd_sensitivity()?,
+        "ablation" => print!("{}", report::ablation_table(&GpuConfig::a100())?),
+        "all" => cmd_all()?,
+        "apps" => cmd_apps(rest.contains(&"--dump"))?,
+        "compile" => cmd_compile(rest.first().copied().unwrap_or("NERF"))?,
+        "serve" => kitsune::coordinator::cli::serve(&rest)?,
+        "help" | "--help" | "-h" => print_help(),
+        other => bail!("unknown subcommand `{other}` (try `kitsune help`)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "kitsune — dataflow execution on GPUs (paper reproduction)\n\n\
+         experiments:\n\
+         \x20 table1 table2 fig3 fig5 fig10 fig11 fig12 fig13 fig14 sensitivity ablation all\n\
+         tools:\n\
+         \x20 apps [--dump]     application graph inventory\n\
+         \x20 compile <APP>     compiler output (sf-nodes, stages, allocation)\n\
+         \x20 serve [--steps N] real spatial-pipeline coordinator over AOT artifacts"
+    );
+}
+
+fn inf_evals(cfg: &GpuConfig) -> Result<Vec<report::AppEval>> {
+    report::evaluate_suite(&apps::inference_suite(), cfg)
+}
+
+fn train_evals(cfg: &GpuConfig) -> Result<Vec<report::AppEval>> {
+    report::evaluate_suite(&apps::training_suite(), cfg)
+}
+
+fn cmd_table2() -> Result<()> {
+    let cfg = GpuConfig::a100();
+    print!("{}", report::table2(&inf_evals(&cfg)?, &train_evals(&cfg)?));
+    Ok(())
+}
+
+fn cmd_fig3() -> Result<()> {
+    let cfg = GpuConfig::a100();
+    print!("{}", report::fig3(&inf_evals(&cfg)?, &train_evals(&cfg)?));
+    Ok(())
+}
+
+fn cmd_fig13() -> Result<()> {
+    let cfg = GpuConfig::a100();
+    print!("{}", report::fig13(&inf_evals(&cfg)?, &train_evals(&cfg)?));
+    Ok(())
+}
+
+fn sweep(training: bool) -> Result<(Vec<String>, Vec<Vec<report::AppEval>>)> {
+    let cfgs = report::sensitivity_configs();
+    let names: Vec<String> = cfgs.iter().map(|c| c.name.clone()).collect();
+    let mut evals = Vec::new();
+    for c in &cfgs {
+        evals.push(if training { train_evals(c)? } else { inf_evals(c)? });
+    }
+    Ok((names, evals))
+}
+
+fn cmd_subgraphs(training: bool) -> Result<()> {
+    let (names, evals) = sweep(training)?;
+    let title = if training {
+        "Fig 12. Training subgraph speedups over bulk-sync (with sensitivity)."
+    } else {
+        "Fig 10. Inference subgraph speedups over bulk-sync (with sensitivity)."
+    };
+    print!("{}", report::subgraph_speedups(title, &names, &evals, training));
+    Ok(())
+}
+
+fn cmd_e2e(training: bool) -> Result<()> {
+    let cfg = GpuConfig::a100();
+    let evals = if training { train_evals(&cfg)? } else { inf_evals(&cfg)? };
+    let title = if training {
+        "Fig 14. Training end-to-end speedup over bulk-sync."
+    } else {
+        "Fig 11. Inference end-to-end speedup over bulk-sync."
+    };
+    print!("{}", report::e2e_speedups(title, &evals));
+    Ok(())
+}
+
+fn cmd_sensitivity() -> Result<()> {
+    let (names, inf) = sweep(false)?;
+    println!("== Inference ==");
+    print!("{}", report::sensitivity(&names, &inf));
+    let (names, tr) = sweep(true)?;
+    println!("== Training ==");
+    print!("{}", report::sensitivity(&names, &tr));
+    Ok(())
+}
+
+fn cmd_all() -> Result<()> {
+    println!("{}", report::table1());
+    cmd_table2()?;
+    println!();
+    cmd_fig3()?;
+    println!();
+    print!("{}", report::fig5(&GpuConfig::a100()));
+    println!();
+    cmd_subgraphs(false)?;
+    println!();
+    cmd_e2e(false)?;
+    println!();
+    cmd_subgraphs(true)?;
+    println!();
+    cmd_fig13()?;
+    println!();
+    cmd_e2e(true)?;
+    println!();
+    cmd_sensitivity()?;
+    println!();
+    print!("{}", report::ablation_table(&GpuConfig::a100())?);
+    Ok(())
+}
+
+fn cmd_apps(dump: bool) -> Result<()> {
+    for (name, g) in apps::inference_suite().iter().chain(apps::training_suite().iter()) {
+        println!(
+            "{name:<8} {:?}  {} ops  {:.1} GFLOP",
+            g.kind,
+            g.n_compute_ops(),
+            g.total_flops() / 1e9
+        );
+        if dump {
+            println!("{}", g.dump());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compile(app: &str) -> Result<()> {
+    let cfg = GpuConfig::a100();
+    let suite = apps::inference_suite();
+    let (name, g) = suite
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(app))
+        .or_else(|| suite.iter().find(|(n, _)| n.to_lowercase().contains(&app.to_lowercase())))
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let compiled = compile(g, &cfg, &SelectOptions::default())?;
+    println!(
+        "{name}: {} ops, {} sf-nodes, coverage {:.0}%",
+        g.n_compute_ops(),
+        compiled.pipelines.len(),
+        100.0 * compiled.selection.coverage(g)
+    );
+    for lp in &compiled.pipelines {
+        println!(
+            "  {} — {} stages, {} queues, tiles={}, ILP thrpt {:.1}/s",
+            lp.desc.name,
+            lp.desc.stages.len(),
+            lp.desc.queues.len(),
+            lp.desc.stages.first().map(|s| s.n_tiles).unwrap_or(0),
+            lp.balanced.est_throughput
+        );
+        for (s, a) in lp.desc.stages.iter().zip(&lp.balanced.alloc) {
+            println!(
+                "    {:<40} {:?}  a_i={a:<4} {:>8.2} MFLOP/cta",
+                s.kernel.name,
+                s.kernel.class,
+                s.kernel.flops_per_cta / 1e6
+            );
+        }
+    }
+    Ok(())
+}

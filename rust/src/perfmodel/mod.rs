@@ -1,0 +1,11 @@
+//! Per-operator performance model: the "dictionary of kernel
+//! characteristics" the paper's §5.3 deployment discussion calls for —
+//! grid sizes, work streams, shared-memory footprints, issue utilization
+//! `u`, and analytic BSP throughput `t_i` for the load-balancing ILP.
+
+pub mod optable;
+
+pub use optable::{
+    bsp_kernel, bsp_throughput, kernel_with_io, natural_ctas, pipe_utilization, smem_per_cta,
+    traffic, vf_tile_spills, IoPlacement, Loc, GEMM_TILE, MAX_SIM_CTAS,
+};

@@ -1,0 +1,344 @@
+//! Operator → kernel lowering: how each graph node executes on the GPU.
+//!
+//! This is the simulator-facing equivalent of the paper's "dictionary of
+//! kernel characteristics" (§5.3): for every op we derive grid size,
+//! per-CTA work streams, shared-memory footprint, and the issue-pipe
+//! utilization `u` that feeds `Speedup(a_i) = 1/u` in the load-balancing
+//! ILP.
+
+use crate::graph::{Graph, Node, OpKind, ResourceClass};
+use crate::sim::{GpuConfig, KernelDesc};
+
+/// GEMM output tile edge (CUTLASS-style 128×128 CTA tiles).
+pub const GEMM_TILE: usize = 128;
+/// Elements of output processed per elementwise/SIMT CTA.
+pub const SIMT_ELEMS_PER_CTA: usize = 256 * 1024;
+/// Outputs per CTA for reductions (few CTAs — the paper's Fig 2(b)
+/// "a small number of CTAs end up performing a reduction").
+pub const REDUCE_OUTS_PER_CTA: usize = 4096;
+/// Cap on simulated CTAs per kernel: work is merged beyond this to bound
+/// event count; totals are conserved by [`KernelDesc::with_ctas`].
+pub const MAX_SIM_CTAS: usize = 1024;
+
+/// Physical location an operand moves through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    /// Round-trips main memory (BSP default, or a vertical-fusion spill).
+    Dram,
+    /// Passes through an L2-resident Kitsune queue.
+    L2Queue,
+    /// Stays in shared memory / registers (vertical-fusion tile residency).
+    Smem,
+}
+
+/// Where each operand/result physically moves.
+#[derive(Debug, Clone)]
+pub struct IoPlacement {
+    /// Per input.
+    pub ins: Vec<Loc>,
+    /// Result placement.
+    pub out: Loc,
+}
+
+impl IoPlacement {
+    /// Bulk-synchronous default: everything round-trips DRAM.
+    pub fn bsp(n_inputs: usize) -> Self {
+        IoPlacement { ins: vec![Loc::Dram; n_inputs], out: Loc::Dram }
+    }
+}
+
+/// Number of CTAs an op naturally launches.
+pub fn natural_ctas(node: &Node) -> usize {
+    match &node.op {
+        OpKind::Matmul { b, m, n, .. } => {
+            let tiles = b * m.div_ceil(GEMM_TILE) * n.div_ceil(GEMM_TILE);
+            tiles.max(1)
+        }
+        OpKind::Interaction { .. } => {
+            let batch = node.out.shape.leading();
+            batch.div_ceil(GEMM_TILE).max(1)
+        }
+        // Reductions: PyTorch's two-pass tree gives limited parallelism
+        // (bounded fan-in per pass), far below the batch dimension's —
+        // the paper's Fig 2(b) starvation, softened to be fair to BSP.
+        OpKind::Reduce { factor, .. } => {
+            let out_ctas = node.out.numel().div_ceil(REDUCE_OUTS_PER_CTA);
+            (out_ctas * (*factor).min(8)).max(1)
+        }
+        OpKind::Loss | OpKind::OptimizerUpdate => {
+            node.out.numel().div_ceil(SIMT_ELEMS_PER_CTA).max(1)
+        }
+        _ => node.out.numel().div_ceil(SIMT_ELEMS_PER_CTA).max(1),
+    }
+}
+
+/// Shared-memory footprint per CTA.
+pub fn smem_per_cta(node: &Node) -> usize {
+    match &node.op {
+        // Double-buffered A/B input tiles (bf16): 2 × 2 × 128×128×2B = 128KB
+        // is the asymptote; small GEMMs take less.
+        OpKind::Matmul { m, n, k, .. } => {
+            let tm = (*m).min(GEMM_TILE);
+            let tn = (*n).min(GEMM_TILE);
+            let tk = (*k).min(64);
+            (2 * (tm * tk + tk * tn) * 2).min(160 * 1024)
+        }
+        OpKind::Interaction { features, dim } => (features * dim * 2).min(96 * 1024),
+        OpKind::Softmax | OpKind::LayerNorm => 16 * 1024,
+        OpKind::Reduce { .. } => 8 * 1024,
+        _ => 4 * 1024,
+    }
+}
+
+/// Issue-pipe utilization `u`: the fraction of its primary pipe's issue
+/// bandwidth the kernel sustains *while running* (tile quantization and
+/// occupancy effects — memory boundedness is modeled separately by the
+/// simulator's bandwidth pools, so it must NOT be folded in here).
+pub fn pipe_utilization(node: &Node) -> f64 {
+    match &node.op {
+        OpKind::Matmul { m, n, k, .. } => {
+            // Tile-quantization efficiency in each dimension, times the
+            // ~85% practical ceiling of real GEMM kernels.
+            let em = *m as f64 / (m.div_ceil(GEMM_TILE) * GEMM_TILE) as f64;
+            let en = *n as f64 / (n.div_ceil(GEMM_TILE) * GEMM_TILE) as f64;
+            let ek = (*k as f64 / 32.0).min(1.0);
+            (0.85 * em * en * ek).clamp(0.02, 1.0)
+        }
+        OpKind::Interaction { .. } => 0.5,
+        // SIMT ops sustain most of the vector pipe when not memory bound.
+        OpKind::Elementwise(_) | OpKind::Concat { .. } => 0.9,
+        OpKind::Softmax | OpKind::LayerNorm => 0.7,
+        OpKind::Reduce { .. } => 0.8,
+        OpKind::Gather { .. } | OpKind::Scatter => 0.3,
+        OpKind::Loss | OpKind::OptimizerUpdate => 0.8,
+        OpKind::Input | OpKind::Param | OpKind::Queue { .. } => 1.0,
+    }
+}
+
+/// L2 reuse multiplier: bytes served from L2 per DRAM byte (tile re-reads
+/// of GEMM panels, two-pass normalizations).
+fn l2_reuse(node: &Node) -> f64 {
+    match &node.op {
+        OpKind::Matmul { .. } | OpKind::Interaction { .. } => 3.0,
+        OpKind::Softmax | OpKind::LayerNorm => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// DRAM/L2 byte traffic for a node under an I/O placement.
+/// Returns `(dram_bytes, l2_bytes)`.
+pub fn traffic(node: &Node, graph: &Graph, io: &IoPlacement) -> (f64, f64) {
+    let mut dram = 0.0;
+    let mut l2 = 0.0;
+    for (i, &inp) in node.inputs.iter().enumerate() {
+        let full = graph.node(inp).out.bytes() as f64;
+        let bytes = match (&node.op, i) {
+            // Embedding gather touches only the looked-up rows, not the
+            // whole table.
+            (OpKind::Gather { .. }, 1) => full.min(node.out.bytes() as f64),
+            // Sparse optimizer step (embedding tables): reads only the
+            // rows the gradient touches.
+            (OpKind::OptimizerUpdate, 0) => {
+                let grad = node
+                    .inputs
+                    .get(1)
+                    .map(|g2| graph.node(*g2).out.bytes() as f64)
+                    .unwrap_or(full);
+                full.min(grad)
+            }
+            _ => full,
+        };
+        match io.ins.get(i).copied().unwrap_or(Loc::Dram) {
+            Loc::Dram => dram += bytes,
+            // Queue hop: producer wrote it to L2; we read it from L2.
+            Loc::L2Queue => l2 += bytes,
+            Loc::Smem => {}
+        }
+    }
+    let out_bytes = match &node.op {
+        // Scatter-add (embedding backward / GNN aggregation) writes only
+        // the rows its input touches.
+        OpKind::Scatter => {
+            let inp = node
+                .inputs
+                .first()
+                .map(|i| graph.node(*i).out.bytes() as f64)
+                .unwrap_or(node.out.bytes() as f64);
+            (node.out.bytes() as f64).min(inp)
+        }
+        OpKind::OptimizerUpdate => {
+            let grad = node
+                .inputs
+                .get(1)
+                .map(|g2| graph.node(*g2).out.bytes() as f64)
+                .unwrap_or(node.out.bytes() as f64);
+            (node.out.bytes() as f64).min(grad)
+        }
+        _ => node.out.bytes() as f64,
+    };
+    match io.out {
+        Loc::Dram => dram += out_bytes,
+        Loc::L2Queue => l2 += out_bytes,
+        Loc::Smem => {}
+    }
+    // Reuse traffic inside the op (panel re-reads etc.) hits L2.
+    l2 += dram * (l2_reuse(node) - 1.0);
+    (dram, l2)
+}
+
+/// Lower a node to a BSP kernel description (everything via DRAM).
+pub fn bsp_kernel(node: &Node, graph: &Graph, cfg: &GpuConfig) -> KernelDesc {
+    kernel_with_io(node, graph, cfg, &IoPlacement::bsp(node.inputs.len()))
+}
+
+/// Lower a node to a kernel description under an explicit I/O placement
+/// (the dataflow executor routes intermediates through queues).
+pub fn kernel_with_io(
+    node: &Node,
+    graph: &Graph,
+    _cfg: &GpuConfig,
+    io: &IoPlacement,
+) -> KernelDesc {
+    let (dram, l2) = traffic(node, graph, io);
+    let n = natural_ctas(node);
+    let k = KernelDesc {
+        name: node.name.clone(),
+        class: node.resource_class(),
+        n_ctas: n,
+        flops_per_cta: node.flops() / n as f64,
+        dram_bytes_per_cta: dram / n as f64,
+        l2_bytes_per_cta: l2 / n as f64,
+        smem_per_cta: smem_per_cta(node),
+        pipe_utilization: pipe_utilization(node),
+    };
+    if n > MAX_SIM_CTAS {
+        k.with_ctas(MAX_SIM_CTAS)
+    } else {
+        k
+    }
+}
+
+/// The paper's measured BSP throughput `t_i`, here analytic: work items
+/// per second when the op runs alone on the machine (roofline over its
+/// limiting resource). Used by the ILP (§5.3).
+pub fn bsp_throughput(node: &Node, graph: &Graph, cfg: &GpuConfig) -> f64 {
+    let io = IoPlacement::bsp(node.inputs.len());
+    let (dram, l2) = traffic(node, graph, &io);
+    let flops = node.flops();
+    let pipe = match node.resource_class() {
+        ResourceClass::Tensor => cfg.tensor_flops,
+        ResourceClass::Simt => cfg.simt_flops,
+    };
+    // Parallelism-limited pipe fraction: a reduction with 1 CTA can only
+    // use 1/108th of the machine's SIMT pipe (Fig 2(b)).
+    let n = natural_ctas(node);
+    let par_frac = ((n as f64) / cfg.sm_count as f64).min(1.0);
+    let u = pipe_utilization(node);
+    let t_compute = flops / (pipe * par_frac * u).max(1.0);
+    let t_dram = dram / cfg.dram_bw;
+    let t_l2 = l2 / cfg.l2_bw;
+    let t = t_compute.max(t_dram).max(t_l2).max(1e-12);
+    1.0 / t
+}
+
+/// Whether an op's on-chip working set per batch-tile exceeds the shared
+/// memory budget — the paper's Fig 2(a) vertical-fusion spill criterion
+/// (e.g. MLP hidden dim ≥ 768 on A100's 192 KB scratchpad).
+pub fn vf_tile_spills(hidden_dim: usize, dtype_bytes: usize, cfg: &GpuConfig) -> bool {
+    // Per-CTA tile: GEMM_TILE rows of the full hidden dimension, double
+    // buffered, both the pre- and post-activation tile live on chip.
+    let tile_bytes = 2 * GEMM_TILE * hidden_dim * dtype_bytes;
+    tile_bytes > cfg.smem_per_sm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, GraphKind};
+
+    fn mk() -> (Graph, GpuConfig) {
+        let mut b = GraphBuilder::new("t", GraphKind::Inference);
+        let x = b.input(&[2048, 1024], "x");
+        let h = b.linear(x, 4096, false, "up");
+        let a = b.relu(h, "act");
+        let _ = b.linear(a, 1024, false, "down");
+        (b.finish(), GpuConfig::a100())
+    }
+
+    #[test]
+    fn gemm_ctas_are_output_tiles() {
+        let (g, _) = mk();
+        let up = g.nodes().iter().find(|n| n.name == "up").unwrap();
+        // 2048/128 * 4096/128 = 16 * 32 = 512 tiles
+        assert_eq!(natural_ctas(up), 512);
+    }
+
+    #[test]
+    fn bsp_traffic_counts_all_operands() {
+        let (g, cfg) = mk();
+        let up = g.nodes().iter().find(|n| n.name == "up").unwrap();
+        let k = bsp_kernel(up, &g, &cfg);
+        let want = (2048 * 1024 + 1024 * 4096 + 2048 * 4096) as f64 * 2.0;
+        assert!((k.total_dram_bytes() - want).abs() < 1.0, "{}", k.total_dram_bytes());
+    }
+
+    #[test]
+    fn queue_io_moves_traffic_to_l2() {
+        let (g, cfg) = mk();
+        let act = g.nodes().iter().find(|n| n.name == "act").unwrap();
+        let bsp = bsp_kernel(act, &g, &cfg);
+        let io = IoPlacement { ins: vec![Loc::L2Queue], out: Loc::L2Queue };
+        let df = kernel_with_io(act, &g, &cfg, &io);
+        assert!(df.total_dram_bytes() < 1.0, "{}", df.total_dram_bytes());
+        assert!(df.total_l2_bytes() > bsp.total_l2_bytes());
+        // Work conserved.
+        assert!((df.total_flops() - bsp.total_flops()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reduce_has_few_ctas() {
+        use crate::graph::{EwKind, OpKind, ReduceAxis, TensorDesc};
+        let mut b = GraphBuilder::new("r", GraphKind::Inference);
+        let x = b.input(&[8192, 768], "x");
+        let r = b.reduce(x, ReduceAxis::Batch, 8192, &[768], "bias_grad");
+        let g = b.finish();
+        let node = g.node(r);
+        // Limited two-pass parallelism only — far below the 8192-deep
+        // batch dimension (Fig 2(b) starvation, softened for BSP).
+        assert!(natural_ctas(node) <= 8, "batch reduce is parallelism-starved");
+        let _ = (OpKind::Elementwise(EwKind::Relu), TensorDesc::bf16(&[1]));
+    }
+
+    #[test]
+    fn gemm_utilization_degrades_for_skinny_shapes() {
+        let (g, _) = mk();
+        let up = g.nodes().iter().find(|n| n.name == "up").unwrap();
+        let fat = pipe_utilization(up);
+        let mut b = GraphBuilder::new("s", GraphKind::Inference);
+        let x = b.input(&[1, 1024], "x"); // batch-1 decode-style GEMM
+        let y = b.linear(x, 4096, false, "skinny");
+        let g2 = b.finish();
+        let skinny = pipe_utilization(g2.node(y));
+        let _ = y;
+        assert!(skinny < fat * 0.05, "skinny {skinny} vs fat {fat}");
+    }
+
+    #[test]
+    fn spill_criterion_matches_paper_768() {
+        let cfg = GpuConfig::a100();
+        // Paper §3: "MLP with N >= 768 on an A100 with 192 KB" spills (fp32).
+        assert!(vf_tile_spills(768, 4, &cfg));
+        assert!(!vf_tile_spills(256, 2, &cfg));
+    }
+
+    #[test]
+    fn bsp_throughput_prefers_parallel_ops() {
+        let (g, cfg) = mk();
+        let up = g.nodes().iter().find(|n| n.name == "up").unwrap();
+        let t_gemm = bsp_throughput(up, &g, &cfg);
+        assert!(t_gemm > 0.0);
+        // The skinny reduce from `reduce_has_few_ctas` is far slower per
+        // unit work; just sanity-check finiteness here.
+        assert!(t_gemm.is_finite());
+    }
+}

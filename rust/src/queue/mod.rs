@@ -1,0 +1,14 @@
+//! The paper's §4.1 primitive: a synchronized ring queue for inter-CTA
+//! producer/consumer communication.
+//!
+//! Two faces:
+//! * [`model`] — analytic bandwidth model calibrated to the paper's A100
+//!   silicon measurements (regenerates Fig 5);
+//! * [`host`] — a real lock-free implementation of the acquire/release
+//!   protocol, used by the L3 coordinator's spatial-pipeline runtime.
+
+pub mod host;
+pub mod model;
+
+pub use host::{QueueError, RingQueue};
+pub use model::{QueueModel, QueuePoint, ATOMICS_PER_HANDOFF, DEFAULT_ENTRIES};

@@ -1,0 +1,199 @@
+//! Analytic performance model of the §4.1 ring queue — regenerates Fig 5
+//! and the section's headline numbers.
+//!
+//! Calibration constants come straight from the paper's silicon
+//! measurements on A100:
+//!
+//! * 100 M global atomics / sec / CTA under no contention;
+//! * acquire/release = 4 atomics per side per entry handoff (sequence
+//!   check + metadata update, Fig 4(c)), plus an L2 round trip for the
+//!   spin-loop to observe the released entry;
+//! * payload moves through the L2: one write + one read per byte, so the
+//!   aggregate payload pool is ≈ L2_bw / 2 ≈ 2 TB/s on A100 — exactly the
+//!   plateau Fig 5 shows for 128–256 KB payloads;
+//! * when the aggregate queue footprint exceeds L2 capacity, traffic
+//!   spills to HBM and the pool drops to DRAM bandwidth (1.5 TB/s) — the
+//!   fall-off Fig 5 shows past 256 KB.
+
+use crate::sim::GpuConfig;
+
+/// Atomic operations per entry handoff, per side (Fig 4(c): sequence
+/// check, head/tail bump, release add, plus the CTA-barrier flag).
+pub const ATOMICS_PER_HANDOFF: f64 = 4.0;
+
+/// Double buffering (two entries) as in paper Fig 4(a).
+pub const DEFAULT_ENTRIES: usize = 2;
+
+/// Result of evaluating the model at one (payload, n_queues) point.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuePoint {
+    pub payload_bytes: usize,
+    pub n_queues: usize,
+    /// Per-queue sustained bandwidth, bytes/s.
+    pub per_queue_bw: f64,
+    /// Aggregate across all queues, bytes/s.
+    pub aggregate_bw: f64,
+    /// Whether the queue set spilled out of L2 to HBM.
+    pub spills_to_hbm: bool,
+    /// Seconds per entry handoff spent on synchronization.
+    pub sync_time_s: f64,
+}
+
+/// Analytic model over a machine config.
+#[derive(Debug, Clone)]
+pub struct QueueModel {
+    pub cfg: GpuConfig,
+    pub entries: usize,
+}
+
+impl QueueModel {
+    pub fn new(cfg: GpuConfig) -> Self {
+        QueueModel { cfg, entries: DEFAULT_ENTRIES }
+    }
+
+    /// Synchronization time per entry handoff: producer + consumer atomics
+    /// (serialized on the metadata line) plus the consumer's spin-loop L2
+    /// observation latency.
+    pub fn sync_time(&self) -> f64 {
+        2.0 * ATOMICS_PER_HANDOFF / self.cfg.atomics_per_sec_per_cta + self.cfg.l2_latency_s
+    }
+
+    /// The §4.1 "upper bound per queue" from atomics throughput alone:
+    /// `payload * atomics_rate / atomics_per_handoff`. For 16–64 KB
+    /// payloads on A100 this is the paper's 385–1541 GB/s band.
+    pub fn atomics_bound(&self, payload_bytes: usize) -> f64 {
+        payload_bytes as f64 * self.cfg.atomics_per_sec_per_cta / ATOMICS_PER_HANDOFF
+    }
+
+    /// Aggregate L2 payload pool: each payload byte is written then read.
+    fn l2_pool(&self) -> f64 {
+        self.cfg.l2_bw / 2.0
+    }
+
+    /// Do `n_queues` queues of `payload` fit in L2 alongside ~25% of L2
+    /// reserved for normal caching?
+    pub fn fits_l2(&self, payload_bytes: usize, n_queues: usize) -> bool {
+        let footprint = n_queues * self.entries * (payload_bytes + 4 * 128);
+        footprint as f64 <= 0.75 * self.cfg.l2_capacity as f64
+    }
+
+    /// Evaluate the model. `sync=false` measures raw data movement with
+    /// synchronizing atomics disabled (Fig 5's upper series).
+    pub fn evaluate(&self, payload_bytes: usize, n_queues: usize, sync: bool) -> QueuePoint {
+        let spills = !self.fits_l2(payload_bytes, n_queues);
+        // Payload pool: L2-resident queues copy at the L2 pool rate; spilled
+        // queues are limited by DRAM bandwidth (round trip).
+        let pool = if spills { self.cfg.dram_bw } else { self.l2_pool() };
+        let fair_share = pool / n_queues as f64;
+        let data_time = payload_bytes as f64 / fair_share;
+        let sync_time = if sync { self.sync_time() } else { 0.0 };
+        // Spilled accesses also eat the HBM round-trip latency per entry.
+        let spill_lat = if spills { self.cfg.dram_latency_s } else { 0.0 };
+        let handoff = data_time + sync_time + spill_lat;
+        let mut per_queue = payload_bytes as f64 / handoff;
+        if sync {
+            per_queue = per_queue.min(self.atomics_bound(payload_bytes));
+        }
+        QueuePoint {
+            payload_bytes,
+            n_queues,
+            per_queue_bw: per_queue,
+            aggregate_bw: per_queue * n_queues as f64,
+            spills_to_hbm: spills,
+            sync_time_s: sync_time,
+        }
+    }
+
+    /// The Fig 5 sweep: payload sizes at the paper's 54-queue operating
+    /// point (108 CTAs on 108 SMs), sync on and off.
+    pub fn fig5_sweep(&self, n_queues: usize) -> Vec<(QueuePoint, QueuePoint)> {
+        let payloads = [
+            1usize << 10,
+            1 << 11,
+            1 << 12,
+            1 << 13,
+            1 << 14,
+            1 << 15,
+            1 << 16,
+            1 << 17,
+            1 << 18,
+            1 << 19,
+            1 << 20,
+        ];
+        payloads
+            .iter()
+            .map(|&p| (self.evaluate(p, n_queues, true), self.evaluate(p, n_queues, false)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> QueueModel {
+        QueueModel::new(GpuConfig::a100())
+    }
+
+    #[test]
+    fn atomics_bound_matches_paper_band() {
+        // Paper §4.1: "upper bound of 385-1541 GB/s per queue".
+        let m = model();
+        let lo = m.atomics_bound(16 * 1024);
+        let hi = m.atomics_bound(64 * 1024);
+        assert!((lo / 1e9 - 385.0).abs() / 385.0 < 0.1, "{}", lo / 1e9);
+        assert!((hi / 1e9 - 1541.0).abs() / 1541.0 < 0.1, "{}", hi / 1e9);
+    }
+
+    #[test]
+    fn aggregate_plateau_near_2tbs_at_128_256kb() {
+        // Paper: "with 128-256 KB payloads, aggregate bandwidth reaches
+        // 2 TB/s (37 GB/s/queue)".
+        let m = model();
+        let p = m.evaluate(128 * 1024, 54, true);
+        assert!(!p.spills_to_hbm);
+        assert!(p.aggregate_bw > 1.6e12 && p.aggregate_bw < 2.4e12, "{}", p.aggregate_bw);
+        assert!(p.per_queue_bw > 30e9 && p.per_queue_bw < 45e9, "{}", p.per_queue_bw);
+    }
+
+    #[test]
+    fn spills_past_256kb_and_drops() {
+        // Paper: "Beyond 256 KB, performance drops due to queue sizes
+        // reaching the L2 capacity ... Limiting us to 1.5 TB/s".
+        let m = model();
+        let in_l2 = m.evaluate(256 * 1024, 54, true);
+        let spilled = m.evaluate(512 * 1024, 54, true);
+        assert!(!in_l2.spills_to_hbm);
+        assert!(spilled.spills_to_hbm);
+        assert!(spilled.aggregate_bw < in_l2.aggregate_bw);
+        assert!(spilled.aggregate_bw <= 1.56e12);
+    }
+
+    #[test]
+    fn sync_overhead_large_small_payloads() {
+        // Paper: "12x reduction in bandwidth for 1KB payloads" and
+        // "less than 63% for >= 64KB payloads".
+        let m = model();
+        let sync = m.evaluate(1024, 54, true);
+        let nosync = m.evaluate(1024, 54, false);
+        let ratio = nosync.per_queue_bw / sync.per_queue_bw;
+        assert!(ratio > 6.0 && ratio < 20.0, "small-payload overhead ratio {ratio}");
+        let sync64 = m.evaluate(64 * 1024, 54, true);
+        let nosync64 = m.evaluate(64 * 1024, 54, false);
+        let overhead = nosync64.per_queue_bw / sync64.per_queue_bw - 1.0;
+        assert!(overhead < 0.63, "64KB overhead {overhead}");
+    }
+
+    #[test]
+    fn sweep_is_monotone_until_spill() {
+        let m = model();
+        let sweep = m.fig5_sweep(54);
+        // Aggregate with sync rises with payload until the spill point.
+        let agg: Vec<f64> = sweep.iter().map(|(s, _)| s.aggregate_bw).collect();
+        let spill_idx = sweep.iter().position(|(s, _)| s.spills_to_hbm).unwrap();
+        for i in 1..spill_idx {
+            assert!(agg[i] >= agg[i - 1], "non-monotone before spill at {i}");
+        }
+        assert!(agg[spill_idx] < agg[spill_idx - 1], "no drop at spill");
+    }
+}

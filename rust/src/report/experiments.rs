@@ -1,0 +1,114 @@
+//! Experiment drivers: run an application under all three execution
+//! models on a machine config. Single source of truth for the CLI,
+//! benches and integration tests.
+
+use crate::compiler::{compile, CompiledApp, SelectOptions};
+use crate::exec::{run_bsp_detailed, run_dataflow, run_vertical, ExecReport};
+use crate::graph::Graph;
+use crate::sim::{Engine, GpuConfig, SchedPolicy};
+use anyhow::Result;
+
+/// Full three-way evaluation of one application graph.
+#[derive(Debug, Clone)]
+pub struct AppEval {
+    pub name: String,
+    pub n_ops: usize,
+    pub bsp: ExecReport,
+    pub vertical: ExecReport,
+    pub kitsune: ExecReport,
+    /// Ops covered by vertical fusion groups.
+    pub vf_fused_ops: usize,
+    /// Ops covered by Kitsune sf-nodes.
+    pub kitsune_fused_ops: usize,
+    pub compiled: CompiledApp,
+}
+
+impl AppEval {
+    pub fn kitsune_speedup(&self) -> f64 {
+        self.kitsune.speedup_over(&self.bsp)
+    }
+
+    pub fn vertical_speedup(&self) -> f64 {
+        self.vertical.speedup_over(&self.bsp)
+    }
+
+    pub fn kitsune_traffic_reduction(&self) -> f64 {
+        self.kitsune.traffic_reduction_vs(&self.bsp)
+    }
+
+    pub fn vertical_traffic_reduction(&self) -> f64 {
+        self.vertical.traffic_reduction_vs(&self.bsp)
+    }
+}
+
+/// Evaluate `g` on `cfg` under BSP, vertical fusion and Kitsune.
+pub fn evaluate_app(name: &str, g: &Graph, cfg: &GpuConfig) -> Result<AppEval> {
+    let bsp_engine = Engine::new(cfg.clone(), SchedPolicy::RoundRobin);
+    let kitsune_engine = Engine::new(cfg.clone(), SchedPolicy::DualArbiter);
+
+    let (bsp, per_node) = run_bsp_detailed(g, &bsp_engine)?;
+    let vertical = run_vertical(g, &bsp_engine, &per_node)?;
+    let compiled = compile(g, cfg, &SelectOptions::default())?;
+    let kitsune = run_dataflow(g, &compiled, &kitsune_engine, &per_node)?;
+
+    let vf_fused_ops = vertical.regions.iter().map(|r| r.n_ops).sum();
+    let kitsune_fused_ops = compiled.n_fused_ops();
+    Ok(AppEval {
+        name: name.to_string(),
+        n_ops: g.n_compute_ops(),
+        bsp,
+        vertical,
+        kitsune,
+        vf_fused_ops,
+        kitsune_fused_ops,
+        compiled,
+    })
+}
+
+/// Evaluate a whole suite (name, graph) on one config.
+pub fn evaluate_suite(suite: &[(String, Graph)], cfg: &GpuConfig) -> Result<Vec<AppEval>> {
+    suite
+        .iter()
+        .map(|(name, g)| evaluate_app(name, g, cfg))
+        .collect()
+}
+
+/// The §6 sensitivity configs: baseline A100; 2× SM compute; 2× L2
+/// bandwidth; both — with DRAM bandwidth (the expensive resource) fixed.
+pub fn sensitivity_configs() -> Vec<GpuConfig> {
+    vec![
+        GpuConfig::a100(),
+        GpuConfig::a100().scale_compute(2.0),
+        GpuConfig::a100().scale_l2_bw(2.0),
+        GpuConfig::a100().scale_compute(2.0).scale_l2_bw(2.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn nerf_inference_full_eval() {
+        let cfg = GpuConfig::a100();
+        let (name, g) = &apps::inference_suite()[3];
+        assert_eq!(name, "NERF");
+        let eval = evaluate_app(name, g, &cfg).unwrap();
+        // Paper: NeRF inference ~2.3x subgraph speedup, huge traffic cut,
+        // VF weaker than Kitsune.
+        assert!(eval.kitsune_speedup() > 1.2, "kitsune {}", eval.kitsune_speedup());
+        assert!(
+            eval.kitsune_speedup() > eval.vertical_speedup(),
+            "kitsune {} vs vf {}",
+            eval.kitsune_speedup(),
+            eval.vertical_speedup()
+        );
+        assert!(
+            eval.kitsune_traffic_reduction() > eval.vertical_traffic_reduction(),
+            "traffic k {} vf {}",
+            eval.kitsune_traffic_reduction(),
+            eval.vertical_traffic_reduction()
+        );
+    }
+}

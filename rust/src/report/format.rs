@@ -1,0 +1,265 @@
+//! Text renderers: one function per paper table/figure, producing the
+//! same rows/series the paper reports (shape-level reproduction).
+
+use super::experiments::AppEval;
+use crate::exec::geomean;
+use crate::queue::QueueModel;
+use crate::sim::{GpuConfig, UtilQuadrants};
+use std::fmt::Write as _;
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    "#".repeat(n)
+}
+
+/// Table 1: the application list (static).
+pub fn table1() -> String {
+    let rows = [
+        ("DLRM", "2019", "Predicting ad clicks"),
+        ("MeshGraphNets", "2020", "Mesh based physical simulation"),
+        ("NeRF", "2021", "View synthesis"),
+        ("GraphCast", "2022", "Weather forecast prediction"),
+        ("Llama 3 8B", "2024", "Language modeling"),
+    ];
+    let mut s = String::from("Table 1. Description of selected applications.\n");
+    s.push_str(&format!("{:<15} {:<6} {}\n", "Application", "Year", "Use Case"));
+    for (a, y, u) in rows {
+        s.push_str(&format!("{a:<15} {y:<6} {u}\n"));
+    }
+    s
+}
+
+/// Table 2: fusion coverage and traffic reduction, vertical vs Kitsune.
+pub fn table2(inference: &[AppEval], training: &[AppEval]) -> String {
+    let mut s = String::from("Table 2. Summary of fusions and traffic reductions.\n");
+    s.push_str(&format!(
+        "{:<8} {:>5} | {:>14} {:>14} | {:>10} {:>10}\n",
+        "App", "#Ops", "Vertical", "Kitsune", "Vert.", "Kitsu."
+    ));
+    let section = |title: &str, evals: &[AppEval], s: &mut String| {
+        s.push_str(&format!("-- {title} --\n"));
+        for e in evals {
+            let vf_pct = 100.0 * e.vf_fused_ops as f64 / e.n_ops as f64;
+            let ki_pct = 100.0 * e.kitsune_fused_ops as f64 / e.n_ops as f64;
+            writeln!(
+                s,
+                "{:<8} {:>5} | {:>7} ({:>4.0}%) {:>7} ({:>4.0}%) | {:>9.2}% {:>9.2}%",
+                e.name,
+                e.n_ops,
+                e.vf_fused_ops,
+                vf_pct,
+                e.kitsune_fused_ops,
+                ki_pct,
+                100.0 * e.vertical_traffic_reduction(),
+                100.0 * e.kitsune_traffic_reduction()
+            )
+            .unwrap();
+        }
+    };
+    section("Inference", inference, &mut s);
+    section("Training", training, &mut s);
+    s
+}
+
+fn quadrant_row(name: &str, mode: &str, q: &UtilQuadrants) -> String {
+    let n = q.normalized();
+    format!(
+        "{name:<8} {mode:<10} | both-low {:>5.1}%  low-SM {:>5.1}%  low-DRAM {:>5.1}%  neither {:>5.1}%\n",
+        100.0 * n.both_low,
+        100.0 * n.low_sm,
+        100.0 * n.low_dram,
+        100.0 * n.neither_low
+    )
+}
+
+/// Fig 3: runtime in SM×DRAM utilization quadrants, BSP + vertical fusion.
+pub fn fig3(inference: &[AppEval], training: &[AppEval]) -> String {
+    let mut s =
+        String::from("Fig 3. Runtime by SM/DRAM utilization (low = <33% of peak), baseline execution.\n");
+    s.push_str("-- Inference --\n");
+    for e in inference {
+        s.push_str(&quadrant_row(&e.name, "bulk-sync", &e.bsp.sim.quadrants));
+        s.push_str(&quadrant_row(&e.name, "tensorrt", &e.vertical.sim.quadrants));
+    }
+    s.push_str("-- Training (bulk-sync only; TensorRT does not support training) --\n");
+    for e in training {
+        s.push_str(&quadrant_row(&e.name, "bulk-sync", &e.bsp.sim.quadrants));
+    }
+    s
+}
+
+/// Fig 13: same quadrants under Kitsune.
+pub fn fig13(inference: &[AppEval], training: &[AppEval]) -> String {
+    let mut s = String::from("Fig 13. Runtime by SM/DRAM utilization under Kitsune.\n");
+    s.push_str("-- Inference --\n");
+    for e in inference {
+        s.push_str(&quadrant_row(&e.name, "kitsune", &e.kitsune.sim.quadrants));
+    }
+    s.push_str("-- Training --\n");
+    for e in training {
+        s.push_str(&quadrant_row(&e.name, "kitsune", &e.kitsune.sim.quadrants));
+    }
+    s
+}
+
+/// Fig 5: queue bandwidth sweep (sync on/off) at the 54-queue point.
+pub fn fig5(cfg: &GpuConfig) -> String {
+    let m = QueueModel::new(cfg.clone());
+    let mut s = format!(
+        "Fig 5. GPU atomics / queue performance on {} (54 queues, 108 CTAs).\n",
+        cfg.name
+    );
+    s.push_str(&format!(
+        "{:>9} | {:>12} {:>12} | {:>12} | {:>6}\n",
+        "payload", "agg (sync)", "agg (nosync)", "per-q (sync)", "spill"
+    ));
+    for (sync, nosync) in m.fig5_sweep(54) {
+        writeln!(
+            s,
+            "{:>7}KB | {:>10.2}GB/s {:>10.2}GB/s | {:>10.2}GB/s | {:>6}",
+            sync.payload_bytes / 1024,
+            sync.aggregate_bw / 1e9,
+            nosync.aggregate_bw / 1e9,
+            sync.per_queue_bw / 1e9,
+            if sync.spills_to_hbm { "HBM" } else { "L2" }
+        )
+        .unwrap();
+    }
+    writeln!(
+        s,
+        "atomics bound per queue: 16KB={:.0}GB/s .. 64KB={:.0}GB/s (paper: 385-1541 GB/s)",
+        m.atomics_bound(16 * 1024) / 1e9,
+        m.atomics_bound(64 * 1024) / 1e9
+    )
+    .unwrap();
+    s
+}
+
+/// Fig 10/12 rows: per-subgraph speedups, with sensitivity columns.
+/// `evals_by_cfg[c][a]` = app `a` evaluated on config `c`.
+pub fn subgraph_speedups(
+    title: &str,
+    cfg_names: &[String],
+    evals_by_cfg: &[Vec<AppEval>],
+    training_split: bool,
+) -> String {
+    let mut s = format!("{title}\n");
+    let base = &evals_by_cfg[0];
+    for (ai, e) in base.iter().enumerate() {
+        writeln!(s, "{}:", e.name).unwrap();
+        for (ri, r) in e.kitsune.regions.iter().enumerate() {
+            let pass = if training_split {
+                if r.backward {
+                    " bwd"
+                } else {
+                    " fwd"
+                }
+            } else {
+                ""
+            };
+            let mut cols = format!(
+                "  sf{ri}{pass} ({} ops) {:>5.2}x {}",
+                r.n_ops,
+                r.speedup(),
+                bar(r.speedup() / 4.0, 24)
+            );
+            for (ci, cname) in cfg_names.iter().enumerate().skip(1) {
+                if let Some(r2) = evals_by_cfg[ci][ai].kitsune.regions.get(ri) {
+                    write!(cols, "  [{cname}: {:.2}x]", r2.speedup()).unwrap();
+                }
+            }
+            s.push_str(&cols);
+            s.push('\n');
+        }
+        let sub: Vec<f64> = e.kitsune.regions.iter().map(|r| r.speedup()).collect();
+        writeln!(s, "  geomean subgraph speedup: {:.2}x", geomean(&sub)).unwrap();
+    }
+    let all: Vec<f64> = base
+        .iter()
+        .flat_map(|e| e.kitsune.regions.iter().map(|r| r.speedup()))
+        .collect();
+    writeln!(s, "ALL subgraphs geomean: {:.2}x", geomean(&all)).unwrap();
+    s
+}
+
+/// Fig 11/14: end-to-end speedups + time-coverage timeline summary.
+pub fn e2e_speedups(title: &str, evals: &[AppEval]) -> String {
+    let mut s = format!("{title}\n");
+    s.push_str(&format!(
+        "{:<8} {:>9} {:>9} | {:>8} {:>10} {:>12}\n",
+        "App", "Vertical", "Kitsune", "sf time%", "#subgraphs", "unfused time"
+    ));
+    for e in evals {
+        writeln!(
+            s,
+            "{:<8} {:>8.2}x {:>8.2}x | {:>7.0}% {:>10} {:>10.1}us  {}",
+            e.name,
+            e.vertical_speedup(),
+            e.kitsune_speedup(),
+            100.0 * e.kitsune.region_time_coverage(),
+            e.kitsune.regions.len(),
+            1e6 * e.kitsune.unfused_s,
+            bar(e.kitsune_speedup() / 2.5, 20)
+        )
+        .unwrap();
+    }
+    let vf: Vec<f64> = evals.iter().map(|e| e.vertical_speedup()).collect();
+    let ki: Vec<f64> = evals.iter().map(|e| e.kitsune_speedup()).collect();
+    writeln!(s, "geomean: vertical {:.2}x, kitsune {:.2}x", geomean(&vf), geomean(&ki)).unwrap();
+    s
+}
+
+/// §6 sensitivity: speedup of upgraded configs relative to the *baseline
+/// machine*, for both bulk-sync and Kitsune execution.
+pub fn sensitivity(cfg_names: &[String], evals_by_cfg: &[Vec<AppEval>]) -> String {
+    let mut s = String::from(
+        "Hardware synergy: 2x cheap resources (SMs, L2 BW), DRAM BW fixed.\nSpeedup vs same mode on baseline A100 (geomean over apps):\n",
+    );
+    let base = &evals_by_cfg[0];
+    for (ci, cname) in cfg_names.iter().enumerate().skip(1) {
+        let bsp_gain: Vec<f64> = base
+            .iter()
+            .zip(&evals_by_cfg[ci])
+            .map(|(b, u)| b.bsp.sim.elapsed_s / u.bsp.sim.elapsed_s)
+            .collect();
+        let kitsune_gain: Vec<f64> = base
+            .iter()
+            .zip(&evals_by_cfg[ci])
+            .map(|(b, u)| b.kitsune.sim.elapsed_s / u.kitsune.sim.elapsed_s)
+            .collect();
+        writeln!(
+            s,
+            "{cname:<16} baseline-exec +{:>4.0}%   kitsune +{:>4.0}%",
+            100.0 * (geomean(&bsp_gain) - 1.0),
+            100.0 * (geomean(&kitsune_gain) - 1.0)
+        )
+        .unwrap();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_all_apps() {
+        let t = table1();
+        for app in ["DLRM", "MeshGraphNets", "NeRF", "GraphCast", "Llama 3 8B"] {
+            assert!(t.contains(app), "{t}");
+        }
+    }
+
+    #[test]
+    fn fig5_renders() {
+        let s = fig5(&GpuConfig::a100());
+        assert!(s.contains("payload"));
+        assert!(s.contains("HBM"), "spill rows present:\n{s}");
+    }
+
+    #[test]
+    fn bar_clamps() {
+        assert_eq!(bar(2.0, 4), "####");
+        assert_eq!(bar(-1.0, 4), "");
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! AOT entry point:
+//!
+//! ```text
+//! name<TAB>file.hlo.txt<TAB>in=f32[1024,60],f32[60,256],...<TAB>out=9
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor spec of one executable input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let open = s.find('[').context("missing [ in tensor spec")?;
+        if !s.ends_with(']') {
+            bail!("missing ] in tensor spec {s}");
+        }
+        let dtype = s[..open].to_string();
+        let dims_str = &s[open + 1..s.len() - 1];
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+}
+
+/// Parse `manifest.txt` from an artifact directory.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<EntrySpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() != 4 {
+            bail!("manifest line {} malformed: {line}", lineno + 1);
+        }
+        let ins = fields[2]
+            .strip_prefix("in=")
+            .with_context(|| format!("line {}: missing in=", lineno + 1))?;
+        // Split on ',' only at type boundaries: specs look like
+        // `f32[a,b]` so we split on "],".
+        let mut inputs = Vec::new();
+        let mut rest = ins;
+        while !rest.is_empty() {
+            match rest.find("],") {
+                Some(i) => {
+                    inputs.push(TensorSpec::parse(&rest[..=i])?);
+                    rest = &rest[i + 2..];
+                }
+                None => {
+                    inputs.push(TensorSpec::parse(rest)?);
+                    break;
+                }
+            }
+        }
+        let n_outputs: usize = fields[3]
+            .strip_prefix("out=")
+            .with_context(|| format!("line {}: missing out=", lineno + 1))?
+            .parse()?;
+        entries.push(EntrySpec {
+            name: fields[0].to_string(),
+            hlo_path: dir.join(fields[1]),
+            inputs,
+            n_outputs,
+        });
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tensor_specs() {
+        let t = TensorSpec::parse("f32[1024,60]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![1024, 60]);
+        assert_eq!(t.numel(), 1024 * 60);
+        let s = TensorSpec::parse("f32[]").unwrap();
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn parses_manifest_line() {
+        let dir = std::env::temp_dir().join("kitsune_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "fwd\tfwd.hlo.txt\tin=f32[128,60],f32[60,256],f32[256]\tout=1\n",
+        )
+        .unwrap();
+        let entries = parse_manifest(&dir).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].name, "fwd");
+        assert_eq!(entries[0].inputs.len(), 3);
+        assert_eq!(entries[0].inputs[2].dims, vec![256]);
+        assert_eq!(entries[0].n_outputs, 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TensorSpec::parse("f32[3").is_err());
+        assert!(TensorSpec::parse("nodims").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile once on the PJRT CPU client, execute
+//! from the L3 hot path. Python never runs at request time.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ArtifactStore, Rng, Tensor};
+pub use manifest::{parse_manifest, EntrySpec, TensorSpec};

@@ -1,0 +1,158 @@
+//! Kernel and CTA work descriptors consumed by the simulator.
+//!
+//! A [`KernelDesc`] is the simulator's unit of dispatch — the analog of a
+//! CUDA kernel launch. Under BSP a kernel's CTAs all run before the next
+//! kernel starts; under Kitsune several kernels (pipeline stages) are
+//! co-resident and stream tiles through queues.
+
+use crate::graph::ResourceClass;
+
+/// Static description of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelDesc {
+    pub name: String,
+    /// Scheduler tag from the §4.2 kernel-call header.
+    pub class: ResourceClass,
+    /// Number of CTAs in the grid.
+    pub n_ctas: usize,
+    /// Per-CTA work, split by resource stream. A CTA finishes when all
+    /// three streams drain (compute and memory overlap, as on real SMs).
+    pub flops_per_cta: f64,
+    pub dram_bytes_per_cta: f64,
+    pub l2_bytes_per_cta: f64,
+    /// Shared-memory footprint per CTA (occupancy constraint).
+    pub smem_per_cta: usize,
+    /// Fraction of the CTA's issue bandwidth on its *primary* pipe that it
+    /// can actually sustain (the paper's `u`, used for Speedup(a_i)=1/u).
+    pub pipe_utilization: f64,
+}
+
+impl KernelDesc {
+    /// Total FLOPs across the grid.
+    pub fn total_flops(&self) -> f64 {
+        self.flops_per_cta * self.n_ctas as f64
+    }
+
+    /// Total DRAM bytes across the grid.
+    pub fn total_dram_bytes(&self) -> f64 {
+        self.dram_bytes_per_cta * self.n_ctas as f64
+    }
+
+    /// Total L2 bytes across the grid.
+    pub fn total_l2_bytes(&self) -> f64 {
+        self.l2_bytes_per_cta * self.n_ctas as f64
+    }
+
+    /// Rescale to a different CTA count, conserving total work (used by the
+    /// §5.3 load balancer when it allocates `a_i` CTAs to a stage).
+    pub fn with_ctas(&self, n: usize) -> KernelDesc {
+        assert!(n > 0, "kernel must have at least one CTA");
+        let scale = self.n_ctas as f64 / n as f64;
+        KernelDesc {
+            name: self.name.clone(),
+            class: self.class,
+            n_ctas: n,
+            flops_per_cta: self.flops_per_cta * scale,
+            dram_bytes_per_cta: self.dram_bytes_per_cta * scale,
+            l2_bytes_per_cta: self.l2_bytes_per_cta * scale,
+            smem_per_cta: self.smem_per_cta,
+            pipe_utilization: self.pipe_utilization,
+        }
+    }
+}
+
+/// A pipeline-stage instance: a kernel plus the queues it talks to.
+#[derive(Debug, Clone)]
+pub struct StageDesc {
+    pub kernel: KernelDesc,
+    /// Tiles this stage must process for the sf-node to complete.
+    pub n_tiles: usize,
+    /// Queue indices (into the pipeline's queue table) this stage pops from.
+    pub input_queues: Vec<usize>,
+    /// Queue indices this stage pushes to.
+    pub output_queues: Vec<usize>,
+}
+
+/// A queue instance connecting pipeline stages (paper §4.1).
+#[derive(Debug, Clone)]
+pub struct QueueDesc {
+    /// Payload bytes per entry (tile size).
+    pub payload_bytes: usize,
+    /// Entries (2 = double buffering, as in paper Fig 4).
+    pub entries: usize,
+    /// Memory-backed edge (fork-join skip): unbounded, not L2-pinned.
+    pub memory_backed: bool,
+}
+
+impl QueueDesc {
+    /// Total L2 footprint of the queue (payload + metadata lines).
+    /// Memory-backed edges are not pinned in L2 and cost nothing here.
+    pub fn footprint_bytes(&self) -> usize {
+        if self.memory_backed {
+            return 0;
+        }
+        // 4 cache lines of padded sync metadata per entry (Fig 4(a)).
+        self.entries * (self.payload_bytes + 4 * 128)
+    }
+}
+
+/// A spatial pipeline: co-resident stages + connecting queues (Fig 6's
+/// `cudaPipeline` object, post load-balancing).
+#[derive(Debug, Clone)]
+pub struct PipelineDesc {
+    pub name: String,
+    pub stages: Vec<StageDesc>,
+    pub queues: Vec<QueueDesc>,
+}
+
+impl PipelineDesc {
+    /// Aggregate L2 footprint of all queues — must fit the L2 budget.
+    pub fn queue_footprint(&self) -> usize {
+        self.queues.iter().map(|q| q.footprint_bytes()).sum()
+    }
+
+    /// Total CTAs across stages (must co-reside on the GPU).
+    pub fn total_ctas(&self) -> usize {
+        self.stages.iter().map(|s| s.kernel.n_ctas).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k() -> KernelDesc {
+        KernelDesc {
+            name: "k".into(),
+            class: ResourceClass::Tensor,
+            n_ctas: 8,
+            flops_per_cta: 100.0,
+            dram_bytes_per_cta: 50.0,
+            l2_bytes_per_cta: 200.0,
+            smem_per_cta: 1024,
+            pipe_utilization: 0.5,
+        }
+    }
+
+    #[test]
+    fn with_ctas_conserves_work() {
+        let a = k();
+        let b = a.with_ctas(4);
+        assert!((a.total_flops() - b.total_flops()).abs() < 1e-9);
+        assert!((a.total_dram_bytes() - b.total_dram_bytes()).abs() < 1e-9);
+        assert_eq!(b.n_ctas, 4);
+        assert_eq!(b.flops_per_cta, 200.0);
+    }
+
+    #[test]
+    fn queue_footprint_includes_metadata() {
+        let q = QueueDesc { payload_bytes: 64 * 1024, entries: 2, memory_backed: false };
+        assert_eq!(q.footprint_bytes(), 2 * (64 * 1024 + 512));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one CTA")]
+    fn zero_ctas_rejected() {
+        k().with_ctas(0);
+    }
+}

@@ -1,0 +1,21 @@
+//! GPU timing simulator — the NVAS substitute (DESIGN.md §1).
+//!
+//! Event-driven, fluid-rate simulation of an A100-class GPU: SMs with
+//! separate TensorCore/SIMT pipes, a grid scheduler (baseline round-robin
+//! or Kitsune's §4.2 dual arbiter), shared L2/DRAM bandwidth pools, and
+//! bounded inter-CTA queues for spatial pipelines.
+
+pub mod config;
+pub mod kernel;
+pub mod scheduler;
+pub mod sm;
+pub mod engine;
+pub mod stats;
+
+pub use config::GpuConfig;
+pub use engine::Engine;
+pub use kernel::{KernelDesc, PipelineDesc, QueueDesc, StageDesc};
+pub use scheduler::{GridScheduler, SchedPolicy};
+pub use sm::SmState;
+pub use stats::{SimReport, UtilQuadrants, LOW_UTIL_THRESHOLD};
+

@@ -1,0 +1,172 @@
+//! The GPU grid scheduler — baseline and Kitsune variants.
+//!
+//! Baseline GPUs "greedily find the first available SM for CTA dispatch
+//! using a hardware arbiter (i.e., round-robin)" [paper §4.2, citing 48].
+//! Kitsune's modest hardware change replaces the single arbiter with two,
+//! one per resource class, so that CTAs of *different* types get paired on
+//! the same SM and the TensorCore + SIMT pipes overlap.
+
+use super::config::GpuConfig;
+use super::sm::SmState;
+use crate::graph::ResourceClass;
+
+/// Dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Single round-robin arbiter, type-blind (current GPUs).
+    RoundRobin,
+    /// Kitsune: one arbiter per class; pairing-aware placement (§4.2).
+    DualArbiter,
+}
+
+/// Grid-scheduler state: arbiter cursors over the SM array.
+#[derive(Debug, Clone)]
+pub struct GridScheduler {
+    pub policy: SchedPolicy,
+    /// Round-robin cursor for the type-blind arbiter.
+    cursor: usize,
+    /// Kitsune per-class cursors.
+    cursor_tensor: usize,
+    cursor_simt: usize,
+}
+
+impl GridScheduler {
+    pub fn new(policy: SchedPolicy) -> Self {
+        GridScheduler { policy, cursor: 0, cursor_tensor: 0, cursor_simt: 0 }
+    }
+
+    /// Pick an SM for a CTA of `class` needing `smem` bytes, or `None` if
+    /// nothing fits (caller retries after a retirement). Updates occupancy.
+    pub fn place(
+        &mut self,
+        class: ResourceClass,
+        smem: usize,
+        sms: &mut [SmState],
+        cfg: &GpuConfig,
+    ) -> Option<usize> {
+        let n = sms.len();
+        let pick = match self.policy {
+            SchedPolicy::RoundRobin => {
+                // First fit from the cursor, type-blind.
+                let start = self.cursor;
+                (0..n)
+                    .map(|i| (start + i) % n)
+                    .find(|&i| sms[i].fits(smem, cfg.smem_per_sm, cfg.max_ctas_per_sm))
+            }
+            SchedPolicy::DualArbiter => {
+                let start = match class {
+                    ResourceClass::Tensor => self.cursor_tensor,
+                    ResourceClass::Simt => self.cursor_simt,
+                };
+                // Pass 1: prefer an SM already running the *other* class and
+                // none of ours — this is what makes pairing systematic.
+                let other = match class {
+                    ResourceClass::Tensor => ResourceClass::Simt,
+                    ResourceClass::Simt => ResourceClass::Tensor,
+                };
+                let paired = (0..n).map(|i| (start + i) % n).find(|&i| {
+                    sms[i].fits(smem, cfg.smem_per_sm, cfg.max_ctas_per_sm)
+                        && sms[i].count(other) > 0
+                        && sms[i].count(class) == 0
+                });
+                // Pass 2: an SM with no CTA of our class (spread own class).
+                let spread = paired.or_else(|| {
+                    (0..n).map(|i| (start + i) % n).find(|&i| {
+                        sms[i].fits(smem, cfg.smem_per_sm, cfg.max_ctas_per_sm)
+                            && sms[i].count(class) == 0
+                    })
+                });
+                // Pass 3: anything that fits.
+                spread.or_else(|| {
+                    (0..n)
+                        .map(|i| (start + i) % n)
+                        .find(|&i| sms[i].fits(smem, cfg.smem_per_sm, cfg.max_ctas_per_sm))
+                })
+            }
+        };
+        if let Some(i) = pick {
+            sms[i].admit(class, smem);
+            match self.policy {
+                SchedPolicy::RoundRobin => self.cursor = (i + 1) % n,
+                SchedPolicy::DualArbiter => match class {
+                    ResourceClass::Tensor => self.cursor_tensor = (i + 1) % n,
+                    ResourceClass::Simt => self.cursor_simt = (i + 1) % n,
+                },
+            }
+        }
+        pick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize) -> (Vec<SmState>, GpuConfig) {
+        let mut cfg = GpuConfig::a100();
+        cfg.sm_count = n;
+        (vec![SmState::default(); n], cfg)
+    }
+
+    #[test]
+    fn round_robin_spreads_in_order() {
+        let (mut sms, cfg) = setup(4);
+        let mut s = GridScheduler::new(SchedPolicy::RoundRobin);
+        let picks: Vec<_> = (0..4)
+            .map(|_| s.place(ResourceClass::Tensor, 0, &mut sms, &cfg).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn dual_arbiter_pairs_types() {
+        let (mut sms, cfg) = setup(4);
+        let mut s = GridScheduler::new(SchedPolicy::DualArbiter);
+        // 4 tensor CTAs fill SMs 0..4, then 4 simt CTAs must land on the
+        // same SMs (pairing), one each.
+        for _ in 0..4 {
+            s.place(ResourceClass::Tensor, 0, &mut sms, &cfg).unwrap();
+        }
+        for _ in 0..4 {
+            s.place(ResourceClass::Simt, 0, &mut sms, &cfg).unwrap();
+        }
+        assert!(sms.iter().all(|sm| sm.is_paired()), "{sms:?}");
+    }
+
+    #[test]
+    fn round_robin_does_not_guarantee_pairing() {
+        // Interleaved arrivals with the type-blind arbiter stack same-type
+        // CTAs: T,T arrive first and land on SM0, SM1; then S,S land on
+        // SM2, SM3 — zero pairing. (This is the §4.2 motivation.)
+        let (mut sms, cfg) = setup(2);
+        let mut s = GridScheduler::new(SchedPolicy::RoundRobin);
+        s.place(ResourceClass::Tensor, 0, &mut sms, &cfg).unwrap();
+        s.place(ResourceClass::Tensor, 0, &mut sms, &cfg).unwrap();
+        s.place(ResourceClass::Simt, 0, &mut sms, &cfg).unwrap();
+        s.place(ResourceClass::Simt, 0, &mut sms, &cfg).unwrap();
+        // With 2 slots per SM, RR packs T on 0, T on 1, S on 0, S on 1 —
+        // accidental pairing CAN happen; assert only that DualArbiter is at
+        // least as paired as RR for the adversarial order below.
+        let rr_paired = sms.iter().filter(|sm| sm.is_paired()).count();
+
+        let (mut sms2, cfg2) = setup(2);
+        let mut s2 = GridScheduler::new(SchedPolicy::DualArbiter);
+        s2.place(ResourceClass::Tensor, 0, &mut sms2, &cfg2).unwrap();
+        s2.place(ResourceClass::Tensor, 0, &mut sms2, &cfg2).unwrap();
+        s2.place(ResourceClass::Simt, 0, &mut sms2, &cfg2).unwrap();
+        s2.place(ResourceClass::Simt, 0, &mut sms2, &cfg2).unwrap();
+        let da_paired = sms2.iter().filter(|sm| sm.is_paired()).count();
+        assert!(da_paired >= rr_paired);
+        assert_eq!(da_paired, 2);
+    }
+
+    #[test]
+    fn placement_respects_smem() {
+        let (mut sms, cfg) = setup(2);
+        let mut s = GridScheduler::new(SchedPolicy::DualArbiter);
+        let big = cfg.smem_per_sm; // whole scratchpad
+        assert!(s.place(ResourceClass::Tensor, big, &mut sms, &cfg).is_some());
+        assert!(s.place(ResourceClass::Tensor, big, &mut sms, &cfg).is_some());
+        assert!(s.place(ResourceClass::Tensor, big, &mut sms, &cfg).is_none());
+    }
+}

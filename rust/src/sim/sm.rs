@@ -1,0 +1,91 @@
+//! Per-SM occupancy state: resident CTA slots, shared-memory budget, and
+//! the two issue pipes (TensorCore and SIMT) that Kitsune overlaps.
+
+use crate::graph::ResourceClass;
+
+/// Occupancy state of one SM, as the grid scheduler sees it.
+#[derive(Debug, Clone, Default)]
+pub struct SmState {
+    /// Resident CTA count issuing to TensorCores.
+    pub tensor_ctas: usize,
+    /// Resident CTA count issuing to SIMT cores.
+    pub simt_ctas: usize,
+    /// Shared memory currently allocated, bytes.
+    pub smem_used: usize,
+}
+
+impl SmState {
+    pub fn total_ctas(&self) -> usize {
+        self.tensor_ctas + self.simt_ctas
+    }
+
+    pub fn count(&self, class: ResourceClass) -> usize {
+        match class {
+            ResourceClass::Tensor => self.tensor_ctas,
+            ResourceClass::Simt => self.simt_ctas,
+        }
+    }
+
+    /// Can a CTA of `class` needing `smem` bytes be placed here?
+    pub fn fits(&self, smem: usize, smem_capacity: usize, max_ctas: usize) -> bool {
+        self.total_ctas() < max_ctas && self.smem_used + smem <= smem_capacity
+    }
+
+    pub fn admit(&mut self, class: ResourceClass, smem: usize) {
+        match class {
+            ResourceClass::Tensor => self.tensor_ctas += 1,
+            ResourceClass::Simt => self.simt_ctas += 1,
+        }
+        self.smem_used += smem;
+    }
+
+    pub fn retire(&mut self, class: ResourceClass, smem: usize) {
+        match class {
+            ResourceClass::Tensor => {
+                debug_assert!(self.tensor_ctas > 0);
+                self.tensor_ctas -= 1;
+            }
+            ResourceClass::Simt => {
+                debug_assert!(self.simt_ctas > 0);
+                self.simt_ctas -= 1;
+            }
+        }
+        debug_assert!(self.smem_used >= smem);
+        self.smem_used -= smem;
+    }
+
+    /// True when both heterogeneous pipes are active — the overlap Kitsune's
+    /// dual-arbiter scheduler engineers (paper §4.2).
+    pub fn is_paired(&self) -> bool {
+        self.tensor_ctas > 0 && self.simt_ctas > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_retire_roundtrip() {
+        let mut sm = SmState::default();
+        sm.admit(ResourceClass::Tensor, 4096);
+        sm.admit(ResourceClass::Simt, 1024);
+        assert!(sm.is_paired());
+        assert_eq!(sm.total_ctas(), 2);
+        assert_eq!(sm.smem_used, 5120);
+        sm.retire(ResourceClass::Tensor, 4096);
+        assert!(!sm.is_paired());
+        assert_eq!(sm.smem_used, 1024);
+    }
+
+    #[test]
+    fn fits_respects_limits() {
+        let mut sm = SmState::default();
+        assert!(sm.fits(1024, 192 * 1024, 2));
+        sm.admit(ResourceClass::Simt, 190 * 1024);
+        assert!(!sm.fits(4 * 1024, 192 * 1024, 2), "smem exhausted");
+        assert!(sm.fits(1024, 192 * 1024, 2));
+        sm.admit(ResourceClass::Tensor, 1024);
+        assert!(!sm.fits(0, 192 * 1024, 2), "slot limit");
+    }
+}

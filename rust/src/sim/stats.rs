@@ -1,0 +1,138 @@
+//! Simulation statistics: elapsed time, traffic, and the SM×DRAM
+//! utilization-quadrant breakdown used by the paper's Figs 3 and 13.
+
+/// "Low" utilization threshold — the paper uses <33% of peak.
+pub const LOW_UTIL_THRESHOLD: f64 = 0.33;
+
+/// Time-weighted breakdown of runtime into the four SM×DRAM utilization
+/// quadrants (paper Figs 3/13). Fractions sum to 1.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UtilQuadrants {
+    /// SM < 33% and DRAM < 33% of peak.
+    pub both_low: f64,
+    /// SM < 33%, DRAM >= 33%.
+    pub low_sm: f64,
+    /// DRAM < 33%, SM >= 33%.
+    pub low_dram: f64,
+    /// Both >= 33%.
+    pub neither_low: f64,
+}
+
+impl UtilQuadrants {
+    pub fn add_sample(&mut self, sm_util: f64, dram_util: f64, dt: f64) {
+        let sm_low = sm_util < LOW_UTIL_THRESHOLD;
+        let dram_low = dram_util < LOW_UTIL_THRESHOLD;
+        match (sm_low, dram_low) {
+            (true, true) => self.both_low += dt,
+            (true, false) => self.low_sm += dt,
+            (false, true) => self.low_dram += dt,
+            (false, false) => self.neither_low += dt,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.both_low + self.low_sm + self.low_dram + self.neither_low
+    }
+
+    /// Normalize to fractions of total time.
+    pub fn normalized(&self) -> UtilQuadrants {
+        let t = self.total();
+        if t <= 0.0 {
+            return *self;
+        }
+        UtilQuadrants {
+            both_low: self.both_low / t,
+            low_sm: self.low_sm / t,
+            low_dram: self.low_dram / t,
+            neither_low: self.neither_low / t,
+        }
+    }
+
+    /// Merge another breakdown (absolute-time weighted).
+    pub fn merge(&mut self, other: &UtilQuadrants) {
+        self.both_low += other.both_low;
+        self.low_sm += other.low_sm;
+        self.low_dram += other.low_dram;
+        self.neither_low += other.neither_low;
+    }
+}
+
+/// Result of simulating one phase / kernel / pipeline / application.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Simulated wall-clock seconds.
+    pub elapsed_s: f64,
+    /// Total DRAM traffic, bytes.
+    pub dram_bytes: f64,
+    /// Total L2 traffic, bytes (includes queue payload + sync metadata).
+    pub l2_bytes: f64,
+    /// Time-weighted utilization quadrants (absolute seconds).
+    pub quadrants: UtilQuadrants,
+    /// Time-averaged SM utilization (max of the two pipes, NSight-style).
+    pub avg_sm_util: f64,
+    /// Time-averaged DRAM bandwidth utilization.
+    pub avg_dram_util: f64,
+    /// Fraction of busy SM-time spent with heterogeneous CTAs paired.
+    pub paired_frac: f64,
+    /// Total FLOPs retired (sanity: conserved across execution modes).
+    pub flops: f64,
+    /// Queue-wait seconds summed over pipeline CTAs (dataflow only).
+    pub queue_wait_s: f64,
+}
+
+impl SimReport {
+    /// Sequential composition (global barrier between parts — BSP phases
+    /// and consecutive sf-nodes alike).
+    pub fn chain(mut self, other: &SimReport) -> SimReport {
+        let t0 = self.elapsed_s;
+        let t1 = other.elapsed_s;
+        let tot = (t0 + t1).max(1e-30);
+        self.avg_sm_util = (self.avg_sm_util * t0 + other.avg_sm_util * t1) / tot;
+        self.avg_dram_util = (self.avg_dram_util * t0 + other.avg_dram_util * t1) / tot;
+        self.paired_frac = (self.paired_frac * t0 + other.paired_frac * t1) / tot;
+        self.elapsed_s += other.elapsed_s;
+        self.dram_bytes += other.dram_bytes;
+        self.l2_bytes += other.l2_bytes;
+        self.flops += other.flops;
+        self.queue_wait_s += other.queue_wait_s;
+        self.quadrants.merge(&other.quadrants);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadrant_classification() {
+        let mut q = UtilQuadrants::default();
+        q.add_sample(0.1, 0.1, 1.0); // both low
+        q.add_sample(0.1, 0.9, 2.0); // low sm
+        q.add_sample(0.9, 0.1, 3.0); // low dram
+        q.add_sample(0.9, 0.9, 4.0); // neither
+        assert_eq!(q.both_low, 1.0);
+        assert_eq!(q.low_sm, 2.0);
+        assert_eq!(q.low_dram, 3.0);
+        assert_eq!(q.neither_low, 4.0);
+        let n = q.normalized();
+        assert!((n.total() - 1.0).abs() < 1e-12);
+        assert!((n.neither_low - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_is_33_percent() {
+        let mut q = UtilQuadrants::default();
+        q.add_sample(0.329, 0.331, 1.0);
+        assert_eq!(q.low_sm, 1.0);
+    }
+
+    #[test]
+    fn chain_weights_averages_by_time() {
+        let a = SimReport { elapsed_s: 1.0, avg_sm_util: 1.0, ..Default::default() };
+        let b = SimReport { elapsed_s: 3.0, avg_sm_util: 0.0, ..Default::default() };
+        let c = a.chain(&b);
+        assert!((c.avg_sm_util - 0.25).abs() < 1e-12);
+        assert_eq!(c.elapsed_s, 4.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: compiler → simulator → reports, asserting the paper's
+//! evaluation *shape* (who wins, roughly by how much, where the
+//! exceptions are) on the A100 config.
+
+use kitsune::apps;
+use kitsune::exec::geomean;
+use kitsune::report::{evaluate_app, evaluate_suite};
+use kitsune::sim::GpuConfig;
+
+#[test]
+fn inference_suite_shape_matches_paper() {
+    let cfg = GpuConfig::a100();
+    let evals = evaluate_suite(&apps::inference_suite(), &cfg).unwrap();
+
+    // Every app: Kitsune reduces DRAM traffic vs BSP (Table 2).
+    for e in &evals {
+        assert!(
+            e.kitsune_traffic_reduction() >= 0.0,
+            "{}: negative traffic reduction",
+            e.name
+        );
+    }
+
+    // Paper Fig 11: geomean e2e speedup ~1.5x; vertical fusion weaker
+    // (~1.14x); Llama-Ctx the weakest app.
+    let ki: Vec<f64> = evals.iter().map(|e| e.kitsune_speedup()).collect();
+    let vf: Vec<f64> = evals.iter().map(|e| e.vertical_speedup()).collect();
+    let ki_gm = geomean(&ki);
+    let vf_gm = geomean(&vf);
+    assert!(ki_gm > 1.25 && ki_gm < 2.2, "kitsune geomean {ki_gm}");
+    assert!(vf_gm > 1.0 && vf_gm < 1.5, "vertical geomean {vf_gm}");
+    assert!(ki_gm > vf_gm, "kitsune must beat vertical fusion");
+
+    let llctx = evals.iter().find(|e| e.name == "LL-CTX").unwrap();
+    let min_speedup = ki.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(
+        (llctx.kitsune_speedup() - min_speedup).abs() < 0.15,
+        "LL-CTX should be (near-)weakest: {} vs min {min_speedup}",
+        llctx.kitsune_speedup()
+    );
+
+    // NERF: near-total traffic elimination (paper: 98.6%).
+    let nerf = evals.iter().find(|e| e.name == "NERF").unwrap();
+    assert!(
+        nerf.kitsune_traffic_reduction() > 0.8,
+        "NERF traffic reduction {}",
+        nerf.kitsune_traffic_reduction()
+    );
+    // LL-TOK: ~no traffic reduction (paper: 0.07%) — weights dominate.
+    let lltok = evals.iter().find(|e| e.name == "LL-TOK").unwrap();
+    assert!(
+        lltok.kitsune_traffic_reduction() < 0.05,
+        "LL-TOK traffic reduction {}",
+        lltok.kitsune_traffic_reduction()
+    );
+}
+
+#[test]
+fn training_suite_shape_matches_paper() {
+    let cfg = GpuConfig::a100();
+    let evals = evaluate_suite(&apps::training_suite(), &cfg).unwrap();
+
+    // Vertical fusion barely helps training (fwd-only; paper Fig 14).
+    for e in &evals {
+        assert!(
+            e.vertical_speedup() < 1.2,
+            "{}: VF training speedup {} too high",
+            e.name,
+            e.vertical_speedup()
+        );
+        assert!(
+            e.kitsune_speedup() > 1.0,
+            "{}: kitsune training speedup {}",
+            e.name,
+            e.kitsune_speedup()
+        );
+    }
+    // DLRM: weakest training speedup (unfused interaction backward —
+    // the paper's Amdahl effect).
+    let dlrm = evals.iter().find(|e| e.name == "DLRM").unwrap();
+    let min = evals
+        .iter()
+        .map(|e| e.kitsune_speedup())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        dlrm.kitsune_speedup() < min + 0.4,
+        "DLRM should be near-weakest: {} vs {min}",
+        dlrm.kitsune_speedup()
+    );
+}
+
+#[test]
+fn utilization_quadrants_improve_under_kitsune() {
+    // Paper Figs 3 vs 13: Kitsune cuts time spent with both resources low.
+    let cfg = GpuConfig::a100();
+    let suite = apps::inference_suite();
+    let mut bsp_low = 0.0;
+    let mut kitsune_low = 0.0;
+    for (name, g) in &suite {
+        let e = evaluate_app(name, g, &cfg).unwrap();
+        bsp_low += e.bsp.sim.quadrants.normalized().both_low;
+        kitsune_low += e.kitsune.sim.quadrants.normalized().both_low;
+    }
+    assert!(
+        kitsune_low < bsp_low,
+        "kitsune both-low {kitsune_low} !< bsp {bsp_low}"
+    );
+}
+
+#[test]
+fn sensitivity_kitsune_converts_cheap_resources_better() {
+    // Paper §1(5): with 2x SMs + 2x L2 BW (DRAM fixed), Kitsune gains
+    // more than baseline execution does.
+    let base = GpuConfig::a100();
+    let upgraded = GpuConfig::a100().scale_compute(2.0).scale_l2_bw(2.0);
+    let suite = apps::inference_suite();
+    let mut bsp_gain = Vec::new();
+    let mut ki_gain = Vec::new();
+    for (name, g) in &suite {
+        let e0 = evaluate_app(name, g, &base).unwrap();
+        let e1 = evaluate_app(name, g, &upgraded).unwrap();
+        bsp_gain.push(e0.bsp.sim.elapsed_s / e1.bsp.sim.elapsed_s);
+        ki_gain.push(e0.kitsune.sim.elapsed_s / e1.kitsune.sim.elapsed_s);
+    }
+    let b = geomean(&bsp_gain);
+    let k = geomean(&ki_gain);
+    assert!(k > b, "kitsune sensitivity gain {k} !> baseline {b}");
+}
+
+#[test]
+fn evaluation_is_deterministic() {
+    let cfg = GpuConfig::a100();
+    let (name, g) = &apps::inference_suite()[2];
+    let a = evaluate_app(name, g, &cfg).unwrap();
+    let b = evaluate_app(name, g, &cfg).unwrap();
+    assert_eq!(a.kitsune.sim.elapsed_s, b.kitsune.sim.elapsed_s);
+    assert_eq!(a.kitsune.sim.dram_bytes, b.kitsune.sim.dram_bytes);
+    assert_eq!(a.bsp.sim.elapsed_s, b.bsp.sim.elapsed_s);
+}
+
+#[test]
+fn table2_coverage_bands() {
+    let cfg = GpuConfig::a100();
+    let evals = evaluate_suite(&apps::inference_suite(), &cfg).unwrap();
+    for e in &evals {
+        let cov = e.kitsune_fused_ops as f64 / e.n_ops as f64;
+        // Paper Table 2 inference coverage: 70-100%.
+        assert!(cov >= 0.6, "{}: kitsune coverage {cov}", e.name);
+    }
+    // NERF reaches (near-)full coverage.
+    let nerf = evals.iter().find(|e| e.name == "NERF").unwrap();
+    assert!(nerf.kitsune_fused_ops as f64 / nerf.n_ops as f64 > 0.9);
+}

@@ -1,0 +1,260 @@
+//! Property-based tests (deterministic xorshift generator — proptest is
+//! unavailable offline, so each property sweeps a seeded random space).
+//!
+//! Invariants covered: ILP optimality vs brute force, autodiff graph
+//! validity/consistency, grid-scheduler pairing dominance, queue token
+//! conservation under MPMC stress, and simulator work conservation.
+
+use kitsune::compiler::{compile, SelectOptions};
+use kitsune::graph::{training_graph, AutodiffOptions, EwKind, GraphBuilder, GraphKind, OpKind};
+use kitsune::ilp::{solve_maxmin, AllocVar};
+use kitsune::queue::RingQueue;
+use kitsune::sim::{Engine, GpuConfig, GridScheduler, SchedPolicy, SmState};
+use std::sync::Arc;
+
+struct Rng(u64);
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+    fn f(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[test]
+fn prop_ilp_matches_bruteforce() {
+    // Max-min allocation from the solver == exhaustive optimum on random
+    // small instances (single class; the class decomposition is trivial).
+    let mut rng = Rng::new(0x1234);
+    for trial in 0..200 {
+        let n = rng.range(1, 3) as usize;
+        let budget = rng.range(n as u64, 10) as usize;
+        let vars: Vec<AllocVar> = (0..n)
+            .map(|_| AllocVar {
+                coeff: 0.1 + rng.f() * 3.0,
+                class: 0,
+                cap: rng.range(1, 10) as usize,
+            })
+            .collect();
+        let got = solve_maxmin(&vars, &[budget]);
+        // Brute force over all allocations.
+        let mut best: Option<f64> = None;
+        let caps: Vec<usize> = vars.iter().map(|v| v.cap).collect();
+        let mut a = vec![1usize; n];
+        loop {
+            if a.iter().sum::<usize>() <= budget && a.iter().zip(&caps).all(|(x, c)| x <= c) {
+                let t = vars
+                    .iter()
+                    .zip(&a)
+                    .map(|(v, &ai)| v.coeff * ai as f64)
+                    .fold(f64::INFINITY, f64::min);
+                best = Some(best.map_or(t, |b: f64| b.max(t)));
+            }
+            // Increment the mixed-radix counter.
+            let mut i = 0;
+            loop {
+                if i == n {
+                    break;
+                }
+                a[i] += 1;
+                if a[i] <= budget.min(caps[i]) {
+                    break;
+                }
+                a[i] = 1;
+                i += 1;
+            }
+            if i == n {
+                break;
+            }
+        }
+        match (got, best) {
+            (Some(alloc), Some(b)) => assert!(
+                (alloc.throughput - b).abs() < 1e-9,
+                "trial {trial}: solver {} vs brute {b} ({vars:?}, budget {budget})",
+                alloc.throughput
+            ),
+            (None, None) => {}
+            (g, b) => panic!("trial {trial}: feasibility mismatch {g:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_autodiff_graphs_always_valid() {
+    // Random MLP-ish forward graphs: the training graph must always
+    // validate, grow, and contain one optimizer step per parameter.
+    let mut rng = Rng::new(77);
+    for trial in 0..60 {
+        let mut b = GraphBuilder::new(format!("g{trial}"), GraphKind::Inference);
+        let batch = 1 << rng.range(4, 9);
+        let mut width = 1 << rng.range(4, 8);
+        let x = b.input(&[batch as usize, width as usize], "x");
+        let mut cur = x;
+        for li in 0..rng.range(1, 5) {
+            width = 1 << rng.range(4, 8);
+            cur = b.linear(cur, width as usize, rng.next() % 2 == 0, &format!("l{li}"));
+            match rng.next() % 4 {
+                0 => cur = b.relu(cur, &format!("a{li}")),
+                1 => cur = b.ew1(EwKind::Gelu, cur, &format!("a{li}")),
+                2 => cur = b.layernorm(cur, &format!("n{li}")),
+                _ => {}
+            }
+        }
+        b.loss(cur, "loss");
+        let fwd = b.finish();
+        let tg = training_graph(&fwd, AutodiffOptions::default());
+        assert!(tg.validate().is_empty(), "trial {trial}: {:?}", tg.validate());
+        assert!(tg.n_compute_ops() > fwd.n_compute_ops());
+        let n_params = fwd.nodes().iter().filter(|n| matches!(n.op, OpKind::Param)).count();
+        let n_steps = tg
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::OptimizerUpdate))
+            .count();
+        assert_eq!(n_params, n_steps, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_compiled_apps_conserve_ops() {
+    // For random graphs: every compute op lands in exactly one plan item.
+    let mut rng = Rng::new(99);
+    for trial in 0..25 {
+        let mut b = GraphBuilder::new(format!("c{trial}"), GraphKind::Inference);
+        let x = b.input(&[1024, 128], "x");
+        let mut cur = x;
+        for li in 0..rng.range(2, 8) {
+            cur = b.linear(cur, (1 << rng.range(5, 9)) as usize, false, &format!("l{li}"));
+            if rng.next() % 2 == 0 {
+                cur = b.relu(cur, &format!("a{li}"));
+            }
+        }
+        let g = b.finish();
+        let cfg = GpuConfig::a100();
+        let app = compile(&g, &cfg, &SelectOptions::default()).unwrap();
+        let bsp_items = app
+            .plan
+            .iter()
+            .filter(|p| matches!(p, kitsune::compiler::PlanItem::Bsp(_)))
+            .count();
+        assert_eq!(
+            bsp_items + app.n_fused_ops(),
+            g.n_compute_ops(),
+            "trial {trial}"
+        );
+    }
+}
+
+#[test]
+fn prop_dual_arbiter_pairs_at_least_as_well_as_round_robin() {
+    use kitsune::graph::ResourceClass;
+    let mut rng = Rng::new(0xABCD);
+    for trial in 0..100 {
+        let n_sms = rng.range(2, 16) as usize;
+        let mut cfg = GpuConfig::a100();
+        cfg.sm_count = n_sms;
+        let seq: Vec<ResourceClass> = (0..rng.range(2, 24))
+            .map(|_| {
+                if rng.next() % 2 == 0 {
+                    ResourceClass::Tensor
+                } else {
+                    ResourceClass::Simt
+                }
+            })
+            .collect();
+        let run = |policy: SchedPolicy| {
+            let mut sched = GridScheduler::new(policy);
+            let mut sms = vec![SmState::default(); n_sms];
+            for &c in &seq {
+                let _ = sched.place(c, 0, &mut sms, &cfg);
+            }
+            sms.iter().filter(|s| s.is_paired()).count()
+        };
+        let rr = run(SchedPolicy::RoundRobin);
+        let da = run(SchedPolicy::DualArbiter);
+        assert!(da >= rr, "trial {trial}: DA {da} < RR {rr} (seq {seq:?})");
+    }
+}
+
+#[test]
+fn prop_queue_mpmc_token_conservation() {
+    let mut rng = Rng::new(31337);
+    for trial in 0..20 {
+        let cap = 1 << rng.range(1, 5);
+        let producers = rng.range(1, 4) as usize;
+        let consumers = rng.range(1, 4) as usize;
+        let per = rng.range(100, 2000);
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(cap);
+        std::thread::scope(|s| {
+            let mut cons = Vec::new();
+            for _ in 0..consumers {
+                let q = Arc::clone(&q);
+                cons.push(s.spawn(move || {
+                    let mut sum = 0u64;
+                    while let Some(v) = q.pop() {
+                        sum += v;
+                    }
+                    sum
+                }));
+            }
+            let mut prods = Vec::new();
+            for p in 0..producers {
+                let q = Arc::clone(&q);
+                prods.push(s.spawn(move || {
+                    for i in 0..per {
+                        q.push(p as u64 * per + i).unwrap();
+                    }
+                }));
+            }
+            for p in prods {
+                p.join().unwrap();
+            }
+            q.close();
+            let got: u64 = cons.into_iter().map(|c| c.join().unwrap()).sum();
+            let want: u64 = (0..producers as u64)
+                .map(|p| (0..per).map(|i| p * per + i).sum::<u64>())
+                .sum();
+            assert_eq!(got, want, "trial {trial}");
+        });
+    }
+}
+
+#[test]
+fn prop_simulator_conserves_work() {
+    // FLOPs and DRAM bytes retired by the engine equal the kernel totals,
+    // for random kernels.
+    use kitsune::graph::ResourceClass;
+    use kitsune::sim::KernelDesc;
+    let mut rng = Rng::new(4242);
+    let e = Engine::new(GpuConfig::a100(), SchedPolicy::DualArbiter);
+    for trial in 0..40 {
+        let n_ctas = rng.range(1, 512) as usize;
+        let k = KernelDesc {
+            name: format!("k{trial}"),
+            class: if rng.next() % 2 == 0 { ResourceClass::Tensor } else { ResourceClass::Simt },
+            n_ctas,
+            flops_per_cta: 1e6 * (1.0 + rng.f() * 100.0),
+            dram_bytes_per_cta: 1e4 * (1.0 + rng.f() * 100.0),
+            l2_bytes_per_cta: 1e4 * (1.0 + rng.f() * 100.0),
+            smem_per_cta: (rng.range(0, 96) * 1024) as usize,
+            pipe_utilization: 0.05 + rng.f() * 0.95,
+        };
+        let r = e.run_kernel(&k).unwrap();
+        let rel = |a: f64, b: f64| (a - b).abs() / b.max(1.0);
+        assert!(rel(r.flops, k.total_flops()) < 1e-6, "trial {trial} flops");
+        assert!(rel(r.dram_bytes, k.total_dram_bytes()) < 1e-6, "trial {trial} dram");
+        assert!(r.elapsed_s > 0.0);
+    }
+}
