@@ -1,0 +1,19 @@
+# Convenience targets. `artifacts` is OPTIONAL: the Rust stack builds,
+# tests and serves without it (pure-Rust interpreter backend); it is only
+# needed to exercise the PJRT path against real AOT-lowered HLO.
+
+.PHONY: all test artifacts bench clean
+
+all: test
+
+test:
+	cargo build --release && cargo test -q
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+bench:
+	cargo bench
+
+clean:
+	rm -rf target artifacts

@@ -7,6 +7,7 @@
 //! topological execution plan.
 
 pub mod patterns;
+pub mod relite;
 pub mod subgraph;
 pub mod pipeline;
 pub mod load_balance;

@@ -5,10 +5,11 @@
 //! Each compute node is encoded as one letter; a pattern is a regex over
 //! the letter string of *selectable* nodes (excluded nodes — gathers,
 //! scatters — act as hard separators, exactly the paper's exclusion
-//! rules).
+//! rules). Patterns are compiled by the in-crate [`super::relite`] engine
+//! (the `regex` crate is unavailable offline).
 
+use super::relite::Regex;
 use crate::graph::{Graph, Node, NodeId, OpKind};
-use regex::Regex;
 
 /// One-letter encoding of an operator for pattern matching.
 pub fn letter(node: &Node) -> char {

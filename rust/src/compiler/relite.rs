@@ -1,0 +1,380 @@
+//! `relite` — a tiny regex engine for the §5.1 pattern library.
+//!
+//! The pattern library needs only a small regex subset over one-letter
+//! operator mnemonics: literals, character classes (`[ME]`), groups
+//! (`(E+M)`), and the quantifiers `?`, `*`, `+`, `{m}`, `{m,}`, `{m,n}`.
+//! A full regex crate is unavailable offline, so this module implements
+//! exactly that subset with a greedy backtracking matcher whose semantics
+//! (leftmost-first preference, non-overlapping `find_iter` scan) were
+//! validated against a reference regex engine on randomized inputs for
+//! every pattern in [`super::patterns::PatternLib`].
+//!
+//! Strings are the ASCII letter encodings produced by
+//! [`super::patterns::encode`]; the matcher operates on bytes.
+
+use std::fmt;
+
+/// Unbounded repetition sentinel.
+const MANY: u32 = u32::MAX;
+
+/// One matchable element.
+#[derive(Debug, Clone)]
+enum Elem {
+    /// Literal byte.
+    Lit(u8),
+    /// Character class `[...]` (no ranges / negation — not needed).
+    Class(Vec<u8>),
+    /// Parenthesized group.
+    Group(Vec<Piece>),
+}
+
+/// An element plus its repetition bounds.
+#[derive(Debug, Clone)]
+struct Piece {
+    elem: Elem,
+    min: u32,
+    max: u32,
+}
+
+/// Compiled pattern.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    pieces: Vec<Piece>,
+    pattern: String,
+}
+
+/// A located match, mirroring `regex::Match`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Match {
+    start: usize,
+    end: usize,
+}
+
+impl Match {
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn end(&self) -> usize {
+        self.end
+    }
+}
+
+/// Pattern-compilation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "relite: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Regex {
+    /// Compile a pattern from the supported subset.
+    pub fn new(pattern: &str) -> Result<Regex, ParseError> {
+        let bytes = pattern.as_bytes();
+        let (pieces, rest) = parse_seq(bytes, 0, 0)?;
+        if rest != bytes.len() {
+            return Err(ParseError(format!("unbalanced ')' in `{pattern}`")));
+        }
+        Ok(Regex { pieces, pattern: pattern.to_string() })
+    }
+
+    /// The source pattern.
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    /// Leftmost match at or after the start of `text`.
+    pub fn find(&self, text: &str) -> Option<Match> {
+        let t = text.as_bytes();
+        (0..=t.len()).find_map(|s| {
+            match_seq(t, &self.pieces, s).map(|e| Match { start: s, end: e })
+        })
+    }
+
+    /// Whether the pattern matches anywhere in `text`.
+    pub fn is_match(&self, text: &str) -> bool {
+        self.find(text).is_some()
+    }
+
+    /// Non-overlapping matches, left to right (the `regex` crate's
+    /// `find_iter` scan: resume after each match's end, advancing by one
+    /// past any empty match).
+    pub fn find_iter(&self, text: &str) -> Vec<Match> {
+        let t = text.as_bytes();
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos <= t.len() {
+            match match_seq(t, &self.pieces, pos) {
+                Some(end) => {
+                    out.push(Match { start: pos, end });
+                    pos = if end > pos { end } else { pos + 1 };
+                }
+                None => pos += 1,
+            }
+        }
+        out
+    }
+}
+
+/// Parse a concatenation until end-of-pattern or a closing `)`.
+/// Returns the pieces and the index just past what was consumed
+/// (including the `)` when `depth > 0`).
+fn parse_seq(pat: &[u8], mut i: usize, depth: u32) -> Result<(Vec<Piece>, usize), ParseError> {
+    let mut pieces = Vec::new();
+    while i < pat.len() {
+        let elem = match pat[i] {
+            b')' => {
+                if depth == 0 {
+                    return Err(ParseError("unbalanced ')'".into()));
+                }
+                return Ok((pieces, i + 1));
+            }
+            b'(' => {
+                // The recursive call consumes through the matching ')'
+                // (or errors itself on premature end-of-pattern).
+                let (inner, next) = parse_seq(pat, i + 1, depth + 1)?;
+                i = next;
+                Elem::Group(inner)
+            }
+            b'[' => {
+                let close = pat[i..]
+                    .iter()
+                    .position(|&b| b == b']')
+                    .ok_or_else(|| ParseError("missing ']'".into()))?
+                    + i;
+                let class: Vec<u8> = pat[i + 1..close].to_vec();
+                if class.is_empty() {
+                    return Err(ParseError("empty class '[]'".into()));
+                }
+                i = close + 1;
+                Elem::Class(class)
+            }
+            b'?' | b'*' | b'+' | b'{' => {
+                return Err(ParseError("dangling quantifier".into()));
+            }
+            c => {
+                i += 1;
+                Elem::Lit(c)
+            }
+        };
+        let (min, max, next) = parse_quantifier(pat, i)?;
+        i = next;
+        pieces.push(Piece { elem, min, max });
+    }
+    if depth > 0 {
+        return Err(ParseError("unbalanced '('".into()));
+    }
+    Ok((pieces, i))
+}
+
+/// Parse an optional quantifier at `i`; returns `(min, max, next_index)`.
+fn parse_quantifier(pat: &[u8], i: usize) -> Result<(u32, u32, usize), ParseError> {
+    match pat.get(i).copied() {
+        Some(b'?') => Ok((0, 1, i + 1)),
+        Some(b'*') => Ok((0, MANY, i + 1)),
+        Some(b'+') => Ok((1, MANY, i + 1)),
+        Some(b'{') => {
+            let close = pat[i..]
+                .iter()
+                .position(|&b| b == b'}')
+                .ok_or_else(|| ParseError("missing '}'".into()))?
+                + i;
+            let body = std::str::from_utf8(&pat[i + 1..close])
+                .map_err(|_| ParseError("non-utf8 bound".into()))?;
+            let parse_n = |s: &str| {
+                s.parse::<u32>().map_err(|_| ParseError(format!("bad repetition bound `{body}`")))
+            };
+            let (min, max) = match body.split_once(',') {
+                None => {
+                    let n = parse_n(body)?;
+                    (n, n)
+                }
+                Some((lo, "")) => (parse_n(lo)?, MANY),
+                Some((lo, hi)) => (parse_n(lo)?, parse_n(hi)?),
+            };
+            if max < min {
+                return Err(ParseError(format!("inverted bounds `{{{body}}}`")));
+            }
+            Ok((min, max, close + 1))
+        }
+        _ => Ok((1, 1, i)),
+    }
+}
+
+/// Match the full piece sequence at `pos`; returns the end of the first
+/// (preference-order) complete match.
+fn match_seq(text: &[u8], pieces: &[Piece], pos: usize) -> Option<usize> {
+    let Some((piece, rest)) = pieces.split_first() else {
+        return Some(pos);
+    };
+    match_reps(text, piece, rest, 0, pos)
+}
+
+/// Greedy repetition: prefer one more repetition of `piece` before moving
+/// on to `rest` (Perl/leftmost-first preference order).
+fn match_reps(text: &[u8], piece: &Piece, rest: &[Piece], done: u32, pos: usize) -> Option<usize> {
+    if done < piece.max {
+        for end in elem_ends(text, &piece.elem, pos) {
+            // Zero-width repetitions cannot make progress; skip them so
+            // unbounded quantifiers always terminate.
+            if end > pos {
+                if let Some(m) = match_reps(text, piece, rest, done + 1, end) {
+                    return Some(m);
+                }
+            }
+        }
+    }
+    if done >= piece.min {
+        return match_seq(text, rest, pos);
+    }
+    None
+}
+
+/// All end positions of one `elem` occurrence starting at `pos`, in
+/// preference order (greedy: longer first for groups, by construction).
+fn elem_ends(text: &[u8], elem: &Elem, pos: usize) -> Vec<usize> {
+    match elem {
+        Elem::Lit(c) => {
+            if text.get(pos) == Some(c) {
+                vec![pos + 1]
+            } else {
+                Vec::new()
+            }
+        }
+        Elem::Class(set) => {
+            if pos < text.len() && set.contains(&text[pos]) {
+                vec![pos + 1]
+            } else {
+                Vec::new()
+            }
+        }
+        Elem::Group(seq) => {
+            let mut out = Vec::new();
+            collect_seq_ends(text, seq, pos, &mut out);
+            out
+        }
+    }
+}
+
+/// Collect every end position of `pieces` matched from `pos`, preference
+/// order, first occurrence kept on duplicates.
+fn collect_seq_ends(text: &[u8], pieces: &[Piece], pos: usize, out: &mut Vec<usize>) {
+    let Some((piece, rest)) = pieces.split_first() else {
+        if !out.contains(&pos) {
+            out.push(pos);
+        }
+        return;
+    };
+    collect_rep_ends(text, piece, rest, 0, pos, out);
+}
+
+fn collect_rep_ends(
+    text: &[u8],
+    piece: &Piece,
+    rest: &[Piece],
+    done: u32,
+    pos: usize,
+    out: &mut Vec<usize>,
+) {
+    if done < piece.max {
+        for end in elem_ends(text, &piece.elem, pos) {
+            if end > pos {
+                collect_rep_ends(text, piece, rest, done + 1, end, out);
+            }
+        }
+    }
+    if done >= piece.min {
+        collect_seq_ends(text, rest, pos, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans(re: &str, text: &str) -> Vec<(usize, usize)> {
+        Regex::new(re).unwrap().find_iter(text).iter().map(|m| (m.start(), m.end())).collect()
+    }
+
+    #[test]
+    fn literals_and_classes() {
+        assert_eq!(spans("ME", "XMEXME"), vec![(1, 3), (4, 6)]);
+        assert_eq!(spans("[ME]+", "MEXEM"), vec![(0, 2), (3, 5)]);
+        assert!(Regex::new("M").unwrap().is_match("XMX"));
+        assert!(!Regex::new("M").unwrap().is_match("XEX"));
+    }
+
+    #[test]
+    fn quantifiers() {
+        assert_eq!(spans("ME?", "MME"), vec![(0, 1), (1, 3)]);
+        assert_eq!(spans("ME*", "MEEEX"), vec![(0, 4)]);
+        assert_eq!(spans("E{2,}", "EXEEXEEEE"), vec![(2, 4), (5, 9)]);
+        assert_eq!(spans("E{2}", "EEEE"), vec![(0, 2), (2, 4)]);
+        assert_eq!(spans("E{1,2}", "EEE"), vec![(0, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn groups_backtrack() {
+        // `(E+M)+` must span alternations and leave the tail to `E*`.
+        assert_eq!(spans("M(E+M)+E*", "MEMEEMEE"), vec![(0, 8)]);
+        // Backtracking: the greedy group gives one rep back for the tail.
+        assert_eq!(spans("(EE)+E", "EEE"), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn leftmost_first_preference() {
+        // Greedy first piece wins even when a longer overall match exists
+        // with a lazier split — matching the `regex` crate's semantics.
+        assert_eq!(spans("(EE)?(EEE)?", "EEEE")[0], (0, 2));
+    }
+
+    #[test]
+    fn paper_patterns_compile_and_match() {
+        // The exact library patterns (kept in sync with patterns.rs).
+        for p in [
+            r"M+E*M?E*MS[ME]+",
+            r"[LC]?M(E+M)+E*O?",
+            r"[LC]?ME+R?O?",
+            r"E+M+R?M*R?",
+            r"[ME]+R+[EU]*",
+            r"[LS][ME]+",
+            r"E{2,}[RUO]*",
+            r"[CE]*I[ME]*",
+            r"MM+",
+        ] {
+            Regex::new(p).unwrap();
+        }
+        // Attention string: M M M E E M S M M — one end-to-end match.
+        let att = Regex::new(r"M+E*M?E*MS[ME]+").unwrap();
+        let ms = att.find_iter("MMMEEMSMM");
+        assert_eq!(ms.len(), 1);
+        assert_eq!((ms[0].start(), ms[0].end()), (0, 9));
+        // MLP chain consumes the whole string.
+        let mlp = Regex::new(r"[LC]?M(E+M)+E*O?").unwrap();
+        let ms = mlp.find_iter("MEMEMEM");
+        assert_eq!((ms[0].start(), ms[0].end()), (0, 7));
+    }
+
+    #[test]
+    fn separators_block_spans() {
+        let mlp = Regex::new(r"[LC]?M(E+M)+E*O?").unwrap();
+        for m in mlp.find_iter("MEM|MEM") {
+            assert!(!(m.start() < 3 && m.end() > 4), "match crossed separator");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Regex::new("(ME").is_err());
+        assert!(Regex::new("ME)").is_err());
+        assert!(Regex::new("[ME").is_err());
+        assert!(Regex::new("*M").is_err());
+        assert!(Regex::new("E{3,1}").is_err());
+        assert!(Regex::new("E{x}").is_err());
+    }
+}

@@ -9,7 +9,7 @@
 
 use super::pipeline::SpatialPipeline;
 use crate::graph::ResourceClass;
-use crate::queue::RingQueue;
+use crate::queue::{PushError, RingQueue};
 use crate::runtime::{ArtifactStore, Tensor};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -61,14 +61,6 @@ impl PipelineRun {
     }
 }
 
-/// `&ArtifactStore` shared across stage threads. PJRT's C API is
-/// thread-safe for concurrent `Execute` calls on one client (the CPU
-/// plugin serializes internally where needed); the wrapper only exists
-/// because the raw-pointer-holding xla types don't derive Send/Sync.
-struct SharedStore<'a>(&'a ArtifactStore);
-unsafe impl Send for SharedStore<'_> {}
-unsafe impl Sync for SharedStore<'_> {}
-
 /// Run `inputs` through the pipeline, streaming tiles through the ring
 /// queues. Returns outputs in input order plus per-stage metrics.
 pub fn run_streaming(
@@ -86,7 +78,6 @@ pub fn run_streaming(
     let failed = Arc::new(AtomicBool::new(false));
 
     let start = Instant::now();
-    let shared = SharedStore(store);
     let mut metrics: Vec<StageMetrics> = pipeline
         .stages
         .iter()
@@ -102,7 +93,8 @@ pub fn run_streaming(
 
     let mut outputs: Vec<Option<Tensor>> = vec![None; n_tiles];
     std::thread::scope(|scope| -> Result<()> {
-        let shared = &shared;
+        // `ArtifactStore` is `Sync` by the Backend/Executable contract, so
+        // stage threads share it directly.
         let failed = &failed;
         // Stage workers. The *last* worker of a stage to exit closes the
         // downstream queue (countdown latch), so sibling workers' pushes
@@ -128,9 +120,9 @@ pub fn run_streaming(
                         let mut args = Vec::with_capacity(1 + weights.len());
                         args.push(tile);
                         args.extend(weights.iter().cloned());
-                        let out = match shared.0.run_f32(&entry, &args) {
-                            Ok(mut outs) => outs
-                                .drain(..1)
+                        let out = match store.run_f32(&entry, &args) {
+                            Ok(outs) => outs
+                                .into_iter()
                                 .next()
                                 .ok_or_else(|| anyhow!("{entry}: no output"))?,
                             Err(e) => {
@@ -143,7 +135,7 @@ pub fn run_streaming(
                         busy += b0.elapsed().as_secs_f64();
                         tiles += 1;
                         let w1 = Instant::now();
-                        if out_q.push((seq, out)).is_err() {
+                        if let Err(PushError::Closed(_)) = out_q.push((seq, out)) {
                             break; // downstream closed (failure path)
                         }
                         wait += w1.elapsed().as_secs_f64();
@@ -163,7 +155,8 @@ pub fn run_streaming(
         let src = Arc::clone(&queues[0]);
         let feeder = scope.spawn(move || {
             for (seq, t) in inputs.into_iter().enumerate() {
-                if src.push((seq, t)).is_err() {
+                // First stage shut down (a kernel failed): stop feeding.
+                if let Err(PushError::Closed(_)) = src.push((seq, t)) {
                     break;
                 }
             }
@@ -213,8 +206,8 @@ pub fn run_serial(
             let mut args = Vec::with_capacity(1 + stage.weights.len());
             args.push(cur);
             args.extend(stage.weights.iter().cloned());
-            let mut outs = store.run_f32(&stage.entry, &args)?;
-            cur = outs.drain(..1).next().ok_or_else(|| anyhow!("no output"))?;
+            let outs = store.run_f32(&stage.entry, &args)?;
+            cur = outs.into_iter().next().ok_or_else(|| anyhow!("no output"))?;
         }
         outputs.push(cur);
     }

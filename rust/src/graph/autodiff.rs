@@ -332,7 +332,7 @@ mod tests {
     }
 
     #[test]
-    fn wgrad_contracts_over_batch() {
+    fn wgrad_contracts_over_batch() -> crate::Result<()> {
         let fwd = linear_relu_graph();
         let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
         // Find the fc1 wgrad GEMM: must contract over the batch (k = 64).
@@ -343,12 +343,13 @@ mod tests {
             .expect("fc1 wgrad emitted");
         match wgrad.op {
             OpKind::Matmul { k, .. } => assert_eq!(k, 64),
-            ref other => panic!("wgrad is {other:?}"),
+            ref other => anyhow::bail!("fc1 wgrad is {other:?}, not a matmul"),
         }
+        Ok(())
     }
 
     #[test]
-    fn bias_grad_is_batch_reduce() {
+    fn bias_grad_is_batch_reduce() -> crate::Result<()> {
         let fwd = linear_relu_graph();
         let tg = training_graph(&fwd, AutodiffOptions { optimizer_updates: false });
         let bias_grad = tg
@@ -358,8 +359,9 @@ mod tests {
             .expect("bias grad emitted");
         match bias_grad.op {
             OpKind::Reduce { axis: ReduceAxis::Batch, factor } => assert_eq!(factor, 64),
-            ref other => panic!("bias grad is {other:?}"),
+            ref other => anyhow::bail!("fc1 bias grad is {other:?}, not a batch reduce"),
         }
+        Ok(())
     }
 
     #[test]

@@ -16,12 +16,15 @@
 //! | §6 NVAS-based evaluation | [`sim`], [`exec`] |
 //! | 5 applications (DLRM, MGN, NeRF, GraphCast, Llama-3-8B) | [`apps`] |
 //! | PyTorch-Dynamo graph capture | [`graph`] (IR + reverse-mode autodiff) |
-//! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real, tokio + PJRT) |
+//! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real threads + ring queues) |
 //!
-//! Python (JAX + Pallas) appears only at build time: `python/compile/aot.py`
-//! lowers the L2 model and L1 kernels to HLO *text* under `artifacts/`, which
-//! [`runtime`] loads through the PJRT C API (the `xla` crate). Nothing on the
-//! request path imports Python.
+//! The [`runtime`] executes artifact entries through a pluggable
+//! [`runtime::Backend`]: the pure-Rust interpreter (default — a fresh
+//! offline checkout builds, tests and serves with no XLA and no Python) or
+//! PJRT under the off-by-default `pjrt` cargo feature. Python (JAX +
+//! Pallas) appears only at build time: `python/compile/aot.py` lowers the
+//! L2 model and L1 kernels to HLO *text* under `artifacts/` for the PJRT
+//! path. Nothing on the request path imports Python.
 
 pub mod graph;
 pub mod apps;

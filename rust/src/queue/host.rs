@@ -46,14 +46,42 @@ pub struct RingQueue<T> {
 unsafe impl<T: Send> Send for RingQueue<T> {}
 unsafe impl<T: Send> Sync for RingQueue<T> {}
 
-/// Error returned by non-blocking operations.
+/// Error returned by push operations. Both variants hand the rejected
+/// value back to the producer — in particular, a closed queue returns
+/// [`PushError::Closed`] rather than masquerading as full, so producers
+/// can distinguish backpressure (retry) from shutdown (stop).
+///
+/// Memory-model caveat: `close()` is advisory, not a barrier. A push
+/// that passed the closed-check *concurrently with* `close()` may still
+/// land its value; a consumer that has already observed end-of-stream
+/// will never pop it (the value is reclaimed by the queue's `Drop`, not
+/// leaked). Orderly shutdown therefore closes from the producer side
+/// after all pushes complete — exactly what the coordinator's countdown
+/// latch does. Only pushes that *begin* after `close()` is observed are
+/// guaranteed to return `Closed`.
 #[derive(Debug, PartialEq, Eq)]
-pub enum QueueError<T> {
-    /// Queue full (producer would block).
+pub enum PushError<T> {
+    /// Queue full (producer would block); retry after a consumer pops.
     Full(T),
-    /// Queue empty (consumer would block).
+    /// Queue closed; this push did not (and will never) deliver.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the value that could not be pushed.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(v) | PushError::Closed(v) => v,
+        }
+    }
+}
+
+/// Error returned by non-blocking pops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopError {
+    /// Queue empty (consumer would block); data may still arrive.
     Empty,
-    /// Queue closed and drained.
+    /// Queue closed *and* drained: end of stream.
     Closed,
 }
 
@@ -93,9 +121,9 @@ impl<T> RingQueue<T> {
     }
 
     /// `wr_acquire` + write + `wr_release` as one non-blocking attempt.
-    pub fn try_push(&self, value: T) -> Result<(), QueueError<T>> {
-        if self.closed.load(Ordering::Relaxed) {
-            return Err(QueueError::Full(value)); // treat close as permanent full for producers
+    pub fn try_push(&self, value: T) -> Result<(), PushError<T>> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(PushError::Closed(value));
         }
         let mut ticket = self.tail.0.load(Ordering::Relaxed);
         loop {
@@ -119,7 +147,7 @@ impl<T> RingQueue<T> {
                 }
             } else if seq < ticket {
                 // Ring is full (consumer hasn't freed this entry yet).
-                return Err(QueueError::Full(value));
+                return Err(PushError::Full(value));
             } else {
                 ticket = self.tail.0.load(Ordering::Relaxed);
             }
@@ -127,7 +155,7 @@ impl<T> RingQueue<T> {
     }
 
     /// `rd_acquire` + read + `rd_release` as one non-blocking attempt.
-    pub fn try_pop(&self) -> Result<T, QueueError<T>> {
+    pub fn try_pop(&self) -> Result<T, PopError> {
         let mut ticket = self.head.0.load(Ordering::Relaxed);
         loop {
             let slot = &self.slots[ticket & self.mask];
@@ -151,9 +179,9 @@ impl<T> RingQueue<T> {
                 }
             } else if seq < expected {
                 return if self.closed.load(Ordering::Acquire) && self.is_empty() {
-                    Err(QueueError::Closed)
+                    Err(PopError::Closed)
                 } else {
-                    Err(QueueError::Empty)
+                    Err(PopError::Empty)
                 };
             } else {
                 ticket = self.head.0.load(Ordering::Relaxed);
@@ -161,21 +189,20 @@ impl<T> RingQueue<T> {
         }
     }
 
-    /// Blocking push: spins (with yields) until space frees. Mirrors the
-    /// producer CTA spinning in `wr_acquire`.
-    pub fn push(&self, mut value: T) -> Result<(), T> {
+    /// Blocking push: spins (with yields) while the ring is full —
+    /// mirrors the producer CTA spinning in `wr_acquire`. Returns
+    /// [`PushError::Closed`] (with the value) once the queue is closed:
+    /// the only error a blocking producer can observe.
+    pub fn push(&self, mut value: T) -> Result<(), PushError<T>> {
         let mut spins = 0u32;
         loop {
             match self.try_push(value) {
                 Ok(()) => return Ok(()),
-                Err(QueueError::Full(v)) => {
-                    if self.closed.load(Ordering::Relaxed) {
-                        return Err(v);
-                    }
+                Err(PushError::Closed(v)) => return Err(PushError::Closed(v)),
+                Err(PushError::Full(v)) => {
                     value = v;
                     backoff(&mut spins);
                 }
-                Err(_) => unreachable!(),
             }
         }
     }
@@ -187,14 +214,14 @@ impl<T> RingQueue<T> {
         loop {
             match self.try_pop() {
                 Ok(v) => return Some(v),
-                Err(QueueError::Closed) => return None,
-                Err(QueueError::Empty) => backoff(&mut spins),
-                Err(QueueError::Full(_)) => unreachable!(),
+                Err(PopError::Closed) => return None,
+                Err(PopError::Empty) => backoff(&mut spins),
             }
         }
     }
 
-    /// Close the queue: producers fail, consumers drain then observe end.
+    /// Close the queue: subsequent producers fail, consumers drain then
+    /// observe end. See [`PushError`] for the concurrent-close caveat.
     pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
     }
@@ -262,11 +289,11 @@ mod tests {
         let q = RingQueue::with_capacity(2);
         q.try_push(1u32).unwrap();
         q.try_push(2).unwrap();
-        assert!(matches!(q.try_push(3), Err(QueueError::Full(3))));
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
         assert_eq!(q.len(), 2);
         assert_eq!(q.try_pop().unwrap(), 1);
         q.try_push(3).unwrap();
-        assert!(matches!(q.try_push(4), Err(QueueError::Full(4))));
+        assert!(matches!(q.try_push(4), Err(PushError::Full(4))));
     }
 
     #[test]
@@ -321,7 +348,25 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
-        assert!(q.push(9).is_err(), "push after close fails");
+        // Closed — not Full — and the value comes back to the producer.
+        assert!(matches!(q.try_push(9), Err(PushError::Closed(9))));
+        assert!(matches!(q.push(9), Err(PushError::Closed(9))), "push after close fails");
+    }
+
+    #[test]
+    fn close_while_full_signals_closed_not_full() {
+        // A queue that is BOTH full and closed must report Closed to
+        // producers (shutdown wins over backpressure), while consumers
+        // still drain the buffered entries before seeing end-of-stream.
+        let q = RingQueue::with_capacity(2);
+        q.try_push(1u32).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))), "full before close");
+        q.close();
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))), "closed after close");
+        assert_eq!(q.try_pop().unwrap(), 1);
+        assert_eq!(q.try_pop().unwrap(), 2);
+        assert_eq!(q.try_pop(), Err(PopError::Closed));
     }
 
     #[test]

@@ -1,42 +1,68 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
-//!
-//! Wraps the `xla` crate (PJRT C API). HLO *text* is the interchange
-//! format (see `python/compile/aot.py` and /opt/xla-example/README.md —
-//! serialized protos from jax ≥ 0.5 carry 64-bit instruction ids the
-//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Backend-agnostic artifact store: parse `artifacts/manifest.txt`,
+//! compile every entry on the active [`Backend`] (once, at load time —
+//! never on the request path), and dispatch validated `run_f32` calls.
 
+use super::backend::{default_backend, Backend, Executable};
+use super::error::RuntimeError;
 use super::manifest::{parse_manifest, EntrySpec};
-use anyhow::{anyhow, Context, Result};
+use super::tensor::Tensor;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
 /// All compiled entry points from one artifact directory.
+///
+/// `Send + Sync` by construction ([`Backend`] and [`Executable`] require
+/// it), so the coordinator shares `&ArtifactStore` across stage threads
+/// directly.
 pub struct ArtifactStore {
-    client: xla::PjRtClient,
-    entries: HashMap<String, (xla::PjRtLoadedExecutable, EntrySpec)>,
+    backend: Box<dyn Backend>,
+    entries: HashMap<String, (Box<dyn Executable>, EntrySpec)>,
 }
 
 impl ArtifactStore {
-    /// Load and compile every entry in `dir/manifest.txt` on the PJRT CPU
-    /// client. Compilation happens once, here — never on the request path.
+    /// Load `dir/manifest.txt` on the default backend (PJRT under the
+    /// `pjrt` feature, the pure-Rust interpreter otherwise; override with
+    /// `KITSUNE_BACKEND`).
+    ///
+    /// A missing artifact directory is the *expected* state of a fresh
+    /// checkout and surfaces as the typed
+    /// [`RuntimeError::ArtifactsMissing`], which tests and examples use
+    /// as their skip signal.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let mut entries = HashMap::new();
-        for spec in parse_manifest(dir)? {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.hlo_path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(wrap)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(wrap)?;
-            entries.insert(spec.name.clone(), (exe, spec));
+        // Check for artifacts before touching the backend: a fresh
+        // checkout must report ArtifactsMissing (the skip signal) even if
+        // the configured backend cannot initialize.
+        if !dir.join("manifest.txt").is_file() {
+            return Err(RuntimeError::ArtifactsMissing { dir: dir.to_path_buf() }.into());
         }
-        Ok(ArtifactStore { client, entries })
+        Self::load_with(dir, default_backend()?)
     }
 
+    /// Load on an explicit backend.
+    pub fn load_with(dir: impl AsRef<Path>, backend: Box<dyn Backend>) -> Result<Self> {
+        let dir = dir.as_ref();
+        if !dir.join("manifest.txt").is_file() {
+            return Err(RuntimeError::ArtifactsMissing { dir: dir.to_path_buf() }.into());
+        }
+        let mut entries = HashMap::new();
+        for spec in parse_manifest(dir)? {
+            let exe = backend.compile(&spec)?;
+            entries.insert(spec.name.clone(), (exe, spec));
+        }
+        Ok(ArtifactStore { backend, entries })
+    }
+
+    /// Platform string of the active backend (`"interp"`, or the PJRT
+    /// plugin platform name).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
+    }
+
+    /// Short identifier of the active backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn entry_names(&self) -> Vec<&str> {
@@ -49,16 +75,18 @@ impl ArtifactStore {
         self.entries
             .get(name)
             .map(|(_, s)| s)
-            .ok_or_else(|| anyhow!("unknown artifact entry {name}"))
+            .ok_or_else(|| RuntimeError::UnknownEntry { name: name.to_string() }.into())
     }
 
     /// Execute an entry with f32 tensors. Inputs are validated against the
-    /// manifest; outputs are decomposed from the return tuple.
+    /// manifest before reaching the backend.
     pub fn run_f32(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let (exe, spec) = self
             .entries
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact entry {name}"))?;
+            .ok_or_else(|| -> anyhow::Error {
+                RuntimeError::UnknownEntry { name: name.to_string() }.into()
+            })?;
         if inputs.len() != spec.inputs.len() {
             return Err(anyhow!(
                 "{name}: got {} inputs, manifest says {}",
@@ -66,7 +94,6 @@ impl ArtifactStore {
                 spec.inputs.len()
             ));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (t, ispec) in inputs.iter().zip(&spec.inputs) {
             if t.dims != ispec.dims {
                 return Err(anyhow!(
@@ -75,138 +102,7 @@ impl ArtifactStore {
                     ispec.dims
                 ));
             }
-            literals.push(t.to_literal()?);
         }
-        let result = exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
-        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = lit.to_tuple().map_err(wrap)?;
-        parts.into_iter().map(Tensor::from_literal).collect()
-    }
-}
-
-/// Plain-old-data f32 tensor crossing the queue/runtime boundary.
-/// (Queues carry `Tensor`, not `xla::Literal` — literals wrap raw
-/// pointers and stay thread-local.)
-#[derive(Debug, Clone, PartialEq)]
-pub struct Tensor {
-    pub dims: Vec<usize>,
-    pub data: Vec<f32>,
-}
-
-impl Tensor {
-    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let numel: usize = dims.iter().product::<usize>().max(1);
-        if data.len() != numel {
-            return Err(anyhow!("tensor data {} != numel {numel}", data.len()));
-        }
-        Ok(Tensor { dims, data })
-    }
-
-    pub fn zeros(dims: &[usize]) -> Self {
-        let numel: usize = dims.iter().product::<usize>().max(1);
-        Tensor { dims: dims.to_vec(), data: vec![0.0; numel] }
-    }
-
-    pub fn scalar_value(&self) -> f32 {
-        self.data.first().copied().unwrap_or(f32::NAN)
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&self.data).reshape(&dims).map_err(wrap)
-    }
-
-    fn from_literal(lit: xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape().map_err(wrap)?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        // Scalars and non-f32 outputs are converted to f32.
-        let lit = lit.convert(xla::PrimitiveType::F32).map_err(wrap)?;
-        let data = lit.to_vec::<f32>().map_err(wrap)?;
-        Tensor::new(dims, data)
-    }
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
-
-/// Deterministic parameter/data generator (xorshift + Box-Muller): the
-/// Rust-side analog of the model's He initialization, used by examples
-/// and the coordinator when no checkpoint is supplied.
-#[derive(Debug, Clone)]
-pub struct Rng(u64);
-
-impl Rng {
-    pub fn new(seed: u64) -> Self {
-        Rng(seed.max(1))
-    }
-
-    pub fn next_u64(&mut self) -> u64 {
-        let mut x = self.0;
-        x ^= x << 13;
-        x ^= x >> 7;
-        x ^= x << 17;
-        self.0 = x;
-        x
-    }
-
-    /// Uniform in [0, 1).
-    pub fn uniform(&mut self) -> f32 {
-        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
-    }
-
-    /// Standard normal (Box-Muller).
-    pub fn normal(&mut self) -> f32 {
-        let u1 = self.uniform().max(1e-7);
-        let u2 = self.uniform();
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
-    }
-
-    /// He-initialized tensor for a `[fan_in, out]` weight (or zeros bias).
-    pub fn he_tensor(&mut self, dims: &[usize]) -> Tensor {
-        if dims.len() < 2 {
-            return Tensor::zeros(dims);
-        }
-        let fan_in = dims[0] as f32;
-        let scale = (2.0 / fan_in).sqrt();
-        let numel: usize = dims.iter().product();
-        let data = (0..numel).map(|_| self.normal() * scale).collect();
-        Tensor { dims: dims.to_vec(), data }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tensor_validates_numel() {
-        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
-        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
-    }
-
-    #[test]
-    fn rng_deterministic_and_normalish() {
-        let mut a = Rng::new(42);
-        let mut b = Rng::new(42);
-        assert_eq!(a.next_u64(), b.next_u64());
-        let mut r = Rng::new(7);
-        let xs: Vec<f32> = (0..10_000).map(|_| r.normal()).collect();
-        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
-        assert!(mean.abs() < 0.05, "{mean}");
-        assert!((var - 1.0).abs() < 0.1, "{var}");
-    }
-
-    #[test]
-    fn he_scaling() {
-        let mut r = Rng::new(9);
-        let t = r.he_tensor(&[256, 64]);
-        let var = t.data.iter().map(|x| x * x).sum::<f32>() / t.data.len() as f32;
-        let want = 2.0 / 256.0;
-        assert!((var - want).abs() / want < 0.2, "{var} vs {want}");
-        let b = r.he_tensor(&[64]);
-        assert!(b.data.iter().all(|&x| x == 0.0));
+        exe.run_f32(inputs)
     }
 }

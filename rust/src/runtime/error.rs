@@ -1,0 +1,69 @@
+//! Typed runtime errors.
+//!
+//! `ArtifactStore::load` and friends surface *expected* failure modes —
+//! a checkout without `artifacts/`, an entry a backend cannot execute —
+//! as [`RuntimeError`] values that callers can `downcast_ref` out of the
+//! `anyhow` chain, instead of pattern-matching message strings or raw io
+//! error chains.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Expected runtime failure modes, downcastable from `anyhow::Error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RuntimeError {
+    /// The artifact directory has no `manifest.txt` — a fresh checkout.
+    /// Tests and examples treat this as "skip the real-runtime path".
+    ArtifactsMissing { dir: PathBuf },
+    /// A requested entry name is not in the loaded manifest.
+    UnknownEntry { name: String },
+    /// The manifest names an entry the active backend cannot execute
+    /// (e.g. an arbitrary HLO program under the interpreter backend).
+    UnsupportedEntry { name: String, backend: &'static str },
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::ArtifactsMissing { dir } => write!(
+                f,
+                "artifacts missing: no manifest.txt under {} — run `make artifacts` to \
+                 generate them (optional: only the real-runtime demos need them)",
+                dir.display()
+            ),
+            RuntimeError::UnknownEntry { name } => {
+                write!(f, "unknown artifact entry {name}")
+            }
+            RuntimeError::UnsupportedEntry { name, backend } => write!(
+                f,
+                "artifact entry `{name}` is not supported by the `{backend}` backend — \
+                 build with `--features pjrt` (and the real xla crate) to execute \
+                 arbitrary HLO entries"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_missing_message_names_the_fix() {
+        let e = RuntimeError::ArtifactsMissing { dir: PathBuf::from("artifacts") };
+        let s = e.to_string();
+        assert!(s.contains("make artifacts"), "{s}");
+        assert!(s.contains("artifacts"), "{s}");
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let any: anyhow::Error = RuntimeError::UnknownEntry { name: "x".into() }.into();
+        assert!(matches!(
+            any.downcast_ref::<RuntimeError>(),
+            Some(RuntimeError::UnknownEntry { .. })
+        ));
+    }
+}

@@ -1,0 +1,724 @@
+//! Pure-Rust interpreter backend — the default runtime engine.
+//!
+//! Each AOT entry in `artifacts/manifest.txt` lowers to a straight-line
+//! SSA tensor [`Program`] (matmuls, bias adds, activations, their VJPs,
+//! and the SGD update) which this module interprets over [`Tensor`]s.
+//! The programs implement the reference semantics of
+//! `python/compile/model.py` — the same math the HLO artifacts encode —
+//! so the full coordinator/example/test stack runs on a fresh offline
+//! checkout with no XLA runtime and no Python. Shapes are read from the
+//! operands at run time, so the same program serves the real AOT shapes
+//! and the small synthetic manifests the tests use.
+//!
+//! Gradient programs are hand-derived reverse-mode; the test suite checks
+//! them against central finite differences (see `entry_program` tests),
+//! and the PJRT integration tests cross-check numerics whenever real
+//! artifacts plus the `pjrt` feature are present.
+
+use super::backend::{Backend, Executable};
+use super::error::RuntimeError;
+use super::manifest::EntrySpec;
+use super::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+
+/// Register index into an executing program's value file.
+pub type Reg = usize;
+
+/// SGD learning rate baked into the `train_step` entry (mirrors
+/// `python/compile/model.py::LR`).
+pub const LR: f32 = 1e-2;
+
+/// One SSA instruction. Every instruction reads existing registers and
+/// defines exactly one new register.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// `out = a @ b` — `[m,k] x [k,n] -> [m,n]`.
+    Matmul { a: Reg, b: Reg },
+    /// `out = aT @ b` — `a:[k,m], b:[k,n] -> [m,n]` (weight gradients:
+    /// contraction over the batch dimension).
+    MatmulTn { a: Reg, b: Reg },
+    /// `out = a @ bT` — `a:[m,n], b:[k,n] -> [m,k]` (data gradients).
+    MatmulNt { a: Reg, b: Reg },
+    /// `out[i,j] = a[i,j] + bias[j]`.
+    AddBias { a: Reg, bias: Reg },
+    /// `out = max(a, 0)`.
+    Relu { a: Reg },
+    /// `out = 1 / (1 + exp(-a))`.
+    Sigmoid { a: Reg },
+    /// `out = g * 1[act > 0]` — ReLU VJP against the saved activation.
+    ReluGrad { g: Reg, act: Reg },
+    /// `out = dy * y * (1 - y)` — sigmoid VJP against the saved output.
+    SigmoidGrad { dy: Reg, y: Reg },
+    /// `out = mean((y - t)^2)` as a scalar tensor.
+    MseLoss { y: Reg, t: Reg },
+    /// `out = 2 * (y - t) / numel` — MSE VJP.
+    MseGrad { y: Reg, t: Reg },
+    /// `out[j] = sum_i a[i,j]` — batch reduction (bias gradients).
+    ColSum { a: Reg },
+    /// `out = a + c * b` (same shape) — the SGD update with `c = -LR`.
+    Axpy { a: Reg, b: Reg, c: f32 },
+}
+
+/// A straight-line SSA tensor program. Registers `0..n_inputs` are the
+/// entry inputs; instruction `i` defines register `n_inputs + i`.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub n_inputs: usize,
+    pub instrs: Vec<Instr>,
+    pub outputs: Vec<Reg>,
+}
+
+/// A register value: input registers borrow the caller's tensors (the
+/// coordinator re-binds the same weight tensors every tile — copying them
+/// per invocation would dominate the hot path), instruction results are
+/// owned.
+enum Value<'a> {
+    In(&'a Tensor),
+    Owned(Tensor),
+}
+
+impl Value<'_> {
+    fn tensor(&self) -> &Tensor {
+        match self {
+            Value::In(t) => t,
+            Value::Owned(t) => t,
+        }
+    }
+}
+
+impl Program {
+    /// Execute over the given inputs, returning the output registers.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        ensure!(
+            inputs.len() == self.n_inputs,
+            "program expects {} inputs, got {}",
+            self.n_inputs,
+            inputs.len()
+        );
+        let mut regs: Vec<Value> = Vec::with_capacity(self.n_inputs + self.instrs.len());
+        regs.extend(inputs.iter().map(Value::In));
+        for instr in &self.instrs {
+            let value = eval(instr, &regs)?;
+            regs.push(Value::Owned(value));
+        }
+        // Move owned result tensors out; clone only inputs echoed as
+        // outputs or registers listed more than once (train_step returns
+        // every updated parameter — cloning them all would double the
+        // step's memory traffic for nothing).
+        let mut results = Vec::with_capacity(self.outputs.len());
+        for (oi, &r) in self.outputs.iter().enumerate() {
+            let listed_again = self.outputs[oi + 1..].contains(&r);
+            let value = regs.get_mut(r).ok_or_else(|| anyhow!("output register {r} out of range"))?;
+            let tensor = match value {
+                Value::In(t) => (**t).clone(),
+                Value::Owned(t) if listed_again => t.clone(),
+                Value::Owned(t) => std::mem::replace(t, Tensor::zeros(&[])),
+            };
+            results.push(tensor);
+        }
+        Ok(results)
+    }
+}
+
+/// Incremental program construction (registers allocated in SSA order).
+struct ProgramBuilder {
+    n_inputs: usize,
+    instrs: Vec<Instr>,
+}
+
+impl ProgramBuilder {
+    fn new(n_inputs: usize) -> Self {
+        ProgramBuilder { n_inputs, instrs: Vec::new() }
+    }
+
+    fn push(&mut self, instr: Instr) -> Reg {
+        let reg = self.n_inputs + self.instrs.len();
+        self.instrs.push(instr);
+        reg
+    }
+
+    /// `x @ w + b`.
+    fn linear(&mut self, x: Reg, w: Reg, b: Reg) -> Reg {
+        let mm = self.push(Instr::Matmul { a: x, b: w });
+        self.push(Instr::AddBias { a: mm, bias: b })
+    }
+
+    fn finish(self, outputs: Vec<Reg>) -> Program {
+        Program { n_inputs: self.n_inputs, instrs: self.instrs, outputs }
+    }
+}
+
+/// Forward pass of the NeRF-class MLP (`nerf_forward`, both variants —
+/// the Pallas and reference paths are numerically identical by design):
+/// three ReLU trunk layers + sigmoid head.
+fn forward_program() -> Program {
+    let mut p = ProgramBuilder::new(9);
+    let (x, w1, b1, w2, b2, w3, b3, w4, b4) = (0, 1, 2, 3, 4, 5, 6, 7, 8);
+    let z1 = p.linear(x, w1, b1);
+    let a1 = p.push(Instr::Relu { a: z1 });
+    let z2 = p.linear(a1, w2, b2);
+    let a2 = p.push(Instr::Relu { a: z2 });
+    let z3 = p.linear(a2, w3, b3);
+    let a3 = p.push(Instr::Relu { a: z3 });
+    let z4 = p.linear(a3, w4, b4);
+    let y = p.push(Instr::Sigmoid { a: z4 });
+    p.finish(vec![y])
+}
+
+/// One SGD step: forward, MSE loss, hand-derived reverse-mode backward,
+/// parameter update. ABI matches `model.train_step`:
+/// `(x, y, *params) -> (loss, *new_params)`.
+fn train_step_program() -> Program {
+    let mut p = ProgramBuilder::new(10);
+    let (x, t) = (0, 1);
+    let (w1, b1, w2, b2, w3, b3, w4, b4) = (2, 3, 4, 5, 6, 7, 8, 9);
+
+    // Forward (saving activations for the VJPs).
+    let z1 = p.linear(x, w1, b1);
+    let a1 = p.push(Instr::Relu { a: z1 });
+    let z2 = p.linear(a1, w2, b2);
+    let a2 = p.push(Instr::Relu { a: z2 });
+    let z3 = p.linear(a2, w3, b3);
+    let a3 = p.push(Instr::Relu { a: z3 });
+    let z4 = p.linear(a3, w4, b4);
+    let y = p.push(Instr::Sigmoid { a: z4 });
+    let loss = p.push(Instr::MseLoss { y, t });
+
+    // Backward: dL/dy, then layer by layer. The weight-gradient GEMMs
+    // contract over the batch dimension and the bias gradients are batch
+    // reductions — exactly the Fig 2(b) structures the paper pipelines.
+    let dy = p.push(Instr::MseGrad { y, t });
+    let dz4 = p.push(Instr::SigmoidGrad { dy, y });
+    let dw4 = p.push(Instr::MatmulTn { a: a3, b: dz4 });
+    let db4 = p.push(Instr::ColSum { a: dz4 });
+    let da3 = p.push(Instr::MatmulNt { a: dz4, b: w4 });
+    let dz3 = p.push(Instr::ReluGrad { g: da3, act: a3 });
+    let dw3 = p.push(Instr::MatmulTn { a: a2, b: dz3 });
+    let db3 = p.push(Instr::ColSum { a: dz3 });
+    let da2 = p.push(Instr::MatmulNt { a: dz3, b: w3 });
+    let dz2 = p.push(Instr::ReluGrad { g: da2, act: a2 });
+    let dw2 = p.push(Instr::MatmulTn { a: a1, b: dz2 });
+    let db2 = p.push(Instr::ColSum { a: dz2 });
+    let da1 = p.push(Instr::MatmulNt { a: dz2, b: w2 });
+    let dz1 = p.push(Instr::ReluGrad { g: da1, act: a1 });
+    let dw1 = p.push(Instr::MatmulTn { a: x, b: dz1 });
+    let db1 = p.push(Instr::ColSum { a: dz1 });
+
+    // SGD update.
+    let step = |p: &mut ProgramBuilder, param: Reg, grad: Reg| {
+        p.push(Instr::Axpy { a: param, b: grad, c: -LR })
+    };
+    let nw1 = step(&mut p, w1, dw1);
+    let nb1 = step(&mut p, b1, db1);
+    let nw2 = step(&mut p, w2, dw2);
+    let nb2 = step(&mut p, b2, db2);
+    let nw3 = step(&mut p, w3, dw3);
+    let nb3 = step(&mut p, b3, db3);
+    let nw4 = step(&mut p, w4, dw4);
+    let nb4 = step(&mut p, b4, db4);
+
+    p.finish(vec![loss, nw1, nb1, nw2, nb2, nw3, nb3, nw4, nb4])
+}
+
+/// Pipeline stage 0 (`stage_trunk0`): `relu(fused_mlp(x, w1, b1, w2, b2))`
+/// = `relu(relu(x@w1+b1) @ w2 + b2)`.
+fn stage_trunk0_program() -> Program {
+    let mut p = ProgramBuilder::new(5);
+    let (x, w1, b1, w2, b2) = (0, 1, 2, 3, 4);
+    let z1 = p.linear(x, w1, b1);
+    let a1 = p.push(Instr::Relu { a: z1 });
+    let z2 = p.linear(a1, w2, b2);
+    let a2 = p.push(Instr::Relu { a: z2 });
+    p.finish(vec![a2])
+}
+
+/// Pipeline stage 1 (`stage_trunk1`): `relu(h @ w3 + b3)`.
+fn stage_trunk1_program() -> Program {
+    let mut p = ProgramBuilder::new(3);
+    let z = p.linear(0, 1, 2);
+    let a = p.push(Instr::Relu { a: z });
+    p.finish(vec![a])
+}
+
+/// Pipeline stage 2 (`stage_head`): `sigmoid(h @ w4 + b4)`.
+fn stage_head_program() -> Program {
+    let mut p = ProgramBuilder::new(3);
+    let z = p.linear(0, 1, 2);
+    let y = p.push(Instr::Sigmoid { a: z });
+    p.finish(vec![y])
+}
+
+/// Resolve a manifest entry to its interpreter program, validating the
+/// declared ABI (input arity, output count) against the program.
+pub fn entry_program(spec: &EntrySpec) -> Result<Program> {
+    let program = match spec.name.as_str() {
+        "nerf_forward" | "nerf_forward_pallas" => forward_program(),
+        "train_step" => train_step_program(),
+        "stage_trunk0" => stage_trunk0_program(),
+        "stage_trunk1" => stage_trunk1_program(),
+        "stage_head" => stage_head_program(),
+        _ => {
+            return Err(RuntimeError::UnsupportedEntry {
+                name: spec.name.clone(),
+                backend: "interp",
+            }
+            .into())
+        }
+    };
+    ensure!(
+        program.n_inputs == spec.inputs.len(),
+        "{}: manifest declares {} inputs, interpreter program expects {}",
+        spec.name,
+        spec.inputs.len(),
+        program.n_inputs
+    );
+    ensure!(
+        program.outputs.len() == spec.n_outputs,
+        "{}: manifest declares {} outputs, interpreter program produces {}",
+        spec.name,
+        spec.n_outputs,
+        program.outputs.len()
+    );
+    Ok(program)
+}
+
+/// The pure-Rust interpreter backend (always available, the default).
+#[derive(Debug, Clone, Default)]
+pub struct InterpBackend;
+
+impl InterpBackend {
+    pub fn new() -> Self {
+        InterpBackend
+    }
+}
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn compile(&self, spec: &EntrySpec) -> Result<Box<dyn Executable>> {
+        let program = entry_program(spec)?;
+        Ok(Box::new(InterpExecutable { name: spec.name.clone(), program }))
+    }
+}
+
+struct InterpExecutable {
+    name: String,
+    program: Program,
+}
+
+impl Executable for InterpExecutable {
+    fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.program.run(inputs).with_context(|| format!("interp entry {}", self.name))
+    }
+}
+
+// ---- tensor kernels ----
+
+fn eval(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
+    let r = |i: Reg| regs[i].tensor();
+    match *instr {
+        Instr::Matmul { a, b } => matmul(r(a), r(b), false, false),
+        Instr::MatmulTn { a, b } => matmul(r(a), r(b), true, false),
+        Instr::MatmulNt { a, b } => matmul(r(a), r(b), false, true),
+        Instr::AddBias { a, bias } => add_bias(r(a), r(bias)),
+        Instr::Relu { a } => Ok(map1(r(a), |v| v.max(0.0))),
+        Instr::Sigmoid { a } => Ok(map1(r(a), |v| 1.0 / (1.0 + (-v).exp()))),
+        Instr::ReluGrad { g, act } => {
+            map2(r(g), r(act), |gv, av| if av > 0.0 { gv } else { 0.0 })
+        }
+        Instr::SigmoidGrad { dy, y } => map2(r(dy), r(y), |d, yv| d * yv * (1.0 - yv)),
+        Instr::MseLoss { y, t } => mse_loss(r(y), r(t)),
+        Instr::MseGrad { y, t } => {
+            let n = r(y).data.len().max(1) as f32;
+            map2(r(y), r(t), move |yv, tv| 2.0 * (yv - tv) / n)
+        }
+        Instr::ColSum { a } => col_sum(r(a)),
+        Instr::Axpy { a, b, c } => map2(r(a), r(b), move |av, bv| av + c * bv),
+    }
+}
+
+/// `a (T?) @ b (T?)`. Logical shapes are derived from the physical dims
+/// plus the transpose flags; everything is validated.
+fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+    ensure!(
+        a.dims.len() == 2 && b.dims.len() == 2,
+        "matmul needs rank-2 operands, got {:?} x {:?}",
+        a.dims,
+        b.dims
+    );
+    let (m, k) = if ta { (a.dims[1], a.dims[0]) } else { (a.dims[0], a.dims[1]) };
+    let (k2, n) = if tb { (b.dims[1], b.dims[0]) } else { (b.dims[0], b.dims[1]) };
+    ensure!(
+        k == k2,
+        "matmul contraction mismatch: {:?}{} x {:?}{}",
+        a.dims,
+        if ta { "ᵀ" } else { "" },
+        b.dims,
+        if tb { "ᵀ" } else { "" }
+    );
+    let (lda, ldb) = (a.dims[1], b.dims[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            // No zero-skip: 0 * NaN must stay NaN so diverged values
+            // propagate exactly as they do through the XLA backend.
+            let av = if ta { a.data[kk * lda + i] } else { a.data[i * lda + kk] };
+            let row = &mut out[i * n..(i + 1) * n];
+            if tb {
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o += av * b.data[j * ldb + kk];
+                }
+            } else {
+                let brow = &b.data[kk * ldb..kk * ldb + n];
+                for (o, &bv) in row.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn add_bias(a: &Tensor, bias: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims.len() == 2, "bias add needs a rank-2 lhs, got {:?}", a.dims);
+    let n = a.dims[1];
+    ensure!(
+        bias.dims == [n],
+        "bias shape {:?} does not broadcast over {:?}",
+        bias.dims,
+        a.dims
+    );
+    let data = a
+        .data
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| v + bias.data[idx % n])
+        .collect();
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn map1(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor { dims: a.dims.clone(), data: a.data.iter().map(|&v| f(v)).collect() }
+}
+
+fn map2(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+    ensure!(a.dims == b.dims, "elementwise shape mismatch: {:?} vs {:?}", a.dims, b.dims);
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn mse_loss(y: &Tensor, t: &Tensor) -> Result<Tensor> {
+    ensure!(y.dims == t.dims, "mse shape mismatch: {:?} vs {:?}", y.dims, t.dims);
+    let n = y.data.len().max(1) as f64;
+    let sum: f64 = y.data.iter().zip(&t.data).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+    Tensor::new(Vec::new(), vec![(sum / n) as f32])
+}
+
+fn col_sum(a: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims.len() == 2, "column sum needs rank 2, got {:?}", a.dims);
+    let (m, n) = (a.dims[0], a.dims[1]);
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += a.data[i * n + j];
+        }
+    }
+    Tensor::new(vec![n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::manifest::TensorSpec;
+    use super::super::tensor::Rng;
+    use std::path::PathBuf;
+
+    fn t(dims: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(dims.to_vec(), data.to_vec()).unwrap()
+    }
+
+    fn spec(name: &str, ins: &[Vec<usize>], outs: usize) -> EntrySpec {
+        EntrySpec {
+            name: name.to_string(),
+            hlo_path: PathBuf::from(format!("{name}.hlo.txt")),
+            inputs: ins
+                .iter()
+                .map(|d| TensorSpec { dtype: "f32".to_string(), dims: d.clone() })
+                .collect(),
+            n_outputs: outs,
+        }
+    }
+
+    #[test]
+    fn matmul_plain_and_transposed() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = t(&[3, 2], &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = matmul(&a, &b, false, false).unwrap();
+        assert_eq!(c.dims, vec![2, 2]);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+        // Gram-matrix symmetry exercises both transpose flags.
+        let g1 = matmul(&a, &a, true, false).unwrap(); // aT a : [3,3]
+        let g2 = matmul(&a, &a, false, true).unwrap(); // a aT : [2,2]
+        assert_eq!(g1.dims, vec![3, 3]);
+        assert_eq!(g2.dims, vec![2, 2]);
+        assert_eq!(g1.data[1], g1.data[3]); // symmetric
+        assert_eq!(g2.data[1], g2.data[2]);
+        // Tn/Nt agree with matmul against an explicitly transposed operand.
+        let at = t(&[3, 2], &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]); // aT materialized
+        let c = t(&[2, 2], &[1.0, -1.0, 2.0, 0.5]);
+        let tn = matmul(&a, &c, true, false).unwrap(); // aT @ c : [3,2]
+        let explicit = matmul(&at, &c, false, false).unwrap();
+        assert_eq!(tn.data, explicit.data);
+        let ct = t(&[2, 2], &[1.0, 2.0, -1.0, 0.5]); // cT materialized
+        let nt = matmul(&at, &c, false, true).unwrap(); // aT @ cT : [3,2]
+        let explicit2 = matmul(&at, &ct, false, false).unwrap();
+        assert_eq!(nt.data, explicit2.data);
+        // Contraction mismatches are rejected.
+        assert!(matmul(&a, &b, true, false).is_err());
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = add_bias(&a, &t(&[3], &[10.0, 20.0, 30.0])).unwrap();
+        assert_eq!(b.data, vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let s = col_sum(&a).unwrap();
+        assert_eq!(s.dims, vec![3]);
+        assert_eq!(s.data, vec![5.0, 7.0, 9.0]);
+        assert!(add_bias(&a, &t(&[2], &[0.0, 0.0])).is_err());
+    }
+
+    #[test]
+    fn forward_program_outputs_unit_range() {
+        let prog = forward_program();
+        let mut rng = Rng::new(11);
+        let dims: Vec<Vec<usize>> = vec![
+            vec![16, 6],
+            vec![6, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 3],
+            vec![3],
+        ];
+        let inputs: Vec<Tensor> = dims
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                if i == 0 {
+                    let numel: usize = d.iter().product();
+                    Tensor {
+                        dims: d.clone(),
+                        data: (0..numel).map(|_| rng.normal()).collect(),
+                    }
+                } else {
+                    rng.he_tensor(d)
+                }
+            })
+            .collect();
+        let out = prog.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![16, 3]);
+        assert!(out[0].data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Deterministic.
+        assert_eq!(prog.run(&inputs).unwrap()[0].data, out[0].data);
+    }
+
+    #[test]
+    fn stage_composition_equals_forward() {
+        // trunk0 -> trunk1 -> head must reproduce nerf_forward exactly:
+        // the coordinator's pipeline is a factorization of the monolith.
+        let mut rng = Rng::new(23);
+        let x = Tensor {
+            dims: vec![8, 6],
+            data: (0..48).map(|_| rng.normal()).collect(),
+        };
+        let params: Vec<Tensor> = [
+            vec![6usize, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 3],
+            vec![3],
+        ]
+        .iter()
+        .map(|d| rng.he_tensor(d))
+        .collect();
+
+        let mut fwd_in = vec![x.clone()];
+        fwd_in.extend(params.iter().cloned());
+        let y_fwd = forward_program().run(&fwd_in).unwrap().remove(0);
+
+        let t0 = stage_trunk0_program()
+            .run(&[
+                x,
+                params[0].clone(),
+                params[1].clone(),
+                params[2].clone(),
+                params[3].clone(),
+            ])
+            .unwrap()
+            .remove(0);
+        let t1 = stage_trunk1_program()
+            .run(&[t0, params[4].clone(), params[5].clone()])
+            .unwrap()
+            .remove(0);
+        let y_staged = stage_head_program()
+            .run(&[t1, params[6].clone(), params[7].clone()])
+            .unwrap()
+            .remove(0);
+        assert_eq!(y_fwd.dims, y_staged.dims);
+        assert_eq!(y_fwd.data, y_staged.data, "stages must compose bit-identically");
+    }
+
+    #[test]
+    fn train_step_gradients_match_finite_differences() {
+        let prog = train_step_program();
+        let mut rng = Rng::new(31);
+        let (batch, din, hidden, dout) = (8usize, 3usize, 4usize, 2usize);
+        let x = Tensor {
+            dims: vec![batch, din],
+            data: (0..batch * din).map(|_| rng.normal()).collect(),
+        };
+        let t_out = Tensor {
+            dims: vec![batch, dout],
+            data: (0..batch * dout).map(|_| rng.uniform()).collect(),
+        };
+        let param_dims: Vec<Vec<usize>> = vec![
+            vec![din, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, dout],
+            vec![dout],
+        ];
+        // Non-zero biases so their gradients are exercised off the origin.
+        let params: Vec<Tensor> = param_dims
+            .iter()
+            .map(|d| {
+                let mut p = rng.he_tensor(d);
+                if d.len() == 1 {
+                    p.data.iter_mut().for_each(|v| *v = 0.1 * rng.normal());
+                }
+                p
+            })
+            .collect();
+
+        let loss_at = |params: &[Tensor]| -> f64 {
+            let mut args = vec![x.clone(), t_out.clone()];
+            args.extend(params.iter().cloned());
+            prog.run(&args).unwrap()[0].scalar_value() as f64
+        };
+        let run = {
+            let mut args = vec![x.clone(), t_out.clone()];
+            args.extend(params.iter().cloned());
+            prog.run(&args).unwrap()
+        };
+        assert_eq!(run.len(), 9);
+
+        // Analytic gradient recovered from the SGD update: g = (p - p')/LR.
+        let eps = 1e-3f64;
+        for (pi, pdims) in param_dims.iter().enumerate() {
+            let numel: usize = pdims.iter().product();
+            for &k in &[0usize, numel / 2, numel - 1] {
+                let analytic =
+                    ((params[pi].data[k] - run[1 + pi].data[k]) / LR) as f64;
+                let mut plus = params.clone();
+                plus[pi].data[k] += eps as f32;
+                let mut minus = params.clone();
+                minus[pi].data[k] -= eps as f32;
+                let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+                assert!(
+                    (fd - analytic).abs() < 1e-3 + 0.08 * analytic.abs(),
+                    "param {pi}[{k}]: finite-diff {fd} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_descends_on_fixed_batch() {
+        let prog = train_step_program();
+        let mut rng = Rng::new(99);
+        let (batch, din, hidden, dout) = (32usize, 6usize, 16usize, 3usize);
+        let x = Tensor {
+            dims: vec![batch, din],
+            data: (0..batch * din).map(|_| rng.normal()).collect(),
+        };
+        let t_out = Tensor {
+            dims: vec![batch, dout],
+            data: (0..batch * dout).map(|_| rng.uniform()).collect(),
+        };
+        let mut params: Vec<Tensor> = [
+            vec![din, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, dout],
+            vec![dout],
+        ]
+        .iter()
+        .map(|d| rng.he_tensor(d))
+        .collect();
+        let mut losses = Vec::new();
+        for _ in 0..150 {
+            let mut args = vec![x.clone(), t_out.clone()];
+            args.extend(params.iter().cloned());
+            let mut out = prog.run(&args).unwrap();
+            losses.push(out.remove(0).scalar_value());
+            params = out;
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        // Full-batch SGD with a small step descends monotonically here.
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-7, "loss rose: {} -> {}", w[0], w[1]);
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.95),
+            "no meaningful descent: {} -> {}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn entry_program_validates_manifest_abi() {
+        let nine: Vec<Vec<usize>> = vec![
+            vec![4, 6],
+            vec![6, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 8],
+            vec![8],
+            vec![8, 3],
+            vec![3],
+        ];
+        assert!(entry_program(&spec("nerf_forward", &nine, 1)).is_ok());
+        // Wrong arity rejected.
+        assert!(entry_program(&spec("nerf_forward", &nine[..5].to_vec(), 1)).is_err());
+        // Wrong output count rejected.
+        assert!(entry_program(&spec("nerf_forward", &nine, 2)).is_err());
+        // Unknown entries produce the typed unsupported error.
+        let err = entry_program(&spec("weird_entry", &nine, 1)).unwrap_err();
+        match err.downcast_ref::<RuntimeError>() {
+            Some(RuntimeError::UnsupportedEntry { name, backend }) => {
+                assert_eq!(name, "weird_entry");
+                assert_eq!(*backend, "interp");
+            }
+            other => panic!("expected UnsupportedEntry, got {other:?}"),
+        }
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,9 +1,34 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`), compile once on the PJRT CPU client, execute
-//! from the L3 hot path. Python never runs at request time.
+//! Runtime layer: load `artifacts/manifest.txt` entries and execute them
+//! through a pluggable [`Backend`].
+//!
+//! Two backends implement the boundary:
+//!
+//! * [`interp`] — pure-Rust tensor-program interpreter, the **default**.
+//!   Runs every shipped AOT entry (forward, train step, pipeline stages)
+//!   with no XLA runtime, no Python, and no network — a fresh offline
+//!   checkout builds, tests, and serves.
+//! * [`pjrt`] (cargo feature `pjrt`, off by default) — compiles the
+//!   `artifacts/*.hlo.txt` lowered by `python/compile/aot.py` through the
+//!   PJRT C API (`xla` crate) and can execute arbitrary HLO entries.
+//!   Offline builds link a type-level stub; see README.md for swapping in
+//!   the real crate.
+//!
+//! Python appears at build time only: `python/compile/aot.py` lowers the
+//! L2 model and L1 kernels to HLO *text* under `artifacts/`. Nothing on
+//! the request path imports Python.
 
+pub mod backend;
 pub mod client;
+pub mod error;
+pub mod interp;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod tensor;
 
-pub use client::{ArtifactStore, Rng, Tensor};
+pub use backend::{default_backend, Backend, Executable, BACKEND_ENV};
+pub use client::ArtifactStore;
+pub use error::RuntimeError;
+pub use interp::InterpBackend;
 pub use manifest::{parse_manifest, EntrySpec, TensorSpec};
+pub use tensor::{Rng, Tensor};

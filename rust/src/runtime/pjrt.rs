@@ -1,0 +1,97 @@
+//! PJRT runtime backend (cargo feature `pjrt`): load AOT HLO-text
+//! artifacts, compile once through the PJRT C API, execute many.
+//!
+//! Written against the `xla` crate surface (xla-rs lineage). HLO *text*
+//! is the interchange format (see `python/compile/aot.py` — serialized
+//! protos from jax ≥ 0.5 carry 64-bit instruction ids the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! In offline builds the `xla` dependency alias resolves to the
+//! `vendor/xla-stub` crate: this module still type-checks (the point of
+//! `cargo check --features pjrt`) but client construction returns a clear
+//! "PJRT unavailable" error at run time. Point the alias at the real xla
+//! crate to execute artifacts.
+
+use super::backend::{Backend, Executable};
+use super::manifest::EntrySpec;
+use super::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+
+/// Backend wrapping one PJRT client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: PJRT's C API is thread-safe for concurrent `Execute` calls on
+// one client (the CPU plugin serializes internally where needed); the
+// impls exist only because the raw-pointer-holding xla types don't derive
+// Send/Sync.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Construct over the PJRT CPU client.
+    pub fn new() -> Result<Self> {
+        Ok(PjrtBackend { client: xla::PjRtClient::cpu().map_err(wrap)? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, spec: &EntrySpec) -> Result<Box<dyn Executable>> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Box::new(PjrtExecutable { exe }))
+    }
+}
+
+/// One compiled entry point.
+struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: see `PjrtBackend` — concurrent Execute on one loaded
+// executable is supported by the PJRT plugin contract.
+unsafe impl Send for PjrtExecutable {}
+unsafe impl Sync for PjrtExecutable {}
+
+impl Executable for PjrtExecutable {
+    fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(wrap)?;
+        parts.into_iter().map(from_literal).collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data).reshape(&dims).map_err(wrap)
+}
+
+fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    // Scalars and non-f32 outputs are converted to f32.
+    let lit = lit.convert(xla::PrimitiveType::F32).map_err(wrap)?;
+    let data = lit.to_vec::<f32>().map_err(wrap)?;
+    Tensor::new(dims, data)
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

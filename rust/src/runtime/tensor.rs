@@ -1,0 +1,120 @@
+//! Plain-old-data tensors and the deterministic parameter generator —
+//! the value types crossing the queue/runtime boundary. Backend-agnostic:
+//! both the interpreter and the PJRT backend consume and produce these.
+
+use anyhow::{anyhow, Result};
+
+/// Plain-old-data f32 tensor crossing the queue/runtime boundary.
+/// (Queues carry `Tensor`, never backend-native buffers — PJRT literals
+/// wrap raw pointers and stay thread-local inside the `pjrt` backend.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != numel {
+            return Err(anyhow!("tensor data {} != numel {numel}", data.len()));
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        Tensor { dims: dims.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn scalar_value(&self) -> f32 {
+        self.data.first().copied().unwrap_or(f32::NAN)
+    }
+}
+
+/// Deterministic parameter/data generator (xorshift + Box-Muller): the
+/// Rust-side analog of the model's He initialization, used by examples
+/// and the coordinator when no checkpoint is supplied.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-7);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// He-initialized tensor for a `[fan_in, out]` weight (or zeros bias).
+    pub fn he_tensor(&mut self, dims: &[usize]) -> Tensor {
+        if dims.len() < 2 {
+            return Tensor::zeros(dims);
+        }
+        let fan_in = dims[0] as f32;
+        let scale = (2.0 / fan_in).sqrt();
+        let numel: usize = dims.iter().product();
+        let data = (0..numel).map(|_| self.normal() * scale).collect();
+        Tensor { dims: dims.to_vec(), data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_validates_numel() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let t = Tensor::new(vec![], vec![4.5]).unwrap();
+        assert_eq!(t.scalar_value(), 4.5);
+        assert_eq!(Tensor::zeros(&[]).data.len(), 1);
+    }
+
+    #[test]
+    fn rng_deterministic_and_normalish() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut r = Rng::new(7);
+        let xs: Vec<f32> = (0..10_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.1, "{var}");
+    }
+
+    #[test]
+    fn he_scaling() {
+        let mut r = Rng::new(9);
+        let t = r.he_tensor(&[256, 64]);
+        let var = t.data.iter().map(|x| x * x).sum::<f32>() / t.data.len() as f32;
+        let want = 2.0 / 256.0;
+        assert!((var - want).abs() / want < 0.2, "{var} vs {want}");
+        let b = r.he_tensor(&[64]);
+        assert!(b.data.iter().all(|&x| x == 0.0));
+    }
+}

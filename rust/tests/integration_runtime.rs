@@ -1,21 +1,32 @@
 //! Integration over the real runtime + coordinator: AOT artifacts loaded
-//! through PJRT, the Pallas-kernel path checked against the reference
-//! path *through compiled XLA executables*, training descending, and the
-//! spatial pipeline matching serial execution bit for bit.
+//! through the active backend (PJRT under `--features pjrt`, the pure-Rust
+//! interpreter otherwise), the Pallas-kernel path checked against the
+//! reference path, training descending, and the spatial pipeline matching
+//! serial execution bit for bit.
 //!
-//! These tests require `make artifacts`; they are skipped (pass
-//! trivially with a notice) when the artifact directory is absent so
-//! `cargo test` works in a fresh checkout.
+//! These tests require `make artifacts`; they are skipped (pass trivially
+//! with a notice) when the artifact directory is absent so `cargo test`
+//! works in a fresh offline checkout. The skip signal is the *typed*
+//! [`RuntimeError::ArtifactsMissing`] — anything else is a real failure
+//! worth surfacing. Backend-independent coverage of the same scenarios
+//! lives in `interp_runtime.rs`, which never skips.
 
 use kitsune::coordinator::cli::{build_nerf_pipeline, input_tiles};
 use kitsune::coordinator::{run_serial, run_streaming};
-use kitsune::runtime::{ArtifactStore, Rng, Tensor};
+use kitsune::runtime::{ArtifactStore, Rng, RuntimeError, Tensor};
 
 fn store() -> Option<ArtifactStore> {
     match ArtifactStore::load("artifacts") {
         Ok(s) => Some(s),
         Err(e) => {
-            eprintln!("skipping runtime test (run `make artifacts`): {e}");
+            assert!(
+                matches!(
+                    e.downcast_ref::<RuntimeError>(),
+                    Some(RuntimeError::ArtifactsMissing { .. })
+                ),
+                "artifact load failed for a reason other than a fresh checkout: {e:?}"
+            );
+            eprintln!("skipping runtime test: {e}");
             None
         }
     }

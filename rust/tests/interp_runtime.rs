@@ -1,0 +1,235 @@
+//! Integration over the pure-Rust interpreter backend: a synthetic
+//! artifact manifest (no HLO files, no Python, no PJRT) drives the same
+//! ArtifactStore + coordinator stack as the real AOT artifacts —
+//! forward numerics, SGD training descent, spatial-pipeline equivalence,
+//! and the typed error surface. Everything here runs on a fresh offline
+//! checkout; nothing is skipped.
+
+use kitsune::coordinator::cli::{build_nerf_pipeline, input_tiles};
+use kitsune::coordinator::{run_serial, run_streaming};
+use kitsune::runtime::{ArtifactStore, InterpBackend, Rng, RuntimeError, Tensor};
+use std::path::PathBuf;
+
+const IN: usize = 6;
+const HIDDEN: usize = 16;
+const OUT: usize = 3;
+const TILE: usize = 8;
+const BATCH: usize = 32;
+
+/// Write a small-shape manifest mirroring `python/compile/aot.py`'s ABI
+/// into a fresh temp directory, and return the directory.
+fn synth_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "kitsune_interp_test_{}_{tag}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = |dims: &[usize]| -> String {
+        let ds: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+        format!("f32[{}]", ds.join(","))
+    };
+    let params = [
+        p(&[IN, HIDDEN]),
+        p(&[HIDDEN]),
+        p(&[HIDDEN, HIDDEN]),
+        p(&[HIDDEN]),
+        p(&[HIDDEN, HIDDEN]),
+        p(&[HIDDEN]),
+        p(&[HIDDEN, OUT]),
+        p(&[OUT]),
+    ]
+    .join(",");
+    let manifest = [
+        format!("nerf_forward\tnerf_forward.hlo.txt\tin={},{params}\tout=1", p(&[TILE * 2, IN])),
+        format!(
+            "nerf_forward_pallas\tnerf_forward_pallas.hlo.txt\tin={},{params}\tout=1",
+            p(&[TILE * 2, IN])
+        ),
+        format!(
+            "train_step\ttrain_step.hlo.txt\tin={},{},{params}\tout=9",
+            p(&[BATCH, IN]),
+            p(&[BATCH, OUT])
+        ),
+        format!(
+            "stage_trunk0\tstage_trunk0.hlo.txt\tin={},{},{},{},{}\tout=1",
+            p(&[TILE, IN]),
+            p(&[IN, HIDDEN]),
+            p(&[HIDDEN]),
+            p(&[HIDDEN, HIDDEN]),
+            p(&[HIDDEN])
+        ),
+        format!(
+            "stage_trunk1\tstage_trunk1.hlo.txt\tin={},{},{}\tout=1",
+            p(&[TILE, HIDDEN]),
+            p(&[HIDDEN, HIDDEN]),
+            p(&[HIDDEN])
+        ),
+        format!(
+            "stage_head\tstage_head.hlo.txt\tin={},{},{}\tout=1",
+            p(&[TILE, HIDDEN]),
+            p(&[HIDDEN, OUT]),
+            p(&[OUT])
+        ),
+    ]
+    .join("\n");
+    std::fs::write(dir.join("manifest.txt"), manifest + "\n").unwrap();
+    dir
+}
+
+fn store(tag: &str) -> ArtifactStore {
+    ArtifactStore::load_with(synth_artifacts(tag), Box::new(InterpBackend::new())).unwrap()
+}
+
+#[test]
+fn interp_store_loads_all_entries() {
+    let store = store("entries");
+    assert_eq!(store.backend_name(), "interp");
+    assert_eq!(store.platform(), "interp");
+    for want in [
+        "nerf_forward",
+        "nerf_forward_pallas",
+        "train_step",
+        "stage_trunk0",
+        "stage_trunk1",
+        "stage_head",
+    ] {
+        assert!(store.entry_names().contains(&want), "missing {want}");
+    }
+}
+
+#[test]
+fn forward_outputs_in_unit_range_and_pallas_variant_matches() {
+    let store = store("fwd");
+    let spec = store.spec("nerf_forward").unwrap().clone();
+    let mut rng = Rng::new(5);
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            if i == 0 {
+                let numel: usize = t.dims.iter().product();
+                Tensor {
+                    dims: t.dims.clone(),
+                    data: (0..numel).map(|_| rng.normal()).collect(),
+                }
+            } else {
+                rng.he_tensor(&t.dims)
+            }
+        })
+        .collect();
+    let y = store.run_f32("nerf_forward", &inputs).unwrap();
+    assert_eq!(y.len(), 1);
+    assert_eq!(y[0].dims, vec![TILE * 2, OUT]);
+    assert!(y[0].data.iter().all(|&v| (0.0..=1.0).contains(&v)), "sigmoid range");
+    // The pallas-path entry is numerically identical by construction.
+    let y2 = store.run_f32("nerf_forward_pallas", &inputs).unwrap();
+    assert_eq!(y[0].data, y2[0].data);
+}
+
+#[test]
+fn train_step_descends_through_store() {
+    // Mirror of `integration_runtime::train_step_descends_through_pjrt`,
+    // running on the interpreter against a fixed batch.
+    let store = store("train");
+    let spec = store.spec("train_step").unwrap().clone();
+    let mut rng = Rng::new(42);
+    let x = Tensor {
+        dims: spec.inputs[0].dims.clone(),
+        data: (0..spec.inputs[0].numel()).map(|_| rng.normal()).collect(),
+    };
+    let y = Tensor {
+        dims: spec.inputs[1].dims.clone(),
+        data: (0..spec.inputs[1].numel()).map(|_| rng.uniform()).collect(),
+    };
+    let mut params: Vec<Tensor> =
+        spec.inputs[2..].iter().map(|t| rng.he_tensor(&t.dims)).collect();
+    let mut losses = Vec::new();
+    for _ in 0..60 {
+        let mut args = vec![x.clone(), y.clone()];
+        args.extend(params.iter().cloned());
+        let mut outs = store.run_f32("train_step", &args).unwrap();
+        losses.push(outs.remove(0).scalar_value());
+        params = outs;
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.999),
+        "no descent: {losses:?}"
+    );
+}
+
+#[test]
+fn spatial_pipeline_matches_serial_bitwise_on_interp() {
+    // The full coordinator path — ring queues, stage threads, ordered
+    // sink — over interpreter-backed stage executables.
+    let store = store("pipe");
+    let pipeline = build_nerf_pipeline(&store, 2).unwrap();
+    let inputs = input_tiles(&store, "stage_trunk0", 24).unwrap();
+    let serial = run_serial(&store, &pipeline, inputs.clone()).unwrap();
+    let streamed = run_streaming(&store, &pipeline, inputs).unwrap();
+    assert_eq!(streamed.outputs.len(), serial.outputs.len());
+    for (a, b) in streamed.outputs.iter().zip(&serial.outputs) {
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(a.data, b.data, "tile outputs must be bit-identical");
+    }
+    for m in &streamed.metrics {
+        assert_eq!(m.tiles, 24, "stage {}", m.name);
+    }
+}
+
+#[test]
+fn run_rejects_wrong_arity_shape_and_unknown_entry() {
+    let store = store("reject");
+    let err = store.run_f32("nerf_forward", &[]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    let spec = store.spec("stage_trunk1").unwrap().clone();
+    let mut bad: Vec<Tensor> = spec.inputs.iter().map(|t| Tensor::zeros(&t.dims)).collect();
+    bad[0] = Tensor::zeros(&[1, 1]);
+    let err = store.run_f32("stage_trunk1", &bad).unwrap_err();
+    assert!(err.to_string().contains("dims"), "{err}");
+    let err = store.run_f32("nope", &[]).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<RuntimeError>(),
+        Some(RuntimeError::UnknownEntry { .. })
+    ));
+}
+
+#[test]
+fn missing_artifacts_is_a_typed_clean_error() {
+    let err = ArtifactStore::load("definitely-not-an-artifact-dir").unwrap_err();
+    match err.downcast_ref::<RuntimeError>() {
+        Some(RuntimeError::ArtifactsMissing { dir }) => {
+            assert!(dir.ends_with("definitely-not-an-artifact-dir"));
+        }
+        other => panic!("expected ArtifactsMissing, got {other:?}"),
+    }
+    // The message tells the user the fix and that it is optional — no raw
+    // io error chain.
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "{msg}");
+    assert!(!msg.to_lowercase().contains("os error"), "{msg}");
+}
+
+#[test]
+fn unsupported_manifest_entry_fails_with_typed_error() {
+    let dir = std::env::temp_dir().join(format!(
+        "kitsune_interp_test_{}_unsupported",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "exotic_entry\texotic_entry.hlo.txt\tin=f32[4,4]\tout=1\n",
+    )
+    .unwrap();
+    let err = ArtifactStore::load_with(&dir, Box::new(InterpBackend::new())).unwrap_err();
+    match err.downcast_ref::<RuntimeError>() {
+        Some(RuntimeError::UnsupportedEntry { name, backend }) => {
+            assert_eq!(name, "exotic_entry");
+            assert_eq!(*backend, "interp");
+        }
+        other => panic!("expected UnsupportedEntry, got {other:?}"),
+    }
+    assert!(err.to_string().contains("pjrt"), "{err}");
+}

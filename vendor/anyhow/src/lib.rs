@@ -1,0 +1,253 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the main
+//! crate depends on this shim under the dependency alias `anyhow`. It
+//! implements exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a context-carrying, downcastable error value;
+//! * [`Result<T>`] with `E = Error` defaulted;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros;
+//! * the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Semantics follow the real crate where it matters: `Display` shows only
+//! the outermost context, `Debug` shows the full cause chain, `?` converts
+//! any `std::error::Error + Send + Sync + 'static`, and `downcast_ref`
+//! reaches the original typed error through any number of context frames.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A wrapper error: an outermost message, a chain of earlier messages, and
+/// (when constructed from a typed error) the original value for downcasts.
+pub struct Error {
+    msg: String,
+    /// Earlier messages, outermost-first (grown by [`Error::context`]).
+    chain: Vec<String>,
+    /// The original typed error, kept for [`Error::downcast_ref`].
+    root: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Error from a plain message (what [`anyhow!`] produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), chain: Vec::new(), root: None }
+    }
+
+    /// Error wrapping a typed error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), chain: Vec::new(), root: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let mut chain = Vec::with_capacity(1 + self.chain.len());
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error { msg: context.to_string(), chain, root: self.root }
+    }
+
+    /// Reference to the original typed error, if this `Error` wraps one.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        self.root.as_deref().and_then(|e| e.downcast_ref::<T>())
+    }
+
+    /// Is the original typed error a `T`?
+    pub fn is<T: StdError + 'static>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
+    }
+
+    /// The innermost message of the cause chain.
+    pub fn root_cause_message(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+mod private {
+    use super::{Error, StdError};
+
+    /// Sealed helper so `Context` applies to `Result<T, E>` for both
+    /// typed errors and [`Error`] itself — the same device the real
+    /// crate uses (its private `ext::StdError`). Coherence of the two
+    /// impls rests on `Error` not implementing `std::error::Error`.
+    pub trait ErrorLike {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> ErrorLike for E {
+        fn into_error(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    impl ErrorLike for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result<T, E>` (typed errors *and* `anyhow::Result`) and `Option<T>`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::ErrorLike> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    fn fail_io() -> Result<()> {
+        Err(io::Error::new(io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_typed_errors() {
+        let e = fail_io().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+        assert!(e.downcast_ref::<io::Error>().is_some());
+    }
+
+    #[test]
+    fn context_stacks_and_display_shows_outermost() {
+        let e = fail_io().unwrap_err().context("reading manifest").context("loading store");
+        assert_eq!(e.to_string(), "loading store");
+        assert_eq!(e.root_cause_message(), "gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("reading manifest"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+        assert!(e.downcast_ref::<io::Error>().is_some(), "downcast through context");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        // Context must also apply when the error already is an `Error`
+        // (real-anyhow behavior the runtime's interp backend relies on).
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause_message(), "inner");
+        let r: Result<()> = Err(anyhow!("inner2"));
+        let e = r.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2");
+    }
+
+    #[test]
+    fn context_trait_on_result_and_option() {
+        let r: std::result::Result<(), io::Error> =
+            Err(io::Error::new(io::ErrorKind::Other, "boom"));
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3");
+        let o: Option<u32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(5u32).context("present").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "entry";
+        let e = anyhow!("unknown artifact entry {name}");
+        assert_eq!(e.to_string(), "unknown artifact entry entry");
+        let e = anyhow!("{} of {}", 2, 3);
+        assert_eq!(e.to_string(), "2 of 3");
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+    }
+}
