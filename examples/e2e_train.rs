@@ -5,15 +5,30 @@
 //! must descend; the final state is sanity-checked against a held-out
 //! batch. Results are recorded in EXPERIMENTS.md.
 //!
-//! Requires `make artifacts`. Run:
+//! Requires `make artifacts` (skips cleanly without). Run:
 //! `cargo run --release --example e2e_train -- [steps]`
 
-use kitsune::runtime::{ArtifactStore, Rng, Tensor};
+use kitsune::runtime::{Rng, RuntimeError, Tensor};
+use kitsune::session::Session;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(300);
-    let store = ArtifactStore::load("artifacts")?;
+    // The session façade also fronts AOT artifact access: an
+    // artifacts-only build loads the store (typed skip when absent).
+    let session = match Session::builder().artifacts("artifacts").build() {
+        Ok(s) => s,
+        Err(e) if matches!(
+            e.downcast_ref::<RuntimeError>(),
+            Some(RuntimeError::ArtifactsMissing { .. })
+        ) =>
+        {
+            println!("skipping e2e training: {e}");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
+    let store = session.artifacts().expect("artifacts session has a store");
     let spec = store.spec("train_step")?.clone();
     println!(
         "train_step artifact: {} inputs -> {} outputs on {}",

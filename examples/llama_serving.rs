@@ -1,30 +1,40 @@
-//! Serving with the real coordinator: batched requests streamed through
-//! a spatial pipeline of AOT-compiled XLA stage kernels connected by the
-//! §4.1 ring queues, with per-request latency and throughput reporting —
-//! the paper's execution model running for real at host level.
+//! Serving through the session façade: one *warm* spatial pipeline —
+//! stage workers and ring queues stood up once at `build()` — serving
+//! batched requests from many concurrent client threads, with per-ticket
+//! latency and aggregate throughput reporting. This is the paper's Fig 6
+//! lifecycle (`cudaPipelineCreate` → `AddKernel` → launch once, then
+//! stream) running for real at host level, and the serving shape an
+//! LLM deployment needs: setup amortized across the request stream.
 //!
-//! Also shows the decode-phase story (paper LL-TOK): tiny tiles make the
-//! queue-hop overhead visible, so streaming buys little — matching the
-//! ~0% traffic-reduction row of Table 2.
+//! The decode-phase caveat (paper LL-TOK) still applies: tiny tiles make
+//! the queue-hop overhead visible, so streaming buys little on
+//! token-at-a-time shapes — matching the ~0% traffic-reduction row of
+//! Table 2. Try `--rows 1` equivalent by lowering the tile rows below.
 //!
-//! Requires `make artifacts`. Run:
-//! `cargo run --release --example llama_serving -- [n_requests]`
+//! Run: `cargo run --release --example llama_serving -- [n_requests]`
 
-use kitsune::coordinator::cli::{build_nerf_pipeline, input_tiles};
-use kitsune::coordinator::{run_serial, run_streaming};
-use kitsune::runtime::ArtifactStore;
+use kitsune::session::{nerf_trunk_graph, Session};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(96);
-    let store = ArtifactStore::load("artifacts")?;
-    println!("platform {}; serving {} batched requests (128 rows each)", store.platform(), n_requests);
+    let clients = 4usize;
 
-    let pipeline = build_nerf_pipeline(&store, 2)?;
-    let inputs = input_tiles(&store, "stage_trunk0", n_requests)?;
+    // Build once: compile -> lower -> persistent worker pool.
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(8192, 60, 64, 3))
+        .tile_rows(128)
+        .workers(2)
+        .build()?;
+    let stages = session.pipeline().expect("trunk streams").stages.len();
+    println!(
+        "warm session: {stages}-stage pipeline, {} threads (all spawned at build); serving {n_requests} requests (128 rows each)",
+        session.threads_spawned()
+    );
 
     // Bulk-sync analog: requests processed one at a time, stage by stage.
-    let serial = run_serial(&store, &pipeline, inputs.clone())?;
+    let inputs = session.make_tiles(n_requests, 0xFEED)?;
+    let serial = session.run_serial(inputs.clone())?;
     println!(
         "\nserial    : {:>8.1} ms total  {:>7.1} req/s  {:>7.2} ms/req",
         serial.elapsed_s * 1e3,
@@ -32,17 +42,60 @@ fn main() -> anyhow::Result<()> {
         serial.elapsed_s * 1e3 / n_requests as f64
     );
 
-    // Spatial pipeline: co-resident stages, queue backpressure.
-    let t0 = Instant::now();
-    let run = run_streaming(&store, &pipeline, inputs)?;
-    let wall = t0.elapsed().as_secs_f64();
+    // Single client through the warm pipeline.
+    let run = session.run(inputs)?;
     println!(
         "dataflow  : {:>8.1} ms total  {:>7.1} req/s  speedup {:.2}x",
         run.elapsed_s * 1e3,
         run.tiles_per_sec(),
-        serial.elapsed_s / run.elapsed_s
+        serial.elapsed_s / run.elapsed_s.max(1e-12)
     );
-    for m in &run.metrics {
+
+    // Verify results identical to serial execution.
+    let max_err = run
+        .outputs
+        .iter()
+        .zip(&serial.outputs)
+        .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-5, "pipeline diverged from serial: {max_err}");
+
+    // Many clients, one warm pipeline: tickets interleave through the
+    // same stage workers; each caller still gets its outputs in order.
+    let threads_before = session.threads_spawned();
+    let per_client = (n_requests / clients).max(1);
+    let t0 = Instant::now();
+    let total: usize = std::thread::scope(|scope| -> anyhow::Result<usize> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let session = &session;
+                scope.spawn(move || -> anyhow::Result<(usize, f64)> {
+                    let batch = session.make_tiles(per_client, 0xBEEF + c as u64)?;
+                    let out = session.submit(batch)?.wait()?;
+                    Ok((out.outputs.len(), out.elapsed_s))
+                })
+            })
+            .collect();
+        let mut total = 0;
+        for (c, h) in handles.into_iter().enumerate() {
+            let (n, elapsed) = h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+            println!("  client {c}: {n} requests in {:.1} ms", elapsed * 1e3);
+            total += n;
+        }
+        Ok(total)
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "concurrent: {clients} clients x {per_client} req  {:>8.1} ms wall  {:>7.1} req/s aggregate",
+        wall * 1e3,
+        total as f64 / wall.max(1e-12)
+    );
+    anyhow::ensure!(
+        session.threads_spawned() == threads_before,
+        "submit must never spawn new stage threads"
+    );
+
+    for m in &session.metrics() {
         println!(
             "  {:<8} [{:?}] x{}  busy {:>7.1} ms  wait {:>7.1} ms  util {:>3.0}%",
             m.name,
@@ -53,15 +106,7 @@ fn main() -> anyhow::Result<()> {
             m.utilization() * 100.0
         );
     }
-
-    // Verify results identical to serial execution.
-    let max_err = run
-        .outputs
-        .iter()
-        .zip(&serial.outputs)
-        .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
-        .fold(0.0f32, f32::max);
-    anyhow::ensure!(max_err < 1e-5, "pipeline diverged from serial: {max_err}");
-    println!("\noutputs bit-match serial execution (max |Δ| = {max_err:.1e}); wall {wall:.2}s");
+    println!("\noutputs bit-match serial execution (max |Δ| = {max_err:.1e})");
+    session.shutdown();
     Ok(())
 }

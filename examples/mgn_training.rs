@@ -4,16 +4,17 @@
 //! Kitsune's split reductions and spatial fusion give larger wins than
 //! inference, while gather/scatter aggregations stay bulk-sync.
 //!
+//! Runs through the `kitsune::session` façade: `.app("MGN").training(true)`
+//! resolves the training-suite graph, compiles once, and simulates.
+//!
 //! Run: `cargo run --release --example mgn_training`
 
-use kitsune::apps::mgn::{training, MgnConfig};
 use kitsune::graph::{OpKind, ReduceAxis};
-use kitsune::report::evaluate_app;
-use kitsune::sim::GpuConfig;
+use kitsune::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = GpuConfig::a100();
-    let g = training(&MgnConfig::default());
+    let session = Session::builder().app("MGN").training(true).build()?;
+    let g = session.graph().expect("app session has a graph");
     let bwd_start = g.backward_start.unwrap();
     let n_reduces = g
         .compute_nodes()
@@ -27,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         n_reduces
     );
 
-    let eval = evaluate_app("MGN", &g, &cfg)?;
+    let eval = session.simulate()?;
     println!("\nend-to-end (paper Fig 14):");
     println!("  bulk-sync {:>9.1} us", eval.bsp.sim.elapsed_s * 1e6);
     println!(

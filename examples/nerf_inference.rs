@@ -2,23 +2,22 @@
 //! ops spatially fused, concats on SIMT pipes while GEMMs use the
 //! TensorCores, 2.3x subgraph speedup and ~98% traffic reduction.
 //!
-//! Shows the per-sf-node breakdown the paper's Fig 10 plots, then (if
-//! `make artifacts` has run) executes the *real* NeRF trunk through the
-//! PJRT runtime to confirm the numerics the simulator is reasoning about.
+//! Runs through the `kitsune::session` façade: one build compiles the
+//! suite graph, `simulate()` produces the per-sf-node breakdown the
+//! paper's Fig 10 plots. Then (if `make artifacts` has run) executes the
+//! *real* NeRF trunk through the runtime to confirm the numerics the
+//! simulator is reasoning about.
 //!
 //! Run: `cargo run --release --example nerf_inference`
 
-use kitsune::apps::nerf::{inference, NerfConfig};
-use kitsune::report::evaluate_app;
 use kitsune::runtime::{ArtifactStore, Rng, Tensor};
-use kitsune::sim::GpuConfig;
+use kitsune::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = GpuConfig::a100();
-    let g = inference(&NerfConfig::default());
-    let eval = evaluate_app("NERF", &g, &cfg)?;
+    let session = Session::builder().app("NERF").build()?;
+    let eval = session.simulate()?;
 
-    println!("NeRF inference on simulated {}:", cfg.name);
+    println!("NeRF inference on simulated {}:", session.config().name);
     println!(
         "  bulk-sync  {:>8.1} us   DRAM {:>7.1} MB",
         eval.bsp.sim.elapsed_s * 1e6,
@@ -37,6 +36,11 @@ fn main() -> anyhow::Result<()> {
         eval.kitsune_speedup(),
         100.0 * eval.kitsune_traffic_reduction()
     );
+    // The full NeRF graph has concat skip links (multicast queue edges),
+    // so it simulates rather than streams — the session says why.
+    if let Some(reason) = session.not_streamable_reason() {
+        println!("  (simulation-only: {reason})");
+    }
     println!("\nper-subgraph (paper Fig 10):");
     for r in &eval.kitsune.regions {
         println!(
@@ -48,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Real numerics through PJRT, when artifacts exist.
+    // Real numerics through the runtime backend, when artifacts exist.
     match ArtifactStore::load("artifacts") {
         Ok(store) => {
             let mut rng = Rng::new(7);
@@ -78,12 +82,12 @@ fn main() -> anyhow::Result<()> {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             println!(
-                "\nreal PJRT execution: nerf_forward {:?} -> {:?}; pallas-kernel variant max |Δ| = {max_err:.2e}",
+                "\nreal runtime execution: nerf_forward {:?} -> {:?}; pallas-kernel variant max |Δ| = {max_err:.2e}",
                 spec.inputs[0].dims, y_ref[0].dims
             );
             anyhow::ensure!(max_err < 1e-4, "pallas path diverged from reference");
         }
-        Err(e) => println!("\n(skipping real PJRT check: {e}; run `make artifacts`)"),
+        Err(e) => println!("\n(skipping real-artifact check: {e}; run `make artifacts`)"),
     }
     Ok(())
 }

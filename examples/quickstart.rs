@@ -1,16 +1,18 @@
-//! Quickstart: the whole Kitsune stack in ~60 lines.
+//! Quickstart: the whole Kitsune stack in ~70 lines, through the one
+//! public façade — `kitsune::session`.
 //!
 //! Builds a transformer-FFN-style graph (the paper's Fig 2(a) pattern),
-//! compiles it — subgraph selection, pipeline design (Algorithm 1), ILP
-//! load balancing (Algorithm 2) — and compares bulk-synchronous,
-//! vertical-fusion, and Kitsune dataflow execution on the simulated A100.
+//! and `Session::builder().graph(g).build()` does the rest: subgraph
+//! selection, pipeline design (Algorithm 1), ILP load balancing
+//! (Algorithm 2), and lowering the compiled plan to a real spatial
+//! pipeline. `simulate()` compares bulk-synchronous, vertical-fusion and
+//! Kitsune dataflow on the simulated A100; `submit()` then streams real
+//! tiles through the same compiled plan's warm worker pool.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use kitsune::compiler::{compile, SelectOptions};
-use kitsune::exec::{run_bsp_detailed, run_dataflow, run_vertical};
 use kitsune::graph::{EwKind, GraphBuilder, GraphKind};
-use kitsune::sim::{Engine, GpuConfig, SchedPolicy};
+use kitsune::session::{nerf_trunk_graph, Session};
 
 fn main() -> anyhow::Result<()> {
     // 1. Author a model graph (what PyTorch+Dynamo provides in the paper).
@@ -20,15 +22,16 @@ fn main() -> anyhow::Result<()> {
     let g = b.finish();
     println!("graph: {} ops, {:.1} GFLOP", g.n_compute_ops(), g.total_flops() / 1e9);
 
-    // 2. Compile for dataflow execution.
-    let cfg = GpuConfig::a100();
-    let app = compile(&g, &cfg, &SelectOptions::default())?;
+    // 2. One façade from graph to execution: build() compiles the graph
+    //    (cold here — the simulator answers the timing questions).
+    let session = Session::builder().graph(g).warm(false).build()?;
+    let compiled = session.compiled().expect("session compiles at build");
     println!(
         "compiler: {} sf-node(s), coverage {:.0}%",
-        app.pipelines.len(),
-        100.0 * app.selection.coverage(&g)
+        compiled.pipelines.len(),
+        100.0 * compiled.selection.coverage(session.graph().unwrap())
     );
-    for lp in &app.pipelines {
+    for lp in &compiled.pipelines {
         println!(
             "  {}: {} stages, {} queues, CTA allocation {:?}",
             lp.desc.name,
@@ -38,28 +41,37 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. Execute under all three models.
-    let bsp_engine = Engine::new(cfg.clone(), SchedPolicy::RoundRobin);
-    let kitsune_engine = Engine::new(cfg, SchedPolicy::DualArbiter);
-    let (bsp, per_node) = run_bsp_detailed(&g, &bsp_engine)?;
-    let vf = run_vertical(&g, &bsp_engine, &per_node)?;
-    let df = run_dataflow(&g, &app, &kitsune_engine, &per_node)?;
-
+    // 3. Simulate under all three execution models (paper §6).
+    let eval = session.simulate()?;
     println!("\n{:<14} {:>10} {:>12} {:>10}", "mode", "time", "DRAM traffic", "speedup");
-    for r in [&bsp, &vf, &df] {
+    for r in [&eval.bsp, &eval.vertical, &eval.kitsune] {
         println!(
             "{:<14} {:>8.1}us {:>10.1}MB {:>9.2}x",
             r.mode.to_string(),
             r.sim.elapsed_s * 1e6,
             r.sim.dram_bytes / 1e6,
-            bsp.sim.elapsed_s / r.sim.elapsed_s
+            eval.bsp.sim.elapsed_s / r.sim.elapsed_s
         );
     }
     println!(
         "\nKitsune: {:.2}x speedup, {:.0}% DRAM traffic reduction, {:.0}% of busy SM-time paired",
-        df.speedup_over(&bsp),
-        100.0 * df.traffic_reduction_vs(&bsp),
-        100.0 * df.sim.paired_frac
+        eval.kitsune_speedup(),
+        100.0 * eval.kitsune_traffic_reduction(),
+        100.0 * eval.kitsune.sim.paired_frac
+    );
+
+    // 4. The same API executes for real: a warm session streams tiles
+    //    through the lowered plan's persistent stage workers.
+    let real = Session::builder()
+        .graph(nerf_trunk_graph(1024, 60, 64, 3))
+        .tile_rows(64)
+        .build()?;
+    let out = real.submit(real.make_tiles(16, 7)?)?.wait()?;
+    println!(
+        "\nreal execution via the same façade: {} tiles through {} warm stages, {:.0} tiles/s",
+        out.outputs.len(),
+        real.pipeline().expect("trunk streams").stages.len(),
+        out.tiles_per_sec()
     );
     Ok(())
 }

@@ -1,0 +1,57 @@
+//! Warm vs cold submit throughput through the `kitsune::session` façade
+//! (tiles/sec) — the perf trajectory the persistent pipeline exists for:
+//! a warm session amortizes compile/lower/spawn across the request
+//! stream, a cold path pays it per batch.
+//!
+//! Run: `cargo bench --bench session_throughput`
+
+use kitsune::session::{nerf_trunk_graph, Session};
+use std::time::Instant;
+
+const TILE_ROWS: usize = 64;
+const TILES_PER_BATCH: usize = 32;
+const BATCHES: usize = 6;
+
+fn build() -> anyhow::Result<Session> {
+    Session::builder()
+        .graph(nerf_trunk_graph(2048, 60, 64, 3))
+        .tile_rows(TILE_ROWS)
+        .workers(2)
+        .build()
+}
+
+fn main() -> anyhow::Result<()> {
+    let total_tiles = (TILES_PER_BATCH * BATCHES) as f64;
+
+    // Cold: build the whole session (compile + lower + spawn) per batch.
+    let t0 = Instant::now();
+    for b in 0..BATCHES {
+        let session = build()?;
+        let out = session.run(session.make_tiles(TILES_PER_BATCH, b as u64)?)?;
+        assert_eq!(out.outputs.len(), TILES_PER_BATCH);
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+
+    // Warm: one session, the same stream of batches.
+    let session = build()?;
+    let t0 = Instant::now();
+    for b in 0..BATCHES {
+        let out = session.run(session.make_tiles(TILES_PER_BATCH, b as u64)?)?;
+        assert_eq!(out.outputs.len(), TILES_PER_BATCH);
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+
+    println!("session submit throughput ({BATCHES} batches x {TILES_PER_BATCH} tiles, {TILE_ROWS} rows/tile):");
+    println!(
+        "  cold (build per batch): {:>8.1} ms  {:>8.1} tiles/s",
+        cold_s * 1e3,
+        total_tiles / cold_s.max(1e-12)
+    );
+    println!(
+        "  warm (persistent pool): {:>8.1} ms  {:>8.1} tiles/s  ({:.2}x)",
+        warm_s * 1e3,
+        total_tiles / warm_s.max(1e-12),
+        cold_s / warm_s.max(1e-12)
+    );
+    Ok(())
+}

@@ -39,9 +39,47 @@ pub fn training_suite() -> Vec<(String, Graph)> {
     ]
 }
 
+/// Case-insensitive app lookup in one suite: exact name first, then
+/// substring. Returns the owned `(name, graph)` pair.
+pub fn find_app(name: &str, training: bool) -> Option<(String, Graph)> {
+    let mut suite = if training { training_suite() } else { inference_suite() };
+    let lower = name.to_lowercase();
+    let idx = suite
+        .iter()
+        .position(|(n, _)| n.eq_ignore_ascii_case(name))
+        .or_else(|| suite.iter().position(|(n, _)| n.to_lowercase().contains(&lower)))?;
+    Some(suite.swap_remove(idx))
+}
+
+/// Every valid app name across both suites, training names annotated —
+/// the vocabulary quoted by "unknown app" errors.
+pub fn app_names() -> Vec<String> {
+    let mut names: Vec<String> = inference_suite().into_iter().map(|(n, _)| n).collect();
+    names.extend(training_suite().into_iter().map(|(n, _)| format!("{n} (training)")));
+    names
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn find_app_searches_exact_then_substring() {
+        let (n, g) = find_app("nerf", false).unwrap();
+        assert_eq!(n, "NERF");
+        assert!(g.backward_start.is_none());
+        let (n, g) = find_app("MGN", true).unwrap();
+        assert_eq!(n, "MGN");
+        assert!(g.backward_start.is_some());
+        // Substring: "ctx" hits LL-CTX; training-only LLAMA resolves there.
+        assert_eq!(find_app("ctx", false).unwrap().0, "LL-CTX");
+        assert_eq!(find_app("LLAMA", true).unwrap().0, "LLAMA");
+        assert!(find_app("no-such-app", false).is_none());
+        // The error vocabulary covers both suites.
+        let names = app_names();
+        assert!(names.iter().any(|n| n == "LL-TOK"));
+        assert!(names.iter().any(|n| n == "LLAMA (training)"));
+    }
 
     #[test]
     fn suites_are_complete_and_valid() {

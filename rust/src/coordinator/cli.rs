@@ -1,16 +1,25 @@
-//! `kitsune serve` — run the real spatial-pipeline coordinator over the
-//! AOT artifacts: the NeRF-class trunk as a three-stage pipeline
-//! (TENSOR, TENSOR, SIMT), streamed tiles, ring-queue backpressure,
-//! reported against the serial (bulk-sync analog) baseline.
+//! `kitsune serve` — the real spatial-pipeline coordinator, driven
+//! end-to-end through the [`crate::session`] façade: the NeRF-class
+//! trunk graph is compiled (subgraph selection → pipeline design → ILP),
+//! the compiled plan is lowered to a spatial pipeline with synthesized
+//! stage kernels, and a *warm* worker pool serves streamed tiles from
+//! concurrent clients — reported against the serial (bulk-sync analog)
+//! baseline.
 
 use super::pipeline::SpatialPipeline;
-use super::runner::{run_serial, run_streaming};
 use crate::graph::ResourceClass;
 use crate::runtime::{ArtifactStore, Rng, Tensor};
+use crate::session::{nerf_trunk_graph, Session};
 use anyhow::{Context, Result};
 
-/// Build the demo pipeline from the artifact manifest, with He-init
-/// weights when no checkpoint is given.
+/// Legacy hand-built demo pipeline over the AOT artifact entries
+/// (`stage_trunk0/1`, `stage_head`), with He-init weights when no
+/// checkpoint is given.
+///
+/// **Deprecation path:** this is the hand-stitched stage list the
+/// session façade replaces — `kitsune serve` now lowers a compiled plan
+/// instead. Kept for the artifact-backed integration tests, which
+/// exercise AOT entries the compiler does not synthesize.
 pub fn build_nerf_pipeline(store: &ArtifactStore, workers: usize) -> Result<SpatialPipeline> {
     let mut rng = Rng::new(0xC0FFEE);
     let mut weights_for = |entry: &str| -> Result<Vec<Tensor>> {
@@ -29,7 +38,8 @@ pub fn build_nerf_pipeline(store: &ArtifactStore, workers: usize) -> Result<Spat
         .build())
 }
 
-/// Generate `n` input tiles matching the first stage's tile spec.
+/// Generate `n` input tiles matching the first stage's tile spec
+/// (legacy artifact path; session users call `Session::make_tiles`).
 pub fn input_tiles(store: &ArtifactStore, entry: &str, n: usize) -> Result<Vec<Tensor>> {
     let spec = store.spec(entry)?;
     let dims = spec.inputs[0].dims.clone();
@@ -48,43 +58,112 @@ pub fn input_tiles(store: &ArtifactStore, entry: &str, n: usize) -> Result<Vec<T
 pub fn serve(args: &[&str]) -> Result<()> {
     let mut tiles = 64usize;
     let mut workers = 2usize;
-    let mut artifacts = "artifacts".to_string();
+    let mut hidden = 64usize;
+    let mut clients = 4usize;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match *a {
             "--tiles" => tiles = it.next().context("--tiles N")?.parse()?,
             "--workers" => workers = it.next().context("--workers N")?.parse()?,
-            "--artifacts" => artifacts = it.next().context("--artifacts DIR")?.to_string(),
+            "--hidden" => hidden = it.next().context("--hidden N")?.parse()?,
+            "--clients" => clients = it.next().context("--clients N")?.parse()?,
             other => anyhow::bail!("unknown serve flag {other}"),
         }
     }
+    let clients = clients.max(1);
 
-    println!("loading artifacts from {artifacts}/ ...");
-    let store = ArtifactStore::load(&artifacts)?;
-    println!("platform: {}; entries: {:?}", store.platform(), store.entry_names());
+    // One façade from graph to execution: compile once, lower the plan,
+    // stand up the persistent pipeline.
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(8192, 60, hidden, 3))
+        .workers(workers)
+        .tile_rows(128)
+        .build()?;
+    let compiled = session.compiled().expect("session has a graph");
+    let pipeline = session.pipeline().expect("trunk graph streams");
+    println!(
+        "compiled {}: {} sf-node(s) -> {} pipeline stages, {} worker threads (warm)",
+        session.name(),
+        compiled.pipelines.len(),
+        pipeline.stages.len(),
+        session.threads_spawned()
+    );
+    let allocs: Vec<usize> = compiled
+        .pipelines
+        .iter()
+        .flat_map(|lp| lp.balanced.alloc.iter().copied())
+        .collect();
+    for (s, a) in pipeline.stages.iter().zip(&allocs) {
+        println!(
+            "  stage {:<10} [{:?}] entry {:<28} workers={} (ILP a_i={a})",
+            s.name, s.class, s.entry, s.workers
+        );
+    }
 
-    let pipeline = build_nerf_pipeline(&store, workers)?;
-    let inputs = input_tiles(&store, "stage_trunk0", tiles)?;
+    let inputs = session.make_tiles(tiles, 0xFEED)?;
 
     println!("\nserial (bulk-sync analog), {tiles} tiles:");
-    let serial = run_serial(&store, &pipeline, inputs.clone())?;
+    let serial = session.run_serial(inputs.clone())?;
     println!(
         "  {:.1} ms  ({:.1} tiles/s)",
         serial.elapsed_s * 1e3,
         serial.tiles_per_sec()
     );
 
-    println!("spatial pipeline ({} stages, {workers} workers/GEMM stage):", pipeline.stages.len());
-    let run = run_streaming(&store, &pipeline, inputs)?;
+    // Warm single-caller batch.
+    let run = session.run(inputs)?;
+    println!("warm spatial pipeline, 1 client:");
     println!(
         "  {:.1} ms  ({:.1} tiles/s)  speedup {:.2}x",
         run.elapsed_s * 1e3,
         run.tiles_per_sec(),
-        serial.elapsed_s / run.elapsed_s
+        serial.elapsed_s / run.elapsed_s.max(1e-12)
     );
-    for m in &run.metrics {
+
+    // Correctness: pipeline output must equal serial output exactly.
+    let max_err = run
+        .outputs
+        .iter()
+        .zip(&serial.outputs)
+        .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-5, "pipeline output mismatch: {max_err:.2e}");
+
+    // Concurrent clients through the same warm pipeline.
+    let threads_before = session.threads_spawned();
+    let per_client = (tiles / clients).max(1);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let session = &session;
+            joins.push(scope.spawn(move || -> Result<usize> {
+                let batch = session.make_tiles(per_client, 0xBEEF + c as u64)?;
+                let out = session.submit(batch)?.wait()?;
+                Ok(out.outputs.len())
+            }));
+        }
+        let mut total = 0usize;
+        for j in joins {
+            total += j.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+        }
+        let wall = t0.elapsed().as_secs_f64();
         println!(
-            "  stage {:<8} [{:?}] workers={} tiles={} busy {:>6.1} ms  wait {:>6.1} ms  util {:>4.0}%",
+            "warm spatial pipeline, {clients} concurrent clients x {per_client} tiles:\n  \
+             {:.1} ms  ({:.1} tiles/s aggregate)",
+            wall * 1e3,
+            total as f64 / wall.max(1e-12)
+        );
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        session.threads_spawned() == threads_before,
+        "submit must never spawn stage threads"
+    );
+
+    for m in &session.metrics() {
+        println!(
+            "  stage {:<10} [{:?}] workers={} tiles={} busy {:>7.1} ms  wait {:>7.1} ms  util {:>4.0}%",
             m.name,
             m.class,
             m.workers,
@@ -94,14 +173,7 @@ pub fn serve(args: &[&str]) -> Result<()> {
             m.utilization() * 100.0
         );
     }
-    // Correctness: pipeline output must equal serial output exactly.
-    let max_err = run
-        .outputs
-        .iter()
-        .zip(&serial.outputs)
-        .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
-        .fold(0.0f32, f32::max);
-    println!("max |pipeline - serial| = {max_err:.2e}");
-    anyhow::ensure!(max_err < 1e-5, "pipeline output mismatch");
+    println!("max |pipeline - serial| = {max_err:.2e}; threads spawned: {threads_before} (all at build)");
+    session.shutdown();
     Ok(())
 }

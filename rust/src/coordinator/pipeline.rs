@@ -75,14 +75,31 @@ impl PipelineBuilder {
     }
 
     /// Set the worker count (`a_i`) of the most recently added stage.
+    ///
+    /// # Panics
+    /// Panics when called before any [`Self::add_stage`] — there is no
+    /// stage to configure, and silently dropping the setting (the old
+    /// behavior) hid real mis-use.
     pub fn workers(mut self, n: usize) -> Self {
-        if let Some(s) = self.pipeline.stages.last_mut() {
-            s.workers = n.max(1);
-        }
+        let stage = self
+            .pipeline
+            .stages
+            .last_mut()
+            .expect("PipelineBuilder::workers called before add_stage — add a stage first");
+        stage.workers = n.max(1);
         self
     }
 
+    /// Ring-queue capacity between adjacent stages (pipeline-wide).
+    ///
+    /// # Panics
+    /// Panics when called before any [`Self::add_stage`], to keep the
+    /// builder's call order unambiguous (matching [`Self::workers`]).
     pub fn queue_capacity(mut self, entries: usize) -> Self {
+        assert!(
+            !self.pipeline.stages.is_empty(),
+            "PipelineBuilder::queue_capacity called before add_stage — add a stage first"
+        );
         self.pipeline.queue_capacity = entries.max(2);
         self
     }
@@ -118,5 +135,17 @@ mod tests {
     #[should_panic(expected = "at least one stage")]
     fn empty_pipeline_panics() {
         let _ = SpatialPipeline::builder("x").build();
+    }
+
+    #[test]
+    #[should_panic(expected = "workers called before add_stage")]
+    fn workers_before_any_stage_panics() {
+        let _ = SpatialPipeline::builder("x").workers(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "queue_capacity called before add_stage")]
+    fn queue_capacity_before_any_stage_panics() {
+        let _ = SpatialPipeline::builder("x").queue_capacity(4);
     }
 }

@@ -1,6 +1,14 @@
 //! Streaming pipeline runner: one thread pool per stage, stages linked by
 //! the §4.1 ring queues, executing real AOT-compiled XLA stage kernels.
 //!
+//! **Deprecation path:** [`run_streaming`] spawns and joins a fresh
+//! thread scope per call, so there is no warm serving — prefer
+//! [`crate::session::Session`], which stands the same stage pools up
+//! once at build and accepts concurrent batch submissions. This function
+//! remains as the one-shot/batch primitive (and the reference
+//! implementation the session's service is tested against); new callers
+//! should reach it through the session façade.
+//!
 //! This is the host-level realization of Kitsune's execution model: a
 //! stage worker acquires a tile from its input queue (spinning when
 //! empty), runs its compiled kernel, and releases the result into the

@@ -17,6 +17,16 @@
 //! | 5 applications (DLRM, MGN, NeRF, GraphCast, Llama-3-8B) | [`apps`] |
 //! | PyTorch-Dynamo graph capture | [`graph`] (IR + reverse-mode autodiff) |
 //! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real threads + ring queues) |
+//! | Fig 6 host API (`cudaPipelineCreate` → `AddKernel` → launch) | [`session`] (builder → persistent pipeline → `submit`) |
+//!
+//! [`session`] is the **single public entry point** for running anything:
+//! `Session::builder().app("nerf").build()?` compiles once, lowers the
+//! compiled plan onto the coordinator, and stands up persistent stage
+//! worker pools; the same object exposes `simulate()` (the §6 simulator
+//! evaluation) and `submit()/run()` (real streaming execution with
+//! concurrent batch submission). The CLI, examples and benches all go
+//! through it — hand-stitching `compile()` + `SpatialPipeline::builder()`
+//! + `run_streaming()` is the deprecated path.
 //!
 //! The [`runtime`] executes artifact entries through a pluggable
 //! [`runtime::Backend`]: the pure-Rust interpreter (default — a fresh
@@ -36,6 +46,7 @@ pub mod compiler;
 pub mod exec;
 pub mod coordinator;
 pub mod runtime;
+pub mod session;
 pub mod report;
 pub mod bench;
 

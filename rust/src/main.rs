@@ -12,8 +12,8 @@
 
 use anyhow::{bail, Result};
 use kitsune::apps;
-use kitsune::compiler::{compile, SelectOptions};
 use kitsune::report;
+use kitsune::session::Session;
 use kitsune::sim::GpuConfig;
 
 fn main() -> Result<()> {
@@ -34,7 +34,15 @@ fn main() -> Result<()> {
         "ablation" => print!("{}", report::ablation_table(&GpuConfig::a100())?),
         "all" => cmd_all()?,
         "apps" => cmd_apps(rest.contains(&"--dump"))?,
-        "compile" => cmd_compile(rest.first().copied().unwrap_or("NERF"))?,
+        "compile" => {
+            if let Some(bad) = rest.iter().find(|a| a.starts_with("--") && **a != "--train") {
+                bail!("unknown compile flag {bad} (only --train is accepted)");
+            }
+            cmd_compile(
+                rest.iter().find(|a| !a.starts_with("--")).copied().unwrap_or("NERF"),
+                rest.contains(&"--train"),
+            )?
+        }
         "serve" => kitsune::coordinator::cli::serve(&rest)?,
         "help" | "--help" | "-h" => print_help(),
         other => bail!("unknown subcommand `{other}` (try `kitsune help`)"),
@@ -48,9 +56,13 @@ fn print_help() {
          experiments:\n\
          \x20 table1 table2 fig3 fig5 fig10 fig11 fig12 fig13 fig14 sensitivity ablation all\n\
          tools:\n\
-         \x20 apps [--dump]     application graph inventory\n\
-         \x20 compile <APP>     compiler output (sf-nodes, stages, allocation)\n\
-         \x20 serve [--steps N] real spatial-pipeline coordinator over AOT artifacts"
+         \x20 apps [--dump]       application graph inventory\n\
+         \x20 compile <APP> [--train]\n\
+         \x20                     compiler output (sf-nodes, stages, allocation);\n\
+         \x20                     searches the inference suite, then training\n\
+         \x20 serve [--tiles N] [--workers N] [--hidden N] [--clients N]\n\
+         \x20                     warm spatial pipeline via the session façade:\n\
+         \x20                     compile -> lower -> persistent workers -> concurrent submit"
     );
 }
 
@@ -162,21 +174,31 @@ fn cmd_apps(dump: bool) -> Result<()> {
     Ok(())
 }
 
-fn cmd_compile(app: &str) -> Result<()> {
-    let cfg = GpuConfig::a100();
-    let suite = apps::inference_suite();
-    let (name, g) = suite
-        .iter()
-        .find(|(n, _)| n.eq_ignore_ascii_case(app))
-        .or_else(|| suite.iter().find(|(n, _)| n.to_lowercase().contains(&app.to_lowercase())))
-        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-    let compiled = compile(g, &cfg, &SelectOptions::default())?;
+fn cmd_compile(app: &str, training: bool) -> Result<()> {
+    // The session façade resolves the app (searching the inference suite,
+    // then training) and compiles exactly once; `warm(false)` skips
+    // standing up the serving pool. Unknown names produce the typed
+    // `SessionError::UnknownApp`, which lists every valid name.
+    let session = Session::builder().app(app).training(training).warm(false).build()?;
+    let (name, g) = (session.name(), session.graph().expect("app session has a graph"));
+    let compiled = session.compiled().expect("app session compiles at build");
     println!(
         "{name}: {} ops, {} sf-nodes, coverage {:.0}%",
         g.n_compute_ops(),
         compiled.pipelines.len(),
         100.0 * compiled.selection.coverage(g)
     );
+    match session.pipeline() {
+        Some(p) => println!(
+            "  streams: lowered to a {}-stage spatial pipeline (tile {:?})",
+            p.stages.len(),
+            session.tile_dims().unwrap_or_default()
+        ),
+        None => println!(
+            "  simulation-only: {}",
+            session.not_streamable_reason().unwrap_or("not lowered")
+        ),
+    }
     for lp in &compiled.pipelines {
         println!(
             "  {} — {} stages, {} queues, tiles={}, ILP thrpt {:.1}/s",

@@ -247,8 +247,13 @@ fn backoff(spins: &mut u32) {
     *spins += 1;
     if *spins < 64 {
         std::hint::spin_loop();
-    } else {
+    } else if *spins < 4096 {
         std::thread::yield_now();
+    } else {
+        // Long-idle tier: a persistent session's warm worker pool parks
+        // here between batches instead of burning a core per worker. The
+        // 50µs nap is noise next to a stage kernel but caps idle CPU.
+        std::thread::sleep(std::time::Duration::from_micros(50));
     }
 }
 

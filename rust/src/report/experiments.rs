@@ -43,12 +43,24 @@ impl AppEval {
 
 /// Evaluate `g` on `cfg` under BSP, vertical fusion and Kitsune.
 pub fn evaluate_app(name: &str, g: &Graph, cfg: &GpuConfig) -> Result<AppEval> {
+    let compiled = compile(g, cfg, &SelectOptions::default())?;
+    evaluate_compiled(name, g, cfg, compiled)
+}
+
+/// Like [`evaluate_app`], but reusing an already-compiled plan — the
+/// session façade compiles exactly once at `build()` and simulates from
+/// that plan.
+pub fn evaluate_compiled(
+    name: &str,
+    g: &Graph,
+    cfg: &GpuConfig,
+    compiled: CompiledApp,
+) -> Result<AppEval> {
     let bsp_engine = Engine::new(cfg.clone(), SchedPolicy::RoundRobin);
     let kitsune_engine = Engine::new(cfg.clone(), SchedPolicy::DualArbiter);
 
     let (bsp, per_node) = run_bsp_detailed(g, &bsp_engine)?;
     let vertical = run_vertical(g, &bsp_engine, &per_node)?;
-    let compiled = compile(g, cfg, &SelectOptions::default())?;
     let kitsune = run_dataflow(g, &compiled, &kitsune_engine, &per_node)?;
 
     let vf_fused_ops = vertical.regions.iter().map(|r| r.n_ops).sum();

@@ -5,7 +5,9 @@ pub mod experiments;
 pub mod format;
 
 pub use ablation::{ablation_rows, ablation_table, AblationRow};
-pub use experiments::{evaluate_app, evaluate_suite, sensitivity_configs, AppEval};
+pub use experiments::{
+    evaluate_app, evaluate_compiled, evaluate_suite, sensitivity_configs, AppEval,
+};
 pub use format::{
     e2e_speedups, fig13, fig3, fig5, sensitivity, subgraph_speedups, table1, table2,
 };

@@ -20,7 +20,37 @@ pub struct ArtifactStore {
     entries: HashMap<String, (Box<dyn Executable>, EntrySpec)>,
 }
 
+/// Backend tag for stores assembled in memory from already-compiled
+/// executables (the session façade's lowered stage programs). It cannot
+/// compile anything new — every entry is handed in pre-built.
+struct PrecompiledBackend(&'static str);
+
+impl Backend for PrecompiledBackend {
+    fn name(&self) -> &'static str {
+        self.0
+    }
+
+    fn compile(&self, spec: &EntrySpec) -> Result<Box<dyn Executable>> {
+        Err(RuntimeError::UnsupportedEntry { name: spec.name.clone(), backend: self.0 }.into())
+    }
+}
+
 impl ArtifactStore {
+    /// Assemble a store directly from compiled executables — no manifest
+    /// on disk. This is how [`crate::session`] registers the stage
+    /// programs it lowers from a `CompiledApp`: the coordinator then
+    /// dispatches them exactly like AOT artifact entries.
+    pub fn from_executables(
+        platform: &'static str,
+        entries: Vec<(EntrySpec, Box<dyn Executable>)>,
+    ) -> Self {
+        let entries = entries
+            .into_iter()
+            .map(|(spec, exe)| (spec.name.clone(), (exe, spec)))
+            .collect();
+        ArtifactStore { backend: Box::new(PrecompiledBackend(platform)), entries }
+    }
+
     /// Load `dir/manifest.txt` on the default backend (PJRT under the
     /// `pjrt` feature, the pure-Rust interpreter otherwise; override with
     /// `KITSUNE_BACKEND`).

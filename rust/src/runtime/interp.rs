@@ -46,6 +46,14 @@ pub enum Instr {
     Relu { a: Reg },
     /// `out = 1 / (1 + exp(-a))`.
     Sigmoid { a: Reg },
+    /// `out = 0.5 a (1 + tanh(√(2/π)(a + 0.044715 a³)))` — tanh GELU.
+    Gelu { a: Reg },
+    /// `out = tanh(a)`.
+    Tanh { a: Reg },
+    /// `out = a · sigmoid(a)` — SiLU / swish.
+    Silu { a: Reg },
+    /// `out = exp(a)`.
+    Exp { a: Reg },
     /// `out = g * 1[act > 0]` — ReLU VJP against the saved activation.
     ReluGrad { g: Reg, act: Reg },
     /// `out = dy * y * (1 - y)` — sigmoid VJP against the saved output.
@@ -90,14 +98,24 @@ impl Value<'_> {
 impl Program {
     /// Execute over the given inputs, returning the output registers.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_bound(inputs, &[])
+    }
+
+    /// Execute with `bound` tensors appended after `inputs` as additional
+    /// input registers. The session façade binds stage weights once at
+    /// build time this way, so the per-tile call passes only the streamed
+    /// tile — no weight cloning on the hot path.
+    pub fn run_bound(&self, inputs: &[Tensor], bound: &[Tensor]) -> Result<Vec<Tensor>> {
         ensure!(
-            inputs.len() == self.n_inputs,
-            "program expects {} inputs, got {}",
+            inputs.len() + bound.len() == self.n_inputs,
+            "program expects {} inputs, got {} (+{} bound)",
             self.n_inputs,
-            inputs.len()
+            inputs.len(),
+            bound.len()
         );
         let mut regs: Vec<Value> = Vec::with_capacity(self.n_inputs + self.instrs.len());
         regs.extend(inputs.iter().map(Value::In));
+        regs.extend(bound.iter().map(Value::In));
         for instr in &self.instrs {
             let value = eval(instr, &regs)?;
             regs.push(Value::Owned(value));
@@ -315,6 +333,37 @@ impl Executable for InterpExecutable {
     }
 }
 
+/// Wrap a synthesized [`Program`] as a runnable [`Executable`] — how the
+/// session façade turns lowered compiler stages into stage kernels
+/// without any on-disk manifest entry.
+pub fn program_executable(name: impl Into<String>, program: Program) -> Box<dyn Executable> {
+    Box::new(InterpExecutable { name: name.into(), program })
+}
+
+/// Like [`program_executable`], but with `bound` tensors (stage weights)
+/// fixed at construction: callers pass only the streamed tile.
+pub fn bound_executable(
+    name: impl Into<String>,
+    program: Program,
+    bound: Vec<Tensor>,
+) -> Box<dyn Executable> {
+    Box::new(BoundExecutable { name: name.into(), program, bound })
+}
+
+struct BoundExecutable {
+    name: String,
+    program: Program,
+    bound: Vec<Tensor>,
+}
+
+impl Executable for BoundExecutable {
+    fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.program
+            .run_bound(inputs, &self.bound)
+            .with_context(|| format!("interp entry {}", self.name))
+    }
+}
+
 // ---- tensor kernels ----
 
 fn eval(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
@@ -326,6 +375,13 @@ fn eval(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
         Instr::AddBias { a, bias } => add_bias(r(a), r(bias)),
         Instr::Relu { a } => Ok(map1(r(a), |v| v.max(0.0))),
         Instr::Sigmoid { a } => Ok(map1(r(a), |v| 1.0 / (1.0 + (-v).exp()))),
+        Instr::Gelu { a } => Ok(map1(r(a), |v| {
+            let c = std::f32::consts::FRAC_2_SQRT_PI / std::f32::consts::SQRT_2; // √(2/π)
+            0.5 * v * (1.0 + (c * (v + 0.044_715 * v * v * v)).tanh())
+        })),
+        Instr::Tanh { a } => Ok(map1(r(a), |v| v.tanh())),
+        Instr::Silu { a } => Ok(map1(r(a), |v| v / (1.0 + (-v).exp()))),
+        Instr::Exp { a } => Ok(map1(r(a), |v| v.exp())),
         Instr::ReluGrad { g, act } => {
             map2(r(g), r(act), |gv, av| if av > 0.0 { gv } else { 0.0 })
         }
@@ -690,6 +746,50 @@ mod tests {
             losses[0],
             losses.last().unwrap()
         );
+    }
+
+    #[test]
+    fn extended_activations_match_reference_math() {
+        let mk = |instr: fn(Reg) -> Instr| Program {
+            n_inputs: 1,
+            instrs: vec![instr(0)],
+            outputs: vec![1],
+        };
+        let x = t(&[1, 4], &[-2.0, -0.5, 0.5, 2.0]);
+        let gelu = mk(|a| Instr::Gelu { a }).run(&[x.clone()]).unwrap();
+        // tanh-GELU reference values.
+        for (got, want) in gelu[0].data.iter().zip([-0.0454f32, -0.1543, 0.3457, 1.9546]) {
+            assert!((got - want).abs() < 1e-3, "gelu {got} vs {want}");
+        }
+        let tanh = mk(|a| Instr::Tanh { a }).run(&[x.clone()]).unwrap();
+        assert!((tanh[0].data[3] - 2.0f32.tanh()).abs() < 1e-6);
+        let silu = mk(|a| Instr::Silu { a }).run(&[x.clone()]).unwrap();
+        let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
+        assert!((silu[0].data[0] - (-2.0 * sig(-2.0))).abs() < 1e-6);
+        let exp = mk(|a| Instr::Exp { a }).run(&[x]).unwrap();
+        assert!((exp[0].data[2] - 0.5f32.exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bound_execution_matches_plain_run() {
+        // stage_trunk1 with weights bound at construction must agree with
+        // the same program run with weights passed per call.
+        let prog = stage_trunk1_program();
+        let mut rng = Rng::new(77);
+        let x = Tensor {
+            dims: vec![4, 8],
+            data: (0..32).map(|_| rng.normal()).collect(),
+        };
+        let w = rng.he_tensor(&[8, 8]);
+        let b = rng.he_tensor(&[8]);
+        let plain = prog.run(&[x.clone(), w.clone(), b.clone()]).unwrap();
+        let bound = prog.run_bound(&[x.clone()], &[w.clone(), b.clone()]).unwrap();
+        assert_eq!(plain[0].data, bound[0].data);
+        let exe = bound_executable("t1", prog, vec![w, b]);
+        let via_exe = exe.run_f32(&[x]).unwrap();
+        assert_eq!(plain[0].data, via_exe[0].data);
+        // Wrong arity still rejected.
+        assert!(exe.run_f32(&[]).is_err());
     }
 
     #[test]

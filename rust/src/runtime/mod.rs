@@ -29,6 +29,6 @@ pub mod tensor;
 pub use backend::{default_backend, Backend, Executable, BACKEND_ENV};
 pub use client::ArtifactStore;
 pub use error::RuntimeError;
-pub use interp::InterpBackend;
+pub use interp::{bound_executable, program_executable, InterpBackend};
 pub use manifest::{parse_manifest, EntrySpec, TensorSpec};
 pub use tensor::{Rng, Tensor};

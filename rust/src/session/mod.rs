@@ -1,0 +1,575 @@
+//! `kitsune::session` — the single front door from graph to execution.
+//!
+//! The paper's Fig 6 host flow (`cudaPipelineCreate` → `AddKernel` →
+//! launch) is a *persistent* spatial pipeline that amortizes setup across
+//! a stream of tiles. This module is its host-level realization and the
+//! one public API for running anything:
+//!
+//! ```no_run
+//! use kitsune::session::Session;
+//!
+//! let session = Session::builder().app("nerf").build()?;   // compiles once
+//! let eval = session.simulate()?;                          // §6 evaluation
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! For graphs that lower to a linear spatial pipeline, `build()` also
+//! stands up the *warm* serving path: stage worker threads and ring
+//! queues created once, then any number of callers stream batches
+//! concurrently through [`Session::submit`] / [`Ticket::wait`] — no
+//! thread is ever spawned on the submit path. [`Session::shutdown`] (or
+//! `Drop`) tears the pool down.
+//!
+//! ```no_run
+//! use kitsune::session::{nerf_trunk_graph, Session};
+//!
+//! let session = Session::builder()
+//!     .graph(nerf_trunk_graph(8192, 60, 64, 3))
+//!     .workers(2)
+//!     .build()?;                                  // compile + lower + warm up
+//! let tiles = session.make_tiles(64, 0xFEED)?;
+//! let out = session.submit(tiles)?.wait()?;       // concurrent-safe
+//! println!("{:.0} tiles/s", out.tiles_per_sec());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The lowering ([`lower`]) is the piece that makes this a single façade:
+//! the compiler's [`CompiledApp`] plan is turned into the coordinator's
+//! [`SpatialPipeline`] with synthesized interpreter stage kernels —
+//! previously the compiled plan only ever drove the simulator while real
+//! pipelines were hand-built stage lists.
+
+pub mod lower;
+pub mod service;
+
+pub use lower::{lower_app, LowerOptions, LoweredApp};
+pub use service::{BatchResult, PipelineService, Ticket};
+
+use crate::apps;
+use crate::compiler::{compile, CompiledApp, SelectOptions};
+use crate::coordinator::{run_serial, PipelineRun, SpatialPipeline, StageMetrics};
+use crate::graph::{EwKind, Graph, GraphBuilder, GraphKind};
+use crate::report::{evaluate_compiled, AppEval};
+use crate::runtime::{bound_executable, ArtifactStore, Backend, Rng, Tensor};
+use crate::sim::GpuConfig;
+use crate::Result;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Typed session failure modes, downcastable from `anyhow::Error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// `.app(name)` matched nothing in either suite.
+    UnknownApp { name: String, available: Vec<String> },
+    /// The graph compiled, but its plan cannot stream through a linear
+    /// spatial pipeline. `simulate()` still works.
+    NotStreamable { reason: String },
+    /// The session was built without a graph (artifacts-only).
+    NoGraph,
+    /// The session was built with `warm(false)`; the streaming pool was
+    /// never stood up.
+    Cold,
+}
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::UnknownApp { name, available } => {
+                write!(f, "unknown app `{name}` — valid names: {}", available.join(", "))
+            }
+            SessionError::NotStreamable { reason } => write!(
+                f,
+                "graph cannot stream through a spatial pipeline: {reason} \
+                 (Session::simulate still works)"
+            ),
+            SessionError::NoGraph => write!(
+                f,
+                "session has no graph — build with .app(..)/.graph(..), or use \
+                 .artifacts(..) only for store access"
+            ),
+            SessionError::Cold => write!(
+                f,
+                "session was built cold (warm(false)) — rebuild warm to submit batches"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// The NeRF-class trunk MLP (the family the AOT artifacts implement) as a
+/// streamable graph: `in → hidden ×3 (ReLU) → out (sigmoid)`. The default
+/// serving demo for `kitsune serve` and the examples.
+pub fn nerf_trunk_graph(rows: usize, in_dim: usize, hidden: usize, out_dim: usize) -> Graph {
+    let mut b = GraphBuilder::new("nerf-trunk", GraphKind::Inference);
+    let x = b.input(&[rows, in_dim], "x");
+    let mut h = x;
+    for i in 0..3 {
+        h = b.linear(h, hidden, true, &format!("trunk{i}"));
+        h = b.relu(h, &format!("trunk{i}.act"));
+    }
+    let o = b.linear(h, out_dim, true, "head");
+    b.ew1(EwKind::Sigmoid, o, "head.act");
+    b.finish()
+}
+
+/// Builder mirroring Fig 6's host flow: declare what to run and how,
+/// then `build()` compiles, lowers, and warms up — exactly once.
+pub struct SessionBuilder {
+    app: Option<String>,
+    graph: Option<Graph>,
+    training: bool,
+    cfg: GpuConfig,
+    select: SelectOptions,
+    backend: Option<Box<dyn Backend>>,
+    artifacts: Option<PathBuf>,
+    gemm_workers: usize,
+    queue_capacity: usize,
+    tile_rows: Option<usize>,
+    seed: u64,
+    warm: bool,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            app: None,
+            graph: None,
+            training: false,
+            cfg: GpuConfig::a100(),
+            select: SelectOptions::default(),
+            backend: None,
+            artifacts: None,
+            gemm_workers: 2,
+            queue_capacity: 8,
+            tile_rows: None,
+            seed: 0xC0FFEE,
+            warm: true,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Run a suite application by (case-insensitive) name. Searches the
+    /// inference suite, then training — or only training under
+    /// [`Self::training`]. Mutually exclusive with [`Self::graph`]
+    /// (`graph` wins).
+    pub fn app(mut self, name: impl Into<String>) -> Self {
+        self.app = Some(name.into());
+        self
+    }
+
+    /// Run an explicitly constructed graph.
+    pub fn graph(mut self, g: Graph) -> Self {
+        self.graph = Some(g);
+        self
+    }
+
+    /// Restrict [`Self::app`] lookup to the training suite.
+    pub fn training(mut self, training: bool) -> Self {
+        self.training = training;
+        self
+    }
+
+    /// Machine config for compilation and simulation (default: A100).
+    pub fn config(mut self, cfg: GpuConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Subgraph-selection options for the compiler.
+    pub fn select_options(mut self, select: SelectOptions) -> Self {
+        self.select = select;
+        self
+    }
+
+    /// Backend for loading [`Self::artifacts`] (default:
+    /// `runtime::default_backend`). Synthesized stage programs always run
+    /// on the in-process interpreter.
+    pub fn backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Also load an AOT artifact directory, exposed via
+    /// [`Session::artifacts`] (e.g. for `train_step`-style entries).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Worker threads per TENSOR-class stage (default 2) — the host
+    /// analog of the ILP's per-stage CTA allocation.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.gemm_workers = n.max(1);
+        self
+    }
+
+    /// Ring-queue capacity between stages (default 8; min 2 =
+    /// double-buffering as in paper Fig 4).
+    pub fn queue_capacity(mut self, entries: usize) -> Self {
+        self.queue_capacity = entries.max(2);
+        self
+    }
+
+    /// Rows per streamed tile (default: derived from the compiler's tile
+    /// count).
+    pub fn tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = Some(rows.max(1));
+        self
+    }
+
+    /// Seed for He-initialized stage weights.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `warm(false)` skips standing up the worker pool — compile/lower/
+    /// simulate only (used by `kitsune compile`). Default: warm.
+    pub fn warm(mut self, warm: bool) -> Self {
+        self.warm = warm;
+        self
+    }
+
+    /// Compile once, lower the compiled plan onto the coordinator, and
+    /// (when the graph streams and the session is warm) stand up the
+    /// persistent stage worker pools.
+    pub fn build(self) -> Result<Session> {
+        let SessionBuilder {
+            app,
+            graph,
+            training,
+            cfg,
+            select,
+            backend,
+            artifacts,
+            gemm_workers,
+            queue_capacity,
+            tile_rows,
+            seed,
+            warm,
+        } = self;
+
+        let (name, graph) = match (graph, app) {
+            (Some(g), _) => (g.name.clone(), Some(g)),
+            (None, Some(app_name)) => {
+                let found = if training {
+                    apps::find_app(&app_name, true)
+                } else {
+                    apps::find_app(&app_name, false).or_else(|| apps::find_app(&app_name, true))
+                };
+                match found {
+                    Some((n, g)) => (n, Some(g)),
+                    None => {
+                        return Err(SessionError::UnknownApp {
+                            name: app_name,
+                            available: apps::app_names(),
+                        }
+                        .into())
+                    }
+                }
+            }
+            (None, None) => {
+                if artifacts.is_none() {
+                    return Err(SessionError::NoGraph.into());
+                }
+                ("artifacts".to_string(), None)
+            }
+        };
+
+        let aot = match &artifacts {
+            Some(dir) => Some(Arc::new(match backend {
+                Some(b) => ArtifactStore::load_with(dir, b)?,
+                None => ArtifactStore::load(dir)?,
+            })),
+            None => None,
+        };
+
+        let mut compiled = None;
+        let mut lowered = None;
+        let mut service = None;
+        let mut not_streamable = None;
+        if let Some(g) = &graph {
+            let c = compile(g, &cfg, &select)?;
+            let opts = LowerOptions { gemm_workers, queue_capacity, tile_rows, seed };
+            match lower_app(g, &c, &opts) {
+                Ok(low) => {
+                    let LoweredApp {
+                        pipeline,
+                        entries,
+                        tile_rows,
+                        in_dim,
+                        out_dim,
+                        suggested_tiles,
+                    } = low;
+                    let execs = entries
+                        .into_iter()
+                        .map(|(spec, program, weights)| {
+                            let exe = bound_executable(spec.name.clone(), program, weights);
+                            (spec, exe)
+                        })
+                        .collect();
+                    let store = Arc::new(ArtifactStore::from_executables("session", execs));
+                    if warm {
+                        service = Some(PipelineService::start(
+                            Arc::clone(&store),
+                            &pipeline,
+                            vec![tile_rows, in_dim],
+                        )?);
+                    }
+                    lowered = Some(LoweredState {
+                        pipeline,
+                        store,
+                        tile_rows,
+                        in_dim,
+                        out_dim,
+                        suggested_tiles,
+                    });
+                }
+                Err(e) => {
+                    if let Some(SessionError::NotStreamable { reason }) =
+                        e.downcast_ref::<SessionError>()
+                    {
+                        not_streamable = Some(reason.clone());
+                    } else {
+                        return Err(e);
+                    }
+                }
+            }
+            compiled = Some(c);
+        }
+
+        Ok(Session { name, cfg, graph, compiled, lowered, service, aot, not_streamable })
+    }
+}
+
+/// A compiled graph lowered to runnable form, plus its synthesized-entry
+/// store.
+struct LoweredState {
+    pipeline: SpatialPipeline,
+    store: Arc<ArtifactStore>,
+    tile_rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    suggested_tiles: usize,
+}
+
+/// One warm handle from graph to execution: compiled plan, lowered
+/// pipeline, persistent worker pool, simulator access, and (optionally)
+/// an AOT artifact store — see the module docs for the lifecycle.
+pub struct Session {
+    name: String,
+    cfg: GpuConfig,
+    graph: Option<Graph>,
+    compiled: Option<CompiledApp>,
+    lowered: Option<LoweredState>,
+    service: Option<PipelineService>,
+    aot: Option<Arc<ArtifactStore>>,
+    not_streamable: Option<String>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &GpuConfig {
+        &self.cfg
+    }
+
+    pub fn graph(&self) -> Option<&Graph> {
+        self.graph.as_ref()
+    }
+
+    /// The plan compiled at `build()` — selection, lowered sf-nodes, ILP
+    /// allocations.
+    pub fn compiled(&self) -> Option<&CompiledApp> {
+        self.compiled.as_ref()
+    }
+
+    /// The coordinator pipeline the compiled plan lowered to, when the
+    /// graph streams.
+    pub fn pipeline(&self) -> Option<&SpatialPipeline> {
+        self.lowered.as_ref().map(|l| &l.pipeline)
+    }
+
+    /// The AOT artifact store, when the builder was given `.artifacts`.
+    pub fn artifacts(&self) -> Option<&ArtifactStore> {
+        self.aot.as_deref()
+    }
+
+    /// Dims of one streamed input tile (`[tile_rows, in_dim]`).
+    pub fn tile_dims(&self) -> Option<Vec<usize>> {
+        self.lowered.as_ref().map(|l| vec![l.tile_rows, l.in_dim])
+    }
+
+    /// Trailing dim of one output tile.
+    pub fn out_dim(&self) -> Option<usize> {
+        self.lowered.as_ref().map(|l| l.out_dim)
+    }
+
+    /// Tile count the compiler sized queues for — a sensible batch size.
+    pub fn suggested_tiles(&self) -> Option<usize> {
+        self.lowered.as_ref().map(|l| l.suggested_tiles)
+    }
+
+    /// Whether `submit`/`run` are available.
+    pub fn is_streamable(&self) -> bool {
+        self.lowered.is_some()
+    }
+
+    /// Why the graph cannot stream, when it cannot.
+    pub fn not_streamable_reason(&self) -> Option<&str> {
+        self.not_streamable.as_deref()
+    }
+
+    /// Run the §6 three-way evaluation (BSP / vertical fusion / Kitsune
+    /// dataflow) on the simulator, reusing the plan compiled at build.
+    pub fn simulate(&self) -> Result<AppEval> {
+        let (g, c) = match (&self.graph, &self.compiled) {
+            (Some(g), Some(c)) => (g, c.clone()),
+            _ => return Err(SessionError::NoGraph.into()),
+        };
+        evaluate_compiled(&self.name, g, &self.cfg, c)
+    }
+
+    /// Enqueue a batch of tiles through the warm pipeline. Concurrent-
+    /// safe; never spawns threads. See [`PipelineService::submit`].
+    pub fn submit(&self, inputs: Vec<Tensor>) -> Result<Ticket> {
+        match &self.service {
+            Some(svc) => svc.submit(inputs),
+            None => Err(self.no_stream_err()),
+        }
+    }
+
+    /// Submit and wait: the one-call streaming path.
+    pub fn run(&self, inputs: Vec<Tensor>) -> Result<BatchResult> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Serial baseline over the same lowered stages — the bulk-sync
+    /// analog, for speedup reporting.
+    pub fn run_serial(&self, inputs: Vec<Tensor>) -> Result<PipelineRun> {
+        match &self.lowered {
+            Some(l) => run_serial(&l.store, &l.pipeline, inputs),
+            None => Err(self.no_stream_err()),
+        }
+    }
+
+    /// Per-stage metrics accumulated since build (warm sessions only).
+    pub fn metrics(&self) -> Vec<StageMetrics> {
+        self.service.as_ref().map(PipelineService::metrics).unwrap_or_default()
+    }
+
+    /// Total threads the warm pool has ever spawned — constant after
+    /// `build()`; asserted by the warm-submit test.
+    pub fn threads_spawned(&self) -> usize {
+        self.service.as_ref().map(PipelineService::threads_spawned).unwrap_or(0)
+    }
+
+    /// Deterministic normal input tiles matching the pipeline's tile spec.
+    pub fn make_tiles(&self, n: usize, seed: u64) -> Result<Vec<Tensor>> {
+        let l = match &self.lowered {
+            Some(l) => l,
+            None => return Err(self.no_stream_err()),
+        };
+        let mut rng = Rng::new(seed);
+        Ok((0..n)
+            .map(|_| Tensor {
+                dims: vec![l.tile_rows, l.in_dim],
+                data: (0..l.tile_rows * l.in_dim).map(|_| rng.normal()).collect(),
+            })
+            .collect())
+    }
+
+    /// Close the warm pool: in-flight batches drain, workers join,
+    /// further submits fail. Idempotent; also runs on `Drop`.
+    pub fn shutdown(&self) {
+        if let Some(svc) = &self.service {
+            svc.shutdown();
+        }
+    }
+
+    fn no_stream_err(&self) -> anyhow::Error {
+        if let Some(reason) = &self.not_streamable {
+            SessionError::NotStreamable { reason: reason.clone() }.into()
+        } else if self.lowered.is_some() {
+            SessionError::Cold.into()
+        } else {
+            SessionError::NoGraph.into()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_app_error_lists_both_suites() {
+        let err = Session::builder().app("definitely-not-an-app").build().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("DLRM"), "{msg}");
+        assert!(msg.contains("LLAMA (training)"), "{msg}");
+        assert!(matches!(
+            err.downcast_ref::<SessionError>(),
+            Some(SessionError::UnknownApp { .. })
+        ));
+    }
+
+    #[test]
+    fn builder_without_source_is_a_typed_error() {
+        let err = Session::builder().build().unwrap_err();
+        assert!(matches!(err.downcast_ref::<SessionError>(), Some(SessionError::NoGraph)));
+    }
+
+    #[test]
+    fn cold_session_compiles_but_does_not_spawn() {
+        let session = Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .warm(false)
+            .build()
+            .unwrap();
+        assert!(session.is_streamable());
+        assert!(session.compiled().is_some());
+        assert_eq!(session.threads_spawned(), 0);
+        let err = session.submit(Vec::new()).unwrap_err();
+        assert!(matches!(err.downcast_ref::<SessionError>(), Some(SessionError::Cold)));
+    }
+
+    #[test]
+    fn warm_session_round_trip_matches_serial() {
+        let session = Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .workers(2)
+            .build()
+            .unwrap();
+        let tiles = session.make_tiles(10, 42).unwrap();
+        let serial = session.run_serial(tiles.clone()).unwrap();
+        let streamed = session.run(tiles).unwrap();
+        assert_eq!(streamed.outputs.len(), 10);
+        for (a, b) in streamed.outputs.iter().zip(&serial.outputs) {
+            assert_eq!(a.data, b.data, "streamed output must match serial bitwise");
+        }
+        session.shutdown();
+        let err = session.submit(Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn training_flag_restricts_lookup() {
+        let session = Session::builder().app("MGN").training(true).warm(false).build().unwrap();
+        assert!(session.graph().unwrap().backward_start.is_some());
+        // MGN training has gather/scatter aggregations: simulation-only.
+        assert!(!session.is_streamable());
+        assert!(session.not_streamable_reason().is_some());
+    }
+}

@@ -1,0 +1,380 @@
+//! The persistent pipeline service: stage worker threads and ring queues
+//! stood up once at session build, serving concurrently submitted batches
+//! until shutdown.
+//!
+//! This replaces the per-call thread scope of
+//! [`crate::coordinator::run_streaming`] (spawn, stream, join — no warm
+//! serving) with the paper's Fig 6 lifecycle: `cudaPipelineCreate` /
+//! `AddKernel` happen once, then a stream of tiles flows through the
+//! co-resident stages. Tiles are tagged with their owning [`Ticket`] and
+//! in-batch index — the sequence-tagged in-flight table — so any number
+//! of callers can interleave batches through the same warm pipeline and
+//! each still receives its outputs in submission order.
+
+use crate::coordinator::{SpatialPipeline, StageMetrics};
+use crate::graph::ResourceClass;
+use crate::queue::{PushError, RingQueue};
+use crate::runtime::{ArtifactStore, Tensor};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One tile in flight: owning ticket, index within the batch, payload.
+type Tile = (Arc<TicketInner>, usize, Tensor);
+
+/// Result of one completed batch.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Outputs in submission order (one per input tile).
+    pub outputs: Vec<Tensor>,
+    /// Wall time from submit to completion.
+    pub elapsed_s: f64,
+}
+
+impl BatchResult {
+    pub fn tiles_per_sec(&self) -> f64 {
+        self.outputs.len() as f64 / self.elapsed_s.max(1e-12)
+    }
+}
+
+/// In-flight table entry for one submitted batch: slots filled by the
+/// sink thread as tiles complete (in any order), a countdown of
+/// outstanding tiles, and the first error if a stage kernel failed.
+struct TicketInner {
+    state: Mutex<TicketState>,
+    done: Condvar,
+}
+
+struct TicketState {
+    outputs: Vec<Option<Tensor>>,
+    remaining: usize,
+    error: Option<String>,
+}
+
+impl TicketInner {
+    fn new(n: usize) -> Self {
+        TicketInner {
+            state: Mutex::new(TicketState {
+                outputs: vec![None; n],
+                remaining: n,
+                error: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Sink: deliver the finished tile for slot `idx`.
+    fn complete(&self, idx: usize, t: Tensor) {
+        let mut s = self.state.lock().unwrap();
+        if s.outputs[idx].is_none() {
+            s.remaining -= 1;
+        }
+        s.outputs[idx] = Some(t);
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Account `n` tiles as failed/abandoned, recording the first error.
+    fn fail_n(&self, n: usize, msg: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.error.is_none() {
+            s.error = Some(msg);
+        }
+        s.remaining = s.remaining.saturating_sub(n);
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn fail(&self, msg: String) {
+        self.fail_n(1, msg);
+    }
+}
+
+/// Handle to one submitted batch. [`Ticket::wait`] blocks until every
+/// tile of the batch has drained from the pipeline.
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+    submitted: Instant,
+}
+
+impl Ticket {
+    /// Block until the batch completes; outputs are in submission order.
+    pub fn wait(self) -> Result<BatchResult> {
+        let mut s = self.inner.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.inner.done.wait(s).unwrap();
+        }
+        if let Some(e) = s.error.take() {
+            return Err(anyhow!(e));
+        }
+        let outputs = s
+            .outputs
+            .iter_mut()
+            .map(|o| o.take().expect("completed ticket has a hole"))
+            .collect();
+        Ok(BatchResult { outputs, elapsed_s: self.submitted.elapsed().as_secs_f64() })
+    }
+}
+
+/// Per-stage counters, updated lock-free by the stage's workers.
+struct StageStat {
+    name: String,
+    class: ResourceClass,
+    workers: usize,
+    tiles: AtomicUsize,
+    busy_ns: AtomicU64,
+    wait_ns: AtomicU64,
+}
+
+impl StageStat {
+    fn snapshot(&self) -> StageMetrics {
+        StageMetrics {
+            name: self.name.clone(),
+            class: self.class,
+            workers: self.workers,
+            tiles: self.tiles.load(Ordering::Relaxed),
+            busy_s: self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            wait_s: self.wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+/// Persistent stage worker pools + ring queues for one pipeline.
+pub struct PipelineService {
+    source: Arc<RingQueue<Tile>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    stats: Arc<Vec<StageStat>>,
+    spawned: Arc<AtomicUsize>,
+    /// Submit/shutdown synchronization. `RingQueue::close` is advisory
+    /// (a push racing the close may land a value no consumer will pop —
+    /// see the queue's memory-model caveat), so orderly shutdown must
+    /// close from the producer side *after all pushes complete*: submits
+    /// hold the read side across their pushes, shutdown takes the write
+    /// side (waiting out in-flight submits) before closing the source.
+    /// The flag is `true` once shut down.
+    gate: std::sync::RwLock<bool>,
+    tile_dims: Vec<usize>,
+}
+
+impl PipelineService {
+    /// Stand up the worker pools: one ring queue per stage boundary, each
+    /// stage's workers as long-lived threads, plus one sink thread
+    /// routing finished tiles back to their tickets. Threads are created
+    /// here — never on the submit path.
+    pub fn start(
+        store: Arc<ArtifactStore>,
+        pipeline: &SpatialPipeline,
+        tile_dims: Vec<usize>,
+    ) -> Result<PipelineService> {
+        let n_stages = pipeline.stages.len();
+        ensure!(n_stages > 0, "pipeline service needs at least one stage");
+        let queues: Vec<Arc<RingQueue<Tile>>> = (0..=n_stages)
+            .map(|_| RingQueue::with_capacity(pipeline.queue_capacity))
+            .collect();
+        let stats: Arc<Vec<StageStat>> = Arc::new(
+            pipeline
+                .stages
+                .iter()
+                .map(|s| StageStat {
+                    name: s.name.clone(),
+                    class: s.class,
+                    workers: s.workers,
+                    tiles: AtomicUsize::new(0),
+                    busy_ns: AtomicU64::new(0),
+                    wait_ns: AtomicU64::new(0),
+                })
+                .collect(),
+        );
+        let spawned = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+
+        // If any spawn fails partway, already-spawned workers must not be
+        // leaked blocked on never-closed queues: close every queue (pop
+        // then returns None) and join the partial pool before erroring.
+        let abort = |handles: Vec<JoinHandle<()>>, e: anyhow::Error| -> anyhow::Error {
+            for q in &queues {
+                q.close();
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+            e
+        };
+
+        for (si, stage) in pipeline.stages.iter().enumerate() {
+            // Countdown latch: the stage's last worker to exit closes the
+            // downstream queue, so sibling pushes are never cut off.
+            let latch = Arc::new(AtomicUsize::new(stage.workers));
+            for wi in 0..stage.workers {
+                let in_q = Arc::clone(&queues[si]);
+                let out_q = Arc::clone(&queues[si + 1]);
+                let latch = Arc::clone(&latch);
+                let store = Arc::clone(&store);
+                let stats = Arc::clone(&stats);
+                let entry = stage.entry.clone();
+                let weights = stage.weights.clone();
+                let spawn_result = std::thread::Builder::new()
+                    .name(format!("kitsune-{}-{wi}", stage.name))
+                    .spawn(move || {
+                        stage_worker(&store, &entry, &weights, &in_q, &out_q, &stats[si]);
+                        if latch.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            out_q.close();
+                        }
+                    });
+                let handle = match spawn_result {
+                    Ok(h) => h,
+                    Err(e) => return Err(abort(handles, anyhow!("spawning stage worker: {e}"))),
+                };
+                // Counted at the spawn site, so the census is exact the
+                // moment start() returns (and any future spawn path must
+                // go through the same accounting).
+                spawned.fetch_add(1, Ordering::SeqCst);
+                handles.push(handle);
+            }
+        }
+
+        // Sink: route finished tiles back to their tickets.
+        let sink_q = Arc::clone(&queues[n_stages]);
+        let sink_result = std::thread::Builder::new()
+            .name("kitsune-sink".to_string())
+            .spawn(move || {
+                while let Some((ticket, idx, t)) = sink_q.pop() {
+                    ticket.complete(idx, t);
+                }
+            });
+        match sink_result {
+            Ok(h) => handles.push(h),
+            Err(e) => return Err(abort(handles, anyhow!("spawning sink: {e}"))),
+        }
+        spawned.fetch_add(1, Ordering::SeqCst);
+
+        Ok(PipelineService {
+            source: Arc::clone(&queues[0]),
+            handles: Mutex::new(handles),
+            stats,
+            spawned,
+            gate: std::sync::RwLock::new(false),
+            tile_dims,
+        })
+    }
+
+    /// Enqueue a batch of tiles. Returns immediately with a [`Ticket`];
+    /// any number of threads may submit concurrently, and backpressure
+    /// (full source queue) blocks the submitter, not the pipeline.
+    pub fn submit(&self, inputs: Vec<Tensor>) -> Result<Ticket> {
+        // Hold the gate's read side across the pushes so shutdown cannot
+        // close the source queue mid-submit and strand a tile (the
+        // queue's close is advisory — see the `gate` field docs).
+        let gate = self.gate.read().unwrap();
+        ensure!(!*gate, "session is shut down; no further submissions");
+        for t in &inputs {
+            ensure!(
+                t.dims == self.tile_dims,
+                "tile dims {:?} != pipeline input {:?}",
+                t.dims,
+                self.tile_dims
+            );
+        }
+        let n = inputs.len();
+        let inner = Arc::new(TicketInner::new(n));
+        let submitted = Instant::now();
+        for (i, t) in inputs.into_iter().enumerate() {
+            if let Err(PushError::Closed(_)) = self.source.push((Arc::clone(&inner), i, t)) {
+                // Unreachable under the gate (close happens only after
+                // in-flight submits finish), kept as belt-and-braces:
+                // account this and all remaining tiles as failed so
+                // wait() cannot hang.
+                inner.fail_n(n - i, "session shut down during submit".to_string());
+                break;
+            }
+        }
+        Ok(Ticket { inner, submitted })
+    }
+
+    /// Per-stage metrics accumulated since the service started.
+    pub fn metrics(&self) -> Vec<StageMetrics> {
+        self.stats.iter().map(StageStat::snapshot).collect()
+    }
+
+    /// Total threads this service has ever spawned (stage workers +
+    /// sink). Constant after [`PipelineService::start`] returns — the
+    /// warm-submit test asserts exactly this.
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Close the source queue and join every worker. Idempotent. Waits
+    /// out any in-flight `submit` first (producer-side close — see the
+    /// `gate` field docs); tiles already in flight drain, and their
+    /// tickets complete normally.
+    pub fn shutdown(&self) {
+        {
+            let mut gate = self.gate.write().unwrap();
+            if *gate {
+                return;
+            }
+            *gate = true;
+        }
+        self.source.close();
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PipelineService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One stage worker: pop a tagged tile, run the stage entry, forward the
+/// result. Kernel failures poison only the owning ticket — the pipeline
+/// keeps serving other batches.
+fn stage_worker(
+    store: &ArtifactStore,
+    entry: &str,
+    weights: &[Tensor],
+    in_q: &RingQueue<Tile>,
+    out_q: &RingQueue<Tile>,
+    stat: &StageStat,
+) {
+    loop {
+        let w0 = Instant::now();
+        let Some((ticket, idx, tile)) = in_q.pop() else { break };
+        stat.wait_ns.fetch_add(w0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let b0 = Instant::now();
+        let result = if weights.is_empty() {
+            store.run_f32(entry, std::slice::from_ref(&tile))
+        } else {
+            let mut args = Vec::with_capacity(1 + weights.len());
+            args.push(tile);
+            args.extend(weights.iter().cloned());
+            store.run_f32(entry, &args)
+        };
+        match result {
+            Ok(outs) => match outs.into_iter().next() {
+                Some(out) => {
+                    stat.busy_ns.fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    stat.tiles.fetch_add(1, Ordering::Relaxed);
+                    let w1 = Instant::now();
+                    if let Err(PushError::Closed((t, _, _))) = out_q.push((ticket, idx, out)) {
+                        // Downstream closed mid-flight (shutdown): the
+                        // tile cannot complete — fail its ticket so no
+                        // waiter hangs.
+                        t.fail("pipeline shut down mid-flight".to_string());
+                        break;
+                    }
+                    stat.wait_ns.fetch_add(w1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                None => ticket.fail(format!("{entry}: produced no output")),
+            },
+            Err(e) => ticket.fail(format!("stage {entry} failed: {e:#}")),
+        }
+    }
+}

@@ -8,6 +8,7 @@
 use kitsune::coordinator::cli::{build_nerf_pipeline, input_tiles};
 use kitsune::coordinator::{run_serial, run_streaming};
 use kitsune::runtime::{ArtifactStore, InterpBackend, Rng, RuntimeError, Tensor};
+use kitsune::session::{nerf_trunk_graph, Session};
 use std::path::PathBuf;
 
 const IN: usize = 6;
@@ -175,6 +176,34 @@ fn spatial_pipeline_matches_serial_bitwise_on_interp() {
     }
     for m in &streamed.metrics {
         assert_eq!(m.tiles, 24, "stage {}", m.name);
+    }
+}
+
+#[test]
+fn session_lowering_reproduces_hand_built_pipeline_bitwise() {
+    // The tentpole contract: a graph compiled and lowered through the
+    // session façade must reproduce — bit for bit — what the legacy
+    // hand-stitched pipeline (manifest entries + explicit stage list)
+    // computes. Same He seed (0xC0FFEE), same input stream (0xFEED), so
+    // the two paths are numerically the same factorized MLP.
+    let store = store("session_equiv");
+    let legacy_pipeline = build_nerf_pipeline(&store, 2).unwrap();
+    let inputs = input_tiles(&store, "stage_trunk0", 16).unwrap();
+    let legacy = run_streaming(&store, &legacy_pipeline, inputs).unwrap();
+
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, IN, HIDDEN, OUT))
+        .tile_rows(TILE)
+        .build()
+        .unwrap();
+    let out = session.run(session.make_tiles(16, 0xFEED).unwrap()).unwrap();
+    assert_eq!(out.outputs.len(), legacy.outputs.len());
+    for (a, b) in out.outputs.iter().zip(&legacy.outputs) {
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(
+            a.data, b.data,
+            "compiled-lowered session must reproduce the hand-built artifact pipeline"
+        );
     }
 }
 

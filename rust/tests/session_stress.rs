@@ -1,0 +1,157 @@
+//! Stress and contract tests for the `kitsune::session` façade: the
+//! compiled-plan → spatial-pipeline lowering, the persistent (warm)
+//! worker pool, and concurrent batch submission through one session —
+//! N threads interleaving tickets, per-ticket output order, and the
+//! no-respawn-on-submit guarantee.
+
+use kitsune::runtime::Tensor;
+use kitsune::session::{nerf_trunk_graph, Session, SessionError};
+
+/// Small warm session: 4-stage trunk pipeline over 4x6 tiles.
+fn small_session() -> Session {
+    Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(2)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn compiled_app_lowers_to_runnable_pipeline() {
+    let session = small_session();
+    // No hand-written stage list anywhere: the pipeline's stages and
+    // entry names come from the compiled plan.
+    let pipeline = session.pipeline().expect("trunk graph streams");
+    assert_eq!(pipeline.stages.len(), 4, "{:?}", pipeline.stages);
+    for s in &pipeline.stages {
+        assert!(s.entry.starts_with("sf"), "synthesized entry name: {}", s.entry);
+    }
+    // And it runs: streamed output matches the serial baseline bitwise.
+    let tiles = session.make_tiles(12, 9).unwrap();
+    let serial = session.run_serial(tiles.clone()).unwrap();
+    let streamed = session.run(tiles).unwrap();
+    assert_eq!(streamed.outputs.len(), 12);
+    for (a, b) in streamed.outputs.iter().zip(&serial.outputs) {
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(a.data, b.data, "tile outputs must be bit-identical");
+    }
+    for m in &session.metrics() {
+        assert_eq!(m.tiles, 12, "stage {}", m.name);
+    }
+}
+
+#[test]
+fn warm_submit_never_spawns_stage_threads() {
+    let session = small_session();
+    // All threads exist after build: 4 stages x 2 workers + 1 sink.
+    let expected = session.pipeline().unwrap().stages.iter().map(|s| s.workers).sum::<usize>() + 1;
+    let spawned_at_build = session.threads_spawned();
+    assert_eq!(spawned_at_build, expected);
+    for round in 0..8 {
+        let out = session.run(session.make_tiles(5, round).unwrap()).unwrap();
+        assert_eq!(out.outputs.len(), 5);
+        assert_eq!(
+            session.threads_spawned(),
+            spawned_at_build,
+            "submit round {round} spawned threads"
+        );
+    }
+}
+
+#[test]
+fn concurrent_submissions_preserve_per_ticket_order() {
+    // N client threads interleave batches through one warm session; each
+    // ticket must return its own outputs, in its own submission order.
+    let session = small_session();
+    const CLIENTS: usize = 6;
+    const BATCHES: usize = 4;
+    const TILES: usize = 5;
+
+    // Distinct deterministic inputs per (client, batch); expected outputs
+    // computed serially up front against the same lowered stages.
+    let batch_for = |c: usize, b: usize| -> Vec<Tensor> {
+        session.make_tiles(TILES, 1 + (c * BATCHES + b) as u64).unwrap()
+    };
+    let mut expected = vec![vec![Vec::new(); BATCHES]; CLIENTS];
+    for (c, per_client) in expected.iter_mut().enumerate() {
+        for (b, slot) in per_client.iter_mut().enumerate() {
+            *slot = session.run_serial(batch_for(c, b)).unwrap().outputs;
+        }
+    }
+
+    let spawned = session.threads_spawned();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let session = &session;
+            let batch_for = &batch_for;
+            handles.push(scope.spawn(move || {
+                // Submit all batches first (maximizing interleaving with
+                // other clients), then wait on the tickets in order.
+                let tickets: Vec<_> = (0..BATCHES)
+                    .map(|b| session.submit(batch_for(c, b)).unwrap())
+                    .collect();
+                let outs: Vec<_> =
+                    tickets.into_iter().map(|t| t.wait().unwrap().outputs).collect();
+                (c, outs)
+            }));
+        }
+        for h in handles {
+            let (c, outs) = h.join().unwrap();
+            for (b, got) in outs.iter().enumerate() {
+                assert_eq!(got.len(), TILES);
+                for (i, (a, e)) in got.iter().zip(&expected[c][b]).enumerate() {
+                    assert_eq!(
+                        a.data, e.data,
+                        "client {c} batch {b} tile {i}: out-of-order or corrupted"
+                    );
+                }
+            }
+        }
+    });
+    // The whole stress run reused the pool stood up at build.
+    assert_eq!(session.threads_spawned(), spawned);
+    let total_tiles = CLIENTS * BATCHES * TILES;
+    for m in &session.metrics() {
+        assert_eq!(m.tiles, total_tiles, "stage {} tile accounting", m.name);
+    }
+}
+
+#[test]
+fn submission_validates_tile_dims() {
+    let session = small_session();
+    let err = session.submit(vec![Tensor::zeros(&[3, 3])]).unwrap_err();
+    assert!(err.to_string().contains("tile dims"), "{err}");
+    // Empty batches are legal and complete immediately.
+    let out = session.run(Vec::new()).unwrap();
+    assert!(out.outputs.is_empty());
+}
+
+#[test]
+fn shutdown_then_submit_fails_cleanly_and_is_idempotent() {
+    let session = small_session();
+    let out = session.run(session.make_tiles(4, 2).unwrap()).unwrap();
+    assert_eq!(out.outputs.len(), 4);
+    session.shutdown();
+    session.shutdown(); // idempotent
+    let err = session.submit(session.make_tiles(1, 3).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err}");
+}
+
+#[test]
+fn non_streamable_app_reports_typed_error_but_simulates() {
+    // DLRM's embedding gathers are excluded from sf-nodes (§5.1), so its
+    // plan has bulk-sync items: the session simulates but cannot stream.
+    let session = Session::builder().app("DLRM").build().unwrap();
+    assert!(!session.is_streamable());
+    let err = session.submit(Vec::new()).unwrap_err();
+    match err.downcast_ref::<SessionError>() {
+        Some(SessionError::NotStreamable { reason }) => {
+            assert!(!reason.is_empty());
+        }
+        other => panic!("expected NotStreamable, got {other:?}"),
+    }
+    let eval = session.simulate().unwrap();
+    assert!(eval.kitsune_speedup() > 0.5, "simulation sane: {}", eval.kitsune_speedup());
+}
