@@ -2,7 +2,7 @@
 # tests and serves without it (pure-Rust interpreter backend); it is only
 # needed to exercise the PJRT path against real AOT-lowered HLO.
 
-.PHONY: all test artifacts bench clean
+.PHONY: all test artifacts bench bench-paper clean
 
 all: test
 
@@ -12,7 +12,16 @@ test:
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
 
+# Interpreter hot-path trajectory: kernel GFLOP/s first (stages a part
+# file), then session warm/cold/reference throughput, which folds both
+# into BENCH_interp.json at the repo root. BENCH_SMOKE=1 for a fast CI
+# smoke run that still emits the JSON.
 bench:
+	cargo bench --bench kernel_throughput
+	cargo bench --bench session_throughput
+
+# The full paper-figure bench suite (fig*/table*/ablation/...).
+bench-paper:
 	cargo bench
 
 clean:

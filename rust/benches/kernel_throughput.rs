@@ -1,0 +1,130 @@
+//! Interpreter kernel throughput: GFLOP/s of the blocked/parallel matmul
+//! micro-kernels against the retained scalar reference, transpose
+//! specializations, and fused-vs-unfused elementwise chains.
+//!
+//! Prints a table and writes `BENCH_interp.kernel.part` (plain
+//! `key value` lines) at the repo root. `make bench` runs this first and
+//! `session_throughput` second — the latter folds the part file into the
+//! final `BENCH_interp.json`.
+//!
+//! Run: `cargo bench --bench kernel_throughput` (`BENCH_SMOKE=1` for the
+//! CI smoke variant).
+
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::runtime::interp::{Act, Instr, Program};
+use kitsune::runtime::{Rng, Tensor};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
+    let numel: usize = dims.iter().product();
+    Tensor { dims: dims.to_vec(), data: (0..numel).map(|_| rng.normal()).collect() }
+}
+
+/// Seconds per iteration, doubling the iteration count until the timed
+/// region is long enough to trust.
+fn time_per_iter(min_time_s: f64, mut f: impl FnMut()) -> f64 {
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_time_s || iters >= 1 << 22 {
+            return dt / iters as f64;
+        }
+        iters *= 2;
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke();
+    let min_time = if smoke { 0.02 } else { 0.25 };
+    let mut rng = Rng::new(0xD00D);
+    let mut part = String::new();
+
+    println!("interpreter kernel throughput (optimized engine vs scalar reference):");
+
+    // Square matmuls across the serial/parallel threshold.
+    let sizes: &[usize] = if smoke { &[64, 128] } else { &[64, 128, 256, 384] };
+    for &n in sizes {
+        let p = Program { n_inputs: 2, instrs: vec![Instr::Matmul { a: 0, b: 1 }], outputs: vec![2] };
+        let a = tensor(&mut rng, &[n, n]);
+        let b = tensor(&mut rng, &[n, n]);
+        let inputs = [a, b];
+        let flops = 2.0 * (n * n * n) as f64;
+        let opt_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run(&inputs).unwrap());
+        });
+        let ref_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run_reference(&inputs).unwrap());
+        });
+        let (gf_opt, gf_ref) = (flops / opt_s / 1e9, flops / ref_s / 1e9);
+        println!(
+            "  matmul {n:>4}^3   optimized {gf_opt:>7.2} GFLOP/s   reference {gf_ref:>7.2} GFLOP/s   {:.2}x",
+            gf_opt / gf_ref.max(1e-12)
+        );
+        let _ = writeln!(part, "matmul_{n}_gflops {gf_opt:.4}");
+        let _ = writeln!(part, "matmul_{n}_ref_gflops {gf_ref:.4}");
+        let _ = writeln!(part, "matmul_{n}_speedup {:.4}", gf_opt / gf_ref.max(1e-12));
+    }
+
+    // Transpose specializations (the train-step gradient GEMMs) at one
+    // representative size.
+    let tn_size = if smoke { 96 } else { 256 };
+    for (tag, instr, da, db) in [
+        ("tn", Instr::MatmulTn { a: 0, b: 1 }, [tn_size, tn_size], [tn_size, tn_size]),
+        ("nt", Instr::MatmulNt { a: 0, b: 1 }, [tn_size, tn_size], [tn_size, tn_size]),
+    ] {
+        let p = Program { n_inputs: 2, instrs: vec![instr], outputs: vec![2] };
+        let inputs = [tensor(&mut rng, &da), tensor(&mut rng, &db)];
+        let flops = 2.0 * (tn_size * tn_size * tn_size) as f64;
+        let opt_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run(&inputs).unwrap());
+        });
+        let ref_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run_reference(&inputs).unwrap());
+        });
+        let (gf_opt, gf_ref) = (flops / opt_s / 1e9, flops / ref_s / 1e9);
+        println!(
+            "  matmul_{tag} {tn_size:>3}^3 optimized {gf_opt:>7.2} GFLOP/s   reference {gf_ref:>7.2} GFLOP/s   {:.2}x",
+            gf_opt / gf_ref.max(1e-12)
+        );
+        let _ = writeln!(part, "matmul_{tag}_{tn_size}_gflops {gf_opt:.4}");
+        let _ = writeln!(part, "matmul_{tag}_{tn_size}_speedup {:.4}", gf_opt / gf_ref.max(1e-12));
+    }
+
+    // Elementwise fusion in isolation: AddBias→Gelu as two instructions
+    // vs the fused BiasAct, both on the optimized engine.
+    let (rows, cols) = if smoke { (512, 128) } else { (4096, 256) };
+    let unfused = Program {
+        n_inputs: 2,
+        instrs: vec![Instr::AddBias { a: 0, bias: 1 }, Instr::Gelu { a: 2 }],
+        outputs: vec![3],
+    };
+    let fused = Program {
+        n_inputs: 2,
+        instrs: vec![Instr::BiasAct { a: 0, bias: 1, act: Act::Gelu }],
+        outputs: vec![2],
+    };
+    let inputs = [tensor(&mut rng, &[rows, cols]), tensor(&mut rng, &[cols])];
+    let unfused_s = time_per_iter(min_time, || {
+        std::hint::black_box(unfused.run(&inputs).unwrap());
+    });
+    let fused_s = time_per_iter(min_time, || {
+        std::hint::black_box(fused.run(&inputs).unwrap());
+    });
+    println!(
+        "  bias+gelu {rows}x{cols}   fused {:.3} ms   unfused {:.3} ms   {:.2}x",
+        fused_s * 1e3,
+        unfused_s * 1e3,
+        unfused_s / fused_s.max(1e-12)
+    );
+    let _ = writeln!(part, "ew_fusion_speedup {:.4}", unfused_s / fused_s.max(1e-12));
+
+    let out = artifact_root().join("BENCH_interp.kernel.part");
+    std::fs::write(&out, part)?;
+    println!("kernel metrics staged at {}", out.display());
+    Ok(())
+}

@@ -3,55 +3,198 @@
 //! a warm session amortizes compile/lower/spawn across the request
 //! stream, a cold path pays it per batch.
 //!
-//! Run: `cargo bench --bench session_throughput`
+//! A third run drives the *same* warm pipeline with the pre-optimization
+//! execution engine (scalar-reference kernels, per-instruction
+//! allocation, tile/weights borrowed — exactly what the interpreter did
+//! before the blocked/fused/in-place overhaul, with no extra copies
+//! inflating the baseline), so the recorded `warm_over_reference` ratio
+//! is the hot-path speedup measured on this machine, pipeline overheads
+//! held equal.
+//!
+//! Writes `BENCH_interp.json` at the repo root, folding in the
+//! `BENCH_interp.kernel.part` staged by `benches/kernel_throughput.rs`
+//! when present (`make bench` runs both in that order).
+//!
+//! Run: `cargo bench --bench session_throughput` (`BENCH_SMOKE=1` for CI).
 
-use kitsune::session::{nerf_trunk_graph, Session};
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::compiler::{compile, SelectOptions};
+use kitsune::runtime::interp::Program;
+use kitsune::runtime::{ArtifactStore, EntrySpec, Executable, Rng, Tensor};
+use kitsune::session::{lower_app, nerf_trunk_graph, LowerOptions, PipelineService, Session};
+use kitsune::sim::GpuConfig;
+use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 const TILE_ROWS: usize = 64;
-const TILES_PER_BATCH: usize = 32;
-const BATCHES: usize = 6;
+const ROWS: usize = 2048;
+const IN_DIM: usize = 60;
+const HIDDEN: usize = 64;
+const OUT_DIM: usize = 3;
 
 fn build() -> anyhow::Result<Session> {
     Session::builder()
-        .graph(nerf_trunk_graph(2048, 60, 64, 3))
+        .graph(nerf_trunk_graph(ROWS, IN_DIM, HIDDEN, OUT_DIM))
         .tile_rows(TILE_ROWS)
         .workers(2)
         .build()
 }
 
+/// The pre-overhaul execution engine, reproduced exactly: scalar
+/// reference kernels, a fresh allocation per instruction, tile and
+/// weights borrowed just like the old `run_bound` did — the baseline
+/// pays no copy the old engine didn't, so `warm_over_reference` is a
+/// pure kernel-architecture comparison.
+struct ReferenceExec {
+    program: Program,
+    bound: Vec<Tensor>,
+}
+
+impl Executable for ReferenceExec {
+    fn run_f32(&self, inputs: &[Tensor]) -> kitsune::Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.program.run_reference_bound(&refs, &self.bound)
+    }
+
+    fn run_f32_ref(&self, inputs: &[&Tensor]) -> kitsune::Result<Vec<Tensor>> {
+        self.program.run_reference_bound(inputs, &self.bound)
+    }
+}
+
+fn make_tiles(n: usize, seed: u64, rows: usize, dim: usize) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| Tensor {
+            dims: vec![rows, dim],
+            data: (0..rows * dim).map(|_| rng.normal()).collect(),
+        })
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
-    let total_tiles = (TILES_PER_BATCH * BATCHES) as f64;
+    let smoke = smoke();
+    let (tiles_per_batch, batches) = if smoke { (8usize, 2usize) } else { (32, 6) };
+    let total_tiles = (tiles_per_batch * batches) as f64;
 
     // Cold: build the whole session (compile + lower + spawn) per batch.
     let t0 = Instant::now();
-    for b in 0..BATCHES {
+    for b in 0..batches {
         let session = build()?;
-        let out = session.run(session.make_tiles(TILES_PER_BATCH, b as u64)?)?;
-        assert_eq!(out.outputs.len(), TILES_PER_BATCH);
+        let out = session.run(session.make_tiles(tiles_per_batch, b as u64)?)?;
+        assert_eq!(out.outputs.len(), tiles_per_batch);
     }
     let cold_s = t0.elapsed().as_secs_f64();
 
-    // Warm: one session, the same stream of batches.
+    // Warm: one session, the same stream of batches (one unmeasured
+    // priming batch so pool wake-up is off the clock — the reference
+    // pipeline below gets the same treatment).
     let session = build()?;
+    session.run(session.make_tiles(tiles_per_batch, 999)?)?;
     let t0 = Instant::now();
-    for b in 0..BATCHES {
-        let out = session.run(session.make_tiles(TILES_PER_BATCH, b as u64)?)?;
-        assert_eq!(out.outputs.len(), TILES_PER_BATCH);
+    for b in 0..batches {
+        let out = session.run(session.make_tiles(tiles_per_batch, b as u64)?)?;
+        assert_eq!(out.outputs.len(), tiles_per_batch);
     }
     let warm_s = t0.elapsed().as_secs_f64();
+    session.shutdown();
 
-    println!("session submit throughput ({BATCHES} batches x {TILES_PER_BATCH} tiles, {TILE_ROWS} rows/tile):");
+    // Reference warm: identical pipeline topology and worker counts, but
+    // every stage kernel runs the pre-overhaul engine.
+    let g = nerf_trunk_graph(ROWS, IN_DIM, HIDDEN, OUT_DIM);
+    let app = compile(&g, &GpuConfig::a100(), &SelectOptions::default())?;
+    let low = lower_app(
+        &g,
+        &app,
+        &LowerOptions { tile_rows: Some(TILE_ROWS), ..LowerOptions::default() },
+    )?;
+    let execs: Vec<(EntrySpec, Box<dyn Executable>)> = low
+        .entries
+        .iter()
+        .map(|(spec, program, weights)| {
+            let exe: Box<dyn Executable> = Box::new(ReferenceExec {
+                program: program.clone(),
+                bound: weights.clone(),
+            });
+            (spec.clone(), exe)
+        })
+        .collect();
+    let store = Arc::new(ArtifactStore::from_executables("reference", execs));
+    let svc = PipelineService::start(
+        Arc::clone(&store),
+        &low.pipeline,
+        vec![low.tile_rows, low.in_dim],
+    )?;
+    svc.submit(make_tiles(tiles_per_batch, 999, low.tile_rows, low.in_dim))?.wait()?;
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let out = svc
+            .submit(make_tiles(tiles_per_batch, b as u64, low.tile_rows, low.in_dim))?
+            .wait()?;
+        assert_eq!(out.outputs.len(), tiles_per_batch);
+    }
+    let ref_s = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+
+    let cold_tps = total_tiles / cold_s.max(1e-12);
+    let warm_tps = total_tiles / warm_s.max(1e-12);
+    let ref_tps = total_tiles / ref_s.max(1e-12);
+
     println!(
-        "  cold (build per batch): {:>8.1} ms  {:>8.1} tiles/s",
-        cold_s * 1e3,
-        total_tiles / cold_s.max(1e-12)
+        "session submit throughput ({batches} batches x {tiles_per_batch} tiles, {TILE_ROWS} rows/tile):"
     );
+    println!("  cold (build per batch):     {:>8.1} ms  {cold_tps:>8.1} tiles/s", cold_s * 1e3);
     println!(
-        "  warm (persistent pool): {:>8.1} ms  {:>8.1} tiles/s  ({:.2}x)",
+        "  warm (persistent pool):     {:>8.1} ms  {warm_tps:>8.1} tiles/s  ({:.2}x vs cold)",
         warm_s * 1e3,
-        total_tiles / warm_s.max(1e-12),
         cold_s / warm_s.max(1e-12)
     );
+    println!(
+        "  warm, pre-overhaul engine:  {:>8.1} ms  {ref_tps:>8.1} tiles/s  (optimized is {:.2}x)",
+        ref_s * 1e3,
+        warm_tps / ref_tps.max(1e-12)
+    );
+
+    // Assemble BENCH_interp.json (+ the kernel part, if staged).
+    let root = artifact_root();
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"interp_hot_path\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"session\": {{");
+    let _ = writeln!(json, "    \"tile_rows\": {TILE_ROWS},");
+    let _ = writeln!(json, "    \"tiles_per_batch\": {tiles_per_batch},");
+    let _ = writeln!(json, "    \"batches\": {batches},");
+    let _ = writeln!(json, "    \"cold_tiles_per_sec\": {cold_tps:.2},");
+    let _ = writeln!(json, "    \"warm_tiles_per_sec\": {warm_tps:.2},");
+    let _ = writeln!(json, "    \"warm_over_cold\": {:.3},", warm_tps / cold_tps.max(1e-12));
+    let _ = writeln!(json, "    \"reference_warm_tiles_per_sec\": {ref_tps:.2},");
+    let _ = writeln!(
+        json,
+        "    \"warm_over_reference\": {:.3}",
+        warm_tps / ref_tps.max(1e-12)
+    );
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"kernel\": {{");
+    let part_path = root.join("BENCH_interp.kernel.part");
+    let mut kernel_lines: Vec<(String, String)> = Vec::new();
+    if let Ok(part) = std::fs::read_to_string(&part_path) {
+        for line in part.lines() {
+            if let Some((k, v)) = line.split_once(' ') {
+                if !k.is_empty() && v.parse::<f64>().is_ok() {
+                    kernel_lines.push((k.to_string(), v.to_string()));
+                }
+            }
+        }
+    }
+    for (i, (k, v)) in kernel_lines.iter().enumerate() {
+        let comma = if i + 1 < kernel_lines.len() { "," } else { "" };
+        let _ = writeln!(json, "    \"{k}\": {v}{comma}");
+    }
+    let _ = writeln!(json, "  }}");
+    json.push_str("}\n");
+    let out_path = root.join("BENCH_interp.json");
+    std::fs::write(&out_path, json)?;
+    let _ = std::fs::remove_file(&part_path);
+    println!("bench trajectory written to {}", out_path.display());
     Ok(())
 }

@@ -73,6 +73,26 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     st
 }
 
+/// Repo root for benchmark artifacts (`BENCH_*.json`): cargo runs bench
+/// binaries with CWD = the package dir (`rust/`), so the repo root is
+/// the parent; fall back to the CWD when the layout is unexpected (e.g.
+/// the binary was invoked by hand elsewhere).
+pub fn artifact_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let parent = cwd.join("..");
+    if parent.join("ROADMAP.md").is_file() && !cwd.join("ROADMAP.md").is_file() {
+        parent
+    } else {
+        cwd
+    }
+}
+
+/// True when `BENCH_SMOKE` is set non-empty (CI smoke mode: benches run
+/// a few tiny iterations just to prove the path and emit the JSON).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,6 +11,7 @@
 
 use crate::graph::ResourceClass;
 use crate::runtime::Tensor;
+use std::sync::Arc;
 
 /// One pipeline stage: an artifact entry plus bound weights.
 #[derive(Debug, Clone)]
@@ -21,7 +22,9 @@ pub struct StageSpec {
     /// Fig 6's kernel-header resource tag (SIMT / TENSOR).
     pub class: ResourceClass,
     /// Trailing executable arguments (weights), bound at configure time.
-    pub weights: Vec<Tensor>,
+    /// `Arc`-shared: stage workers borrow them per tile and cloning a
+    /// `StageSpec` (or spawning another worker) never copies tensor data.
+    pub weights: Arc<Vec<Tensor>>,
     /// Worker threads for this stage — the host analog of the ILP's
     /// per-stage CTA allocation `a_i`.
     pub workers: usize,
@@ -68,7 +71,7 @@ impl PipelineBuilder {
             name: name.into(),
             entry: entry.into(),
             class,
-            weights,
+            weights: Arc::new(weights),
             workers: 1,
         });
         self

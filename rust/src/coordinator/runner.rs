@@ -115,7 +115,9 @@ pub fn run_streaming(
                 let out_q = Arc::clone(&queues[si + 1]);
                 let remaining = Arc::clone(&remaining);
                 let entry = stage.entry.clone();
-                let weights = stage.weights.clone();
+                // Arc bump, not a tensor copy — and per tile the weights
+                // are only borrowed (zero-copy stage boundary).
+                let weights = Arc::clone(&stage.weights);
                 handles.push((si, scope.spawn(move || -> Result<(usize, f64, f64)> {
                     let mut tiles = 0usize;
                     let mut busy = 0.0f64;
@@ -125,10 +127,13 @@ pub fn run_streaming(
                         let Some((seq, tile)) = in_q.pop() else { break };
                         wait += w0.elapsed().as_secs_f64();
                         let b0 = Instant::now();
-                        let mut args = Vec::with_capacity(1 + weights.len());
-                        args.push(tile);
-                        args.extend(weights.iter().cloned());
-                        let out = match store.run_f32(&entry, &args) {
+                        let result = {
+                            let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
+                            args.push(&tile);
+                            args.extend(weights.iter());
+                            store.run_f32_ref(&entry, &args)
+                        };
+                        let out = match result {
                             Ok(outs) => outs
                                 .into_iter()
                                 .next()
@@ -211,10 +216,12 @@ pub fn run_serial(
     for t in inputs {
         let mut cur = t;
         for stage in &pipeline.stages {
-            let mut args = Vec::with_capacity(1 + stage.weights.len());
-            args.push(cur);
-            args.extend(stage.weights.iter().cloned());
-            let outs = store.run_f32(&stage.entry, &args)?;
+            let outs = {
+                let mut args: Vec<&Tensor> = Vec::with_capacity(1 + stage.weights.len());
+                args.push(&cur);
+                args.extend(stage.weights.iter());
+                store.run_f32_ref(&stage.entry, &args)?
+            };
             cur = outs.into_iter().next().ok_or_else(|| anyhow!("no output"))?;
         }
         outputs.push(cur);

@@ -44,6 +44,16 @@ pub trait Backend: Send + Sync {
 /// executable across all worker threads of a pipeline stage.
 pub trait Executable: Send + Sync {
     fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Borrowed-input variant of [`Self::run_f32`] — the zero-copy hot
+    /// path: stage workers pass `[&tile, &w, &b]` without cloning weights
+    /// per tile. The default clones into owned tensors for backends whose
+    /// native ABI needs them (PJRT buffer upload); the interpreter
+    /// overrides it to execute directly on the borrows.
+    fn run_f32_ref(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let owned: Vec<Tensor> = inputs.iter().map(|&t| t.clone()).collect();
+        self.run_f32(&owned)
+    }
 }
 
 /// Build the default backend for this binary: PJRT when the `pjrt`

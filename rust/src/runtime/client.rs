@@ -111,6 +111,24 @@ impl ArtifactStore {
     /// Execute an entry with f32 tensors. Inputs are validated against the
     /// manifest before reaching the backend.
     pub fn run_f32(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.lookup_validated(name, inputs.iter())?.run_f32(inputs)
+    }
+
+    /// Borrowed-input execution — the zero-copy hot path: stage workers
+    /// pass `[&tile, &w, &b]` and nothing is cloned per tile. Validation
+    /// is identical to [`Self::run_f32`].
+    pub fn run_f32_ref(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.lookup_validated(name, inputs.iter().copied())?.run_f32_ref(inputs)
+    }
+
+    /// Resolve `name` and validate arity + per-input dims against the
+    /// manifest — the one validator behind both the owned and borrowed
+    /// entry points.
+    fn lookup_validated<'t>(
+        &self,
+        name: &str,
+        inputs: impl ExactSizeIterator<Item = &'t Tensor>,
+    ) -> Result<&dyn Executable> {
         let (exe, spec) = self
             .entries
             .get(name)
@@ -124,7 +142,7 @@ impl ArtifactStore {
                 spec.inputs.len()
             ));
         }
-        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+        for (t, ispec) in inputs.zip(&spec.inputs) {
             if t.dims != ispec.dims {
                 return Err(anyhow!(
                     "{name}: input dims {:?} != manifest {:?}",
@@ -133,6 +151,6 @@ impl ArtifactStore {
                 ));
             }
         }
-        exe.run_f32(inputs)
+        Ok(exe.as_ref())
     }
 }

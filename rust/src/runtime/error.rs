@@ -20,6 +20,13 @@ pub enum RuntimeError {
     /// The manifest names an entry the active backend cannot execute
     /// (e.g. an arbitrary HLO program under the interpreter backend).
     UnsupportedEntry { name: String, backend: &'static str },
+    /// An SSA program read a register after its value was moved out
+    /// (in-place consumption or output extraction). The interpreter's
+    /// liveness pass makes this unreachable for well-formed programs, so
+    /// hitting it means the program (or a hand-forged execution plan)
+    /// is malformed — surfaced as a typed error instead of silently
+    /// yielding an empty placeholder tensor.
+    DeadRegister { reg: usize },
 }
 
 impl fmt::Display for RuntimeError {
@@ -39,6 +46,11 @@ impl fmt::Display for RuntimeError {
                 "artifact entry `{name}` is not supported by the `{backend}` backend — \
                  build with `--features pjrt` (and the real xla crate) to execute \
                  arbitrary HLO entries"
+            ),
+            RuntimeError::DeadRegister { reg } => write!(
+                f,
+                "register {reg} was moved out of the value file before this read — \
+                 the SSA program (or a mismatched execution plan) is malformed"
             ),
         }
     }

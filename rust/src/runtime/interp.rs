@@ -10,6 +10,29 @@
 //! operands at run time, so the same program serves the real AOT shapes
 //! and the small synthetic manifests the tests use.
 //!
+//! # Execution engines
+//!
+//! Two engines evaluate the same ISA:
+//!
+//! * the **optimized engine** ([`Program::run`] / [`Program::run_with_plan`])
+//!   — register-blocked matmul micro-kernels that split row panels across
+//!   a small scoped-thread worker set above a FLOP threshold, a last-use
+//!   liveness pass ([`Program::plan`]) that executes elementwise
+//!   instructions in place when their source register is owned and dead,
+//!   and a buffer pool that recycles dead registers' allocations into
+//!   upcoming results. This is the hot path behind every stage kernel.
+//! * the **scalar reference oracle** ([`Program::run_reference`]) — naive
+//!   triple-loop kernels, fresh allocation per instruction, no fusion, no
+//!   threads, no in-place writes. Slow and obviously correct.
+//!
+//! The engines are **bitwise-identical by construction**: every optimized
+//! kernel performs the exact f32 operation sequence of its reference
+//! counterpart (contractions always run `kk = 0..k` in increasing order —
+//! which is also why there is no k-blocking with per-block partial sums:
+//! that would re-associate the adds). `tests/kernel_equivalence.rs`
+//! property-tests the equivalence over randomized programs and shapes,
+//! including NaN propagation (no zero-skip anywhere).
+//!
 //! Gradient programs are hand-derived reverse-mode; the test suite checks
 //! them against central finite differences (see `entry_program` tests),
 //! and the PJRT integration tests cross-check numerics whenever real
@@ -29,6 +52,38 @@ pub type Reg = usize;
 /// `python/compile/model.py::LR`).
 pub const LR: f32 = 1e-2;
 
+/// Elementwise activation kind, shared by the standalone activation
+/// instructions and the fused [`Instr::BiasAct`] epilogue. Both engines
+/// (and both fused and unfused forms) call the one [`Act::apply`], which
+/// is what makes them bitwise-identical by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Sigmoid,
+    Gelu,
+    Tanh,
+    Silu,
+    Exp,
+}
+
+impl Act {
+    /// The scalar activation — single source of truth for every engine.
+    #[inline(always)]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::Relu => v.max(0.0),
+            Act::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            Act::Gelu => {
+                let c = std::f32::consts::FRAC_2_SQRT_PI / std::f32::consts::SQRT_2; // √(2/π)
+                0.5 * v * (1.0 + (c * (v + 0.044_715 * v * v * v)).tanh())
+            }
+            Act::Tanh => v.tanh(),
+            Act::Silu => v / (1.0 + (-v).exp()),
+            Act::Exp => v.exp(),
+        }
+    }
+}
+
 /// One SSA instruction. Every instruction reads existing registers and
 /// defines exactly one new register.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,8 +95,16 @@ pub enum Instr {
     MatmulTn { a: Reg, b: Reg },
     /// `out = a @ bT` — `a:[m,n], b:[k,n] -> [m,k]` (data gradients).
     MatmulNt { a: Reg, b: Reg },
+    /// `out = a @ b + bias` — [`Instr::Matmul`] with the bias epilogue
+    /// applied in the kernel's output sweep (the peephole-fused form;
+    /// bitwise-identical to `Matmul` then `AddBias`).
+    MatmulBias { a: Reg, b: Reg, bias: Reg },
     /// `out[i,j] = a[i,j] + bias[j]`.
     AddBias { a: Reg, bias: Reg },
+    /// `out[i,j] = act(a[i,j] + bias[j])` — fused bias + activation
+    /// epilogue in one pass over the rows (bitwise-identical to
+    /// `AddBias` then the standalone activation).
+    BiasAct { a: Reg, bias: Reg, act: Act },
     /// `out = max(a, 0)`.
     Relu { a: Reg },
     /// `out = 1 / (1 + exp(-a))`.
@@ -68,6 +131,59 @@ pub enum Instr {
     Axpy { a: Reg, b: Reg, c: f32 },
 }
 
+impl Instr {
+    /// Registers this instruction reads (operands, in order).
+    pub fn reads(&self) -> Vec<Reg> {
+        match *self {
+            Instr::Matmul { a, b } | Instr::MatmulTn { a, b } | Instr::MatmulNt { a, b } => {
+                vec![a, b]
+            }
+            Instr::MatmulBias { a, b, bias } => vec![a, b, bias],
+            Instr::AddBias { a, bias } => vec![a, bias],
+            Instr::BiasAct { a, bias, .. } => vec![a, bias],
+            Instr::Relu { a }
+            | Instr::Sigmoid { a }
+            | Instr::Gelu { a }
+            | Instr::Tanh { a }
+            | Instr::Silu { a }
+            | Instr::Exp { a }
+            | Instr::ColSum { a } => vec![a],
+            Instr::ReluGrad { g, act } => vec![g, act],
+            Instr::SigmoidGrad { dy, y } => vec![dy, y],
+            Instr::MseLoss { y, t } | Instr::MseGrad { y, t } => vec![y, t],
+            Instr::Axpy { a, b, .. } => vec![a, b],
+        }
+    }
+
+    /// This instruction with every operand register rewritten through
+    /// `f` (the defining register is implicit in SSA order). Used by the
+    /// session's peephole fuser when deleted producers shift registers.
+    pub fn remap(self, f: impl Fn(Reg) -> Reg) -> Instr {
+        match self {
+            Instr::Matmul { a, b } => Instr::Matmul { a: f(a), b: f(b) },
+            Instr::MatmulTn { a, b } => Instr::MatmulTn { a: f(a), b: f(b) },
+            Instr::MatmulNt { a, b } => Instr::MatmulNt { a: f(a), b: f(b) },
+            Instr::MatmulBias { a, b, bias } => {
+                Instr::MatmulBias { a: f(a), b: f(b), bias: f(bias) }
+            }
+            Instr::AddBias { a, bias } => Instr::AddBias { a: f(a), bias: f(bias) },
+            Instr::BiasAct { a, bias, act } => Instr::BiasAct { a: f(a), bias: f(bias), act },
+            Instr::Relu { a } => Instr::Relu { a: f(a) },
+            Instr::Sigmoid { a } => Instr::Sigmoid { a: f(a) },
+            Instr::Gelu { a } => Instr::Gelu { a: f(a) },
+            Instr::Tanh { a } => Instr::Tanh { a: f(a) },
+            Instr::Silu { a } => Instr::Silu { a: f(a) },
+            Instr::Exp { a } => Instr::Exp { a: f(a) },
+            Instr::ReluGrad { g, act } => Instr::ReluGrad { g: f(g), act: f(act) },
+            Instr::SigmoidGrad { dy, y } => Instr::SigmoidGrad { dy: f(dy), y: f(y) },
+            Instr::MseLoss { y, t } => Instr::MseLoss { y: f(y), t: f(t) },
+            Instr::MseGrad { y, t } => Instr::MseGrad { y: f(y), t: f(t) },
+            Instr::ColSum { a } => Instr::ColSum { a: f(a) },
+            Instr::Axpy { a, b, c } => Instr::Axpy { a: f(a), b: f(b), c },
+        }
+    }
+}
+
 /// A straight-line SSA tensor program. Registers `0..n_inputs` are the
 /// entry inputs; instruction `i` defines register `n_inputs + i`.
 #[derive(Debug, Clone)]
@@ -77,10 +193,192 @@ pub struct Program {
     pub outputs: Vec<Reg>,
 }
 
+/// Last-use liveness over one SSA [`Program`], computed once (executables
+/// cache it) and reused across tiles. It drives the engine's in-place and
+/// buffer-recycling decisions: a register may be written in place or
+/// recycled only at its last read, and never when it is a program output.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// For each register, the index of the last instruction that reads it
+    /// (`None` when no instruction reads it).
+    pub last_read: Vec<Option<usize>>,
+    /// Registers listed in [`Program::outputs`] — never written in place,
+    /// never recycled.
+    pub is_output: Vec<bool>,
+    /// `retire[i]`: owned registers whose last read is instruction `i`
+    /// and which are not outputs; their buffers return to the pool right
+    /// after `i` executes.
+    pub retire: Vec<Vec<Reg>>,
+}
+
+impl Program {
+    /// Compute the last-use liveness plan for this program.
+    pub fn plan(&self) -> ExecPlan {
+        let n_regs = self.n_inputs + self.instrs.len();
+        let mut last_read: Vec<Option<usize>> = vec![None; n_regs];
+        for (i, instr) in self.instrs.iter().enumerate() {
+            for r in instr.reads() {
+                if r < n_regs {
+                    last_read[r] = Some(i);
+                }
+            }
+        }
+        let mut is_output = vec![false; n_regs];
+        for &r in &self.outputs {
+            if r < n_regs {
+                is_output[r] = true;
+            }
+        }
+        let mut retire: Vec<Vec<Reg>> = vec![Vec::new(); self.instrs.len()];
+        for r in self.n_inputs..n_regs {
+            if is_output[r] {
+                continue;
+            }
+            if let Some(i) = last_read[r] {
+                retire[i].push(r);
+            }
+        }
+        ExecPlan { last_read, is_output, retire }
+    }
+
+    /// Execute over the given inputs, returning the output registers.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.run_bound(inputs, &[])
+    }
+
+    /// Execute with `bound` tensors appended after `inputs` as additional
+    /// input registers. The session façade binds stage weights once at
+    /// build time this way, so the per-tile call passes only the streamed
+    /// tile — no weight cloning on the hot path.
+    pub fn run_bound(&self, inputs: &[Tensor], bound: &[Tensor]) -> Result<Vec<Tensor>> {
+        let plan = self.plan();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_with_plan(&refs, bound, &plan)
+    }
+
+    /// The optimized engine: borrowed inputs (the zero-copy hot path), a
+    /// precomputed liveness [`ExecPlan`], pooled result buffers, and
+    /// in-place elementwise execution wherever the source register is
+    /// owned and dead. Bitwise-identical to [`Program::run_reference`].
+    pub fn run_with_plan(
+        &self,
+        inputs: &[&Tensor],
+        bound: &[Tensor],
+        plan: &ExecPlan,
+    ) -> Result<Vec<Tensor>> {
+        ensure!(
+            inputs.len() + bound.len() == self.n_inputs,
+            "program expects {} inputs, got {} (+{} bound)",
+            self.n_inputs,
+            inputs.len(),
+            bound.len()
+        );
+        let n_regs = self.n_inputs + self.instrs.len();
+        ensure!(
+            plan.last_read.len() == n_regs
+                && plan.is_output.len() == n_regs
+                && plan.retire.len() == self.instrs.len(),
+            "execution plan does not match program shape"
+        );
+        let mut regs: Vec<Option<Value>> = Vec::with_capacity(n_regs);
+        regs.extend(inputs.iter().map(|&t| Some(Value::In(t))));
+        regs.extend(bound.iter().map(|t| Some(Value::In(t))));
+        let mut pool = BufferPool::default();
+        for (idx, instr) in self.instrs.iter().enumerate() {
+            let value = eval_opt(instr, idx, &mut regs, plan, &mut pool)?;
+            regs.push(Some(Value::Owned(value)));
+            // Retire registers whose last use was this instruction; their
+            // buffers seed the pool for upcoming results. (An in-place
+            // consumer already took its operand — that slot is `None`.)
+            for &r in &plan.retire[idx] {
+                if let Some(slot) = regs.get_mut(r) {
+                    if let Some(Value::Owned(t)) = slot.take() {
+                        pool.recycle(t.data);
+                    }
+                }
+            }
+        }
+        // Move owned result tensors out; clone only inputs echoed as
+        // outputs or registers listed more than once (train_step returns
+        // every updated parameter — cloning them all would double the
+        // step's memory traffic for nothing). A register that was moved
+        // out (malformed plan/program) surfaces as the typed
+        // [`RuntimeError::DeadRegister`] instead of an empty placeholder.
+        let mut results = Vec::with_capacity(self.outputs.len());
+        for (oi, &r) in self.outputs.iter().enumerate() {
+            let listed_again = self.outputs[oi + 1..].contains(&r);
+            let slot = regs
+                .get_mut(r)
+                .ok_or_else(|| anyhow!("output register {r} out of range"))?;
+            let tensor = match slot.take() {
+                None => return Err(RuntimeError::DeadRegister { reg: r }.into()),
+                Some(Value::In(t)) => {
+                    *slot = Some(Value::In(t));
+                    t.clone()
+                }
+                Some(Value::Owned(t)) => {
+                    if listed_again {
+                        let copy = t.clone();
+                        *slot = Some(Value::Owned(t));
+                        copy
+                    } else {
+                        t
+                    }
+                }
+            };
+            results.push(tensor);
+        }
+        Ok(results)
+    }
+
+    /// Scalar-reference oracle: executes the program with naive kernels —
+    /// triple-loop matmul, fresh allocation per instruction, no fusion,
+    /// no threads, no in-place writes. Slow; retained to *prove* the
+    /// optimized engine bitwise-identical (`tests/kernel_equivalence.rs`)
+    /// and as the pre-optimization baseline the benches report against.
+    /// Fused instructions evaluate as their unfused pair, which defines
+    /// their semantics.
+    pub fn run_reference(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_reference_bound(&refs, &[])
+    }
+
+    /// Borrow-aware reference execution with `bound` tensors appended
+    /// after `inputs` — the pre-overhaul `run_bound` reproduced exactly
+    /// (inputs and bound weights *borrowed*, naive kernels, a fresh
+    /// allocation per instruction), so baseline measurements never pay
+    /// copies the old engine didn't make.
+    pub fn run_reference_bound(&self, inputs: &[&Tensor], bound: &[Tensor]) -> Result<Vec<Tensor>> {
+        ensure!(
+            inputs.len() + bound.len() == self.n_inputs,
+            "program expects {} inputs, got {} (+{} bound)",
+            self.n_inputs,
+            inputs.len(),
+            bound.len()
+        );
+        let mut regs: Vec<Value> = Vec::with_capacity(self.n_inputs + self.instrs.len());
+        regs.extend(inputs.iter().map(|&t| Value::In(t)));
+        regs.extend(bound.iter().map(Value::In));
+        for instr in &self.instrs {
+            let value = eval_reference(instr, &regs)?;
+            regs.push(Value::Owned(value));
+        }
+        let mut results = Vec::with_capacity(self.outputs.len());
+        for &r in &self.outputs {
+            let v = regs
+                .get(r)
+                .ok_or_else(|| anyhow!("output register {r} out of range"))?;
+            results.push(v.tensor().clone());
+        }
+        Ok(results)
+    }
+}
+
 /// A register value: input registers borrow the caller's tensors (the
 /// coordinator re-binds the same weight tensors every tile — copying them
 /// per invocation would dominate the hot path), instruction results are
-/// owned.
+/// owned. A `None` slot in the register file marks a value that was moved
+/// out (in-place consumption, retirement, or output extraction).
 enum Value<'a> {
     In(&'a Tensor),
     Owned(Tensor),
@@ -95,49 +393,632 @@ impl Value<'_> {
     }
 }
 
-impl Program {
-    /// Execute over the given inputs, returning the output registers.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.run_bound(inputs, &[])
-    }
-
-    /// Execute with `bound` tensors appended after `inputs` as additional
-    /// input registers. The session façade binds stage weights once at
-    /// build time this way, so the per-tile call passes only the streamed
-    /// tile — no weight cloning on the hot path.
-    pub fn run_bound(&self, inputs: &[Tensor], bound: &[Tensor]) -> Result<Vec<Tensor>> {
-        ensure!(
-            inputs.len() + bound.len() == self.n_inputs,
-            "program expects {} inputs, got {} (+{} bound)",
-            self.n_inputs,
-            inputs.len(),
-            bound.len()
-        );
-        let mut regs: Vec<Value> = Vec::with_capacity(self.n_inputs + self.instrs.len());
-        regs.extend(inputs.iter().map(Value::In));
-        regs.extend(bound.iter().map(Value::In));
-        for instr in &self.instrs {
-            let value = eval(instr, &regs)?;
-            regs.push(Value::Owned(value));
-        }
-        // Move owned result tensors out; clone only inputs echoed as
-        // outputs or registers listed more than once (train_step returns
-        // every updated parameter — cloning them all would double the
-        // step's memory traffic for nothing).
-        let mut results = Vec::with_capacity(self.outputs.len());
-        for (oi, &r) in self.outputs.iter().enumerate() {
-            let listed_again = self.outputs[oi + 1..].contains(&r);
-            let value = regs.get_mut(r).ok_or_else(|| anyhow!("output register {r} out of range"))?;
-            let tensor = match value {
-                Value::In(t) => (**t).clone(),
-                Value::Owned(t) if listed_again => t.clone(),
-                Value::Owned(t) => std::mem::replace(t, Tensor::zeros(&[])),
-            };
-            results.push(tensor);
-        }
-        Ok(results)
+/// Read register `r`, surfacing moved-out registers as the typed
+/// [`RuntimeError::DeadRegister`] instead of silently yielding an empty
+/// placeholder tensor.
+fn read_reg<'r, 'a>(regs: &'r [Option<Value<'a>>], r: Reg) -> Result<&'r Tensor> {
+    match regs.get(r) {
+        Some(Some(v)) => Ok(v.tensor()),
+        Some(None) => Err(RuntimeError::DeadRegister { reg: r }.into()),
+        None => Err(anyhow!("register {r} out of range")),
     }
 }
+
+/// Take register `r`'s owned tensor for in-place reuse — only when the
+/// liveness plan proves it dead after instruction `idx` and it is not a
+/// program output. Returns `None` (leaving the register untouched) in
+/// every other case; the caller then falls back to the copying kernel.
+fn take_if_dead<'a>(
+    regs: &mut [Option<Value<'a>>],
+    plan: &ExecPlan,
+    idx: usize,
+    r: Reg,
+) -> Option<Tensor> {
+    if r >= plan.last_read.len() || plan.last_read[r] != Some(idx) || plan.is_output[r] {
+        return None;
+    }
+    let slot = regs.get_mut(r)?;
+    if matches!(slot, Some(Value::Owned(_))) {
+        match slot.take() {
+            Some(Value::Owned(t)) => Some(t),
+            _ => None,
+        }
+    } else {
+        None
+    }
+}
+
+/// Small free-list of result buffers, refilled as registers die: the
+/// engine's register-file arena. Bounded so long programs cannot hoard.
+#[derive(Default)]
+struct BufferPool {
+    free: Vec<Vec<f32>>,
+}
+
+/// Max buffers the pool retains (beyond this, dead buffers just drop).
+const POOL_MAX: usize = 8;
+
+impl BufferPool {
+    /// An empty buffer with capacity for at least `n` elements. Best-fit
+    /// over the free list, and a buffer more than ~4x oversized is left
+    /// in the pool — results (which may leave the engine as program
+    /// outputs and live on in serving batches) never carry a wildly
+    /// larger allocation than their length.
+    fn empty(&mut self, n: usize) -> Vec<f32> {
+        let limit = n.saturating_mul(4).max(64);
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= n && cap <= limit && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b
+            }
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// A zero-filled buffer of exactly `n` elements.
+    fn zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut b = self.empty(n);
+        b.resize(n, 0.0);
+        b
+    }
+
+    /// Return a dead register's buffer for reuse.
+    fn recycle(&mut self, data: Vec<f32>) {
+        if self.free.len() < POOL_MAX && data.capacity() > 0 {
+            self.free.push(data);
+        }
+    }
+}
+
+// ---- shared scalar math (one definition per op, used by BOTH engines
+// so the optimized/reference pair cannot drift) ----
+
+#[inline(always)]
+fn relu_grad_f(gv: f32, av: f32) -> f32 {
+    if av > 0.0 {
+        gv
+    } else {
+        0.0
+    }
+}
+
+#[inline(always)]
+fn sigmoid_grad_f(d: f32, yv: f32) -> f32 {
+    d * yv * (1.0 - yv)
+}
+
+#[inline(always)]
+fn mse_grad_f(n: f32) -> impl Fn(f32, f32) -> f32 {
+    move |yv, tv| 2.0 * (yv - tv) / n
+}
+
+#[inline(always)]
+fn axpy_f(c: f32) -> impl Fn(f32, f32) -> f32 {
+    move |av, bv| av + c * bv
+}
+
+// ---- optimized engine ----
+
+/// Evaluate one instruction on the optimized engine. Operand registers
+/// may be consumed (moved out) when the liveness plan proves them dead
+/// after this instruction — the in-place path. Every kernel here is
+/// bitwise-identical to its counterpart in [`eval_reference`].
+fn eval_opt<'a>(
+    instr: &Instr,
+    idx: usize,
+    regs: &mut Vec<Option<Value<'a>>>,
+    plan: &ExecPlan,
+    pool: &mut BufferPool,
+) -> Result<Tensor> {
+    match *instr {
+        Instr::Matmul { a, b } => {
+            matmul_opt(read_reg(regs, a)?, read_reg(regs, b)?, false, false, None, pool)
+        }
+        Instr::MatmulTn { a, b } => {
+            matmul_opt(read_reg(regs, a)?, read_reg(regs, b)?, true, false, None, pool)
+        }
+        Instr::MatmulNt { a, b } => {
+            matmul_opt(read_reg(regs, a)?, read_reg(regs, b)?, false, true, None, pool)
+        }
+        Instr::MatmulBias { a, b, bias } => matmul_opt(
+            read_reg(regs, a)?,
+            read_reg(regs, b)?,
+            false,
+            false,
+            Some(read_reg(regs, bias)?),
+            pool,
+        ),
+        Instr::AddBias { a, bias } => {
+            if a != bias {
+                if let Some(t) = take_if_dead(regs, plan, idx, a) {
+                    return add_bias_inplace(t, read_reg(regs, bias)?);
+                }
+            }
+            add_bias_opt(read_reg(regs, a)?, read_reg(regs, bias)?, pool)
+        }
+        Instr::BiasAct { a, bias, act } => {
+            if a != bias {
+                if let Some(t) = take_if_dead(regs, plan, idx, a) {
+                    return bias_act_inplace(t, read_reg(regs, bias)?, act);
+                }
+            }
+            bias_act_opt(read_reg(regs, a)?, read_reg(regs, bias)?, act, pool)
+        }
+        Instr::Relu { a } => unary_opt(regs, plan, idx, pool, a, Act::Relu),
+        Instr::Sigmoid { a } => unary_opt(regs, plan, idx, pool, a, Act::Sigmoid),
+        Instr::Gelu { a } => unary_opt(regs, plan, idx, pool, a, Act::Gelu),
+        Instr::Tanh { a } => unary_opt(regs, plan, idx, pool, a, Act::Tanh),
+        Instr::Silu { a } => unary_opt(regs, plan, idx, pool, a, Act::Silu),
+        Instr::Exp { a } => unary_opt(regs, plan, idx, pool, a, Act::Exp),
+        Instr::ReluGrad { g, act } => map2_opt(regs, plan, idx, pool, g, act, relu_grad_f),
+        Instr::SigmoidGrad { dy, y } => map2_opt(regs, plan, idx, pool, dy, y, sigmoid_grad_f),
+        Instr::MseLoss { y, t } => mse_loss(read_reg(regs, y)?, read_reg(regs, t)?),
+        Instr::MseGrad { y, t } => {
+            let n = read_reg(regs, y)?.numel().max(1) as f32;
+            map2_opt(regs, plan, idx, pool, y, t, mse_grad_f(n))
+        }
+        Instr::ColSum { a } => col_sum_opt(read_reg(regs, a)?, pool),
+        Instr::Axpy { a, b, c } => map2_opt(regs, plan, idx, pool, a, b, axpy_f(c)),
+    }
+}
+
+/// Unary elementwise op: in place when the operand is owned and dead,
+/// else one pass into a pooled buffer. Same `Act::apply` either way.
+fn unary_opt<'a>(
+    regs: &mut Vec<Option<Value<'a>>>,
+    plan: &ExecPlan,
+    idx: usize,
+    pool: &mut BufferPool,
+    a: Reg,
+    act: Act,
+) -> Result<Tensor> {
+    if let Some(mut t) = take_if_dead(regs, plan, idx, a) {
+        for v in &mut t.data {
+            *v = act.apply(*v);
+        }
+        return Ok(t);
+    }
+    let src = read_reg(regs, a)?;
+    let mut data = pool.empty(src.numel());
+    data.extend(src.data.iter().map(|&v| act.apply(v)));
+    Ok(Tensor { dims: src.dims.clone(), data })
+}
+
+/// Binary elementwise op writing into the first operand's buffer when it
+/// is owned and dead (and distinct from the second operand).
+fn map2_opt<'a>(
+    regs: &mut Vec<Option<Value<'a>>>,
+    plan: &ExecPlan,
+    idx: usize,
+    pool: &mut BufferPool,
+    a: Reg,
+    b: Reg,
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<Tensor> {
+    if a != b {
+        if let Some(mut t) = take_if_dead(regs, plan, idx, a) {
+            let other = read_reg(regs, b)?;
+            ensure!(
+                t.dims == other.dims,
+                "elementwise shape mismatch: {:?} vs {:?}",
+                t.dims,
+                other.dims
+            );
+            for (x, &y) in t.data.iter_mut().zip(&other.data) {
+                *x = f(*x, y);
+            }
+            return Ok(t);
+        }
+    }
+    let at = read_reg(regs, a)?;
+    let bt = read_reg(regs, b)?;
+    ensure!(
+        at.dims == bt.dims,
+        "elementwise shape mismatch: {:?} vs {:?}",
+        at.dims,
+        bt.dims
+    );
+    let mut data = pool.empty(at.numel());
+    data.extend(at.data.iter().zip(&bt.data).map(|(&x, &y)| f(x, y)));
+    Ok(Tensor { dims: at.dims.clone(), data })
+}
+
+/// Validate a `[m,n] (+) [n]` bias broadcast, returning `n`.
+fn check_bias(a: &Tensor, bias: &Tensor) -> Result<usize> {
+    ensure!(a.dims.len() == 2, "bias add needs a rank-2 lhs, got {:?}", a.dims);
+    let n = a.dims[1];
+    ensure!(n > 0, "bias add needs a non-empty trailing dim, got {:?}", a.dims);
+    ensure!(
+        bias.dims == [n],
+        "bias shape {:?} does not broadcast over {:?}",
+        bias.dims,
+        a.dims
+    );
+    Ok(n)
+}
+
+fn add_bias_opt(a: &Tensor, bias: &Tensor, pool: &mut BufferPool) -> Result<Tensor> {
+    let n = check_bias(a, bias)?;
+    let mut data = pool.empty(a.numel());
+    // Row chunks: a straight fused loop per row instead of a per-element
+    // `idx % n` division.
+    for row in a.data.chunks_exact(n) {
+        data.extend(row.iter().zip(&bias.data).map(|(&v, &b)| v + b));
+    }
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn add_bias_inplace(mut a: Tensor, bias: &Tensor) -> Result<Tensor> {
+    let n = check_bias(&a, bias)?;
+    for row in a.data.chunks_exact_mut(n) {
+        for (v, &b) in row.iter_mut().zip(&bias.data) {
+            *v += b;
+        }
+    }
+    Ok(a)
+}
+
+fn bias_act_opt(a: &Tensor, bias: &Tensor, act: Act, pool: &mut BufferPool) -> Result<Tensor> {
+    let n = check_bias(a, bias)?;
+    let mut data = pool.empty(a.numel());
+    for row in a.data.chunks_exact(n) {
+        data.extend(row.iter().zip(&bias.data).map(|(&v, &b)| act.apply(v + b)));
+    }
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn bias_act_inplace(mut a: Tensor, bias: &Tensor, act: Act) -> Result<Tensor> {
+    let n = check_bias(&a, bias)?;
+    for row in a.data.chunks_exact_mut(n) {
+        for (v, &b) in row.iter_mut().zip(&bias.data) {
+            *v = act.apply(*v + b);
+        }
+    }
+    Ok(a)
+}
+
+fn col_sum_opt(a: &Tensor, pool: &mut BufferPool) -> Result<Tensor> {
+    ensure!(a.dims.len() == 2, "column sum needs rank 2, got {:?}", a.dims);
+    let n = a.dims[1];
+    let mut out = pool.zeroed(n);
+    if n > 0 {
+        // Rows in increasing order — the reference's accumulation order.
+        for row in a.data.chunks_exact(n) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    }
+    Tensor::new(vec![n], out)
+}
+
+// ---- blocked / parallel matmul ----
+
+/// Micro-kernel tile: MR×NR accumulators held in registers across the
+/// whole contraction (8 SSE registers of f32x4 at 4×8), so each output
+/// element is stored once instead of loaded+stored per multiply-add.
+const MR: usize = 4;
+/// See [`MR`].
+const NR: usize = 8;
+
+/// FLOP count below which a matmul stays on the calling thread: one
+/// streamed NeRF-trunk tile (and every unit-test shape) is far cheaper
+/// than a thread spawn/join, and the pipeline already runs stages on
+/// their own worker threads.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// Cap on row-panel worker threads for a single matmul call.
+const PAR_MAX_WORKERS: usize = 4;
+
+/// Worker count the kernel will use for an `m x k x n` matmul: 1
+/// (serial) below [`PAR_MIN_FLOPS`], else up to [`PAR_MAX_WORKERS`]
+/// row panels (bounded by the machine's parallelism and by `m`).
+pub fn matmul_workers(m: usize, k: usize, n: usize) -> usize {
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    if flops < PAR_MIN_FLOPS || m < 2 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(PAR_MAX_WORKERS).min(m)
+}
+
+/// `a (T?) @ b (T?) (+ bias)`. Logical shapes are derived from the
+/// physical dims plus the transpose flags; everything is validated.
+/// Bitwise-identical to [`matmul_ref`] + [`add_bias_ref`]: the blocked,
+/// parallel, and fused variants all run the contraction `kk = 0..k` in
+/// increasing order per output element, with the bias added after the
+/// full sum.
+fn matmul_opt(
+    a: &Tensor,
+    b: &Tensor,
+    ta: bool,
+    tb: bool,
+    bias: Option<&Tensor>,
+    pool: &mut BufferPool,
+) -> Result<Tensor> {
+    ensure!(
+        a.dims.len() == 2 && b.dims.len() == 2,
+        "matmul needs rank-2 operands, got {:?} x {:?}",
+        a.dims,
+        b.dims
+    );
+    let (m, k) = if ta { (a.dims[1], a.dims[0]) } else { (a.dims[0], a.dims[1]) };
+    let (k2, n) = if tb { (b.dims[1], b.dims[0]) } else { (b.dims[0], b.dims[1]) };
+    ensure!(
+        k == k2,
+        "matmul contraction mismatch: {:?}{} x {:?}{}",
+        a.dims,
+        if ta { "ᵀ" } else { "" },
+        b.dims,
+        if tb { "ᵀ" } else { "" }
+    );
+    if let Some(bias) = bias {
+        // Mirror `check_bias` exactly, so the fused form errs whenever
+        // the unfused `Matmul` + `AddBias` pair would.
+        ensure!(n > 0, "bias add needs a non-empty trailing dim, got [{m}, {n}]");
+        ensure!(
+            bias.dims == [n],
+            "bias shape {:?} does not broadcast over [{m}, {n}]",
+            bias.dims
+        );
+    }
+    let (lda, ldb) = (a.dims[1], b.dims[1]);
+    let mut out = pool.zeroed(m * n);
+    let bias_data = bias.map(|t| t.data.as_slice());
+    let workers = matmul_workers(m, k, n);
+    if workers <= 1 || n == 0 {
+        matmul_panel(&a.data, &b.data, &mut out, 0, m, k, n, lda, ldb, ta, tb, bias_data);
+    } else {
+        // Row-panel split over a scoped worker set: each thread owns a
+        // disjoint slice of output rows, so no synchronization beyond
+        // the join, and per-element math is untouched.
+        let rows_per = m.div_ceil(workers);
+        let a_data = a.data.as_slice();
+        let b_data = b.data.as_slice();
+        std::thread::scope(|scope| {
+            for (pi, panel) in out.chunks_mut(rows_per * n).enumerate() {
+                let i0 = pi * rows_per;
+                let rows = panel.len() / n;
+                scope.spawn(move || {
+                    matmul_panel(
+                        a_data,
+                        b_data,
+                        panel,
+                        i0,
+                        i0 + rows,
+                        k,
+                        n,
+                        lda,
+                        ldb,
+                        ta,
+                        tb,
+                        bias_data,
+                    );
+                });
+            }
+        });
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Compute output rows `i0..i1` of the matmul into `out` (the panel's
+/// rows only, row-major `[i1-i0, n]`).
+///
+/// Register-blocked: an MR×NR accumulator block lives in registers for
+/// the whole `kk` loop; the `b` block (`k × NR` values) stays hot in L1
+/// across every row of the panel (`jb` is the outer loop). No zero-skip
+/// — `0 * NaN` must stay NaN so diverged values propagate exactly as
+/// they do through the XLA backend — and no k-blocking, which would
+/// re-associate the f32 adds and break bitwise equality.
+#[allow(clippy::too_many_arguments)]
+fn matmul_panel(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ta: bool,
+    tb: bool,
+    bias: Option<&[f32]>,
+) {
+    let rows = i1 - i0;
+    let mut jb = 0;
+    while jb < n {
+        let nr = NR.min(n - jb);
+        let mut ib = 0;
+        while ib < rows {
+            let mr = MR.min(rows - ib);
+            if mr == MR && nr == NR {
+                let mut acc = [[0.0f32; NR]; MR];
+                for kk in 0..k {
+                    let mut bv = [0.0f32; NR];
+                    if tb {
+                        for (c, slot) in bv.iter_mut().enumerate() {
+                            *slot = b[(jb + c) * ldb + kk];
+                        }
+                    } else {
+                        bv.copy_from_slice(&b[kk * ldb + jb..kk * ldb + jb + NR]);
+                    }
+                    for (r, acc_row) in acc.iter_mut().enumerate() {
+                        let i = i0 + ib + r;
+                        let av = if ta { a[kk * lda + i] } else { a[i * lda + kk] };
+                        for (o, &bvc) in acc_row.iter_mut().zip(&bv) {
+                            *o += av * bvc;
+                        }
+                    }
+                }
+                for (r, acc_row) in acc.iter().enumerate() {
+                    let base = (ib + r) * n + jb;
+                    out[base..base + NR].copy_from_slice(acc_row);
+                }
+            } else {
+                // Edge block: same accumulation order, dynamic bounds.
+                for r in 0..mr {
+                    let i = i0 + ib + r;
+                    for c in 0..nr {
+                        let j = jb + c;
+                        let mut acc = 0.0f32;
+                        for kk in 0..k {
+                            let av = if ta { a[kk * lda + i] } else { a[i * lda + kk] };
+                            let bvc = if tb { b[j * ldb + kk] } else { b[kk * ldb + j] };
+                            acc += av * bvc;
+                        }
+                        out[(ib + r) * n + j] = acc;
+                    }
+                }
+            }
+            ib += mr;
+        }
+        jb += nr;
+    }
+    if n == 0 {
+        return;
+    }
+    if let Some(bias) = bias {
+        // Fused epilogue: the bias joins after the full contraction, so
+        // the sum's rounding sequence matches the unfused pair exactly.
+        for row in out.chunks_exact_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(bias) {
+                *o += bv;
+            }
+        }
+    }
+}
+
+// ---- scalar reference kernels (the retained oracle) ----
+
+/// Evaluate one instruction with the naive scalar kernels.
+fn eval_reference(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
+    let r = |i: Reg| -> Result<&Tensor> {
+        regs.get(i)
+            .map(Value::tensor)
+            .ok_or_else(|| anyhow!("register {i} out of range"))
+    };
+    match *instr {
+        Instr::Matmul { a, b } => matmul_ref(r(a)?, r(b)?, false, false),
+        Instr::MatmulTn { a, b } => matmul_ref(r(a)?, r(b)?, true, false),
+        Instr::MatmulNt { a, b } => matmul_ref(r(a)?, r(b)?, false, true),
+        Instr::MatmulBias { a, b, bias } => {
+            let mm = matmul_ref(r(a)?, r(b)?, false, false)?;
+            add_bias_ref(&mm, r(bias)?)
+        }
+        Instr::AddBias { a, bias } => add_bias_ref(r(a)?, r(bias)?),
+        Instr::BiasAct { a, bias, act } => {
+            let z = add_bias_ref(r(a)?, r(bias)?)?;
+            Ok(map1_ref(&z, |v| act.apply(v)))
+        }
+        Instr::Relu { a } => Ok(map1_ref(r(a)?, |v| Act::Relu.apply(v))),
+        Instr::Sigmoid { a } => Ok(map1_ref(r(a)?, |v| Act::Sigmoid.apply(v))),
+        Instr::Gelu { a } => Ok(map1_ref(r(a)?, |v| Act::Gelu.apply(v))),
+        Instr::Tanh { a } => Ok(map1_ref(r(a)?, |v| Act::Tanh.apply(v))),
+        Instr::Silu { a } => Ok(map1_ref(r(a)?, |v| Act::Silu.apply(v))),
+        Instr::Exp { a } => Ok(map1_ref(r(a)?, |v| Act::Exp.apply(v))),
+        Instr::ReluGrad { g, act } => map2_ref(r(g)?, r(act)?, relu_grad_f),
+        Instr::SigmoidGrad { dy, y } => map2_ref(r(dy)?, r(y)?, sigmoid_grad_f),
+        Instr::MseLoss { y, t } => mse_loss(r(y)?, r(t)?),
+        Instr::MseGrad { y, t } => {
+            let n = r(y)?.numel().max(1) as f32;
+            map2_ref(r(y)?, r(t)?, mse_grad_f(n))
+        }
+        Instr::ColSum { a } => col_sum_ref(r(a)?),
+        Instr::Axpy { a, b, c } => map2_ref(r(a)?, r(b)?, axpy_f(c)),
+    }
+}
+
+/// Naive triple-loop `a (T?) @ b (T?)` — the reference contraction.
+fn matmul_ref(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+    ensure!(
+        a.dims.len() == 2 && b.dims.len() == 2,
+        "matmul needs rank-2 operands, got {:?} x {:?}",
+        a.dims,
+        b.dims
+    );
+    let (m, k) = if ta { (a.dims[1], a.dims[0]) } else { (a.dims[0], a.dims[1]) };
+    let (k2, n) = if tb { (b.dims[1], b.dims[0]) } else { (b.dims[0], b.dims[1]) };
+    ensure!(
+        k == k2,
+        "matmul contraction mismatch: {:?}{} x {:?}{}",
+        a.dims,
+        if ta { "ᵀ" } else { "" },
+        b.dims,
+        if tb { "ᵀ" } else { "" }
+    );
+    let (lda, ldb) = (a.dims[1], b.dims[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            // No zero-skip: 0 * NaN must stay NaN so diverged values
+            // propagate exactly as they do through the XLA backend.
+            let av = if ta { a.data[kk * lda + i] } else { a.data[i * lda + kk] };
+            let row = &mut out[i * n..(i + 1) * n];
+            if tb {
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o += av * b.data[j * ldb + kk];
+                }
+            } else {
+                let brow = &b.data[kk * ldb..kk * ldb + n];
+                for (o, &bv) in row.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn add_bias_ref(a: &Tensor, bias: &Tensor) -> Result<Tensor> {
+    let n = check_bias(a, bias)?;
+    let mut data = Vec::with_capacity(a.data.len());
+    for row in a.data.chunks_exact(n) {
+        for (&v, &b) in row.iter().zip(&bias.data) {
+            data.push(v + b);
+        }
+    }
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn map1_ref(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor { dims: a.dims.clone(), data: a.data.iter().map(|&v| f(v)).collect() }
+}
+
+fn map2_ref(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+    ensure!(a.dims == b.dims, "elementwise shape mismatch: {:?} vs {:?}", a.dims, b.dims);
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Tensor::new(a.dims.clone(), data)
+}
+
+fn mse_loss(y: &Tensor, t: &Tensor) -> Result<Tensor> {
+    ensure!(y.dims == t.dims, "mse shape mismatch: {:?} vs {:?}", y.dims, t.dims);
+    let n = y.numel().max(1) as f64;
+    let sum: f64 = y.data.iter().zip(&t.data).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+    Tensor::new(Vec::new(), vec![(sum / n) as f32])
+}
+
+fn col_sum_ref(a: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims.len() == 2, "column sum needs rank 2, got {:?}", a.dims);
+    let (m, n) = (a.dims[0], a.dims[1]);
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += a.data[i * n + j];
+        }
+    }
+    Tensor::new(vec![n], out)
+}
+
+// ---- program construction ----
 
 /// Incremental program construction (registers allocated in SSA order).
 struct ProgramBuilder {
@@ -318,18 +1199,30 @@ impl Backend for InterpBackend {
 
     fn compile(&self, spec: &EntrySpec) -> Result<Box<dyn Executable>> {
         let program = entry_program(spec)?;
-        Ok(Box::new(InterpExecutable { name: spec.name.clone(), program }))
+        let plan = program.plan();
+        Ok(Box::new(InterpExecutable { name: spec.name.clone(), program, plan }))
     }
 }
 
 struct InterpExecutable {
     name: String,
     program: Program,
+    /// Liveness, computed once at compile time — never per tile.
+    plan: ExecPlan,
 }
 
 impl Executable for InterpExecutable {
     fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.program.run(inputs).with_context(|| format!("interp entry {}", self.name))
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.program
+            .run_with_plan(&refs, &[], &self.plan)
+            .with_context(|| format!("interp entry {}", self.name))
+    }
+
+    fn run_f32_ref(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.program
+            .run_with_plan(inputs, &[], &self.plan)
+            .with_context(|| format!("interp entry {}", self.name))
     }
 }
 
@@ -337,7 +1230,8 @@ impl Executable for InterpExecutable {
 /// session façade turns lowered compiler stages into stage kernels
 /// without any on-disk manifest entry.
 pub fn program_executable(name: impl Into<String>, program: Program) -> Box<dyn Executable> {
-    Box::new(InterpExecutable { name: name.into(), program })
+    let plan = program.plan();
+    Box::new(InterpExecutable { name: name.into(), program, plan })
 }
 
 /// Like [`program_executable`], but with `bound` tensors (stage weights)
@@ -347,142 +1241,31 @@ pub fn bound_executable(
     program: Program,
     bound: Vec<Tensor>,
 ) -> Box<dyn Executable> {
-    Box::new(BoundExecutable { name: name.into(), program, bound })
+    let plan = program.plan();
+    Box::new(BoundExecutable { name: name.into(), program, bound, plan })
 }
 
 struct BoundExecutable {
     name: String,
     program: Program,
     bound: Vec<Tensor>,
+    /// Liveness, computed once at build time — never per tile.
+    plan: ExecPlan,
 }
 
 impl Executable for BoundExecutable {
     fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
         self.program
-            .run_bound(inputs, &self.bound)
+            .run_with_plan(&refs, &self.bound, &self.plan)
             .with_context(|| format!("interp entry {}", self.name))
     }
-}
 
-// ---- tensor kernels ----
-
-fn eval(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
-    let r = |i: Reg| regs[i].tensor();
-    match *instr {
-        Instr::Matmul { a, b } => matmul(r(a), r(b), false, false),
-        Instr::MatmulTn { a, b } => matmul(r(a), r(b), true, false),
-        Instr::MatmulNt { a, b } => matmul(r(a), r(b), false, true),
-        Instr::AddBias { a, bias } => add_bias(r(a), r(bias)),
-        Instr::Relu { a } => Ok(map1(r(a), |v| v.max(0.0))),
-        Instr::Sigmoid { a } => Ok(map1(r(a), |v| 1.0 / (1.0 + (-v).exp()))),
-        Instr::Gelu { a } => Ok(map1(r(a), |v| {
-            let c = std::f32::consts::FRAC_2_SQRT_PI / std::f32::consts::SQRT_2; // √(2/π)
-            0.5 * v * (1.0 + (c * (v + 0.044_715 * v * v * v)).tanh())
-        })),
-        Instr::Tanh { a } => Ok(map1(r(a), |v| v.tanh())),
-        Instr::Silu { a } => Ok(map1(r(a), |v| v / (1.0 + (-v).exp()))),
-        Instr::Exp { a } => Ok(map1(r(a), |v| v.exp())),
-        Instr::ReluGrad { g, act } => {
-            map2(r(g), r(act), |gv, av| if av > 0.0 { gv } else { 0.0 })
-        }
-        Instr::SigmoidGrad { dy, y } => map2(r(dy), r(y), |d, yv| d * yv * (1.0 - yv)),
-        Instr::MseLoss { y, t } => mse_loss(r(y), r(t)),
-        Instr::MseGrad { y, t } => {
-            let n = r(y).data.len().max(1) as f32;
-            map2(r(y), r(t), move |yv, tv| 2.0 * (yv - tv) / n)
-        }
-        Instr::ColSum { a } => col_sum(r(a)),
-        Instr::Axpy { a, b, c } => map2(r(a), r(b), move |av, bv| av + c * bv),
+    fn run_f32_ref(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.program
+            .run_with_plan(inputs, &self.bound, &self.plan)
+            .with_context(|| format!("interp entry {}", self.name))
     }
-}
-
-/// `a (T?) @ b (T?)`. Logical shapes are derived from the physical dims
-/// plus the transpose flags; everything is validated.
-fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
-    ensure!(
-        a.dims.len() == 2 && b.dims.len() == 2,
-        "matmul needs rank-2 operands, got {:?} x {:?}",
-        a.dims,
-        b.dims
-    );
-    let (m, k) = if ta { (a.dims[1], a.dims[0]) } else { (a.dims[0], a.dims[1]) };
-    let (k2, n) = if tb { (b.dims[1], b.dims[0]) } else { (b.dims[0], b.dims[1]) };
-    ensure!(
-        k == k2,
-        "matmul contraction mismatch: {:?}{} x {:?}{}",
-        a.dims,
-        if ta { "ᵀ" } else { "" },
-        b.dims,
-        if tb { "ᵀ" } else { "" }
-    );
-    let (lda, ldb) = (a.dims[1], b.dims[1]);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            // No zero-skip: 0 * NaN must stay NaN so diverged values
-            // propagate exactly as they do through the XLA backend.
-            let av = if ta { a.data[kk * lda + i] } else { a.data[i * lda + kk] };
-            let row = &mut out[i * n..(i + 1) * n];
-            if tb {
-                for (j, o) in row.iter_mut().enumerate() {
-                    *o += av * b.data[j * ldb + kk];
-                }
-            } else {
-                let brow = &b.data[kk * ldb..kk * ldb + n];
-                for (o, &bv) in row.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-    Tensor::new(vec![m, n], out)
-}
-
-fn add_bias(a: &Tensor, bias: &Tensor) -> Result<Tensor> {
-    ensure!(a.dims.len() == 2, "bias add needs a rank-2 lhs, got {:?}", a.dims);
-    let n = a.dims[1];
-    ensure!(
-        bias.dims == [n],
-        "bias shape {:?} does not broadcast over {:?}",
-        bias.dims,
-        a.dims
-    );
-    let data = a
-        .data
-        .iter()
-        .enumerate()
-        .map(|(idx, &v)| v + bias.data[idx % n])
-        .collect();
-    Tensor::new(a.dims.clone(), data)
-}
-
-fn map1(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor { dims: a.dims.clone(), data: a.data.iter().map(|&v| f(v)).collect() }
-}
-
-fn map2(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
-    ensure!(a.dims == b.dims, "elementwise shape mismatch: {:?} vs {:?}", a.dims, b.dims);
-    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
-    Tensor::new(a.dims.clone(), data)
-}
-
-fn mse_loss(y: &Tensor, t: &Tensor) -> Result<Tensor> {
-    ensure!(y.dims == t.dims, "mse shape mismatch: {:?} vs {:?}", y.dims, t.dims);
-    let n = y.data.len().max(1) as f64;
-    let sum: f64 = y.data.iter().zip(&t.data).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
-    Tensor::new(Vec::new(), vec![(sum / n) as f32])
-}
-
-fn col_sum(a: &Tensor) -> Result<Tensor> {
-    ensure!(a.dims.len() == 2, "column sum needs rank 2, got {:?}", a.dims);
-    let (m, n) = (a.dims[0], a.dims[1]);
-    let mut out = vec![0.0f32; n];
-    for i in 0..m {
-        for j in 0..n {
-            out[j] += a.data[i * n + j];
-        }
-    }
-    Tensor::new(vec![n], out)
 }
 
 #[cfg(test)]
@@ -508,43 +1291,200 @@ mod tests {
         }
     }
 
+    /// Run a 2-operand matmul variant through the optimized engine.
+    fn matmul_opt_via_program(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+        let instr = match (ta, tb) {
+            (false, false) => Instr::Matmul { a: 0, b: 1 },
+            (true, false) => Instr::MatmulTn { a: 0, b: 1 },
+            (false, true) => Instr::MatmulNt { a: 0, b: 1 },
+            (true, true) => unreachable!("no TT variant in the ISA"),
+        };
+        let p = Program { n_inputs: 2, instrs: vec![instr], outputs: vec![2] };
+        Ok(p.run(&[a.clone(), b.clone()])?.remove(0))
+    }
+
     #[test]
     fn matmul_plain_and_transposed() {
         let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let b = t(&[3, 2], &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
-        let c = matmul(&a, &b, false, false).unwrap();
+        let c = matmul_ref(&a, &b, false, false).unwrap();
         assert_eq!(c.dims, vec![2, 2]);
         assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+        // The optimized engine agrees exactly.
+        let c_opt = matmul_opt_via_program(&a, &b, false, false).unwrap();
+        assert_eq!(c.data, c_opt.data);
         // Gram-matrix symmetry exercises both transpose flags.
-        let g1 = matmul(&a, &a, true, false).unwrap(); // aT a : [3,3]
-        let g2 = matmul(&a, &a, false, true).unwrap(); // a aT : [2,2]
+        let g1 = matmul_ref(&a, &a, true, false).unwrap(); // aT a : [3,3]
+        let g2 = matmul_ref(&a, &a, false, true).unwrap(); // a aT : [2,2]
         assert_eq!(g1.dims, vec![3, 3]);
         assert_eq!(g2.dims, vec![2, 2]);
         assert_eq!(g1.data[1], g1.data[3]); // symmetric
         assert_eq!(g2.data[1], g2.data[2]);
+        assert_eq!(g1.data, matmul_opt_via_program(&a, &a, true, false).unwrap().data);
+        assert_eq!(g2.data, matmul_opt_via_program(&a, &a, false, true).unwrap().data);
         // Tn/Nt agree with matmul against an explicitly transposed operand.
         let at = t(&[3, 2], &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]); // aT materialized
         let c = t(&[2, 2], &[1.0, -1.0, 2.0, 0.5]);
-        let tn = matmul(&a, &c, true, false).unwrap(); // aT @ c : [3,2]
-        let explicit = matmul(&at, &c, false, false).unwrap();
+        let tn = matmul_ref(&a, &c, true, false).unwrap(); // aT @ c : [3,2]
+        let explicit = matmul_ref(&at, &c, false, false).unwrap();
         assert_eq!(tn.data, explicit.data);
         let ct = t(&[2, 2], &[1.0, 2.0, -1.0, 0.5]); // cT materialized
-        let nt = matmul(&at, &c, false, true).unwrap(); // aT @ cT : [3,2]
-        let explicit2 = matmul(&at, &ct, false, false).unwrap();
+        let nt = matmul_ref(&at, &c, false, true).unwrap(); // aT @ cT : [3,2]
+        let explicit2 = matmul_ref(&at, &ct, false, false).unwrap();
         assert_eq!(nt.data, explicit2.data);
-        // Contraction mismatches are rejected.
-        assert!(matmul(&a, &b, true, false).is_err());
+        // Contraction mismatches are rejected by both engines.
+        assert!(matmul_ref(&a, &b, true, false).is_err());
+        assert!(matmul_opt_via_program(&a, &b, true, false).is_err());
     }
 
     #[test]
     fn bias_and_colsum() {
         let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let b = add_bias(&a, &t(&[3], &[10.0, 20.0, 30.0])).unwrap();
+        let b = add_bias_ref(&a, &t(&[3], &[10.0, 20.0, 30.0])).unwrap();
         assert_eq!(b.data, vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
-        let s = col_sum(&a).unwrap();
+        let s = col_sum_ref(&a).unwrap();
         assert_eq!(s.dims, vec![3]);
         assert_eq!(s.data, vec![5.0, 7.0, 9.0]);
-        assert!(add_bias(&a, &t(&[2], &[0.0, 0.0])).is_err());
+        assert!(add_bias_ref(&a, &t(&[2], &[0.0, 0.0])).is_err());
+        // The optimized standalone path matches (row-chunked, no idx % n).
+        let p = Program {
+            n_inputs: 2,
+            instrs: vec![Instr::AddBias { a: 0, bias: 1 }],
+            outputs: vec![2],
+        };
+        let b_opt = p.run(&[a.clone(), t(&[3], &[10.0, 20.0, 30.0])]).unwrap();
+        assert_eq!(b.data, b_opt[0].data);
+    }
+
+    #[test]
+    fn fused_instrs_match_their_unfused_pairs_bitwise() {
+        let mut rng = Rng::new(5);
+        let x = Tensor { dims: vec![5, 7], data: (0..35).map(|_| rng.normal()).collect() };
+        let w = rng.he_tensor(&[7, 3]);
+        let mut b = rng.he_tensor(&[3]);
+        b.data.iter_mut().for_each(|v| *v = rng.normal() * 0.3);
+        let inputs = [x, w, b];
+
+        let unfused = Program {
+            n_inputs: 3,
+            instrs: vec![
+                Instr::Matmul { a: 0, b: 1 },
+                Instr::AddBias { a: 3, bias: 2 },
+                Instr::Gelu { a: 4 },
+            ],
+            outputs: vec![5],
+        };
+        let matmul_bias = Program {
+            n_inputs: 3,
+            instrs: vec![
+                Instr::MatmulBias { a: 0, b: 1, bias: 2 },
+                Instr::Gelu { a: 3 },
+            ],
+            outputs: vec![4],
+        };
+        let bias_act = Program {
+            n_inputs: 3,
+            instrs: vec![
+                Instr::Matmul { a: 0, b: 1 },
+                Instr::BiasAct { a: 3, bias: 2, act: Act::Gelu },
+            ],
+            outputs: vec![4],
+        };
+        let want = unfused.run_reference(&inputs).unwrap();
+        for p in [&unfused, &matmul_bias, &bias_act] {
+            let got = p.run(&inputs).unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].dims, want[0].dims);
+            let gb: Vec<u32> = got[0].data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want[0].data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "fused form must be bitwise-identical");
+        }
+    }
+
+    #[test]
+    fn outputs_survive_inplace_execution() {
+        // z is both an output and the activation's input: the engine must
+        // not mutate it in place.
+        let p = Program {
+            n_inputs: 2,
+            instrs: vec![Instr::Matmul { a: 0, b: 1 }, Instr::Relu { a: 2 }],
+            outputs: vec![2, 3],
+        };
+        let a = t(&[2, 2], &[1.0, -2.0, 3.0, -4.0]);
+        let b = t(&[2, 2], &[1.0, 0.0, 0.0, 1.0]);
+        let want = p.run_reference(&[a.clone(), b.clone()]).unwrap();
+        let got = p.run(&[a, b]).unwrap();
+        assert_eq!(got[0].data, want[0].data, "pre-activation output intact");
+        assert_eq!(got[1].data, want[1].data);
+        assert_eq!(got[0].data, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(got[1].data, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn dead_register_read_is_a_typed_error() {
+        // A forged plan that claims reg 2 dies at instruction 1 makes the
+        // in-place path consume it; the later read must surface the typed
+        // DeadRegister error, not an empty tensor.
+        let p = Program {
+            n_inputs: 1,
+            instrs: vec![
+                Instr::Relu { a: 0 },
+                Instr::Relu { a: 1 },
+                Instr::Axpy { a: 1, b: 2, c: 1.0 },
+            ],
+            outputs: vec![3],
+        };
+        let mut plan = p.plan();
+        assert_eq!(plan.last_read[1], Some(2), "sane plan: reg 1 read by Axpy");
+        plan.last_read[1] = Some(1); // forged: "dies" at the second Relu
+        plan.retire[2].retain(|&r| r != 1);
+        let x = t(&[1, 2], &[1.0, 2.0]);
+        let err = p.run_with_plan(&[&x], &[], &plan).unwrap_err();
+        match err.downcast_ref::<RuntimeError>() {
+            Some(RuntimeError::DeadRegister { reg }) => assert_eq!(*reg, 1),
+            other => panic!("expected DeadRegister, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn liveness_plan_marks_last_uses() {
+        let p = stage_trunk1_program(); // matmul, addbias, relu
+        let plan = p.plan();
+        // The streamed input is last read by the matmul (instr 0).
+        assert_eq!(plan.last_read[0], Some(0));
+        // The matmul result (reg 3) is last read by the bias add (1).
+        assert_eq!(plan.last_read[3], Some(1));
+        assert!(plan.retire[1].contains(&3));
+        // The program output is never retired.
+        assert!(plan.is_output[5]);
+        assert!(plan.retire.iter().all(|rs| !rs.contains(&5)));
+    }
+
+    #[test]
+    fn matmul_worker_threshold() {
+        // Tiny shapes stay serial (bitwise identity is vacuous there; the
+        // point is to not pay spawn cost per unit-test-sized tile).
+        assert_eq!(matmul_workers(4, 4, 4), 1);
+        assert_eq!(matmul_workers(64, 60, 64), 1);
+        assert_eq!(matmul_workers(1, 4096, 4096), 1);
+        // Big shapes may go parallel, bounded by the cap.
+        let w = matmul_workers(512, 512, 512);
+        assert!((1..=4).contains(&w));
+    }
+
+    #[test]
+    fn parallel_matmul_matches_reference_bitwise() {
+        // Above the FLOP threshold the row-panel path engages (when the
+        // host has >1 core); either way the bits must match the oracle.
+        let mut rng = Rng::new(17);
+        let a = Tensor { dims: vec![160, 128], data: (0..160 * 128).map(|_| rng.normal()).collect() };
+        let b = Tensor { dims: vec![128, 96], data: (0..128 * 96).map(|_| rng.normal()).collect() };
+        let p = Program { n_inputs: 2, instrs: vec![Instr::Matmul { a: 0, b: 1 }], outputs: vec![2] };
+        let want = p.run_reference(&[a.clone(), b.clone()]).unwrap();
+        let got = p.run(&[a, b]).unwrap();
+        let gb: Vec<u32> = got[0].data.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want[0].data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb);
     }
 
     #[test]
@@ -583,6 +1523,8 @@ mod tests {
         assert!(out[0].data.iter().all(|&v| (0.0..=1.0).contains(&v)));
         // Deterministic.
         assert_eq!(prog.run(&inputs).unwrap()[0].data, out[0].data);
+        // And identical to the scalar reference oracle.
+        assert_eq!(prog.run_reference(&inputs).unwrap()[0].data, out[0].data);
     }
 
     #[test]
@@ -785,9 +1727,12 @@ mod tests {
         let plain = prog.run(&[x.clone(), w.clone(), b.clone()]).unwrap();
         let bound = prog.run_bound(&[x.clone()], &[w.clone(), b.clone()]).unwrap();
         assert_eq!(plain[0].data, bound[0].data);
-        let exe = bound_executable("t1", prog, vec![w, b]);
-        let via_exe = exe.run_f32(&[x]).unwrap();
+        let exe = bound_executable("t1", prog, vec![w.clone(), b.clone()]);
+        let via_exe = exe.run_f32(&[x.clone()]).unwrap();
         assert_eq!(plain[0].data, via_exe[0].data);
+        // The borrowed-input (zero-copy) entry point agrees too.
+        let via_ref = exe.run_f32_ref(&[&x]).unwrap();
+        assert_eq!(plain[0].data, via_ref[0].data);
         // Wrong arity still rejected.
         assert!(exe.run_f32(&[]).is_err());
     }

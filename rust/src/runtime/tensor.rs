@@ -30,6 +30,13 @@ impl Tensor {
     pub fn scalar_value(&self) -> f32 {
         self.data.first().copied().unwrap_or(f32::NAN)
     }
+
+    /// Number of elements (equals `data.len()`; the data buffer may carry
+    /// extra *capacity* when it came from the interpreter's buffer pool —
+    /// never extra length).
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
 }
 
 /// Deterministic parameter/data generator (xorshift + Box-Muller): the

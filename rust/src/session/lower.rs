@@ -23,11 +23,12 @@ use super::SessionError;
 use crate::compiler::{design_pipeline, CompiledApp, PlanItem};
 use crate::coordinator::{SpatialPipeline, StageSpec};
 use crate::graph::{EwKind, Graph, NodeId, OpKind, ResourceClass};
-use crate::runtime::interp::{Instr, Program, Reg};
+use crate::runtime::interp::{Act, Instr, Program, Reg};
 use crate::runtime::{EntrySpec, Rng, Tensor, TensorSpec};
 use crate::Result;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Knobs for [`lower_app`], filled in by the session builder.
 #[derive(Debug, Clone)]
@@ -172,7 +173,7 @@ pub fn lower_app(g: &Graph, app: &CompiledApp, opts: &LowerOptions) -> Result<Lo
                 class: st.class,
                 // Weights are bound inside the stage executable, so the
                 // per-tile call carries only the streamed tile.
-                weights: Vec::new(),
+                weights: Arc::new(Vec::new()),
                 workers: if st.class == ResourceClass::Tensor {
                     opts.gemm_workers.max(1)
                 } else {
@@ -327,12 +328,108 @@ fn synth_stage(
         )));
     }
     let out_node = outs[0];
-    let program = Program { n_inputs, instrs, outputs: vec![reg_of[&out_node]] };
+    // Peephole-fuse the synthesized program: Matmul→AddBias and
+    // AddBias→activation chains collapse into single instructions, so
+    // the hot path makes one pass (and one buffer) where the naive
+    // lowering made two or three.
+    let program = fuse_program(&Program { n_inputs, instrs, outputs: vec![reg_of[&out_node]] });
     let weights: Vec<Tensor> = params
         .iter()
         .map(|&p| rng.he_tensor(g.node(p).out.shape.dims()))
         .collect();
     Ok((program, weights, out_node))
+}
+
+/// Peephole fusion over an SSA stage program: collapse `Matmul → AddBias`
+/// into [`Instr::MatmulBias`], then any remaining `AddBias → activation`
+/// (`Relu`/`Gelu`/`Silu`/`Tanh`/`Sigmoid`/`Exp`) into [`Instr::BiasAct`]. A
+/// producer folds into its consumer only when the intermediate register
+/// has exactly one use and is not a program output, so the rewrite is
+/// observationally identical — and the fused kernels are bitwise-
+/// identical to the unfused pair by construction (property-tested in
+/// `tests/kernel_equivalence.rs`).
+pub fn fuse_program(p: &Program) -> Program {
+    let n_regs = p.n_inputs + p.instrs.len();
+    let mut use_count = vec![0usize; n_regs];
+    for instr in &p.instrs {
+        for r in instr.reads() {
+            if r < n_regs {
+                use_count[r] += 1;
+            }
+        }
+    }
+    // Outputs count as uses: a register the caller observes cannot be
+    // folded away.
+    for &r in &p.outputs {
+        if r < n_regs {
+            use_count[r] += 1;
+        }
+    }
+    // Index of the instruction defining a computed register.
+    let def_of = |r: Reg| -> Option<usize> { r.checked_sub(p.n_inputs) };
+
+    let mut replace: Vec<Option<Instr>> = vec![None; p.instrs.len()];
+    let mut killed = vec![false; p.instrs.len()];
+
+    // Pass 1: Matmul → AddBias  ⇒  MatmulBias.
+    for i in 0..p.instrs.len() {
+        if let Instr::AddBias { a, bias } = p.instrs[i] {
+            if let Some(j) = def_of(a) {
+                if j < i && use_count[a] == 1 && !killed[j] {
+                    if let Instr::Matmul { a: x, b: w } = p.instrs[j] {
+                        replace[i] = Some(Instr::MatmulBias { a: x, b: w, bias });
+                        killed[j] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // Pass 2: AddBias → activation  ⇒  BiasAct, for bias adds still
+    // standing (one already folded into a MatmulBias is gone, and a
+    // MatmulBias result keeps its standalone activation — which the
+    // engine then runs in place).
+    for i in 0..p.instrs.len() {
+        let fusable = match p.instrs[i] {
+            Instr::Relu { a } => Some((a, Act::Relu)),
+            Instr::Sigmoid { a } => Some((a, Act::Sigmoid)),
+            Instr::Gelu { a } => Some((a, Act::Gelu)),
+            Instr::Tanh { a } => Some((a, Act::Tanh)),
+            Instr::Silu { a } => Some((a, Act::Silu)),
+            Instr::Exp { a } => Some((a, Act::Exp)),
+            _ => None,
+        };
+        if let Some((a, act)) = fusable {
+            if let Some(j) = def_of(a) {
+                if j < i && use_count[a] == 1 && !killed[j] && replace[j].is_none() {
+                    if let Instr::AddBias { a: src, bias } = p.instrs[j] {
+                        replace[i] = Some(Instr::BiasAct { a: src, bias, act });
+                        killed[j] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // Emit surviving instructions, remapping registers around the holes
+    // left by folded producers. A killed register is never referenced by
+    // a surviving instruction or output (its single use was the fusing
+    // consumer, whose replacement reads the producer's operands instead).
+    let mut reg_map: Vec<Reg> = (0..n_regs).collect();
+    let mut instrs = Vec::with_capacity(p.instrs.len());
+    for i in 0..p.instrs.len() {
+        let old_reg = p.n_inputs + i;
+        if killed[i] {
+            continue;
+        }
+        let instr = replace[i].unwrap_or(p.instrs[i]);
+        let remapped = instr.remap(|r| if r < n_regs { reg_map[r] } else { r });
+        reg_map[old_reg] = p.n_inputs + instrs.len();
+        instrs.push(remapped);
+    }
+    let outputs =
+        p.outputs.iter().map(|&r| if r < n_regs { reg_map[r] } else { r }).collect();
+    Program { n_inputs: p.n_inputs, instrs, outputs }
 }
 
 #[cfg(test)]
@@ -373,6 +470,75 @@ mod tests {
         assert!(low.pipeline.stages.iter().all(|s| s.entry.starts_with("sf")));
         // TENSOR stages get the GEMM worker count.
         assert!(low.pipeline.stages.iter().all(|s| s.workers >= 1));
+        // The peephole fuser collapsed every Matmul→AddBias pair: no
+        // standalone AddBias survives in a lowered stage program.
+        for (_, program, _) in &low.entries {
+            assert!(
+                program.instrs.iter().any(|i| matches!(i, Instr::MatmulBias { .. })),
+                "expected a fused MatmulBias in {:?}",
+                program.instrs
+            );
+            assert!(
+                !program.instrs.iter().any(|i| matches!(i, Instr::AddBias { .. })),
+                "unfused AddBias survived in {:?}",
+                program.instrs
+            );
+        }
+    }
+
+    #[test]
+    fn fuser_collapses_chains_and_preserves_semantics() {
+        use crate::runtime::Rng as TRng;
+        // x @ w + b, gelu — with the matmul result ALSO an output, so the
+        // matmul must NOT fold away; the bias+act pair still fuses.
+        let guarded = Program {
+            n_inputs: 3,
+            instrs: vec![
+                Instr::Matmul { a: 0, b: 1 },
+                Instr::AddBias { a: 3, bias: 2 },
+                Instr::Gelu { a: 4 },
+            ],
+            outputs: vec![3, 5],
+        };
+        let fused = fuse_program(&guarded);
+        assert_eq!(fused.instrs.len(), 2, "{:?}", fused.instrs);
+        assert!(matches!(fused.instrs[0], Instr::Matmul { .. }));
+        assert!(matches!(fused.instrs[1], Instr::BiasAct { act: Act::Gelu, .. }));
+        assert_eq!(fused.outputs, vec![3, 4]);
+
+        // Plain chain: Matmul+AddBias fuse (MatmulBias), activation stays.
+        let chain = Program {
+            n_inputs: 3,
+            instrs: vec![
+                Instr::Matmul { a: 0, b: 1 },
+                Instr::AddBias { a: 3, bias: 2 },
+                Instr::Silu { a: 4 },
+            ],
+            outputs: vec![5],
+        };
+        let fused = fuse_program(&chain);
+        assert_eq!(fused.instrs.len(), 2, "{:?}", fused.instrs);
+        assert!(matches!(fused.instrs[0], Instr::MatmulBias { .. }));
+        assert!(matches!(fused.instrs[1], Instr::Silu { .. }));
+        assert_eq!(fused.outputs, vec![4]);
+
+        // Both forms are bitwise-identical to the unfused original.
+        let mut rng = TRng::new(41);
+        let x = Tensor {
+            dims: vec![6, 5],
+            data: (0..30).map(|_| rng.normal()).collect(),
+        };
+        let w = rng.he_tensor(&[5, 4]);
+        let mut b = rng.he_tensor(&[4]);
+        b.data.iter_mut().for_each(|v| *v = 0.2 * rng.normal());
+        let inputs = [x, w, b];
+        let want = chain.run_reference(&inputs).unwrap();
+        let got = fused.run(&inputs).unwrap();
+        assert_eq!(want[0].data, got[0].data, "fusion must not change bits");
+        let want_g = guarded.run_reference(&inputs).unwrap();
+        let got_g = fuse_program(&guarded).run(&inputs).unwrap();
+        assert_eq!(want_g[0].data, got_g[0].data);
+        assert_eq!(want_g[1].data, got_g[1].data);
     }
 
     #[test]

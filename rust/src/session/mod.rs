@@ -42,7 +42,7 @@
 pub mod lower;
 pub mod service;
 
-pub use lower::{lower_app, LowerOptions, LoweredApp};
+pub use lower::{fuse_program, lower_app, LowerOptions, LoweredApp};
 pub use service::{BatchResult, PipelineService, Ticket};
 
 use crate::apps;

@@ -216,7 +216,8 @@ impl PipelineService {
                 let store = Arc::clone(&store);
                 let stats = Arc::clone(&stats);
                 let entry = stage.entry.clone();
-                let weights = stage.weights.clone();
+                // Arc bump only — the worker borrows weights per tile.
+                let weights = Arc::clone(&stage.weights);
                 let spawn_result = std::thread::Builder::new()
                     .name(format!("kitsune-{}-{wi}", stage.name))
                     .spawn(move || {
@@ -237,13 +238,21 @@ impl PipelineService {
             }
         }
 
-        // Sink: route finished tiles back to their tickets.
+        // Sink: route finished tiles back to their tickets, draining
+        // bursts so completion costs one backoff cycle per burst.
         let sink_q = Arc::clone(&queues[n_stages]);
         let sink_result = std::thread::Builder::new()
             .name("kitsune-sink".to_string())
             .spawn(move || {
-                while let Some((ticket, idx, t)) = sink_q.pop() {
-                    ticket.complete(idx, t);
+                let mut burst: Vec<Tile> = Vec::new();
+                loop {
+                    burst.clear();
+                    if sink_q.pop_many(&mut burst, SINK_BURST) == 0 {
+                        break;
+                    }
+                    for (ticket, idx, t) in burst.drain(..) {
+                        ticket.complete(idx, t);
+                    }
                 }
             });
         match sink_result {
@@ -333,9 +342,18 @@ impl Drop for PipelineService {
     }
 }
 
-/// One stage worker: pop a tagged tile, run the stage entry, forward the
-/// result. Kernel failures poison only the owning ticket — the pipeline
-/// keeps serving other batches.
+/// Tiles a stage worker drains per backoff cycle. Small enough that
+/// sibling workers of the same stage still share a burst-sized batch,
+/// large enough to skip most per-tile backoff entries.
+const STAGE_BURST: usize = 4;
+
+/// Tiles the sink drains per backoff cycle.
+const SINK_BURST: usize = 64;
+
+/// One stage worker: drain a burst of tagged tiles, run the stage entry
+/// over each (weights *borrowed*, tile moved — nothing cloned at the
+/// stage boundary), forward the results. Kernel failures poison only the
+/// owning ticket — the pipeline keeps serving other batches.
 fn stage_worker(
     store: &ArtifactStore,
     entry: &str,
@@ -344,37 +362,52 @@ fn stage_worker(
     out_q: &RingQueue<Tile>,
     stat: &StageStat,
 ) {
-    loop {
+    let mut burst: Vec<Tile> = Vec::new();
+    'serve: loop {
         let w0 = Instant::now();
-        let Some((ticket, idx, tile)) = in_q.pop() else { break };
+        burst.clear();
+        if in_q.pop_many(&mut burst, STAGE_BURST) == 0 {
+            break;
+        }
         stat.wait_ns.fetch_add(w0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let b0 = Instant::now();
-        let result = if weights.is_empty() {
-            store.run_f32(entry, std::slice::from_ref(&tile))
-        } else {
-            let mut args = Vec::with_capacity(1 + weights.len());
-            args.push(tile);
-            args.extend(weights.iter().cloned());
-            store.run_f32(entry, &args)
-        };
-        match result {
-            Ok(outs) => match outs.into_iter().next() {
-                Some(out) => {
-                    stat.busy_ns.fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    stat.tiles.fetch_add(1, Ordering::Relaxed);
-                    let w1 = Instant::now();
-                    if let Err(PushError::Closed((t, _, _))) = out_q.push((ticket, idx, out)) {
-                        // Downstream closed mid-flight (shutdown): the
-                        // tile cannot complete — fail its ticket so no
-                        // waiter hangs.
-                        t.fail("pipeline shut down mid-flight".to_string());
-                        break;
+        let mut poisoned = false;
+        for (ticket, idx, tile) in burst.drain(..) {
+            if poisoned {
+                // Downstream already closed: account the rest of the
+                // burst as failed so no waiter hangs.
+                ticket.fail("pipeline shut down mid-flight".to_string());
+                continue;
+            }
+            let b0 = Instant::now();
+            let result = {
+                let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
+                args.push(&tile);
+                args.extend(weights.iter());
+                store.run_f32_ref(entry, &args)
+            };
+            match result {
+                Ok(outs) => match outs.into_iter().next() {
+                    Some(out) => {
+                        stat.busy_ns.fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        stat.tiles.fetch_add(1, Ordering::Relaxed);
+                        let w1 = Instant::now();
+                        if let Err(PushError::Closed((t, _, _))) = out_q.push((ticket, idx, out)) {
+                            // Downstream closed mid-flight (shutdown):
+                            // the tile cannot complete — fail its ticket
+                            // so no waiter hangs.
+                            t.fail("pipeline shut down mid-flight".to_string());
+                            poisoned = true;
+                            continue;
+                        }
+                        stat.wait_ns.fetch_add(w1.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }
-                    stat.wait_ns.fetch_add(w1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                }
-                None => ticket.fail(format!("{entry}: produced no output")),
-            },
-            Err(e) => ticket.fail(format!("stage {entry} failed: {e:#}")),
+                    None => ticket.fail(format!("{entry}: produced no output")),
+                },
+                Err(e) => ticket.fail(format!("stage {entry} failed: {e:#}")),
+            }
+        }
+        if poisoned {
+            break 'serve;
         }
     }
 }

@@ -1,0 +1,346 @@
+//! Property tests proving the optimized interpreter engine — blocked /
+//! parallel matmul micro-kernels, fused `MatmulBias`/`BiasAct`
+//! instructions, in-place elementwise execution, pooled buffers —
+//! **bitwise-identical** to the retained scalar reference oracle
+//! ([`Program::run_reference`]) over randomized programs and shapes,
+//! including NaN propagation (the kernels have no zero-skip).
+//!
+//! Also proves the last-use liveness pass honest: an in-place write can
+//! only target a register that no later instruction reads and that is
+//! not a program output.
+
+use kitsune::runtime::interp::{Act, Instr, Program, Reg};
+use kitsune::runtime::Tensor;
+use kitsune::session::fuse_program;
+
+/// Deterministic xorshift (proptest is unavailable offline).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next() % 100 < percent
+    }
+
+    /// Uniform in [-2, 2] — enough spread to exercise every activation
+    /// branch without ln/cos.
+    fn val(&mut self) -> f32 {
+        ((self.next() >> 40) as f32 / (1u64 << 24) as f32) * 4.0 - 2.0
+    }
+
+    fn tensor(&mut self, dims: &[usize]) -> Tensor {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        Tensor::new(dims.to_vec(), (0..numel).map(|_| self.val()).collect()).unwrap()
+    }
+}
+
+const ACTS: [Act; 6] = [Act::Relu, Act::Sigmoid, Act::Gelu, Act::Tanh, Act::Silu, Act::Exp];
+
+fn act_instr(act: Act, a: Reg) -> Instr {
+    match act {
+        Act::Relu => Instr::Relu { a },
+        Act::Sigmoid => Instr::Sigmoid { a },
+        Act::Gelu => Instr::Gelu { a },
+        Act::Tanh => Instr::Tanh { a },
+        Act::Silu => Instr::Silu { a },
+        Act::Exp => Instr::Exp { a },
+    }
+}
+
+/// A random streaming-style SSA program plus matching inputs: a chain of
+/// linear layers in fused or unfused form, grad-style binary side ops
+/// against earlier same-shape registers, gram/colsum/loss side chains,
+/// and randomized outputs (including duplicates and echoed inputs, which
+/// exercise the engine's clone-on-output paths).
+fn gen_case(rng: &mut Rng) -> (Program, Vec<Tensor>) {
+    let rows = 1 + rng.below(8);
+    let layers = 1 + rng.below(3);
+    let mut dims = Vec::with_capacity(layers + 1);
+    for _ in 0..=layers {
+        dims.push(1 + rng.below(9));
+    }
+
+    let n_inputs = 1 + 2 * layers;
+    let mut inputs: Vec<Tensor> = Vec::with_capacity(n_inputs);
+    inputs.push(rng.tensor(&[rows, dims[0]]));
+    for l in 0..layers {
+        inputs.push(rng.tensor(&[dims[l], dims[l + 1]]));
+        inputs.push(rng.tensor(&[dims[l + 1]]));
+    }
+    // NaN injection: diverged values must propagate identically through
+    // both engines (no zero-skip, bit-equal payloads).
+    if rng.chance(30) {
+        let k = rng.below(inputs[0].data.len());
+        inputs[0].data[k] = f32::NAN;
+    }
+
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut shapes: Vec<Vec<usize>> = inputs.iter().map(|t| t.dims.clone()).collect();
+    // `shapes` covers the whole register file, so a new instruction's
+    // register index is simply shapes.len() after the push.
+
+    let mut cur: Reg = 0;
+    for l in 0..layers {
+        let (w, b) = (1 + 2 * l, 2 + 2 * l);
+        let out_shape = vec![rows, dims[l + 1]];
+        cur = match rng.below(3) {
+            0 => {
+                // Fused matmul+bias, maybe a standalone activation.
+                instrs.push(Instr::MatmulBias { a: cur, b: w, bias: b });
+                shapes.push(out_shape.clone());
+                let mut r = shapes.len() - 1;
+                if rng.chance(60) {
+                    instrs.push(act_instr(ACTS[rng.below(ACTS.len())], r));
+                    shapes.push(out_shape);
+                    r = shapes.len() - 1;
+                }
+                r
+            }
+            1 => {
+                // Matmul + fused bias/activation epilogue.
+                instrs.push(Instr::Matmul { a: cur, b: w });
+                shapes.push(out_shape.clone());
+                let mm = shapes.len() - 1;
+                instrs.push(Instr::BiasAct {
+                    a: mm,
+                    bias: b,
+                    act: ACTS[rng.below(ACTS.len())],
+                });
+                shapes.push(out_shape);
+                shapes.len() - 1
+            }
+            _ => {
+                // Fully unfused chain.
+                instrs.push(Instr::Matmul { a: cur, b: w });
+                shapes.push(out_shape.clone());
+                let mm = shapes.len() - 1;
+                instrs.push(Instr::AddBias { a: mm, bias: b });
+                shapes.push(out_shape.clone());
+                let mut r = shapes.len() - 1;
+                if rng.chance(70) {
+                    instrs.push(act_instr(ACTS[rng.below(ACTS.len())], r));
+                    shapes.push(out_shape);
+                    r = shapes.len() - 1;
+                }
+                r
+            }
+        };
+
+        // Grad-style binary op against a random earlier register of the
+        // same shape (keeps the chain's shape; exercises in-place map2,
+        // including operands that are borrowed inputs).
+        if rng.chance(35) {
+            let same: Vec<Reg> = (0..shapes.len() - 1)
+                .filter(|&r| shapes[r] == shapes[cur])
+                .collect();
+            if !same.is_empty() {
+                let other = same[rng.below(same.len())];
+                let instr = match rng.below(5) {
+                    0 => Instr::Axpy { a: cur, b: other, c: -0.01 },
+                    1 => Instr::Axpy { a: other, b: cur, c: 0.5 },
+                    2 => Instr::ReluGrad { g: cur, act: other },
+                    3 => Instr::SigmoidGrad { dy: other, y: cur },
+                    _ => Instr::MseGrad { y: cur, t: other },
+                };
+                instrs.push(instr);
+                shapes.push(shapes[cur].clone());
+                cur = shapes.len() - 1;
+            }
+        }
+
+        // Side chains that leave `cur` untouched: scalar loss, bias-grad
+        // reduction, gram matrices (the transpose-specialized kernels —
+        // note both operands are the SAME register).
+        if rng.chance(20) {
+            let same: Vec<Reg> =
+                (0..shapes.len()).filter(|&r| shapes[r] == shapes[cur] && r != cur).collect();
+            if !same.is_empty() {
+                let other = same[rng.below(same.len())];
+                instrs.push(Instr::MseLoss { y: cur, t: other });
+                shapes.push(Vec::new());
+            }
+        }
+        if rng.chance(20) {
+            instrs.push(Instr::ColSum { a: cur });
+            shapes.push(vec![shapes[cur][1]]);
+        }
+        if rng.chance(15) {
+            instrs.push(Instr::MatmulNt { a: cur, b: cur });
+            shapes.push(vec![rows, rows]);
+        }
+        if rng.chance(15) {
+            instrs.push(Instr::MatmulTn { a: cur, b: cur });
+            let d = shapes[cur][1];
+            shapes.push(vec![d, d]);
+        }
+    }
+
+    let mut outputs: Vec<Reg> = vec![cur];
+    for r in n_inputs..shapes.len() {
+        if r != cur && rng.chance(15) {
+            outputs.push(r);
+        }
+    }
+    if rng.chance(10) {
+        outputs.push(cur); // duplicate: exercises clone-on-relisted-output
+    }
+    if rng.chance(10) {
+        outputs.push(0); // echoed input: exercises clone-of-borrowed
+    }
+
+    (Program { n_inputs, instrs, outputs }, inputs)
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_same(tag: &str, p: &Program, want: &[Tensor], got: &[Tensor]) {
+    assert_eq!(want.len(), got.len(), "{tag}: output count\n{p:?}");
+    for (oi, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.dims, g.dims, "{tag}: output {oi} dims\n{p:?}");
+        assert_eq!(
+            bits(w),
+            bits(g),
+            "{tag}: output {oi} diverged from the scalar reference\n{p:?}"
+        );
+    }
+}
+
+#[test]
+fn randomized_programs_bitwise_match_reference() {
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..150 {
+        let (p, inputs) = gen_case(&mut rng);
+        let want = p.run_reference(&inputs).unwrap();
+        let got = p.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} optimized"), &p, &want, &got);
+
+        // The peephole-fused form is bitwise-identical too — on both
+        // engines (the reference on the fused form defines its
+        // semantics; the optimized engine must match it and the
+        // original).
+        let fused = fuse_program(&p);
+        let got_fused = fused.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} fused"), &fused, &want, &got_fused);
+        let ref_fused = fused.run_reference(&inputs).unwrap();
+        assert_same(&format!("trial {trial} fused-reference"), &fused, &want, &ref_fused);
+
+        // Determinism: a second optimized run reproduces the first.
+        let again = p.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} rerun"), &p, &got, &again);
+    }
+}
+
+#[test]
+fn large_parallel_kernels_bitwise_match_reference() {
+    // Shapes above the kernel's FLOP threshold, so the row-panel
+    // scoped-thread path engages on multi-core hosts (and the blocked
+    // serial path everywhere else) — the bits must match either way.
+    // One NaN is planted to prove the parallel path has no zero-skip.
+    let mut rng = Rng::new(0xBEEF);
+    let cases: Vec<(Instr, Vec<usize>, Vec<usize>)> = vec![
+        (Instr::Matmul { a: 0, b: 1 }, vec![160, 128], vec![128, 96]),
+        (Instr::MatmulTn { a: 0, b: 1 }, vec![128, 160], vec![128, 96]),
+        (Instr::MatmulNt { a: 0, b: 1 }, vec![160, 128], vec![96, 128]),
+    ];
+    for (instr, da, db) in cases {
+        let p = Program { n_inputs: 2, instrs: vec![instr], outputs: vec![2] };
+        let mut a = rng.tensor(&da);
+        a.data[7] = f32::NAN;
+        let b = rng.tensor(&db);
+        let inputs = [a, b];
+        let want = p.run_reference(&inputs).unwrap();
+        let got = p.run(&inputs).unwrap();
+        assert_same(&format!("{instr:?}"), &p, &want, &got);
+        assert!(
+            got[0].data.iter().any(|v| v.is_nan()),
+            "{instr:?}: NaN must propagate through the contraction"
+        );
+    }
+
+    // Fused bias epilogue at parallel scale.
+    let p = Program {
+        n_inputs: 3,
+        instrs: vec![Instr::MatmulBias { a: 0, b: 1, bias: 2 }],
+        outputs: vec![3],
+    };
+    let inputs = [rng.tensor(&[192, 144]), rng.tensor(&[144, 80]), rng.tensor(&[80])];
+    let want = p.run_reference(&inputs).unwrap();
+    let got = p.run(&inputs).unwrap();
+    assert_same("MatmulBias(parallel)", &p, &want, &got);
+}
+
+/// Replicates the engine's in-place eligibility test for instruction
+/// `idx` consuming operand `r` (see `take_if_dead` in runtime/interp.rs).
+fn would_take_in_place(p: &Program, plan: &kitsune::runtime::interp::ExecPlan, idx: usize, r: Reg) -> bool {
+    r >= p.n_inputs && plan.last_read[r] == Some(idx) && !plan.is_output[r]
+}
+
+#[test]
+fn liveness_pass_never_aliases_a_live_register() {
+    let mut rng = Rng::new(0x11FE);
+    for trial in 0..150 {
+        let (p, _inputs) = gen_case(&mut rng);
+        let plan = p.plan();
+        let n_regs = p.n_inputs + p.instrs.len();
+        assert_eq!(plan.last_read.len(), n_regs);
+        assert_eq!(plan.is_output.len(), n_regs);
+        assert_eq!(plan.retire.len(), p.instrs.len());
+
+        // last_read honesty: it IS the maximum reading instruction.
+        for r in 0..n_regs {
+            let brute: Option<usize> = p
+                .instrs
+                .iter()
+                .enumerate()
+                .filter(|(_, instr)| instr.reads().contains(&r))
+                .map(|(i, _)| i)
+                .last();
+            assert_eq!(plan.last_read[r], brute, "trial {trial} reg {r}\n{p:?}");
+        }
+
+        // In-place safety: wherever the engine would take a register's
+        // buffer, no later instruction reads it and it is not an output.
+        for (idx, instr) in p.instrs.iter().enumerate() {
+            for r in instr.reads() {
+                if would_take_in_place(&p, &plan, idx, r) {
+                    assert!(!p.outputs.contains(&r), "trial {trial}: output aliased\n{p:?}");
+                    for (j, later) in p.instrs.iter().enumerate().skip(idx + 1) {
+                        assert!(
+                            !later.reads().contains(&r),
+                            "trial {trial}: instr {j} reads reg {r} after its in-place \
+                             consumption at {idx}\n{p:?}"
+                        );
+                    }
+                }
+            }
+        }
+
+        // Retirement lists only dead, non-output registers, each at its
+        // last read.
+        for (i, retired) in plan.retire.iter().enumerate() {
+            for &r in retired {
+                assert_eq!(plan.last_read[r], Some(i), "trial {trial}\n{p:?}");
+                assert!(!plan.is_output[r], "trial {trial}\n{p:?}");
+                assert!(r >= p.n_inputs, "trial {trial}: input retired\n{p:?}");
+            }
+        }
+    }
+}

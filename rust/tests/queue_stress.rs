@@ -241,3 +241,106 @@ fn close_while_full_races_hand_values_back() {
         assert!(matches!(q.try_push(7), Err(PushError::Closed(7))));
     }
 }
+
+#[test]
+fn pop_many_spsc_preserves_fifo_across_bursts() {
+    // Batched dequeue at capacity 2: bursts of size <= max, strict FIFO
+    // across thousands of wraparounds, clean end-of-stream.
+    let q: Arc<RingQueue<usize>> = RingQueue::with_capacity(2);
+    let n = 50_000usize;
+    let producer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            for i in 0..n {
+                q.push(i).unwrap();
+            }
+            q.close();
+        })
+    };
+    let mut expect = 0usize;
+    let mut burst = Vec::new();
+    let mut max_burst = 0usize;
+    loop {
+        burst.clear();
+        let got = q.pop_many(&mut burst, 4);
+        if got == 0 {
+            break;
+        }
+        assert_eq!(got, burst.len());
+        assert!(got <= 4, "burst exceeded max");
+        max_burst = max_burst.max(got);
+        for v in burst.drain(..) {
+            assert_eq!(v, expect, "FIFO violated inside a burst");
+            expect += 1;
+        }
+    }
+    assert_eq!(expect, n, "stream truncated");
+    // End of stream is sticky.
+    let mut tail = Vec::new();
+    assert_eq!(q.pop_many(&mut tail, 8), 0);
+    assert!(tail.is_empty());
+    assert!(max_burst >= 1);
+    producer.join().unwrap();
+}
+
+#[test]
+fn pop_many_mpmc_conserves_tokens() {
+    // 2 producers x 2 burst-draining consumers: every token popped
+    // exactly once, sums conserved — the warm-worker drain pattern.
+    for trial in 0..8u64 {
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(4);
+        let n_per = 20_000u64;
+        let popped_sum = Arc::new(AtomicU64::new(0));
+        let popped_n = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for p in 0..2u64 {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..n_per {
+                        q.push(p * n_per + i).unwrap();
+                    }
+                });
+            }
+            for c in 0..2u64 {
+                let q = Arc::clone(&q);
+                let popped_sum = Arc::clone(&popped_sum);
+                let popped_n = Arc::clone(&popped_n);
+                s.spawn(move || {
+                    let mut rng = Rng(trial * 2 + c + 1);
+                    let mut burst = Vec::new();
+                    loop {
+                        burst.clear();
+                        // Vary burst sizes to shake out edge interleavings.
+                        let max = 1 + (rng.next() % 7) as usize;
+                        if q.pop_many(&mut burst, max) == 0 {
+                            break;
+                        }
+                        for v in burst.drain(..) {
+                            popped_sum.fetch_add(v, Ordering::Relaxed);
+                            popped_n.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+            {
+                // Close once everything is through so consumers observe a
+                // full drain before end-of-stream.
+                let q = Arc::clone(&q);
+                let popped_n = Arc::clone(&popped_n);
+                s.spawn(move || {
+                    while popped_n.load(Ordering::Relaxed) < 2 * n_per as usize {
+                        std::thread::yield_now();
+                    }
+                    q.close();
+                });
+            }
+        });
+        let total = 2 * n_per;
+        assert_eq!(popped_n.load(Ordering::Relaxed) as u64, total, "trial {trial}");
+        assert_eq!(
+            popped_sum.load(Ordering::Relaxed),
+            total * (total - 1) / 2,
+            "trial {trial}: checksum mismatch"
+        );
+    }
+}
