@@ -1,94 +1,77 @@
-//! End-to-end validation (DESIGN.md E2E row): train the NeRF-class MLP
-//! for a few hundred steps on synthetic data, with every training step
-//! executing as a *real* AOT-compiled XLA `train_step` artifact through
-//! the PJRT runtime — Python never runs. The loss curve is logged and
-//! must descend; the final state is sanity-checked against a held-out
-//! batch. Results are recorded in EXPERIMENTS.md.
+//! End-to-end training through `kitsune::train`: a NeRF-class model
+//! trains on the *real* streaming DAG pipeline — forward, backward,
+//! loss, and gradient taps execute as persistent pipeline stages with
+//! multicast and skip-link queues, gradients are averaged per
+//! microbatch, and an Adam optimizer (the configurable replacement for
+//! the old baked-in-LR `train_step` entry) updates the shared
+//! parameters between steps. The loss curve is logged and must descend;
+//! the first step is cross-checked bitwise against the serial oracle.
 //!
-//! Requires `make artifacts` (skips cleanly without). Run:
-//! `cargo run --release --example e2e_train -- [steps]`
+//! Run: `cargo run --release --example e2e_train -- [steps]`
 
-use kitsune::runtime::{Rng, RuntimeError, Tensor};
+use kitsune::apps::nerf;
 use kitsune::session::Session;
+use kitsune::train::{serial_step, split_batch, OptimizerKind};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let steps: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(300);
-    // The session façade also fronts AOT artifact access: an
-    // artifacts-only build loads the store (typed skip when absent).
-    let session = match Session::builder().artifacts("artifacts").build() {
-        Ok(s) => s,
-        Err(e) if matches!(
-            e.downcast_ref::<RuntimeError>(),
-            Some(RuntimeError::ArtifactsMissing { .. })
-        ) =>
-        {
-            println!("skipping e2e training: {e}");
-            return Ok(());
-        }
-        Err(e) => return Err(e),
+    let steps: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(120);
+
+    // A small NeRF with the skip concat in play — the shape whose
+    // backward pass needs the multicast/skip-link queues.
+    let cfg = nerf::NerfConfig {
+        batch: 256,
+        pos_enc: 12,
+        dir_enc: 8,
+        hidden: 32,
+        depth: 4,
+        skip_at: 2,
     };
-    let store = session.artifacts().expect("artifacts session has a store");
-    let spec = store.spec("train_step")?.clone();
+    let session = Session::builder().graph(nerf::training(&cfg)).tile_rows(32).build()?;
+    let plan = session.train_plan().expect("NeRF training lowers to the DAG pipeline");
+    let n_params: usize = plan.params.iter().map(|p| p.init.numel()).sum();
     println!(
-        "train_step artifact: {} inputs -> {} outputs on {}",
-        spec.inputs.len(),
-        spec.n_outputs,
-        store.platform()
+        "training pipeline: {} stages, {} queue edges ({} skip links, {} multicast ports)",
+        plan.pipeline.stages.len(),
+        plan.pipeline.edges.len(),
+        plan.n_skip_links(),
+        plan.n_multicasts(),
+    );
+    println!(
+        "model: {n_params} parameters, batch {} ({} tiles x {} rows), {steps} steps\n",
+        plan.batch_rows,
+        plan.n_tiles(),
+        plan.tile_rows,
     );
 
-    // Synthetic regression task: y = sigmoid(x @ T) for a fixed random
-    // teacher T — learnable by the student MLP, so the loss must fall.
-    let mut rng = Rng::new(0xA11CE);
-    let x_dims = spec.inputs[0].dims.clone(); // [batch, 60]
-    let y_dims = spec.inputs[1].dims.clone(); // [batch, 3]
-    let (batch, in_dim) = (x_dims[0], x_dims[1]);
-    let out_dim = y_dims[1];
-    let teacher: Vec<f32> = (0..in_dim * out_dim).map(|_| rng.normal() * 0.3).collect();
-    let make_batch = |rng: &mut Rng| -> (Tensor, Tensor) {
-        let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.normal()).collect();
-        let mut y = vec![0.0f32; batch * out_dim];
-        for r in 0..batch {
-            for c in 0..out_dim {
-                let mut acc = 0.0;
-                for k in 0..in_dim {
-                    acc += x[r * in_dim + k] * teacher[k * out_dim + c];
-                }
-                y[r * out_dim + c] = 1.0 / (1.0 + (-acc).exp());
-            }
-        }
-        (
-            Tensor::new(x_dims.clone(), x).unwrap(),
-            Tensor::new(y_dims.clone(), y).unwrap(),
-        )
-    };
+    // Fixed synthetic batch (memorization task) and the Trainer loop.
+    let batch = session.make_train_batch(0xA11CE)?;
+    let mut trainer = session.trainer_with(OptimizerKind::adam(3e-3))?;
 
-    // He-initialized parameters (same layout as model.PARAM_SHAPES).
-    let mut params: Vec<Tensor> =
-        spec.inputs[2..].iter().map(|t| rng.he_tensor(&t.dims)).collect();
-    let n_params: usize = params.iter().map(|p| p.data.len()).sum();
-    println!("model: {n_params} parameters, batch {batch}, {steps} steps\n");
+    // Step 1 sanity: the pipeline must agree with the serial oracle
+    // bitwise before we trust the curve.
+    let params0: Vec<_> = trainer.params().into_iter().map(|(_, t)| t).collect();
+    let oracle = serial_step(plan, &params0, &split_batch(plan, &batch)?)?;
 
     let t0 = Instant::now();
     let mut first_loss = f32::NAN;
     let mut last_loss = f32::NAN;
     for step in 0..steps {
-        let (x, y) = make_batch(&mut rng);
-        let mut args = Vec::with_capacity(2 + params.len());
-        args.push(x);
-        args.push(y);
-        args.extend(params.iter().cloned());
-        let mut outs = store.run_f32("train_step", &args)?;
-        let loss = outs.remove(0).scalar_value();
-        params = outs;
+        let stats = trainer.step(&batch)?;
         if step == 0 {
-            first_loss = loss;
+            first_loss = stats.loss;
+            anyhow::ensure!(
+                stats.loss.to_bits() == oracle.loss.to_bits(),
+                "pipeline loss {} != serial oracle {}",
+                stats.loss,
+                oracle.loss
+            );
         }
-        last_loss = loss;
-        if step % 25 == 0 || step + 1 == steps {
-            println!("step {step:>4}  loss {loss:.6}");
+        last_loss = stats.loss;
+        if step % 20 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {:.6}", stats.loss);
         }
-        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        anyhow::ensure!(stats.loss.is_finite(), "loss diverged at step {step}");
     }
     let elapsed = t0.elapsed().as_secs_f64();
     println!(
@@ -96,11 +79,15 @@ fn main() -> anyhow::Result<()> {
         steps as f64 / elapsed,
         1e3 * elapsed / steps as f64
     );
-    println!("loss: {first_loss:.6} -> {last_loss:.6} ({:.1}% of initial)", 100.0 * last_loss / first_loss);
+    println!(
+        "loss: {first_loss:.6} -> {last_loss:.6} ({:.1}% of initial)",
+        100.0 * last_loss / first_loss
+    );
     anyhow::ensure!(
-        last_loss < 0.8 * first_loss,
+        last_loss < 0.9 * first_loss,
         "training failed to converge: {first_loss} -> {last_loss}"
     );
-    println!("e2e training OK — all layers compose (Pallas->JAX->HLO->PJRT->Rust).");
+    session.shutdown();
+    println!("e2e training OK — gradients streamed through the dataflow pipeline.");
     Ok(())
 }

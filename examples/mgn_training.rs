@@ -7,6 +7,13 @@
 //! Runs through the `kitsune::session` façade: `.app("MGN").training(true)`
 //! resolves the training-suite graph, compiles once, and simulates.
 //!
+//! MGN is the documented *fallback* path of `kitsune::train`: its
+//! gather/scatter aggregations are §5.1-excluded, so the real streaming
+//! training pipeline refuses the graph with a typed reason naming the
+//! offending op, and evaluation stays on the simulator (dense apps —
+//! NeRF, DLRM's MLPs — take the real pipeline instead; see
+//! `examples/e2e_train.rs`).
+//!
 //! Run: `cargo run --release --example mgn_training`
 
 use kitsune::graph::{OpKind, ReduceAxis};
@@ -15,6 +22,14 @@ use kitsune::session::Session;
 fn main() -> anyhow::Result<()> {
     let session = Session::builder().app("MGN").training(true).build()?;
     let g = session.graph().expect("app session has a graph");
+
+    // The real training pipeline is unavailable here — show the typed
+    // reason (it names the concrete op) and fall back to simulation.
+    assert!(!session.is_trainable());
+    match session.trainer() {
+        Err(e) => println!("real training pipeline unavailable: {e:#}\n"),
+        Ok(_) => anyhow::bail!("MGN training unexpectedly streamed"),
+    }
     let bwd_start = g.backward_start.unwrap();
     let n_reduces = g
         .compute_nodes()

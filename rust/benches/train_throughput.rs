@@ -1,0 +1,112 @@
+//! Training throughput: warm DAG-pipeline optimizer steps/sec vs the
+//! serial tiled baseline (`kitsune::train::serial_step` — the same stage
+//! programs run back-to-back on one thread, the host analog of
+//! bulk-synchronous training). This is the training counterpart of
+//! `benches/session_throughput.rs` and the paper's Figs 12/14 axis:
+//! dataflow execution of the *backward* graph.
+//!
+//! Writes `BENCH_train.json` at the repo root, alongside
+//! `BENCH_interp.json`.
+//!
+//! Run: `cargo bench --bench train_throughput` (`BENCH_SMOKE=1` for CI).
+
+use kitsune::apps::nerf;
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::session::Session;
+use kitsune::train::{serial_step, split_batch, OptimizerKind};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke();
+    // Small enough for interpreter kernels, big enough that tiles queue up.
+    let cfg = if smoke {
+        nerf::NerfConfig { batch: 128, pos_enc: 8, dir_enc: 4, hidden: 16, depth: 3, skip_at: 1 }
+    } else {
+        nerf::NerfConfig { batch: 1024, pos_enc: 24, dir_enc: 8, hidden: 64, depth: 4, skip_at: 2 }
+    };
+    let tile_rows = cfg.batch / 16;
+    let steps = if smoke { 3usize } else { 20 };
+
+    let session = Session::builder()
+        .graph(nerf::training(&cfg))
+        .tile_rows(tile_rows)
+        .build()?;
+    let plan = session.train_plan().expect("NeRF training lowers to the DAG pipeline");
+    let batch = session.make_train_batch(0xBE9C)?;
+    let tiles = split_batch(plan, &batch)?;
+    println!(
+        "train pipeline: {} stages, {} edges ({} skip links, {} multicast ports), \
+         {} tiles/step x {} rows",
+        plan.pipeline.stages.len(),
+        plan.pipeline.edges.len(),
+        plan.n_skip_links(),
+        plan.n_multicasts(),
+        plan.n_tiles(),
+        plan.tile_rows,
+    );
+
+    // Serial baseline over the same tiles and fixed initial parameters.
+    let params0: Vec<_> = plan.params.iter().map(|p| p.init.clone()).collect();
+    let t0 = Instant::now();
+    let mut serial_loss = f32::NAN;
+    for _ in 0..steps {
+        serial_loss = serial_step(plan, &params0, &tiles)?.loss;
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    // Warm pipeline: same step count through the persistent DAG pool,
+    // with real optimizer updates (one unmeasured priming step).
+    let mut trainer = session.trainer_with(OptimizerKind::sgd(1e-2))?;
+    let first = trainer.step(&batch)?;
+    assert_eq!(
+        first.loss.to_bits(),
+        serial_loss.to_bits(),
+        "pipeline and serial baseline must agree bitwise on the first step"
+    );
+    let t0 = Instant::now();
+    let mut last_loss = first.loss;
+    for _ in 0..steps {
+        last_loss = trainer.step(&batch)?.loss;
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+    session.shutdown();
+
+    let serial_sps = steps as f64 / serial_s.max(1e-12);
+    let warm_sps = steps as f64 / warm_s.max(1e-12);
+    println!("  serial baseline:  {:>8.2} ms/step  {serial_sps:>7.2} steps/s", 1e3 * serial_s / steps as f64);
+    println!(
+        "  warm pipeline:    {:>8.2} ms/step  {warm_sps:>7.2} steps/s  ({:.2}x vs serial)",
+        1e3 * warm_s / steps as f64,
+        warm_sps / serial_sps.max(1e-12)
+    );
+    println!("  loss after {} steps: {:.6} (first {:.6})", steps + 1, last_loss, first.loss);
+
+    let root = artifact_root();
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"train_throughput\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"train\": {{");
+    let _ = writeln!(json, "    \"batch_rows\": {},", plan.batch_rows);
+    let _ = writeln!(json, "    \"tile_rows\": {},", plan.tile_rows);
+    let _ = writeln!(json, "    \"tiles_per_step\": {},", plan.n_tiles());
+    let _ = writeln!(json, "    \"stages\": {},", plan.pipeline.stages.len());
+    let _ = writeln!(json, "    \"skip_links\": {},", plan.n_skip_links());
+    let _ = writeln!(json, "    \"multicast_ports\": {},", plan.n_multicasts());
+    let _ = writeln!(json, "    \"steps\": {steps},");
+    let _ = writeln!(json, "    \"serial_steps_per_sec\": {serial_sps:.3},");
+    let _ = writeln!(json, "    \"warm_steps_per_sec\": {warm_sps:.3},");
+    let _ = writeln!(
+        json,
+        "    \"warm_over_serial\": {:.3},",
+        warm_sps / serial_sps.max(1e-12)
+    );
+    let _ = writeln!(json, "    \"first_loss\": {:.6},", first.loss);
+    let _ = writeln!(json, "    \"last_loss\": {last_loss:.6}");
+    let _ = writeln!(json, "  }}");
+    json.push_str("}\n");
+    let out_path = root.join("BENCH_train.json");
+    std::fs::write(&out_path, json)?;
+    println!("training throughput written to {}", out_path.display());
+    Ok(())
+}

@@ -46,6 +46,31 @@ pub fn training(cfg: &DlrmConfig) -> Graph {
     training_graph(&fwd, AutodiffOptions::default())
 }
 
+/// The *dense* DLRM training graph: bottom MLP → top MLP → sigmoid →
+/// loss, with the embedding-bag gathers and the pairwise interaction
+/// left out. This is the subset that streams end-to-end through
+/// `kitsune::train` (the gathers are §5.1-excluded and keep the full
+/// model on `Session::simulate()` — the typed fallback names them).
+pub fn dense_training(cfg: &DlrmConfig) -> Graph {
+    let mut b = GraphBuilder::new("dlrm-dense", GraphKind::Inference);
+    let dense = b.input(&[cfg.batch, cfg.dense_features], "dense");
+    let mut x = dense;
+    for (i, &w) in cfg.bottom_mlp.iter().enumerate() {
+        x = b.linear(x, w, true, &format!("bot.{i}"));
+        x = b.relu(x, &format!("bot.{i}.relu"));
+    }
+    let last = cfg.top_mlp.len() - 1;
+    for (i, &w) in cfg.top_mlp.iter().enumerate() {
+        x = b.linear(x, w, true, &format!("top.{i}"));
+        if i < last {
+            x = b.relu(x, &format!("top.{i}.relu"));
+        }
+    }
+    let logit = b.ew1(EwKind::Sigmoid, x, "sigmoid");
+    b.loss(logit, "bce_loss");
+    training_graph(&b.finish(), AutodiffOptions::default())
+}
+
 fn build(cfg: &DlrmConfig, with_loss: bool) -> Graph {
     let mut b = GraphBuilder::new("dlrm", GraphKind::Inference);
     // Bottom MLP over dense features.
@@ -109,5 +134,13 @@ mod tests {
     fn has_excluded_gathers() {
         let g = inference(&DlrmConfig::default());
         assert!(g.compute_nodes().any(|n| n.op.excluded_from_subgraphs()));
+    }
+
+    #[test]
+    fn dense_training_has_no_excluded_ops() {
+        let g = dense_training(&DlrmConfig::default());
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert!(g.backward_start.is_some());
+        assert!(g.compute_nodes().all(|n| !n.op.excluded_from_subgraphs()));
     }
 }

@@ -10,5 +10,5 @@ pub mod cli;
 pub mod pipeline;
 pub mod runner;
 
-pub use pipeline::{PipelineBuilder, SpatialPipeline, StageSpec};
+pub use pipeline::{PipeEdge, PipelineBuilder, SpatialPipeline, StageSpec};
 pub use runner::{run_serial, run_streaming, PipelineRun, StageMetrics};

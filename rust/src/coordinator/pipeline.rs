@@ -30,7 +30,48 @@ pub struct StageSpec {
     pub workers: usize,
 }
 
-/// A declared spatial pipeline (linear chain of stages).
+/// One explicit queue edge of a DAG-shaped pipeline (paper Fig 2(b)/(c):
+/// multicast fan-out and skip links). `from`/`to` of `None` denote the
+/// pipeline source / sink; ports index a stage's streamed outputs /
+/// inputs (a stage kernel may consume and produce several streams).
+///
+/// Several edges sharing the same `(from, from_port)` are a **multicast**
+/// — the producer's tile is delivered to every consumer queue. An edge
+/// whose `to` stage is more than one position downstream of `from` is a
+/// **skip link** — a saved forward activation bypassing intermediate
+/// stages to its backward consumer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipeEdge {
+    /// Producing stage index; `None` = the pipeline source.
+    pub from: Option<usize>,
+    /// Producer output port (source port index when `from` is `None`).
+    pub from_port: usize,
+    /// Consuming stage index; `None` = the pipeline sink.
+    pub to: Option<usize>,
+    /// Consumer input port (sink tap index when `to` is `None`).
+    pub to_port: usize,
+    /// Ring entries for this edge; skip links get deeper rings so the
+    /// bypassed stages' in-flight window never wedges the producer.
+    pub capacity: usize,
+}
+
+impl PipeEdge {
+    /// Stages this edge spans (1 = adjacent; >1 = skip link). Source and
+    /// sink endpoints count as one position outside the stage range.
+    pub fn span(&self, n_stages: usize) -> usize {
+        let from = self.from.map(|s| s as isize).unwrap_or(-1);
+        let to = self.to.map(|s| s as isize).unwrap_or(n_stages as isize);
+        (to - from).max(1) as usize
+    }
+}
+
+/// A declared spatial pipeline: a linear chain of stages when `edges` is
+/// empty (the classic Fig 6 shape every queue connects stage i to i+1),
+/// or an explicit DAG of queue [`PipeEdge`]s — the shape backward graphs
+/// lower to (multicast fan-out, skip links). The linear runners
+/// ([`crate::coordinator::run_streaming`] / [`crate::session::PipelineService`])
+/// execute only the former; DAG pipelines run on [`crate::train`]'s
+/// executor.
 #[derive(Debug, Clone)]
 pub struct SpatialPipeline {
     pub name: String,
@@ -38,6 +79,8 @@ pub struct SpatialPipeline {
     /// Ring-queue capacity between adjacent stages (entries; 2 =
     /// double-buffering, as in paper Fig 4).
     pub queue_capacity: usize,
+    /// Explicit DAG queue edges; empty = implicit linear chain.
+    pub edges: Vec<PipeEdge>,
 }
 
 /// Builder mirroring the Fig 6 host-code flow:
@@ -53,6 +96,7 @@ impl SpatialPipeline {
                 name: name.into(),
                 stages: Vec::new(),
                 queue_capacity: 8,
+                edges: Vec::new(),
             },
         }
     }
@@ -132,6 +176,16 @@ mod tests {
         assert_eq!(p.stages[0].workers, 2);
         assert_eq!(p.stages[1].workers, 1);
         assert_eq!(p.queue_capacity, 4);
+    }
+
+    #[test]
+    fn pipe_edge_span_counts_skipped_stages() {
+        let mk = |from, to| PipeEdge { from, from_port: 0, to, to_port: 0, capacity: 8 };
+        assert_eq!(mk(Some(0), Some(1)).span(5), 1, "adjacent");
+        assert_eq!(mk(Some(0), Some(3)).span(5), 3, "skip link");
+        assert_eq!(mk(None, Some(0)).span(5), 1, "source edge");
+        assert_eq!(mk(Some(4), None).span(5), 1, "sink edge");
+        assert_eq!(mk(None, None).span(5), 6, "source-to-sink bypass");
     }
 
     #[test]

@@ -28,6 +28,22 @@ use std::time::Instant;
 /// worker stages process out of order; the sink restores order).
 type Tile = (usize, Tensor);
 
+/// The linear runners execute only chain-shaped pipelines: a pipeline
+/// carrying explicit DAG edges (multicast fan-out / skip links — the
+/// shape training graphs lower to) must run on `kitsune::train`'s
+/// executor instead.
+fn ensure_linear(pipeline: &SpatialPipeline) -> Result<()> {
+    if !pipeline.edges.is_empty() {
+        return Err(anyhow!(
+            "pipeline `{}` has {} explicit queue edges (multicast/skip links); \
+             the linear runner cannot execute a DAG — drive it through kitsune::train",
+            pipeline.name,
+            pipeline.edges.len()
+        ));
+    }
+    Ok(())
+}
+
 /// Per-stage runtime metrics.
 #[derive(Debug, Clone)]
 pub struct StageMetrics {
@@ -76,6 +92,7 @@ pub fn run_streaming(
     pipeline: &SpatialPipeline,
     inputs: Vec<Tensor>,
 ) -> Result<PipelineRun> {
+    ensure_linear(pipeline)?;
     let n_stages = pipeline.stages.len();
     let n_tiles = inputs.len();
     // Queues: q[0] feeds stage 0, q[i+1] connects stage i -> i+1,
@@ -210,6 +227,7 @@ pub fn run_serial(
     pipeline: &SpatialPipeline,
     inputs: Vec<Tensor>,
 ) -> Result<PipelineRun> {
+    ensure_linear(pipeline)?;
     let start = Instant::now();
     let n_tiles = inputs.len();
     let mut outputs = Vec::with_capacity(n_tiles);

@@ -260,14 +260,20 @@ impl Diff {
                 self.accumulate(x, dx);
             }
             OpKind::Concat { n_inputs } => {
+                // Each input's gradient is a contiguous column window of
+                // dy; the explicit offsets make the node streamable (the
+                // training lowering maps it to one SliceCols kernel).
+                let mut start = 0usize;
                 for i in 0..n_inputs {
                     let src = node.inputs[i];
+                    let len = self.g.node(src).out.shape.trailing();
                     let slice = self.g.add(
-                        OpKind::Elementwise(EwKind::Cast),
+                        OpKind::Elementwise(EwKind::Slice { start, len }),
                         &[dy],
                         self.desc_of(src),
                         nm(&format!("slice_grad.{i}")),
                     );
+                    start += len;
                     self.accumulate(src, slice);
                 }
             }
@@ -403,6 +409,32 @@ mod tests {
             .filter(|n| matches!(n.op, OpKind::OptimizerUpdate))
             .count();
         assert_eq!(n_params, n_updates);
+    }
+
+    #[test]
+    fn concat_backward_emits_column_slices() {
+        let mut b = GraphBuilder::new("cat", GraphKind::Inference);
+        let x = b.input(&[16, 6], "x");
+        let y_in = b.input(&[16, 4], "y");
+        let c = b.concat(&[x, y_in], "cat");
+        let h = b.linear(c, 8, false, "fc");
+        b.loss(h, "loss");
+        let g = b.finish();
+        let tg = training_graph(&g, AutodiffOptions { optimizer_updates: false });
+        let slices: Vec<&OpKind> = tg
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Elementwise(EwKind::Slice { .. })))
+            .map(|n| &n.op)
+            .collect();
+        // One slice per concat input, with cumulative column offsets.
+        assert_eq!(
+            slices,
+            vec![
+                &OpKind::Elementwise(EwKind::Slice { start: 0, len: 6 }),
+                &OpKind::Elementwise(EwKind::Slice { start: 6, len: 4 }),
+            ],
+        );
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub enum EwKind {
     Rope,
     Exp,
     Scale,
+    /// Column slice `[.., start..start+len]` — the concat VJP (each
+    /// concat input's gradient is a contiguous column window of the
+    /// output gradient). Carries its offsets so the training lowering
+    /// can stream it without re-deriving concat layouts.
+    Slice { start: usize, len: usize },
 }
 
 impl EwKind {
@@ -63,7 +68,7 @@ impl EwKind {
     /// Rough FLOPs per output element (transcendentals cost more SIMT work).
     pub fn flops_per_elem(self) -> f64 {
         match self {
-            EwKind::Relu | EwKind::Mask | EwKind::Cast => 1.0,
+            EwKind::Relu | EwKind::Mask | EwKind::Cast | EwKind::Slice { .. } => 1.0,
             EwKind::Add | EwKind::Sub | EwKind::Mul | EwKind::Scale => 1.0,
             EwKind::ActGrad => 2.0,
             EwKind::Sigmoid | EwKind::Tanh | EwKind::Exp => 4.0,

@@ -18,6 +18,7 @@
 //! | PyTorch-Dynamo graph capture | [`graph`] (IR + reverse-mode autodiff) |
 //! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real threads + ring queues) |
 //! | Fig 6 host API (`cudaPipelineCreate` → `AddKernel` → launch) | [`session`] (builder → persistent pipeline → `submit`) |
+//! | Training on dataflow (§6.4, Figs 12/14: multicast + skip links) | [`train`] (DAG pipeline, gradient taps, optimizer, `Trainer`) |
 //!
 //! [`session`] is the **single public entry point** for running anything:
 //! `Session::builder().app("nerf").build()?` compiles once, lowers the
@@ -47,6 +48,7 @@ pub mod exec;
 pub mod coordinator;
 pub mod runtime;
 pub mod session;
+pub mod train;
 pub mod report;
 pub mod bench;
 

@@ -188,13 +188,22 @@ fn cmd_compile(app: &str, training: bool) -> Result<()> {
         compiled.pipelines.len(),
         100.0 * compiled.selection.coverage(g)
     );
-    match session.pipeline() {
-        Some(p) => println!(
+    match (session.pipeline(), session.train_plan()) {
+        (Some(p), _) => println!(
             "  streams: lowered to a {}-stage spatial pipeline (tile {:?})",
             p.stages.len(),
             session.tile_dims().unwrap_or_default()
         ),
-        None => println!(
+        (None, Some(tp)) => println!(
+            "  trains: lowered to a {}-stage DAG pipeline ({} queue edges, {} skip links, \
+             {} multicast ports; {} gradient taps)",
+            tp.pipeline.stages.len(),
+            tp.pipeline.edges.len(),
+            tp.n_skip_links(),
+            tp.n_multicasts(),
+            tp.taps.len().saturating_sub(1)
+        ),
+        (None, None) => println!(
             "  simulation-only: {}",
             session.not_streamable_reason().unwrap_or("not lowered")
         ),

@@ -48,9 +48,16 @@ use anyhow::{anyhow, ensure, Context};
 /// Register index into an executing program's value file.
 pub type Reg = usize;
 
-/// SGD learning rate baked into the `train_step` entry (mirrors
+/// Default SGD learning rate of the legacy `train_step` entry, routed
+/// through the training subsystem's optimizer config
+/// ([`crate::train::DEFAULT_LR`], which mirrors
 /// `python/compile/model.py::LR`).
-pub const LR: f32 = 1e-2;
+///
+/// **Compat shim:** new code should configure the rate through
+/// [`crate::train::OptimizerKind`] (and [`train_step_program`] takes the
+/// rate explicitly); this constant exists only so the AOT `train_step`
+/// manifest entry keeps its historical ABI and numerics.
+pub const LR: f32 = crate::train::DEFAULT_LR;
 
 /// Elementwise activation kind, shared by the standalone activation
 /// instructions and the fused [`Instr::BiasAct`] epilogue. Both engines
@@ -80,6 +87,43 @@ impl Act {
             Act::Tanh => v.tanh(),
             Act::Silu => v / (1.0 + (-v).exp()),
             Act::Exp => v.exp(),
+        }
+    }
+
+    /// The scalar derivative `f'(x)` evaluated at the saved *input* `x` —
+    /// the single source of truth behind [`Instr::ActGradI`] on both
+    /// engines (the training lowering re-derives activations from their
+    /// pre-activation inputs, which is what autodiff graphs save).
+    #[inline(always)]
+    pub fn grad_at(self, x: f32) -> f32 {
+        match self {
+            Act::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Sigmoid => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s * (1.0 - s)
+            }
+            Act::Gelu => {
+                let c = std::f32::consts::FRAC_2_SQRT_PI / std::f32::consts::SQRT_2; // √(2/π)
+                let u = c * (x + 0.044_715 * x * x * x);
+                let t = u.tanh();
+                let du = c * (1.0 + 3.0 * 0.044_715 * x * x);
+                0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+            }
+            Act::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Act::Silu => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s * (1.0 + x * (1.0 - s))
+            }
+            Act::Exp => x.exp(),
         }
     }
 }
@@ -127,8 +171,30 @@ pub enum Instr {
     MseGrad { y: Reg, t: Reg },
     /// `out[j] = sum_i a[i,j]` — batch reduction (bias gradients).
     ColSum { a: Reg },
-    /// `out = a + c * b` (same shape) — the SGD update with `c = -LR`.
+    /// `out = a + c * b` (same shape) — the SGD update with `c = -lr`,
+    /// gradient accumulation with `c = 1`, and (via the `train`
+    /// subsystem) the momentum blend `g + momentum * v`.
     Axpy { a: Reg, b: Reg, c: f32 },
+    /// `out = c * a` — scalar scale (gradient averaging, LR folding).
+    Scale { a: Reg, c: f32 },
+    /// `out = a * b` elementwise — Adam's `g²` and generic mul VJPs.
+    Mul { a: Reg, b: Reg },
+    /// `out = beta * a + (1 - beta) * b` — the Adam moment EMA update.
+    Blend { a: Reg, b: Reg, beta: f32 },
+    /// `out = g * f'(x)` — activation VJP against the saved *input* `x`
+    /// (autodiff graphs save pre-activations; [`Instr::ReluGrad`] /
+    /// [`Instr::SigmoidGrad`] remain for the output-saving AOT entries).
+    ActGradI { g: Reg, x: Reg, act: Act },
+    /// `out = [a | b]` — row-wise concat along the trailing dim
+    /// (NeRF skip links, DLRM feature concat). N-ary concats chain.
+    Concat2 { a: Reg, b: Reg },
+    /// `out = a[:, start..start+len]` — column slice (concat VJP).
+    SliceCols { a: Reg, start: usize, len: usize },
+    /// One Adam parameter update:
+    /// `out = p - lr * (m / bc1) / (sqrt(v / bc2) + eps)` where
+    /// `bc1 = 1 - β1ᵗ`, `bc2 = 1 - β2ᵗ` are the bias corrections —
+    /// `m`/`v` are the already-blended first/second moments.
+    AdamStep { p: Reg, m: Reg, v: Reg, lr: f32, bc1: f32, bc2: f32, eps: f32 },
 }
 
 impl Instr {
@@ -152,6 +218,12 @@ impl Instr {
             Instr::SigmoidGrad { dy, y } => vec![dy, y],
             Instr::MseLoss { y, t } | Instr::MseGrad { y, t } => vec![y, t],
             Instr::Axpy { a, b, .. } => vec![a, b],
+            Instr::Scale { a, .. } | Instr::SliceCols { a, .. } => vec![a],
+            Instr::Mul { a, b } | Instr::Blend { a, b, .. } | Instr::Concat2 { a, b } => {
+                vec![a, b]
+            }
+            Instr::ActGradI { g, x, .. } => vec![g, x],
+            Instr::AdamStep { p, m, v, .. } => vec![p, m, v],
         }
     }
 
@@ -180,6 +252,15 @@ impl Instr {
             Instr::MseGrad { y, t } => Instr::MseGrad { y: f(y), t: f(t) },
             Instr::ColSum { a } => Instr::ColSum { a: f(a) },
             Instr::Axpy { a, b, c } => Instr::Axpy { a: f(a), b: f(b), c },
+            Instr::Scale { a, c } => Instr::Scale { a: f(a), c },
+            Instr::Mul { a, b } => Instr::Mul { a: f(a), b: f(b) },
+            Instr::Blend { a, b, beta } => Instr::Blend { a: f(a), b: f(b), beta },
+            Instr::ActGradI { g, x, act } => Instr::ActGradI { g: f(g), x: f(x), act },
+            Instr::Concat2 { a, b } => Instr::Concat2 { a: f(a), b: f(b) },
+            Instr::SliceCols { a, start, len } => Instr::SliceCols { a: f(a), start, len },
+            Instr::AdamStep { p, m, v, lr, bc1, bc2, eps } => {
+                Instr::AdamStep { p: f(p), m: f(m), v: f(v), lr, bc1, bc2, eps }
+            }
         }
     }
 }
@@ -505,6 +586,76 @@ fn axpy_f(c: f32) -> impl Fn(f32, f32) -> f32 {
     move |av, bv| av + c * bv
 }
 
+#[inline(always)]
+fn blend_f(beta: f32) -> impl Fn(f32, f32) -> f32 {
+    move |av, bv| beta * av + (1.0 - beta) * bv
+}
+
+#[inline(always)]
+fn act_grad_input_f(act: Act) -> impl Fn(f32, f32) -> f32 {
+    move |gv, xv| gv * act.grad_at(xv)
+}
+
+#[inline(always)]
+fn adam_step_f(lr: f32, bc1: f32, bc2: f32, eps: f32) -> impl Fn(f32, f32, f32) -> f32 {
+    move |pv, mv, vv| pv - lr * (mv / bc1) / ((vv / bc2).sqrt() + eps)
+}
+
+/// `[a | b]` row-wise concat along the trailing dim — one implementation
+/// serving both engines (pure copies: bitwise identity is structural).
+fn concat_cols(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(
+        a.dims.len() == 2 && b.dims.len() == 2 && a.dims[0] == b.dims[0],
+        "concat needs rank-2 operands with equal rows, got {:?} | {:?}",
+        a.dims,
+        b.dims
+    );
+    let (m, na, nb) = (a.dims[0], a.dims[1], b.dims[1]);
+    ensure!(na > 0 && nb > 0, "concat needs non-empty columns, got {na} | {nb}");
+    let mut data = Vec::with_capacity(m * (na + nb));
+    for (ra, rb) in a.data.chunks_exact(na).zip(b.data.chunks_exact(nb)) {
+        data.extend_from_slice(ra);
+        data.extend_from_slice(rb);
+    }
+    Tensor::new(vec![m, na + nb], data)
+}
+
+/// `a[:, start..start+len]` column slice — shared by both engines.
+fn slice_cols(a: &Tensor, start: usize, len: usize) -> Result<Tensor> {
+    ensure!(a.dims.len() == 2, "column slice needs rank 2, got {:?}", a.dims);
+    let (m, n) = (a.dims[0], a.dims[1]);
+    ensure!(
+        n > 0 && len > 0 && start + len <= n,
+        "slice {start}..{} out of bounds for trailing dim {n}",
+        start + len
+    );
+    let mut data = Vec::with_capacity(m * len);
+    for row in a.data.chunks_exact(n) {
+        data.extend_from_slice(&row[start..start + len]);
+    }
+    Tensor::new(vec![m, len], data)
+}
+
+/// Three-operand elementwise map (the Adam update) — fresh allocation,
+/// identical scalar sequence on both engines.
+fn map3(a: &Tensor, b: &Tensor, c: &Tensor, f: impl Fn(f32, f32, f32) -> f32) -> Result<Tensor> {
+    ensure!(
+        a.dims == b.dims && a.dims == c.dims,
+        "elementwise shape mismatch: {:?} vs {:?} vs {:?}",
+        a.dims,
+        b.dims,
+        c.dims
+    );
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .zip(&c.data)
+        .map(|((&x, &y), &z)| f(x, y, z))
+        .collect();
+    Tensor::new(a.dims.clone(), data)
+}
+
 // ---- optimized engine ----
 
 /// Evaluate one instruction on the optimized engine. Operand registers
@@ -567,6 +718,31 @@ fn eval_opt<'a>(
         }
         Instr::ColSum { a } => col_sum_opt(read_reg(regs, a)?, pool),
         Instr::Axpy { a, b, c } => map2_opt(regs, plan, idx, pool, a, b, axpy_f(c)),
+        Instr::Scale { a, c } => {
+            if let Some(mut t) = take_if_dead(regs, plan, idx, a) {
+                for v in &mut t.data {
+                    *v = c * *v;
+                }
+                return Ok(t);
+            }
+            let src = read_reg(regs, a)?;
+            let mut data = pool.empty(src.numel());
+            data.extend(src.data.iter().map(|&v| c * v));
+            Ok(Tensor { dims: src.dims.clone(), data })
+        }
+        Instr::Mul { a, b } => map2_opt(regs, plan, idx, pool, a, b, |x, y| x * y),
+        Instr::Blend { a, b, beta } => map2_opt(regs, plan, idx, pool, a, b, blend_f(beta)),
+        Instr::ActGradI { g, x, act } => {
+            map2_opt(regs, plan, idx, pool, g, x, act_grad_input_f(act))
+        }
+        Instr::Concat2 { a, b } => concat_cols(read_reg(regs, a)?, read_reg(regs, b)?),
+        Instr::SliceCols { a, start, len } => slice_cols(read_reg(regs, a)?, start, len),
+        Instr::AdamStep { p, m, v, lr, bc1, bc2, eps } => map3(
+            read_reg(regs, p)?,
+            read_reg(regs, m)?,
+            read_reg(regs, v)?,
+            adam_step_f(lr, bc1, bc2, eps),
+        ),
     }
 }
 
@@ -934,6 +1110,15 @@ fn eval_reference(instr: &Instr, regs: &[Value]) -> Result<Tensor> {
         }
         Instr::ColSum { a } => col_sum_ref(r(a)?),
         Instr::Axpy { a, b, c } => map2_ref(r(a)?, r(b)?, axpy_f(c)),
+        Instr::Scale { a, c } => Ok(map1_ref(r(a)?, |v| c * v)),
+        Instr::Mul { a, b } => map2_ref(r(a)?, r(b)?, |x, y| x * y),
+        Instr::Blend { a, b, beta } => map2_ref(r(a)?, r(b)?, blend_f(beta)),
+        Instr::ActGradI { g, x, act } => map2_ref(r(g)?, r(x)?, act_grad_input_f(act)),
+        Instr::Concat2 { a, b } => concat_cols(r(a)?, r(b)?),
+        Instr::SliceCols { a, start, len } => slice_cols(r(a)?, start, len),
+        Instr::AdamStep { p, m, v, lr, bc1, bc2, eps } => {
+            map3(r(p)?, r(m)?, r(v)?, adam_step_f(lr, bc1, bc2, eps))
+        }
     }
 }
 
@@ -1065,10 +1250,15 @@ fn forward_program() -> Program {
     p.finish(vec![y])
 }
 
-/// One SGD step: forward, MSE loss, hand-derived reverse-mode backward,
-/// parameter update. ABI matches `model.train_step`:
-/// `(x, y, *params) -> (loss, *new_params)`.
-fn train_step_program() -> Program {
+/// One SGD step at the given learning rate: forward, MSE loss,
+/// hand-derived reverse-mode backward, parameter update. ABI matches
+/// `model.train_step`: `(x, y, *params) -> (loss, *new_params)`.
+///
+/// The legacy `train_step` manifest entry instantiates this at the
+/// compat [`LR`]; the training subsystem ([`crate::train`]) passes the
+/// configured rate instead — the hardcoded constant is no longer the
+/// only way to train.
+pub fn train_step_program(lr: f32) -> Program {
     let mut p = ProgramBuilder::new(10);
     let (x, t) = (0, 1);
     let (w1, b1, w2, b2, w3, b3, w4, b4) = (2, 3, 4, 5, 6, 7, 8, 9);
@@ -1106,7 +1296,7 @@ fn train_step_program() -> Program {
 
     // SGD update.
     let step = |p: &mut ProgramBuilder, param: Reg, grad: Reg| {
-        p.push(Instr::Axpy { a: param, b: grad, c: -LR })
+        p.push(Instr::Axpy { a: param, b: grad, c: -lr })
     };
     let nw1 = step(&mut p, w1, dw1);
     let nb1 = step(&mut p, b1, db1);
@@ -1153,7 +1343,9 @@ fn stage_head_program() -> Program {
 pub fn entry_program(spec: &EntrySpec) -> Result<Program> {
     let program = match spec.name.as_str() {
         "nerf_forward" | "nerf_forward_pallas" => forward_program(),
-        "train_step" => train_step_program(),
+        // Compat shim: the AOT entry keeps its baked-in default rate; the
+        // configurable path is `kitsune::train` (see `train_step_program`).
+        "train_step" => train_step_program(LR),
         "stage_trunk0" => stage_trunk0_program(),
         "stage_trunk1" => stage_trunk1_program(),
         "stage_head" => stage_head_program(),
@@ -1578,7 +1770,7 @@ mod tests {
 
     #[test]
     fn train_step_gradients_match_finite_differences() {
-        let prog = train_step_program();
+        let prog = train_step_program(LR);
         let mut rng = Rng::new(31);
         let (batch, din, hidden, dout) = (8usize, 3usize, 4usize, 2usize);
         let x = Tensor {
@@ -1645,7 +1837,7 @@ mod tests {
 
     #[test]
     fn train_step_descends_on_fixed_batch() {
-        let prog = train_step_program();
+        let prog = train_step_program(LR);
         let mut rng = Rng::new(99);
         let (batch, din, hidden, dout) = (32usize, 6usize, 16usize, 3usize);
         let x = Tensor {
@@ -1735,6 +1927,127 @@ mod tests {
         assert_eq!(plain[0].data, via_ref[0].data);
         // Wrong arity still rejected.
         assert!(exe.run_f32(&[]).is_err());
+    }
+
+    #[test]
+    fn training_instrs_match_reference_bitwise() {
+        // Every new training/optimizer instruction: optimized engine ==
+        // scalar reference oracle, bit for bit (the kernel_equivalence
+        // contract extended to the train ISA).
+        let mut rng = Rng::new(1213);
+        let a = Tensor { dims: vec![5, 4], data: (0..20).map(|_| rng.normal()).collect() };
+        let b = Tensor { dims: vec![5, 4], data: (0..20).map(|_| rng.normal()).collect() };
+        let c = Tensor {
+            dims: vec![5, 4],
+            data: (0..20).map(|_| rng.normal().abs() + 0.1).collect(),
+        };
+        let binaries = [
+            Instr::Mul { a: 0, b: 1 },
+            Instr::Blend { a: 0, b: 1, beta: 0.9 },
+            Instr::Scale { a: 0, c: -0.125 },
+            Instr::Axpy { a: 0, b: 1, c: 1.0 },
+            Instr::Concat2 { a: 0, b: 1 },
+            Instr::SliceCols { a: 0, start: 1, len: 2 },
+            Instr::AdamStep { p: 0, m: 1, v: 2, lr: 1e-3, bc1: 0.1, bc2: 0.01, eps: 1e-8 },
+        ];
+        for instr in binaries {
+            let p = Program { n_inputs: 3, instrs: vec![instr], outputs: vec![3] };
+            let inputs = [a.clone(), b.clone(), c.clone()];
+            let want = p.run_reference(&inputs).unwrap();
+            let got = p.run(&inputs).unwrap();
+            assert_eq!(got[0].dims, want[0].dims, "{instr:?}");
+            let gb: Vec<u32> = got[0].data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want[0].data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "{instr:?} must match the oracle bitwise");
+        }
+        for act in [Act::Relu, Act::Sigmoid, Act::Gelu, Act::Tanh, Act::Silu, Act::Exp] {
+            let p = Program {
+                n_inputs: 2,
+                instrs: vec![Instr::ActGradI { g: 0, x: 1, act }],
+                outputs: vec![2],
+            };
+            let inputs = [a.clone(), b.clone()];
+            let want = p.run_reference(&inputs).unwrap();
+            let got = p.run(&inputs).unwrap();
+            assert_eq!(got[0].data, want[0].data, "{act:?} input-grad");
+        }
+    }
+
+    #[test]
+    fn act_grad_at_matches_finite_differences() {
+        // f'(x) from Act::grad_at vs central differences of Act::apply.
+        let xs = [-1.7f32, -0.4, 0.3, 1.9];
+        let eps = 1e-3f64;
+        for act in [Act::Sigmoid, Act::Gelu, Act::Tanh, Act::Silu, Act::Exp] {
+            for &x in &xs {
+                let fd = (act.apply(x + eps as f32) as f64 - act.apply(x - eps as f32) as f64)
+                    / (2.0 * eps);
+                let an = act.grad_at(x) as f64;
+                assert!(
+                    (fd - an).abs() < 1e-3 + 0.02 * an.abs(),
+                    "{act:?}'({x}): fd {fd} vs analytic {an}"
+                );
+            }
+        }
+        // ReLU subgradient convention: 0 at the kink, 1 above, 0 below.
+        assert_eq!(Act::Relu.grad_at(2.0), 1.0);
+        assert_eq!(Act::Relu.grad_at(-2.0), 0.0);
+        assert_eq!(Act::Relu.grad_at(0.0), 0.0);
+    }
+
+    #[test]
+    fn concat_slice_roundtrip() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = t(&[2, 2], &[7.0, 8.0, 9.0, 10.0]);
+        let p = Program {
+            n_inputs: 2,
+            instrs: vec![
+                Instr::Concat2 { a: 0, b: 1 },
+                Instr::SliceCols { a: 2, start: 0, len: 3 },
+                Instr::SliceCols { a: 2, start: 3, len: 2 },
+            ],
+            outputs: vec![2, 3, 4],
+        };
+        let out = p.run(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(out[0].dims, vec![2, 5]);
+        assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 7.0, 8.0, 4.0, 5.0, 6.0, 9.0, 10.0]);
+        assert_eq!(out[1].data, a.data, "left slice recovers the left operand");
+        assert_eq!(out[2].data, b.data, "right slice recovers the right operand");
+        // Out-of-range slices are rejected.
+        let bad = Program {
+            n_inputs: 1,
+            instrs: vec![Instr::SliceCols { a: 0, start: 2, len: 2 }],
+            outputs: vec![1],
+        };
+        assert!(bad.run(&[a]).is_err());
+    }
+
+    #[test]
+    fn adam_step_values() {
+        // Hand-checked single element: p=1, m=0.1, v=0.04, lr=0.1,
+        // bc1=0.5, bc2=0.2, eps=0 -> p - 0.1 * (0.2 / sqrt(0.2)).
+        let p = Program {
+            n_inputs: 3,
+            instrs: vec![Instr::AdamStep {
+                p: 0,
+                m: 1,
+                v: 2,
+                lr: 0.1,
+                bc1: 0.5,
+                bc2: 0.2,
+                eps: 0.0,
+            }],
+            outputs: vec![3],
+        };
+        let out = p
+            .run(&[
+                t(&[1], &[1.0]),
+                t(&[1], &[0.1]),
+                t(&[1], &[0.04]),
+            ])
+            .unwrap();
+        let want = 1.0 - 0.1 * (0.1 / 0.5) / (0.04f32 / 0.2).sqrt();
+        assert!((out[0].data[0] - want).abs() < 1e-6, "{} vs {want}", out[0].data[0]);
     }
 
     #[test]

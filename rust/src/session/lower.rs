@@ -68,7 +68,9 @@ pub struct LoweredApp {
     pub suggested_tiles: usize,
 }
 
-fn not_streamable(reason: impl Into<String>) -> anyhow::Error {
+/// Typed lowering failure; shared with the training lowering
+/// (`crate::train::lower`), which produces the same error kind.
+pub(crate) fn not_streamable(reason: impl Into<String>) -> anyhow::Error {
     SessionError::NotStreamable { reason: reason.into() }.into()
 }
 
@@ -135,11 +137,34 @@ pub fn lower_app(g: &Graph, app: &CompiledApp, opts: &LowerOptions) -> Result<Lo
         let sf = &app.selection.sf_nodes[pi];
         let spec = design_pipeline(g, sf);
         // Linearity: only consecutive-stage queue edges, exactly one in.
+        // Diagnostics name the concrete producer node and stage pair, and
+        // distinguish fan-out from skip links — both lower fine on the
+        // training DAG pipeline (`kitsune::train`), just not here.
         for e in &spec.edges {
+            let fanout: Vec<usize> = spec
+                .edges
+                .iter()
+                .filter(|e2| e2.producer_node == e.producer_node)
+                .map(|e2| e2.to_stage)
+                .collect();
+            let node = g.node(e.producer_node);
+            if fanout.len() > 1 {
+                return Err(not_streamable(format!(
+                    "pipeline sf{}: `{}` ({}) multicasts from stage {} to stages {:?}; \
+                     linear streaming has no fan-out queues",
+                    sf.id, node.name, node.op, e.from_stage, fanout
+                )));
+            }
             if e.to_stage != e.from_stage + 1 {
                 return Err(not_streamable(format!(
-                    "pipeline sf{} has a non-adjacent queue edge (stage {} -> {}: multicast or skip link)",
-                    sf.id, e.from_stage, e.to_stage
+                    "pipeline sf{}: `{}` ({}) rides a skip link from stage {} to stage {}, \
+                     bypassing {} stage(s); linear streaming has only adjacent queues",
+                    sf.id,
+                    node.name,
+                    node.op,
+                    e.from_stage,
+                    e.to_stage,
+                    e.to_stage - e.from_stage - 1
                 )));
             }
         }
@@ -199,6 +224,7 @@ pub fn lower_app(g: &Graph, app: &CompiledApp, opts: &LowerOptions) -> Result<Lo
             name: format!("{}::session", g.name),
             stages,
             queue_capacity: opts.queue_capacity.max(2),
+            edges: Vec::new(),
         },
         entries,
         tile_rows,
@@ -556,6 +582,30 @@ mod tests {
         }
         assert_eq!(cur.dims, vec![low.tile_rows, low.out_dim]);
         assert!(cur.data.iter().all(|v| (0.0..=1.0).contains(v)), "sigmoid head range");
+    }
+
+    #[test]
+    fn multicast_diagnostics_name_the_node_and_stages() {
+        use crate::graph::{GraphBuilder, GraphKind};
+        // One ew output feeding two GEMMs (Fig 2(c)): the reason must name
+        // the producer node, its op, and the fan-out stage pair — not the
+        // old generic "multicast or skip link" string.
+        let mut b = GraphBuilder::new("mc", GraphKind::Inference);
+        let x = b.input(&[512, 512], "x");
+        let e = b.relu(x, "act");
+        let _m1 = b.linear(e, 512, false, "g1");
+        let _m2 = b.linear(e, 512, false, "g2");
+        let g = b.finish();
+        let app = compile(&g, &GpuConfig::a100(), &SelectOptions::default()).unwrap();
+        let err = lower_app(&g, &app, &LowerOptions::default()).unwrap_err();
+        match err.downcast_ref::<SessionError>() {
+            Some(SessionError::NotStreamable { reason }) => {
+                assert!(reason.contains("`act`"), "{reason}");
+                assert!(reason.contains("multicast"), "{reason}");
+                assert!(reason.contains("ew:Relu"), "{reason}");
+            }
+            other => panic!("expected NotStreamable, got {other:?}"),
+        }
     }
 
     #[test]

@@ -52,6 +52,9 @@ use crate::graph::{EwKind, Graph, GraphBuilder, GraphKind};
 use crate::report::{evaluate_compiled, AppEval};
 use crate::runtime::{bound_executable, ArtifactStore, Backend, Rng, Tensor};
 use crate::sim::GpuConfig;
+use crate::train::{
+    lower_training, OptimizerKind, TrainBatch, TrainPlan, TrainService, Trainer,
+};
 use crate::Result;
 use std::fmt;
 use std::path::PathBuf;
@@ -290,59 +293,94 @@ impl SessionBuilder {
         let mut compiled = None;
         let mut lowered = None;
         let mut service = None;
+        let mut train = None;
         let mut not_streamable = None;
         if let Some(g) = &graph {
             let c = compile(g, &cfg, &select)?;
             let opts = LowerOptions { gemm_workers, queue_capacity, tile_rows, seed };
-            match lower_app(g, &c, &opts) {
-                Ok(low) => {
-                    let LoweredApp {
-                        pipeline,
-                        entries,
-                        tile_rows,
-                        in_dim,
-                        out_dim,
-                        suggested_tiles,
-                    } = low;
-                    let execs = entries
-                        .into_iter()
-                        .map(|(spec, program, weights)| {
-                            let exe = bound_executable(spec.name.clone(), program, weights);
-                            (spec, exe)
-                        })
-                        .collect();
-                    let store = Arc::new(ArtifactStore::from_executables("session", execs));
-                    if warm {
-                        service = Some(PipelineService::start(
-                            Arc::clone(&store),
-                            &pipeline,
-                            vec![tile_rows, in_dim],
-                        )?);
+            if g.backward_start.is_some() {
+                // Training graphs lower onto the DAG pipeline (multicast +
+                // skip links); the linear lowering below can never stream a
+                // backward pass.
+                match lower_training(g, &opts) {
+                    Ok(plan) => {
+                        let plan = Arc::new(plan);
+                        let svc = if warm {
+                            Some(TrainService::start(Arc::clone(&plan))?)
+                        } else {
+                            None
+                        };
+                        train = Some(TrainState { plan, service: svc });
                     }
-                    lowered = Some(LoweredState {
-                        pipeline,
-                        store,
-                        tile_rows,
-                        in_dim,
-                        out_dim,
-                        suggested_tiles,
-                    });
-                }
-                Err(e) => {
-                    if let Some(SessionError::NotStreamable { reason }) =
-                        e.downcast_ref::<SessionError>()
-                    {
-                        not_streamable = Some(reason.clone());
-                    } else {
-                        return Err(e);
+                    Err(e) => {
+                        if let Some(SessionError::NotStreamable { reason }) =
+                            e.downcast_ref::<SessionError>()
+                        {
+                            not_streamable = Some(reason.clone());
+                        } else {
+                            return Err(e);
+                        }
                     }
                 }
+                compiled = Some(c);
+            } else {
+                match lower_app(g, &c, &opts) {
+                    Ok(low) => {
+                        let LoweredApp {
+                            pipeline,
+                            entries,
+                            tile_rows,
+                            in_dim,
+                            out_dim,
+                            suggested_tiles,
+                        } = low;
+                        let execs = entries
+                            .into_iter()
+                            .map(|(spec, program, weights)| {
+                                let exe = bound_executable(spec.name.clone(), program, weights);
+                                (spec, exe)
+                            })
+                            .collect();
+                        let store = Arc::new(ArtifactStore::from_executables("session", execs));
+                        if warm {
+                            service = Some(PipelineService::start(
+                                Arc::clone(&store),
+                                &pipeline,
+                                vec![tile_rows, in_dim],
+                            )?);
+                        }
+                        lowered = Some(LoweredState {
+                            pipeline,
+                            store,
+                            tile_rows,
+                            in_dim,
+                            out_dim,
+                            suggested_tiles,
+                        });
+                    }
+                    Err(e) => {
+                        if let Some(SessionError::NotStreamable { reason }) =
+                            e.downcast_ref::<SessionError>()
+                        {
+                            not_streamable = Some(reason.clone());
+                        } else {
+                            return Err(e);
+                        }
+                    }
+                }
+                compiled = Some(c);
             }
-            compiled = Some(c);
         }
 
-        Ok(Session { name, cfg, graph, compiled, lowered, service, aot, not_streamable })
+        Ok(Session { name, cfg, graph, compiled, lowered, service, train, aot, not_streamable })
     }
+}
+
+/// A training graph lowered onto the DAG pipeline, plus (when warm) its
+/// persistent executor.
+struct TrainState {
+    plan: Arc<TrainPlan>,
+    service: Option<TrainService>,
 }
 
 /// A compiled graph lowered to runnable form, plus its synthesized-entry
@@ -366,6 +404,7 @@ pub struct Session {
     compiled: Option<CompiledApp>,
     lowered: Option<LoweredState>,
     service: Option<PipelineService>,
+    train: Option<TrainState>,
     aot: Option<Arc<ArtifactStore>>,
     not_streamable: Option<String>,
 }
@@ -424,6 +463,41 @@ impl Session {
         self.lowered.is_some()
     }
 
+    /// Whether the graph lowered onto the *training* DAG pipeline —
+    /// [`Session::trainer`] is available (warm sessions only).
+    pub fn is_trainable(&self) -> bool {
+        self.train.is_some()
+    }
+
+    /// The training plan the graph lowered to, when it did.
+    pub fn train_plan(&self) -> Option<&TrainPlan> {
+        self.train.as_ref().map(|t| t.plan.as_ref())
+    }
+
+    /// A training loop driver over this session's warm DAG pipeline,
+    /// with the default optimizer (plain SGD at [`crate::train::DEFAULT_LR`]).
+    pub fn trainer(&self) -> Result<Trainer<'_>> {
+        self.trainer_with(OptimizerKind::default())
+    }
+
+    /// [`Session::trainer`] with an explicit optimizer configuration.
+    pub fn trainer_with(&self, kind: OptimizerKind) -> Result<Trainer<'_>> {
+        match &self.train {
+            Some(TrainState { service: Some(svc), .. }) => Ok(Trainer::new(svc, kind)),
+            Some(TrainState { service: None, .. }) => Err(SessionError::Cold.into()),
+            None => Err(self.no_stream_err()),
+        }
+    }
+
+    /// Deterministic synthetic full-batch training inputs matching the
+    /// plan's sources (normal data, uniform `[0,1)` targets).
+    pub fn make_train_batch(&self, seed: u64) -> Result<TrainBatch> {
+        match self.train_plan() {
+            Some(plan) => Ok(TrainBatch::synthetic(plan, seed)),
+            None => Err(self.no_stream_err()),
+        }
+    }
+
     /// Why the graph cannot stream, when it cannot.
     pub fn not_streamable_reason(&self) -> Option<&str> {
         self.not_streamable.as_deref()
@@ -467,10 +541,17 @@ impl Session {
         self.service.as_ref().map(PipelineService::metrics).unwrap_or_default()
     }
 
-    /// Total threads the warm pool has ever spawned — constant after
-    /// `build()`; asserted by the warm-submit test.
+    /// Total threads the warm pools have ever spawned (inference pipeline
+    /// and/or training DAG) — constant after `build()`; asserted by the
+    /// warm-submit test.
     pub fn threads_spawned(&self) -> usize {
         self.service.as_ref().map(PipelineService::threads_spawned).unwrap_or(0)
+            + self
+                .train
+                .as_ref()
+                .and_then(|t| t.service.as_ref())
+                .map(TrainService::threads_spawned)
+                .unwrap_or(0)
     }
 
     /// Deterministic normal input tiles matching the pipeline's tile spec.
@@ -492,6 +573,9 @@ impl Session {
     /// further submits fail. Idempotent; also runs on `Drop`.
     pub fn shutdown(&self) {
         if let Some(svc) = &self.service {
+            svc.shutdown();
+        }
+        if let Some(TrainState { service: Some(svc), .. }) = &self.train {
             svc.shutdown();
         }
     }

@@ -172,6 +172,12 @@ impl PipelineService {
     ) -> Result<PipelineService> {
         let n_stages = pipeline.stages.len();
         ensure!(n_stages > 0, "pipeline service needs at least one stage");
+        ensure!(
+            pipeline.edges.is_empty(),
+            "pipeline `{}` has explicit DAG queue edges (multicast/skip links); \
+             the linear service cannot execute it — drive it through kitsune::train",
+            pipeline.name
+        );
         let queues: Vec<Arc<RingQueue<Tile>>> = (0..=n_stages)
             .map(|_| RingQueue::with_capacity(pipeline.queue_capacity))
             .collect();

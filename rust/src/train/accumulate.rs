@@ -1,0 +1,68 @@
+//! Microbatch gradient accumulation: per-tile gradients (and losses)
+//! arriving at the pipeline sink are folded **in tile order** and
+//! averaged, so the pipeline's result is reproducible — a serial
+//! re-execution of the same stage programs folds through this exact
+//! function and matches bitwise. (A full-batch oracle differs only by
+//! f32 re-association across the tile boundary; `tests/train_e2e.rs`
+//! checks that case against finite differences instead.)
+
+use crate::runtime::Tensor;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Sum `tiles` in index order, then scale by `1 / tiles.len()` — the
+/// mean per-tile contribution. Every slot must be filled and all tiles
+/// must share dims.
+pub fn mean_in_order(tiles: Vec<Option<Tensor>>) -> Result<Tensor> {
+    let n = tiles.len();
+    ensure!(n > 0, "gradient accumulation over zero tiles");
+    let mut iter = tiles.into_iter().enumerate();
+    let (_, first) = iter.next().expect("n > 0");
+    let mut acc = first.ok_or_else(|| anyhow!("tile 0 missing from accumulation"))?;
+    for (i, t) in iter {
+        let t = t.ok_or_else(|| anyhow!("tile {i} missing from accumulation"))?;
+        ensure!(
+            t.dims == acc.dims,
+            "tile {i} dims {:?} != accumulator dims {:?}",
+            t.dims,
+            acc.dims
+        );
+        for (a, &v) in acc.data.iter_mut().zip(&t.data) {
+            *a += v;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for a in &mut acc.data {
+        *a *= inv;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Option<Tensor> {
+        Some(Tensor { dims: vec![v.len()], data: v.to_vec() })
+    }
+
+    #[test]
+    fn means_in_tile_order() {
+        let out = mean_in_order(vec![t(&[1.0, 2.0]), t(&[3.0, 4.0]), t(&[5.0, 6.0])]).unwrap();
+        assert_eq!(out.data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_or_mismatched_tiles_are_errors() {
+        assert!(mean_in_order(vec![t(&[1.0]), None]).is_err());
+        assert!(mean_in_order(Vec::new()).is_err());
+        let bad = vec![t(&[1.0, 2.0]), Some(Tensor { dims: vec![1], data: vec![3.0] })];
+        assert!(mean_in_order(bad).is_err());
+    }
+
+    #[test]
+    fn single_tile_is_identity_scaled() {
+        let out = mean_in_order(vec![t(&[2.0, 4.0])]).unwrap();
+        assert_eq!(out.data, vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,546 @@
+//! The persistent DAG-pipeline executor behind [`crate::train::Trainer`]:
+//! stage worker threads and per-edge ring queues stood up once, serving
+//! microbatch training steps until shutdown — the training counterpart
+//! of [`crate::session::PipelineService`], generalized from a linear
+//! chain to the multicast / skip-link DAG a [`TrainPlan`] describes.
+//!
+//! Execution model: every stage runs **one** worker; each queue edge has
+//! one producer and one consumer, so FIFO order delivers tile `seq`s in
+//! lockstep and a multi-input stage simply pops one tile from each input
+//! edge — no reorder buffer. Multicast producers push a clone per
+//! consumer queue. Parameters live in one shared `RwLock` store: stage
+//! workers take read locks per tile; the trainer write-locks between
+//! steps (the pipeline is drained then, so updates never race a kernel).
+//!
+//! [`serial_step`] re-executes the same stage programs tile-by-tile on
+//! the calling thread and folds taps through the same accumulator — the
+//! bitwise oracle the pipeline is tested against, and the baseline
+//! `benches/train_throughput.rs` reports speedups over.
+
+use super::accumulate::mean_in_order;
+use super::lower::{TapKind, TrainPlan};
+use crate::queue::{PushError, RingQueue};
+use crate::runtime::interp::ExecPlan;
+use crate::runtime::Tensor;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+/// A sequence-tagged tile on one queue edge.
+type SeqTile = (usize, Tensor);
+
+/// A tap delivery routed to the sink: `(tap index, seq, payload)`.
+type SinkItem = (usize, usize, Tensor);
+
+/// Result of one microbatch step: mean per-tile loss and mean per-tile
+/// parameter gradients (slot `i` pairs with `TrainPlan::params[i]`;
+/// `None` only for parameters without a tapped gradient).
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub grads: Vec<Option<Tensor>>,
+}
+
+/// Where a stage output port's tiles go.
+enum Route {
+    Queue(Arc<RingQueue<SeqTile>>),
+    Sink(usize),
+}
+
+/// In-flight step accounting: slots filled by the sink thread, folded by
+/// the submitting thread once every tap delivered every tile.
+struct StepTable {
+    state: Mutex<StepState>,
+    done: Condvar,
+}
+
+struct StepState {
+    /// `slots[tap][seq]`.
+    slots: Vec<Vec<Option<Tensor>>>,
+    remaining: usize,
+    error: Option<String>,
+    active: bool,
+}
+
+impl StepTable {
+    fn new() -> Self {
+        StepTable {
+            state: Mutex::new(StepState {
+                slots: Vec::new(),
+                remaining: 0,
+                error: None,
+                active: false,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn begin(&self, n_taps: usize, n_tiles: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.slots = vec![vec![None; n_tiles]; n_taps];
+        s.remaining = n_taps * n_tiles;
+        s.active = true;
+    }
+
+    fn complete(&self, tap: usize, seq: usize, t: Tensor) {
+        let mut s = self.state.lock().unwrap();
+        if !s.active {
+            return; // stale delivery from a failed step
+        }
+        let Some(slot) = s.slots.get_mut(tap).and_then(|row| row.get_mut(seq)) else {
+            s.error = Some(format!("sink delivery out of range: tap {tap} seq {seq}"));
+            self.done.notify_all();
+            return;
+        };
+        if slot.is_none() {
+            *slot = Some(t);
+            s.remaining -= 1;
+            if s.remaining == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    fn fail(&self, msg: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.error.is_none() {
+            s.error = Some(msg);
+        }
+        self.done.notify_all();
+    }
+
+    fn wait(&self) -> Result<Vec<Vec<Option<Tensor>>>> {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 && s.error.is_none() {
+            s = self.done.wait(s).unwrap();
+        }
+        s.active = false;
+        if let Some(e) = s.error.take() {
+            return Err(anyhow!(e));
+        }
+        Ok(std::mem::take(&mut s.slots))
+    }
+}
+
+/// Persistent training pipeline: per-edge ring queues, one worker thread
+/// per stage, a sink thread routing taps into the step table, and the
+/// shared mutable parameter store.
+pub struct TrainService {
+    plan: Arc<TrainPlan>,
+    pub(crate) params: Arc<RwLock<Vec<Tensor>>>,
+    /// Per source port: the queues its tiles fan out to.
+    src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>>,
+    table: Arc<StepTable>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    spawned: usize,
+    /// One step in flight at a time; shutdown waits out the current one.
+    step_lock: Mutex<()>,
+    dead: Arc<AtomicBool>,
+    shut: AtomicBool,
+}
+
+impl TrainService {
+    /// Stand up the DAG: queues from the plan's edges, one worker per
+    /// stage, the sink, and the parameter store seeded from the plan's
+    /// deterministic initial values. Threads are created here — never on
+    /// the step path.
+    pub fn start(plan: Arc<TrainPlan>) -> Result<TrainService> {
+        let n_stages = plan.stages.len();
+        ensure!(n_stages > 0, "training pipeline needs at least one stage");
+
+        // Wire queues from the explicit edges.
+        for (si, sp) in plan.stages.iter().enumerate() {
+            ensure!(
+                sp.n_stream > 0,
+                "train stage {si} (`{}`) has no streamed inputs",
+                sp.name
+            );
+        }
+        let mut stage_in: Vec<Vec<Option<Arc<RingQueue<SeqTile>>>>> = plan
+            .stages
+            .iter()
+            .map(|s| vec![None; s.n_stream])
+            .collect();
+        let mut out_routes: Vec<Vec<Vec<Route>>> = plan
+            .stages
+            .iter()
+            .map(|sp| (0..sp.program.outputs.len()).map(|_| Vec::new()).collect())
+            .collect();
+        let mut src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>> =
+            vec![Vec::new(); plan.sources.len()];
+        let sink_q: Arc<RingQueue<SinkItem>> =
+            RingQueue::with_capacity(plan.pipeline.queue_capacity * 4);
+        for e in &plan.pipeline.edges {
+            match e.to {
+                Some(to) => {
+                    let q = RingQueue::with_capacity(e.capacity.max(2));
+                    let slot = stage_in
+                        .get_mut(to)
+                        .and_then(|ports| ports.get_mut(e.to_port))
+                        .ok_or_else(|| anyhow!("edge targets missing port: {e:?}"))?;
+                    ensure!(slot.is_none(), "duplicate edge into port: {e:?}");
+                    *slot = Some(Arc::clone(&q));
+                    match e.from {
+                        Some(from) => out_routes[from][e.from_port].push(Route::Queue(q)),
+                        None => src_routes[e.from_port].push(q),
+                    }
+                }
+                None => {
+                    let from = e
+                        .from
+                        .ok_or_else(|| anyhow!("source-to-sink edge unsupported: {e:?}"))?;
+                    out_routes[from][e.from_port].push(Route::Sink(e.to_port));
+                }
+            }
+        }
+        for (si, ports) in stage_in.iter().enumerate() {
+            for (p, q) in ports.iter().enumerate() {
+                ensure!(q.is_some(), "stage {si} input port {p} has no feeding edge");
+            }
+        }
+
+        let params = Arc::new(RwLock::new(
+            plan.params.iter().map(|p| p.init.clone()).collect::<Vec<Tensor>>(),
+        ));
+        let table = Arc::new(StepTable::new());
+        let dead = Arc::new(AtomicBool::new(false));
+        let latch = Arc::new(AtomicUsize::new(n_stages));
+        let mut handles = Vec::with_capacity(n_stages + 1);
+
+        let mut out_routes_iter = out_routes.into_iter();
+        let mut stage_in_iter = stage_in.into_iter();
+        for (si, sp) in plan.stages.iter().enumerate() {
+            let in_queues: Vec<Arc<RingQueue<SeqTile>>> = stage_in_iter
+                .next()
+                .expect("stage_in parallel to stages")
+                .into_iter()
+                .map(|q| q.expect("validated above"))
+                .collect();
+            let routes = out_routes_iter.next().expect("out_routes parallel to stages");
+            let program = sp.program.clone();
+            let exec_plan = program.plan();
+            let param_idx = sp.param_idx.clone();
+            let name = sp.name.clone();
+            let params = Arc::clone(&params);
+            let table = Arc::clone(&table);
+            let dead = Arc::clone(&dead);
+            let latch = Arc::clone(&latch);
+            let sink_q = Arc::clone(&sink_q);
+            let handle = std::thread::Builder::new()
+                .name(format!("kitsune-train-{si}"))
+                .spawn(move || {
+                    stage_worker(
+                        &name, &program, &exec_plan, &param_idx, &params, &in_queues,
+                        &routes, &sink_q, &table, &dead,
+                    );
+                    // Cascade the exit both ways: downstream consumers see
+                    // end-of-stream, and upstream producers blocked pushing
+                    // into this stage observe Closed instead of hanging.
+                    for q in &in_queues {
+                        q.close();
+                    }
+                    for port in &routes {
+                        for r in port {
+                            if let Route::Queue(q) = r {
+                                q.close();
+                            }
+                        }
+                    }
+                    if latch.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        sink_q.close();
+                    }
+                })
+                .map_err(|e| anyhow!("spawning train stage worker: {e}"))?;
+            handles.push(handle);
+        }
+
+        // Sink: route tap deliveries into the step table.
+        let sink_table = Arc::clone(&table);
+        let sink_handle = std::thread::Builder::new()
+            .name("kitsune-train-sink".to_string())
+            .spawn(move || {
+                while let Some((tap, seq, t)) = sink_q.pop() {
+                    sink_table.complete(tap, seq, t);
+                }
+            })
+            .map_err(|e| anyhow!("spawning train sink: {e}"))?;
+        handles.push(sink_handle);
+        let spawned = n_stages + 1;
+
+        Ok(TrainService {
+            plan,
+            params,
+            src_routes,
+            table,
+            handles: Mutex::new(handles),
+            spawned,
+            step_lock: Mutex::new(()),
+            dead,
+            shut: AtomicBool::new(false),
+        })
+    }
+
+    pub fn plan(&self) -> &TrainPlan {
+        &self.plan
+    }
+
+    /// Snapshot of the current parameter values (plan order).
+    pub fn param_values(&self) -> Vec<Tensor> {
+        self.params.read().unwrap().clone()
+    }
+
+    /// Threads this service spawned (stage workers + sink).
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned
+    }
+
+    /// Run one microbatch step: `tiles[port][seq]` per source port.
+    /// Blocks until every tap drained, then folds gradients/loss in tile
+    /// order. One step runs at a time; parameter updates happen outside
+    /// (see [`crate::train::Trainer`]).
+    pub fn run_step(&self, tiles: Vec<Vec<Tensor>>) -> Result<StepOutput> {
+        let _step = self.step_lock.lock().unwrap();
+        ensure!(
+            !self.dead.load(Ordering::Acquire) && !self.shut.load(Ordering::Acquire),
+            "training pipeline is shut down"
+        );
+        let n_tiles = validate_tiles(&self.plan, &tiles)?;
+        self.table.begin(self.plan.taps.len(), n_tiles);
+        'feed: for seq in 0..n_tiles {
+            for (port, routes) in self.src_routes.iter().enumerate() {
+                for q in routes {
+                    let payload = (seq, tiles[port][seq].clone());
+                    if let Err(PushError::Closed(_)) = q.push(payload) {
+                        self.table.fail("training pipeline closed during feed".to_string());
+                        break 'feed;
+                    }
+                }
+            }
+        }
+        let slots = self.table.wait()?;
+        fold_taps(&self.plan, slots)
+    }
+
+    /// Close every source queue and join the workers. Idempotent; waits
+    /// out an in-flight step first.
+    pub fn shutdown(&self) {
+        {
+            let _step = self.step_lock.lock().unwrap();
+            if self.shut.swap(true, Ordering::AcqRel) {
+                return;
+            }
+            for routes in &self.src_routes {
+                for q in routes {
+                    q.close();
+                }
+            }
+        }
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TrainService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One stage worker: pop one tile per input edge (sequence-aligned by
+/// FIFO construction), run the stage program against the current
+/// parameters, route each output port (cloning per extra consumer).
+#[allow(clippy::too_many_arguments)]
+fn stage_worker(
+    name: &str,
+    program: &crate::runtime::interp::Program,
+    exec_plan: &ExecPlan,
+    param_idx: &[usize],
+    params: &RwLock<Vec<Tensor>>,
+    in_queues: &[Arc<RingQueue<SeqTile>>],
+    routes: &[Vec<Route>],
+    sink_q: &RingQueue<SinkItem>,
+    table: &StepTable,
+    dead: &AtomicBool,
+) {
+    let mut ins: Vec<SeqTile> = Vec::with_capacity(in_queues.len());
+    'serve: loop {
+        ins.clear();
+        for q in in_queues {
+            match q.pop() {
+                Some(v) => ins.push(v),
+                None => break 'serve,
+            }
+        }
+        let seq = ins[0].0;
+        if ins.iter().any(|(s, _)| *s != seq) {
+            dead.store(true, Ordering::Release);
+            table.fail(format!("stage {name}: input streams desynchronized"));
+            break 'serve;
+        }
+        let result = {
+            let guard = params.read().unwrap();
+            let mut args: Vec<&Tensor> = ins.iter().map(|(_, t)| t).collect();
+            args.extend(param_idx.iter().map(|&i| &guard[i]));
+            program.run_with_plan(&args, &[], exec_plan)
+        };
+        let outs = match result {
+            Ok(outs) => outs,
+            Err(e) => {
+                dead.store(true, Ordering::Release);
+                table.fail(format!("train stage {name} failed: {e:#}"));
+                break 'serve;
+            }
+        };
+        if outs.len() != routes.len() {
+            dead.store(true, Ordering::Release);
+            table.fail(format!(
+                "train stage {name}: {} outputs for {} ports",
+                outs.len(),
+                routes.len()
+            ));
+            break 'serve;
+        }
+        for (port, out) in outs.into_iter().enumerate() {
+            let port_routes = &routes[port];
+            let n = port_routes.len();
+            if n == 0 {
+                continue;
+            }
+            // Multicast: clone for every consumer but the last.
+            for r in &port_routes[..n - 1] {
+                if !send(r, seq, out.clone(), sink_q) {
+                    break 'serve;
+                }
+            }
+            if !send(&port_routes[n - 1], seq, out, sink_q) {
+                break 'serve;
+            }
+        }
+    }
+}
+
+/// Deliver one tile along a route; `false` means the destination closed
+/// (shutdown or failure cascade) and the worker should exit.
+fn send(route: &Route, seq: usize, t: Tensor, sink_q: &RingQueue<SinkItem>) -> bool {
+    match route {
+        Route::Queue(q) => q.push((seq, t)).is_ok(),
+        Route::Sink(tap) => sink_q.push((*tap, seq, t)).is_ok(),
+    }
+}
+
+/// Check one step's tile table against the plan: every source supplies
+/// the same number of `[tile_rows, d]` tiles. Returns the tile count.
+fn validate_tiles(plan: &TrainPlan, tiles: &[Vec<Tensor>]) -> Result<usize> {
+    ensure!(
+        tiles.len() == plan.sources.len(),
+        "step supplies {} sources, plan has {} ({:?})",
+        tiles.len(),
+        plan.sources.len(),
+        plan.sources.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+    );
+    let n_tiles = tiles.first().map(|t| t.len()).unwrap_or(0);
+    ensure!(n_tiles > 0, "step needs at least one tile");
+    for (port, (per_src, spec)) in tiles.iter().zip(&plan.sources).enumerate() {
+        ensure!(
+            per_src.len() == n_tiles,
+            "source `{}` supplies {} tiles, expected {n_tiles}",
+            spec.name,
+            per_src.len()
+        );
+        let want = vec![plan.tile_rows, spec.dims[1]];
+        for t in per_src {
+            ensure!(
+                t.dims == want,
+                "source `{}` (port {port}) tile dims {:?} != {want:?}",
+                spec.name,
+                t.dims
+            );
+        }
+    }
+    Ok(n_tiles)
+}
+
+/// Fold completed tap slots into the step result — mean over tiles in
+/// tile order, identical for the pipeline and the serial oracle.
+fn fold_taps(plan: &TrainPlan, mut slots: Vec<Vec<Option<Tensor>>>) -> Result<StepOutput> {
+    let mut loss = f32::NAN;
+    let mut grads: Vec<Option<Tensor>> = vec![None; plan.params.len()];
+    for (tap, spec) in plan.taps.iter().enumerate() {
+        let folded = mean_in_order(std::mem::take(&mut slots[tap]))?;
+        match spec.kind {
+            TapKind::Loss => loss = folded.scalar_value(),
+            TapKind::Grad { param } => grads[param] = Some(folded),
+        }
+    }
+    Ok(StepOutput { loss, grads })
+}
+
+/// Serial oracle / baseline: execute the same stage programs tile by
+/// tile on the calling thread (explicit `params`, plan order) and fold
+/// the same taps. Bitwise-identical to the pipeline by construction —
+/// same programs, same per-tile values, same fold order.
+pub fn serial_step(
+    plan: &TrainPlan,
+    params: &[Tensor],
+    tiles: &[Vec<Tensor>],
+) -> Result<StepOutput> {
+    ensure!(
+        params.len() == plan.params.len(),
+        "serial step got {} params, plan has {}",
+        params.len(),
+        plan.params.len()
+    );
+    let n_tiles = validate_tiles(plan, tiles)?;
+    let exec_plans: Vec<ExecPlan> = plan.stages.iter().map(|s| s.program.plan()).collect();
+    // Per-stage input edges by port, plus the sink edges.
+    let mut in_edges: Vec<Vec<&crate::coordinator::PipeEdge>> =
+        vec![Vec::new(); plan.stages.len()];
+    let mut sink_edges: Vec<&crate::coordinator::PipeEdge> = Vec::new();
+    for e in &plan.pipeline.edges {
+        match e.to {
+            Some(to) => in_edges[to].push(e),
+            None => sink_edges.push(e),
+        }
+    }
+    for edges in &mut in_edges {
+        edges.sort_by_key(|e| e.to_port);
+    }
+
+    let mut slots: Vec<Vec<Option<Tensor>>> = vec![vec![None; n_tiles]; plan.taps.len()];
+    for seq in 0..n_tiles {
+        let mut vals: HashMap<(usize, usize), Tensor> = HashMap::new();
+        for (si, sp) in plan.stages.iter().enumerate() {
+            let outs = {
+                let mut args: Vec<&Tensor> = Vec::with_capacity(sp.n_stream + sp.param_idx.len());
+                for e in &in_edges[si] {
+                    let v = match e.from {
+                        None => &tiles[e.from_port][seq],
+                        Some(ps) => vals
+                            .get(&(ps, e.from_port))
+                            .ok_or_else(|| anyhow!("edge {e:?} has no produced value"))?,
+                    };
+                    args.push(v);
+                }
+                args.extend(sp.param_idx.iter().map(|&i| &params[i]));
+                sp.program.run_with_plan(&args, &[], &exec_plans[si])?
+            };
+            for (p, o) in outs.into_iter().enumerate() {
+                vals.insert((si, p), o);
+            }
+        }
+        for e in &sink_edges {
+            let from = e.from.expect("sink edges originate at stages");
+            let v = vals
+                .get(&(from, e.from_port))
+                .ok_or_else(|| anyhow!("sink edge {e:?} has no produced value"))?
+                .clone();
+            slots[e.to_port][seq] = Some(v);
+        }
+    }
+    fold_taps(plan, slots)
+}

@@ -1,0 +1,779 @@
+//! Lowering autodiff training graphs onto the coordinator's DAG
+//! pipeline: forward, backward, and loss nodes become stages connected
+//! by explicit [`PipeEdge`]s — including the two shapes the linear
+//! session lowering rejects and the paper's training evaluation lives
+//! on (§6.4, Figs 12/14):
+//!
+//! * **multicast fan-out** (Fig 2(c)) — a saved activation feeds its
+//!   forward consumer *and* the paired gradient GEMMs, so one producer
+//!   port drives several queues;
+//! * **skip links** (Fig 2(b) pipelines) — a forward value bypasses
+//!   every intermediate stage straight to its backward consumer
+//!   (weight-gradient GEMMs contract a stage-0 activation against a
+//!   late-stage gradient).
+//!
+//! The unit of streaming is a row tile: every graph input, the training
+//! target, and every intermediate streams `[tile_rows, d]` slices.
+//! Per-tile parameter gradients leave the pipeline through sink taps and
+//! are averaged across the microbatch *in tile order*
+//! ([`crate::train::accumulate`]), so a serial re-execution of the same
+//! stage programs reproduces the pipeline's gradients bitwise.
+//!
+//! Graphs whose live training region contains ops without streaming
+//! kernels (gathers/scatters, batched attention matmuls, softmax /
+//! layernorm backward) produce a typed
+//! [`SessionError::NotStreamable`](crate::session::SessionError) whose
+//! reason names the concrete node and op — those apps keep
+//! `Session::simulate()`.
+
+use crate::coordinator::{PipeEdge, SpatialPipeline, StageSpec};
+use crate::graph::{EwKind, Graph, NodeId, OpKind, ReduceAxis, ResourceClass};
+use crate::runtime::interp::{Act, Instr, Program, Reg};
+use crate::runtime::{Rng, Tensor};
+use crate::session::lower::{fuse_program, not_streamable, LowerOptions};
+use crate::Result;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// One lowered pipeline stage: a synthesized SSA program whose inputs
+/// are `n_stream` streamed ports followed by the stage's parameters
+/// (resolved through [`TrainPlan::params`] via `param_idx`).
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub name: String,
+    pub program: Program,
+    /// Streamed input ports (program inputs `0..n_stream`).
+    pub n_stream: usize,
+    /// Global parameter indices bound as program inputs `n_stream..`.
+    pub param_idx: Vec<usize>,
+}
+
+/// A named learnable parameter with its deterministic initial value.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub init: Tensor,
+}
+
+/// One streamed pipeline source: a graph input, or the synthesized
+/// training target (always the last source). Dims are full-batch;
+/// the trainer slices `[tile_rows, d]` row tiles from them.
+#[derive(Debug, Clone)]
+pub struct SourceSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+/// What a sink tap carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapKind {
+    /// Per-tile MSE loss (scalar).
+    Loss,
+    /// Per-tile gradient of `params[param]`.
+    Grad { param: usize },
+}
+
+/// One sink tap of the training pipeline.
+#[derive(Debug, Clone)]
+pub struct TapSpec {
+    pub name: String,
+    pub kind: TapKind,
+}
+
+/// A training graph lowered to runnable DAG-pipeline form.
+#[derive(Debug, Clone)]
+pub struct TrainPlan {
+    /// The coordinator pipeline: stage specs plus explicit DAG queue
+    /// edges (multicast fan-out, skip links, source/sink edges).
+    pub pipeline: SpatialPipeline,
+    /// Per-stage synthesized programs, parallel to `pipeline.stages`.
+    pub stages: Vec<StagePlan>,
+    /// Named parameters in deterministic first-use (stage) order.
+    pub params: Vec<ParamSpec>,
+    /// Streamed sources (graph inputs ++ target).
+    pub sources: Vec<SourceSpec>,
+    /// Sink taps: `taps[0]` is the loss, the rest parameter gradients.
+    pub taps: Vec<TapSpec>,
+    /// Rows per streamed tile.
+    pub tile_rows: usize,
+    /// Full-batch rows (every source's leading dim).
+    pub batch_rows: usize,
+}
+
+impl TrainPlan {
+    /// Tiles per microbatch step.
+    pub fn n_tiles(&self) -> usize {
+        (self.batch_rows / self.tile_rows).max(1)
+    }
+
+    /// Stage-to-stage edges that skip at least one intermediate stage
+    /// (saved-activation links).
+    pub fn n_skip_links(&self) -> usize {
+        let n = self.pipeline.stages.len();
+        self.pipeline
+            .edges
+            .iter()
+            .filter(|e| e.from.is_some() && e.to.is_some() && e.span(n) > 1)
+            .count()
+    }
+
+    /// Producer ports feeding more than one queue (Fig 2(c) fan-out).
+    pub fn n_multicasts(&self) -> usize {
+        let mut count: HashMap<(Option<usize>, usize), usize> = HashMap::new();
+        for e in &self.pipeline.edges {
+            *count.entry((e.from, e.from_port)).or_insert(0) += 1;
+        }
+        count.values().filter(|&&c| c > 1).count()
+    }
+}
+
+/// External (streamed) value a stage consumes: another node's output or
+/// the synthesized training target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum ExtKey {
+    Node(NodeId),
+    Target,
+}
+
+/// Per-stage synthesis output.
+struct StageBuild {
+    anchor: NodeId,
+    /// Streamed inputs in port order.
+    ext: Vec<ExtKey>,
+    /// Param nodes bound after the streamed ports, in program order.
+    params: Vec<NodeId>,
+    program: Program,
+    /// Output ports: member nodes whose value leaves the stage, id order.
+    out_nodes: Vec<NodeId>,
+}
+
+/// Lower a training graph (forward ++ backward ++ optimizer markers, as
+/// produced by [`crate::graph::training_graph`]) into a [`TrainPlan`].
+pub fn lower_training(g: &Graph, opts: &LowerOptions) -> Result<TrainPlan> {
+    if g.backward_start.is_none() {
+        return Err(not_streamable(format!(
+            "graph `{}` has no backward pass; use the inference lowering",
+            g.name
+        )));
+    }
+
+    // 1. The optimizer markers name the parameters and their final
+    //    accumulated gradients; the updates themselves run in the
+    //    trainer's weight-update stage (`train::Optimizer`), not here.
+    let mut grad_of_param: Vec<(NodeId, NodeId)> = Vec::new(); // (param, grad)
+    for n in g.nodes() {
+        if matches!(n.op, OpKind::OptimizerUpdate) {
+            grad_of_param.push((n.inputs[0], n.inputs[1]));
+        }
+    }
+    if grad_of_param.is_empty() {
+        return Err(not_streamable(format!(
+            "training graph `{}` has no optimizer-update nodes, so no parameter \
+             gradients can be tapped",
+            g.name
+        )));
+    }
+
+    // 2. Loss head: exactly one Loss node, consumed only by its seed
+    //    (the autodiff `loss_grad` Scale node).
+    let losses: Vec<NodeId> = g
+        .nodes()
+        .iter()
+        .filter(|n| matches!(n.op, OpKind::Loss))
+        .map(|n| n.id)
+        .collect();
+    let loss = match losses.as_slice() {
+        [one] => *one,
+        [] => {
+            return Err(not_streamable(format!(
+                "training graph `{}` has no Loss head; streaming training needs one",
+                g.name
+            )))
+        }
+        many => {
+            return Err(not_streamable(format!(
+                "training graph `{}` has {} Loss heads; streaming training needs exactly 1",
+                g.name,
+                many.len()
+            )))
+        }
+    };
+    let y_node = g.node(loss).inputs[0];
+    let seed = match g.consumers(loss) {
+        [one] if matches!(g.node(*one).op, OpKind::Elementwise(EwKind::Scale)) => *one,
+        other => {
+            return Err(not_streamable(format!(
+                "loss `{}` must feed exactly one gradient seed, found consumers {other:?}",
+                g.node(loss).name
+            )))
+        }
+    };
+
+    // 3. Liveness: only nodes that actually reach the loss or a tapped
+    //    parameter gradient are lowered (dead heads like NeRF's unused
+    //    sigma branch and the useless input-gradient chains are pruned,
+    //    exactly like an eager autograd engine skips them).
+    let mut live: HashSet<NodeId> = HashSet::new();
+    let mut work: Vec<NodeId> = vec![loss];
+    work.extend(grad_of_param.iter().map(|&(_, grad)| grad));
+    while let Some(nid) = work.pop() {
+        if live.insert(nid) {
+            work.extend(g.node(nid).inputs.iter().copied());
+        }
+    }
+
+    // 3b. Name the op that blocks streaming *before* shape checks, so
+    //     fallback reasons point at the §5.1 exclusion (the gather), not
+    //     at its index input's rank.
+    for n in g.nodes() {
+        if !live.contains(&n.id) {
+            continue;
+        }
+        match &n.op {
+            OpKind::Gather { .. } | OpKind::Scatter => {
+                return Err(not_streamable(format!(
+                    "op `{}` ({}) indexes across all data (§5.1 exclusion); the \
+                     training pipeline cannot stream it — Session::simulate() still \
+                     covers this app",
+                    n.name,
+                    n.op.mnemonic()
+                )))
+            }
+            OpKind::Interaction { .. } | OpKind::Softmax | OpKind::LayerNorm => {
+                return Err(not_streamable(format!(
+                    "op `{}` ({}) has no streaming training kernel yet",
+                    n.name,
+                    n.op.mnemonic()
+                )))
+            }
+            _ => {}
+        }
+    }
+
+    // 4. Streamed sources: live graph inputs (row-major `[batch, d]`)
+    //    plus the synthesized target, which shares the prediction's dims.
+    let input_ids: Vec<NodeId> = g
+        .nodes()
+        .iter()
+        .filter(|n| matches!(n.op, OpKind::Input) && live.contains(&n.id))
+        .map(|n| n.id)
+        .collect();
+    if input_ids.is_empty() {
+        return Err(not_streamable(format!(
+            "training graph `{}` has no live inputs to stream",
+            g.name
+        )));
+    }
+    for &i in &input_ids {
+        let n = g.node(i);
+        if n.out.shape.dims().len() != 2 {
+            return Err(not_streamable(format!(
+                "input `{}` has rank-{} shape {:?}; row streaming needs rank 2",
+                n.name,
+                n.out.shape.dims().len(),
+                n.out.shape.dims()
+            )));
+        }
+    }
+    let batch_rows = g.node(input_ids[0]).out.shape.leading();
+    for &i in &input_ids {
+        if g.node(i).out.shape.leading() != batch_rows {
+            return Err(not_streamable(format!(
+                "input `{}` has {} rows; all streamed inputs must share the batch \
+                 dimension ({batch_rows})",
+                g.node(i).name,
+                g.node(i).out.shape.leading()
+            )));
+        }
+    }
+    let y_dims = g.node(y_node).out.shape.dims().to_vec();
+    if y_dims.len() != 2 || y_dims[0] != batch_rows {
+        return Err(not_streamable(format!(
+            "prediction `{}` has shape {y_dims:?}; streaming training needs `[batch, d]` \
+             with batch = {batch_rows}",
+            g.node(y_node).name
+        )));
+    }
+    // Default tile size: the largest divisor of the batch at or below
+    // batch/16 (1 always divides, so the default never rejects a graph);
+    // an explicit .tile_rows() must divide exactly.
+    let tile_rows = opts.tile_rows.unwrap_or_else(|| {
+        let mut t = (batch_rows / 16).max(1);
+        while batch_rows % t != 0 {
+            t -= 1;
+        }
+        t
+    });
+    let tile_rows = tile_rows.max(1);
+    if batch_rows % tile_rows != 0 {
+        return Err(not_streamable(format!(
+            "tile_rows {tile_rows} does not divide the batch ({batch_rows} rows); \
+             gradient averaging needs equal tiles"
+        )));
+    }
+    let mut sources: Vec<SourceSpec> = input_ids
+        .iter()
+        .map(|&i| SourceSpec {
+            name: g.node(i).name.clone(),
+            dims: g.node(i).out.shape.dims().to_vec(),
+        })
+        .collect();
+    sources.push(SourceSpec { name: "target".to_string(), dims: y_dims });
+    let mut src_port: HashMap<ExtKey, usize> = input_ids
+        .iter()
+        .enumerate()
+        .map(|(p, &i)| (ExtKey::Node(i), p))
+        .collect();
+    src_port.insert(ExtKey::Target, input_ids.len());
+
+    // 5. Stage partition: one stage per live compute node in topological
+    //    order (the loss and its seed share one stage; optimizer markers
+    //    are not lowered). The linear lowering's epilogue fusion never
+    //    fires in training graphs — every pre-activation is also read by
+    //    its activation-gradient node — so stages stay one-op.
+    let mut stage_members: Vec<Vec<NodeId>> = Vec::new();
+    let mut stage_of: HashMap<NodeId, usize> = HashMap::new();
+    for n in g.nodes() {
+        if !live.contains(&n.id)
+            || !n.op.is_compute()
+            || matches!(n.op, OpKind::OptimizerUpdate)
+        {
+            continue;
+        }
+        if n.id == seed {
+            // Rides in the loss stage created when `loss` was visited.
+            let si = stage_of[&loss];
+            stage_members[si].push(n.id);
+            stage_of.insert(n.id, si);
+            continue;
+        }
+        let si = stage_members.len();
+        stage_members.push(vec![n.id]);
+        stage_of.insert(n.id, si);
+    }
+
+    let tapped: HashSet<NodeId> = std::iter::once(loss)
+        .chain(grad_of_param.iter().map(|&(_, grad)| grad))
+        .collect();
+
+    // 6. Synthesize each stage's SSA program.
+    let mut builds: Vec<StageBuild> = Vec::with_capacity(stage_members.len());
+    for (si, members) in stage_members.iter().enumerate() {
+        builds.push(synth_train_stage(
+            g, si, members, &stage_of, &live, loss, seed, &tapped,
+        )?);
+    }
+
+    // 7. Parameter registry in first-use (stage) order, He-initialized
+    //    deterministically from the session seed.
+    let mut param_ids: Vec<NodeId> = Vec::new();
+    let mut param_pos: HashMap<NodeId, usize> = HashMap::new();
+    for b in &builds {
+        for &p in &b.params {
+            param_pos.entry(p).or_insert_with(|| {
+                param_ids.push(p);
+                param_ids.len() - 1
+            });
+        }
+    }
+    let mut rng = Rng::new(opts.seed);
+    let mut seen_names: HashSet<String> = HashSet::new();
+    let params: Vec<ParamSpec> = param_ids
+        .iter()
+        .map(|&p| {
+            let mut name = g.node(p).name.clone();
+            if !seen_names.insert(name.clone()) {
+                // Duplicate label in the user graph: disambiguate by node
+                // id so optimizer state (keyed by name) stays
+                // per-parameter instead of silently shared.
+                name = format!("{name}#{}", p.0);
+                seen_names.insert(name.clone());
+            }
+            ParamSpec { name, init: rng.he_tensor(g.node(p).out.shape.dims()) }
+        })
+        .collect();
+
+    // 8. Taps: loss first, then parameter gradients in optimizer order.
+    let mut taps: Vec<TapSpec> = vec![TapSpec { name: "loss".to_string(), kind: TapKind::Loss }];
+    let mut tap_edges: Vec<(usize, NodeId)> = vec![(0, loss)]; // (tap idx, producer node)
+    for &(p, grad) in &grad_of_param {
+        // A parameter whose forward use was pruned cannot carry a live
+        // gradient (liveness seeds from the gradient itself), so the
+        // lookup only misses on malformed graphs; skip rather than panic.
+        let Some(&pi) = param_pos.get(&p) else { continue };
+        taps.push(TapSpec { name: params[pi].name.clone(), kind: TapKind::Grad { param: pi } });
+        tap_edges.push((taps.len() - 1, grad));
+    }
+
+    // 9. Queue edges: stage ext ports, source fan-out, sink taps. Skip
+    //    links get rings deepened by their span so the bypassed stages'
+    //    in-flight window cannot wedge the producer.
+    let base_cap = opts.queue_capacity.max(2);
+    let mut out_port_of: HashMap<(usize, NodeId), usize> = HashMap::new();
+    for (si, b) in builds.iter().enumerate() {
+        for (p, &nid) in b.out_nodes.iter().enumerate() {
+            out_port_of.insert((si, nid), p);
+        }
+    }
+    let n_stages = builds.len();
+    let mut edges: Vec<PipeEdge> = Vec::new();
+    for (si, b) in builds.iter().enumerate() {
+        for (q, key) in b.ext.iter().enumerate() {
+            let (from, from_port) = match key {
+                ExtKey::Target => (None, src_port[&ExtKey::Target]),
+                ExtKey::Node(nid) if matches!(g.node(*nid).op, OpKind::Input) => {
+                    (None, src_port[key])
+                }
+                ExtKey::Node(nid) => {
+                    let ps = stage_of[nid];
+                    (Some(ps), out_port_of[&(ps, *nid)])
+                }
+            };
+            let mut edge =
+                PipeEdge { from, from_port, to: Some(si), to_port: q, capacity: base_cap };
+            edge.capacity = (base_cap * edge.span(n_stages)).min(base_cap * 8);
+            edges.push(edge);
+        }
+    }
+    for &(tap, nid) in &tap_edges {
+        let ps = stage_of[&nid];
+        edges.push(PipeEdge {
+            from: Some(ps),
+            from_port: out_port_of[&(ps, nid)],
+            to: None,
+            to_port: tap,
+            capacity: base_cap,
+        });
+    }
+
+    // 10. Assemble the coordinator pipeline + parallel stage plans.
+    let mut stage_specs: Vec<StageSpec> = Vec::with_capacity(builds.len());
+    let mut stage_plans: Vec<StagePlan> = Vec::with_capacity(builds.len());
+    for (si, b) in builds.into_iter().enumerate() {
+        let anchor = g.node(b.anchor);
+        let name = format!("t{si}.{}", anchor.name);
+        let class = if matches!(anchor.op, OpKind::Matmul { .. }) {
+            ResourceClass::Tensor
+        } else {
+            ResourceClass::Simt
+        };
+        stage_specs.push(StageSpec {
+            name: name.clone(),
+            entry: name.clone(),
+            class,
+            weights: Arc::new(Vec::new()),
+            // Single worker per stage: the DAG executor relies on FIFO
+            // edges delivering tiles in sequence order, so stage-internal
+            // parallelism comes from the blocked matmul kernels instead.
+            workers: 1,
+        });
+        stage_plans.push(StagePlan {
+            name,
+            program: b.program,
+            n_stream: b.ext.len(),
+            param_idx: b.params.iter().map(|p| param_pos[p]).collect(),
+        });
+    }
+
+    Ok(TrainPlan {
+        pipeline: SpatialPipeline {
+            name: format!("{}::train", g.name),
+            stages: stage_specs,
+            queue_capacity: base_cap,
+            edges,
+        },
+        stages: stage_plans,
+        params,
+        sources,
+        taps,
+        tile_rows,
+        batch_rows,
+    })
+}
+
+/// Synthesize one stage's program. `members` is one live compute node —
+/// or `[loss, seed]` for the loss stage, which emits the MSE loss and
+/// its gradient against the streamed target in a single pass.
+#[allow(clippy::too_many_arguments)]
+fn synth_train_stage(
+    g: &Graph,
+    si: usize,
+    members: &[NodeId],
+    stage_of: &HashMap<NodeId, usize>,
+    live: &HashSet<NodeId>,
+    loss: NodeId,
+    seed: NodeId,
+    tapped: &HashSet<NodeId>,
+) -> Result<StageBuild> {
+    let in_stage: HashSet<NodeId> = members.iter().copied().collect();
+
+    // Pre-scan: streamed externals and parameters in first-use order.
+    let mut ext: Vec<ExtKey> = Vec::new();
+    let mut ext_map: HashMap<ExtKey, usize> = HashMap::new();
+    let mut params: Vec<NodeId> = Vec::new();
+    for &nid in members {
+        if nid == seed {
+            continue; // reads the same y/target ports as the loss below
+        }
+        for &i in &g.node(nid).inputs {
+            if in_stage.contains(&i) {
+                continue;
+            }
+            if matches!(g.node(i).op, OpKind::Param) {
+                if !params.contains(&i) {
+                    params.push(i);
+                }
+            } else if !ext_map.contains_key(&ExtKey::Node(i)) {
+                ext_map.insert(ExtKey::Node(i), ext.len());
+                ext.push(ExtKey::Node(i));
+            }
+        }
+        if nid == loss && !ext_map.contains_key(&ExtKey::Target) {
+            ext_map.insert(ExtKey::Target, ext.len());
+            ext.push(ExtKey::Target);
+        }
+    }
+    let n_inputs = ext.len() + params.len();
+    let param_reg: HashMap<NodeId, Reg> =
+        params.iter().enumerate().map(|(k, &p)| (p, ext.len() + k)).collect();
+
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut reg_of: HashMap<NodeId, Reg> = HashMap::new();
+    for &nid in members {
+        let node = g.node(nid);
+        let resolve = |i: NodeId| -> Result<Reg> {
+            if let Some(&r) = reg_of.get(&i) {
+                return Ok(r);
+            }
+            if let Some(&r) = param_reg.get(&i) {
+                return Ok(r);
+            }
+            ext_map.get(&ExtKey::Node(i)).copied().ok_or_else(|| {
+                not_streamable(format!(
+                    "stage op `{}` consumes `{}`, which reached no streamed port",
+                    node.name,
+                    g.node(i).name
+                ))
+            })
+        };
+        let mut push = |instr: Instr| -> Reg {
+            let r = n_inputs + instrs.len();
+            instrs.push(instr);
+            r
+        };
+        let reg = match &node.op {
+            OpKind::Loss => {
+                let y = resolve(node.inputs[0])?;
+                let t = ext_map[&ExtKey::Target];
+                push(Instr::MseLoss { y, t })
+            }
+            // The seed (`loss_grad`): dL/dy of the same MSE, against the
+            // streamed target — this is where the graph's abstract Scale
+            // node becomes a concrete kernel.
+            OpKind::Elementwise(EwKind::Scale) if nid == seed => {
+                let y = resolve(g.node(loss).inputs[0])?;
+                let t = ext_map[&ExtKey::Target];
+                push(Instr::MseGrad { y, t })
+            }
+            OpKind::Matmul { b, m, n, k } => {
+                let (b, m, n, k) = (*b, *m, *n, *k);
+                if b != 1 {
+                    return Err(not_streamable(format!(
+                        "batched matmul `{}` (b={b}) cannot stream row tiles",
+                        node.name
+                    )));
+                }
+                let x = node.inputs[0];
+                let w = node.inputs[1];
+                let xd = g.node(x).out.shape.dims().to_vec();
+                let wd = g.node(w).out.shape.dims().to_vec();
+                if !g.is_backward(nid) {
+                    // Forward linear: weight (and optional bias) are params.
+                    let wreg = *param_reg.get(&w).ok_or_else(|| {
+                        not_streamable(format!(
+                            "matmul `{}` weight `{}` is not a parameter; only linear \
+                             layers stream",
+                            node.name,
+                            g.node(w).name
+                        ))
+                    })?;
+                    let xr = resolve(x)?;
+                    let mut r = push(Instr::Matmul { a: xr, b: wreg });
+                    if let Some(&bias) = node.inputs.get(2) {
+                        let breg = *param_reg.get(&bias).ok_or_else(|| {
+                            not_streamable(format!(
+                                "matmul `{}` bias is not a parameter",
+                                node.name
+                            ))
+                        })?;
+                        r = push(Instr::AddBias { a: r, bias: breg });
+                    }
+                    r
+                } else if matches!(g.node(w).op, OpKind::Param) {
+                    // Data gradient: dX = dY @ Wᵀ (W stored `[k_fwd, n_fwd]`,
+                    // i.e. `[n, k]` in this node's declared dims).
+                    if wd != [n, k] {
+                        return Err(not_streamable(format!(
+                            "backward matmul `{}` operand shapes {xd:?} x {wd:?} do \
+                             not match a data-gradient GEMM",
+                            node.name
+                        )));
+                    }
+                    let dyr = resolve(x)?;
+                    push(Instr::MatmulNt { a: dyr, b: param_reg[&w] })
+                } else {
+                    // Weight gradient: dW = Xᵀ @ dY, contracting the batch
+                    // (per-tile partial sums, averaged at the sink).
+                    if xd != [k, m] || wd != [k, n] {
+                        return Err(not_streamable(format!(
+                            "backward matmul `{}` operand shapes {xd:?} x {wd:?} do \
+                             not match a weight-gradient GEMM",
+                            node.name
+                        )));
+                    }
+                    let xr = resolve(x)?;
+                    let dyr = resolve(w)?;
+                    push(Instr::MatmulTn { a: xr, b: dyr })
+                }
+            }
+            OpKind::Elementwise(EwKind::ActGrad) => {
+                let dy = node.inputs[0];
+                let x = node.inputs[1];
+                let mut kinds: Vec<Act> = Vec::new();
+                for &c in g.consumers(x) {
+                    if g.is_backward(c) {
+                        continue;
+                    }
+                    if let OpKind::Elementwise(ew) = g.node(c).op {
+                        if let Some(k) = act_of(ew) {
+                            if !kinds.contains(&k) {
+                                kinds.push(k);
+                            }
+                        }
+                    }
+                }
+                let act = match kinds.as_slice() {
+                    [one] => *one,
+                    _ => {
+                        return Err(not_streamable(format!(
+                            "activation gradient `{}` cannot identify a unique forward \
+                             activation of `{}` (found {} candidates)",
+                            node.name,
+                            g.node(x).name,
+                            kinds.len()
+                        )))
+                    }
+                };
+                let gr = resolve(dy)?;
+                let xr = resolve(x)?;
+                push(Instr::ActGradI { g: gr, x: xr, act })
+            }
+            OpKind::Elementwise(EwKind::Slice { start, len }) => {
+                let a = resolve(node.inputs[0])?;
+                push(Instr::SliceCols { a, start: *start, len: *len })
+            }
+            OpKind::Elementwise(EwKind::Add) => {
+                let a = resolve(node.inputs[0])?;
+                let b = resolve(node.inputs[1])?;
+                push(Instr::Axpy { a, b, c: 1.0 })
+            }
+            OpKind::Elementwise(EwKind::Sub) => {
+                let a = resolve(node.inputs[0])?;
+                let b = resolve(node.inputs[1])?;
+                push(Instr::Axpy { a, b, c: -1.0 })
+            }
+            OpKind::Elementwise(EwKind::Mul) => {
+                let a = resolve(node.inputs[0])?;
+                let b = resolve(node.inputs[1])?;
+                push(Instr::Mul { a, b })
+            }
+            OpKind::Elementwise(ew) => match act_of(*ew) {
+                Some(act) if node.inputs.len() == 1 => {
+                    let a = resolve(node.inputs[0])?;
+                    push(match act {
+                        Act::Relu => Instr::Relu { a },
+                        Act::Sigmoid => Instr::Sigmoid { a },
+                        Act::Gelu => Instr::Gelu { a },
+                        Act::Tanh => Instr::Tanh { a },
+                        Act::Silu => Instr::Silu { a },
+                        Act::Exp => Instr::Exp { a },
+                    })
+                }
+                _ => {
+                    return Err(not_streamable(format!(
+                        "op `{}` (ew:{ew:?}) has no streaming lowering in the training \
+                         pipeline (stage {si})",
+                        node.name
+                    )))
+                }
+            },
+            OpKind::Reduce { axis, .. } => {
+                if !matches!(axis, ReduceAxis::Batch)
+                    || g.node(node.inputs[0]).out.shape.dims().len() != 2
+                    || node.out.shape.dims().len() != 1
+                {
+                    return Err(not_streamable(format!(
+                        "reduce `{}` ({}) is not a streamable batch reduction",
+                        node.name, node.op
+                    )));
+                }
+                let a = resolve(node.inputs[0])?;
+                push(Instr::ColSum { a })
+            }
+            OpKind::Concat { .. } => {
+                let mut r = resolve(node.inputs[0])?;
+                for &i in &node.inputs[1..] {
+                    let b = resolve(i)?;
+                    r = push(Instr::Concat2 { a: r, b });
+                }
+                r
+            }
+            other => {
+                return Err(not_streamable(format!(
+                    "op `{}` ({}) has no streaming lowering in the training pipeline \
+                     (stage {si})",
+                    node.name,
+                    other.mnemonic()
+                )))
+            }
+        };
+        reg_of.insert(nid, reg);
+    }
+
+    // Output ports: values leaving the stage (live external consumers,
+    // excluding optimizer markers, or sink taps), in id order.
+    let out_nodes: Vec<NodeId> = members
+        .iter()
+        .copied()
+        .filter(|&nid| {
+            tapped.contains(&nid)
+                || g.consumers(nid).iter().any(|&c| {
+                    live.contains(&c)
+                        && !matches!(g.node(c).op, OpKind::OptimizerUpdate)
+                        && stage_of.get(&c) != Some(&si)
+                })
+        })
+        .collect();
+    if out_nodes.is_empty() {
+        return Err(not_streamable(format!(
+            "stage `{}` produces no consumed value",
+            g.node(members[0]).name
+        )));
+    }
+    let outputs: Vec<Reg> = out_nodes.iter().map(|nid| reg_of[nid]).collect();
+    let program = fuse_program(&Program { n_inputs, instrs, outputs });
+    Ok(StageBuild { anchor: members[0], ext, params, program, out_nodes })
+}
+
+/// Graph elementwise kind → interpreter activation, when one exists.
+fn act_of(ew: EwKind) -> Option<Act> {
+    match ew {
+        EwKind::Relu => Some(Act::Relu),
+        EwKind::Sigmoid => Some(Act::Sigmoid),
+        EwKind::Gelu => Some(Act::Gelu),
+        EwKind::Tanh => Some(Act::Tanh),
+        EwKind::Silu => Some(Act::Silu),
+        EwKind::Exp => Some(Act::Exp),
+        _ => None,
+    }
+}

@@ -1,0 +1,201 @@
+//! Optimizers over named parameter state, executed as interpreter
+//! programs: the weight-update stage of the training loop.
+//!
+//! Each update is a tiny SSA [`Program`] built from the optimizer
+//! instructions ([`Instr::Axpy`], [`Instr::Blend`], [`Instr::Mul`],
+//! [`Instr::AdamStep`]) and run on the same engine as the stage kernels
+//! — the baked-in learning rate of the legacy `train_step` entry is
+//! retired in favor of this configurable path (the entry survives as a
+//! compat shim pinned to [`DEFAULT_LR`]).
+
+use crate::runtime::interp::{Instr, Program};
+use crate::runtime::Tensor;
+use crate::Result;
+use std::collections::HashMap;
+
+/// The historical SGD learning rate (mirrors
+/// `python/compile/model.py::LR`); default for [`OptimizerKind::Sgd`]
+/// and the rate the legacy `train_step` entry is pinned to.
+pub const DEFAULT_LR: f32 = 1e-2;
+
+/// Optimizer configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    /// SGD with optional momentum: `v' = momentum·v + g`,
+    /// `p' = p - lr·v'` (momentum 0 = plain SGD, no state).
+    Sgd { lr: f32, momentum: f32 },
+    /// Adam (Kingma & Ba): EMA first/second moments with bias
+    /// correction.
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Default for OptimizerKind {
+    fn default() -> Self {
+        OptimizerKind::Sgd { lr: DEFAULT_LR, momentum: 0.0 }
+    }
+}
+
+impl OptimizerKind {
+    /// Plain SGD at `lr`.
+    pub fn sgd(lr: f32) -> Self {
+        OptimizerKind::Sgd { lr, momentum: 0.0 }
+    }
+
+    /// Adam at `lr` with the standard β₁=0.9, β₂=0.999, ε=1e-8.
+    pub fn adam(lr: f32) -> Self {
+        OptimizerKind::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Optimizer state over named parameters. One [`Optimizer`] drives one
+/// training run; state slots are created lazily per parameter name.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    kind: OptimizerKind,
+    /// Completed optimizer steps (drives Adam's bias correction).
+    t: usize,
+    /// Per-parameter state: `[v]` for momentum SGD, `[m, v]` for Adam.
+    state: HashMap<String, Vec<Tensor>>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind) -> Self {
+        Optimizer { kind, t: 0, state: HashMap::new() }
+    }
+
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    /// Completed optimizer steps.
+    pub fn step_count(&self) -> usize {
+        self.t
+    }
+
+    /// Apply one update for `name`, returning the new parameter value
+    /// and advancing the parameter's state slots in place. Call
+    /// [`Optimizer::end_step`] once after updating every parameter.
+    ///
+    /// Inputs are *borrowed* into the engine (`run_with_plan`), so the
+    /// update never clones the parameter, gradient, or state tensors —
+    /// the same zero-copy contract the stage kernels run under.
+    pub fn update(&mut self, name: &str, param: &Tensor, grad: &Tensor) -> Result<Tensor> {
+        match self.kind {
+            OptimizerKind::Sgd { lr, momentum } if momentum == 0.0 => {
+                let p = Program {
+                    n_inputs: 2,
+                    instrs: vec![Instr::Axpy { a: 0, b: 1, c: -lr }],
+                    outputs: vec![2],
+                };
+                let plan = p.plan();
+                Ok(p.run_with_plan(&[param, grad], &[], &plan)?.remove(0))
+            }
+            OptimizerKind::Sgd { lr, momentum } => {
+                let v = self
+                    .state
+                    .entry(name.to_string())
+                    .or_insert_with(|| vec![Tensor::zeros(&param.dims)]);
+                let p = Program {
+                    n_inputs: 3,
+                    instrs: vec![
+                        // v' = g + momentum·v
+                        Instr::Axpy { a: 1, b: 2, c: momentum },
+                        // p' = p - lr·v'
+                        Instr::Axpy { a: 0, b: 3, c: -lr },
+                    ],
+                    outputs: vec![4, 3],
+                };
+                let plan = p.plan();
+                let mut out = p.run_with_plan(&[param, grad, &v[0]], &[], &plan)?;
+                v[0] = out.remove(1);
+                Ok(out.remove(0))
+            }
+            OptimizerKind::Adam { lr, beta1, beta2, eps } => {
+                let slots = self.state.entry(name.to_string()).or_insert_with(|| {
+                    vec![Tensor::zeros(&param.dims), Tensor::zeros(&param.dims)]
+                });
+                let bc1 = 1.0 - beta1.powi(self.t as i32 + 1);
+                let bc2 = 1.0 - beta2.powi(self.t as i32 + 1);
+                let p = Program {
+                    n_inputs: 4,
+                    instrs: vec![
+                        // m' = β₁·m + (1-β₁)·g
+                        Instr::Blend { a: 2, b: 1, beta: beta1 },
+                        // g²
+                        Instr::Mul { a: 1, b: 1 },
+                        // v' = β₂·v + (1-β₂)·g²
+                        Instr::Blend { a: 3, b: 5, beta: beta2 },
+                        // p' = p - lr·(m'/bc1)/(√(v'/bc2)+ε)
+                        Instr::AdamStep { p: 0, m: 4, v: 6, lr, bc1, bc2, eps },
+                    ],
+                    outputs: vec![7, 4, 6],
+                };
+                let plan = p.plan();
+                let mut out =
+                    p.run_with_plan(&[param, grad, &slots[0], &slots[1]], &[], &plan)?;
+                slots[1] = out.remove(2);
+                slots[0] = out.remove(1);
+                Ok(out.remove(0))
+            }
+        }
+    }
+
+    /// Advance the optimizer clock; call once per optimizer step after
+    /// every parameter's [`Optimizer::update`].
+    pub fn end_step(&mut self) {
+        self.t += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor { dims: vec![v.len()], data: v.to_vec() }
+    }
+
+    #[test]
+    fn plain_sgd_matches_axpy() {
+        let mut opt = Optimizer::new(OptimizerKind::sgd(0.1));
+        let p = opt.update("w", &t(&[1.0, -2.0]), &t(&[10.0, 10.0])).unwrap();
+        assert_eq!(p.data, vec![0.0, -3.0]);
+        opt.end_step();
+        assert_eq!(opt.step_count(), 1);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd { lr: 1.0, momentum: 0.5 });
+        // Step 1: v = g = 1 -> p = 1 - 1 = 0.
+        let p1 = opt.update("w", &t(&[1.0]), &t(&[1.0])).unwrap();
+        opt.end_step();
+        assert_eq!(p1.data, vec![0.0]);
+        // Step 2: v = 1 + 0.5*1 = 1.5 -> p = 0 - 1.5 = -1.5.
+        let p2 = opt.update("w", &p1, &t(&[1.0])).unwrap();
+        opt.end_step();
+        assert_eq!(p2.data, vec![-1.5]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, the first Adam step is ≈ lr * sign(g).
+        let mut opt = Optimizer::new(OptimizerKind::adam(0.01));
+        let p = opt.update("w", &t(&[1.0, 1.0]), &t(&[0.5, -3.0])).unwrap();
+        opt.end_step();
+        assert!((p.data[0] - (1.0 - 0.01)).abs() < 1e-4, "{:?}", p.data);
+        assert!((p.data[1] - (1.0 + 0.01)).abs() < 1e-4, "{:?}", p.data);
+        // Per-parameter state exists (m and v).
+        assert_eq!(opt.state["w"].len(), 2);
+    }
+
+    #[test]
+    fn state_is_per_parameter_name() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd { lr: 0.1, momentum: 0.9 });
+        opt.update("a", &t(&[1.0]), &t(&[1.0])).unwrap();
+        opt.update("b", &t(&[1.0]), &t(&[2.0])).unwrap();
+        opt.end_step();
+        assert_eq!(opt.state["a"][0].data, vec![1.0]);
+        assert_eq!(opt.state["b"][0].data, vec![2.0]);
+    }
+}

@@ -151,17 +151,31 @@ fn gen_case(rng: &mut Rng) -> (Program, Vec<Tensor>) {
                 .collect();
             if !same.is_empty() {
                 let other = same[rng.below(same.len())];
-                let instr = match rng.below(5) {
+                let instr = match rng.below(8) {
                     0 => Instr::Axpy { a: cur, b: other, c: -0.01 },
                     1 => Instr::Axpy { a: other, b: cur, c: 0.5 },
                     2 => Instr::ReluGrad { g: cur, act: other },
                     3 => Instr::SigmoidGrad { dy: other, y: cur },
+                    4 => Instr::Mul { a: cur, b: other },
+                    5 => Instr::Blend { a: other, b: cur, beta: 0.9 },
+                    6 => Instr::ActGradI {
+                        g: cur,
+                        x: other,
+                        act: ACTS[rng.below(ACTS.len())],
+                    },
                     _ => Instr::MseGrad { y: cur, t: other },
                 };
                 instrs.push(instr);
                 shapes.push(shapes[cur].clone());
                 cur = shapes.len() - 1;
             }
+        }
+
+        // Scalar scale (training's gradient averaging), in-place capable.
+        if rng.chance(15) {
+            instrs.push(Instr::Scale { a: cur, c: -0.5 });
+            shapes.push(shapes[cur].clone());
+            cur = shapes.len() - 1;
         }
 
         // Side chains that leave `cur` untouched: scalar loss, bias-grad

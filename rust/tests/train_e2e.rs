@@ -1,0 +1,268 @@
+//! End-to-end training on the real DAG pipeline (`kitsune::train`):
+//!
+//! * the NERF training *app* (the paper's Fig 12/14 subject) lowers to a
+//!   genuine streaming pipeline — no `NotStreamable` — with multicast
+//!   fan-out and skip-link queue edges;
+//! * pipeline-executed gradients match the serial oracle **bitwise**
+//!   (same stage programs, same tile order, same fold — the
+//!   `kernel_equivalence` contract lifted to whole training steps);
+//! * gradients match central finite differences of the streamed loss;
+//! * `Trainer` drives ≥ 10 optimizer steps and the loss descends, on a
+//!   tiny NeRF (skip concat exercised) and a dense DLRM MLP;
+//! * gather-bearing apps (full DLRM) fall back to `simulate()` with a
+//!   typed reason naming the offending op.
+
+use kitsune::apps::{dlrm, nerf};
+use kitsune::session::{Session, SessionError};
+use kitsune::train::{serial_step, split_batch, OptimizerKind, TrainBatch};
+
+/// A NeRF small enough for interpreter-speed training, with the skip
+/// concat (multicast + slice backward) still in play.
+fn tiny_nerf() -> kitsune::graph::Graph {
+    nerf::training(&nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    })
+}
+
+#[test]
+fn nerf_app_training_builds_real_streaming_pipeline() {
+    // The acceptance shape: the full NERF training app — 69 ops, skip
+    // concat, multicast backward — lowers with no NotStreamable and
+    // stands up a warm DAG pool.
+    let session = Session::builder().app("NERF").training(true).build().unwrap();
+    assert!(
+        session.is_trainable(),
+        "NERF training must stream: {:?}",
+        session.not_streamable_reason()
+    );
+    assert!(session.not_streamable_reason().is_none());
+    let plan = session.train_plan().unwrap();
+    assert!(plan.pipeline.stages.len() > 20, "real stage count: {}", plan.pipeline.stages.len());
+    assert!(plan.n_multicasts() > 0, "backward passes multicast saved activations");
+    assert!(plan.n_skip_links() > 0, "saved activations ride skip links to their wgrads");
+    // Gradients tapped for every live parameter (weights + biases of the
+    // trunk, feat and rgb layers), plus the loss tap.
+    assert!(plan.taps.len() > 10, "{:?}", plan.taps.len());
+    // One worker per stage plus the sink, spawned at build.
+    assert_eq!(session.threads_spawned(), plan.pipeline.stages.len() + 1);
+    session.shutdown();
+}
+
+#[test]
+fn pipeline_gradients_match_serial_oracle_bitwise() {
+    let session = Session::builder().graph(tiny_nerf()).tile_rows(16).build().unwrap();
+    let plan = session.train_plan().unwrap();
+    let batch = session.make_train_batch(42).unwrap();
+    let tiles = split_batch(plan, &batch).unwrap();
+    let mut trainer = session.trainer().unwrap();
+
+    // Oracle over the same initial parameters, same tiles.
+    let params0: Vec<_> = trainer.params().into_iter().map(|(_, t)| t).collect();
+    let serial = serial_step(plan, &params0, &tiles).unwrap();
+    let stats = trainer.step(&batch).unwrap();
+    assert_eq!(stats.tiles, plan.n_tiles());
+    assert_eq!(
+        stats.loss.to_bits(),
+        serial.loss.to_bits(),
+        "pipeline loss must match the serial oracle bitwise"
+    );
+    assert!(!stats.grads.is_empty());
+    for (name, grad) in &stats.grads {
+        let pi = plan.params.iter().position(|p| &p.name == name).unwrap();
+        let want = serial.grads[pi].as_ref().expect("oracle gradient present");
+        let gb: Vec<u32> = grad.data.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb, "gradient `{name}` must match the oracle bitwise");
+    }
+
+    // Second step: the warm pool must see the *updated* parameters.
+    let params1: Vec<_> = trainer.params().into_iter().map(|(_, t)| t).collect();
+    let serial2 = serial_step(plan, &params1, &tiles).unwrap();
+    let stats2 = trainer.step(&batch).unwrap();
+    assert_eq!(
+        stats2.loss.to_bits(),
+        serial2.loss.to_bits(),
+        "step 2 must run against the optimizer-updated parameters"
+    );
+    session.shutdown();
+}
+
+#[test]
+fn pipeline_gradients_match_finite_differences() {
+    // Cold session: the plan alone drives the serial executor, which the
+    // bitwise test above ties to the pipeline.
+    let session =
+        Session::builder().graph(tiny_nerf()).tile_rows(16).warm(false).build().unwrap();
+    let plan = session.train_plan().unwrap();
+    let batch = TrainBatch::synthetic(plan, 7);
+    let tiles = split_batch(plan, &batch).unwrap();
+    let params0: Vec<_> = plan.params.iter().map(|p| p.init.clone()).collect();
+    let base = serial_step(plan, &params0, &tiles).unwrap();
+
+    let loss_at = |params: &[kitsune::runtime::Tensor]| -> f64 {
+        serial_step(plan, params, &tiles).unwrap().loss as f64
+    };
+    let eps = 1e-3f64;
+    // A spread of parameters: first trunk weight, a bias, the head weight.
+    let picks: Vec<usize> = vec![0, 1, plan.params.len() - 2];
+    for pi in picks {
+        let numel = params0[pi].data.len();
+        let grad = base.grads[pi].as_ref().expect("gradient tapped");
+        for &k in &[0usize, numel / 2, numel - 1] {
+            let mut plus = params0.clone();
+            plus[pi].data[k] += eps as f32;
+            let mut minus = params0.clone();
+            minus[pi].data[k] -= eps as f32;
+            let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+            let analytic = grad.data[k] as f64;
+            assert!(
+                (fd - analytic).abs() < 1e-3 + 0.08 * analytic.abs(),
+                "param {pi} (`{}`)[{k}]: finite-diff {fd} vs analytic {analytic}",
+                plan.params[pi].name
+            );
+        }
+    }
+}
+
+#[test]
+fn trainer_descends_on_tiny_nerf() {
+    let session = Session::builder().graph(tiny_nerf()).tile_rows(16).build().unwrap();
+    let mut trainer = session.trainer_with(OptimizerKind::adam(1e-2)).unwrap();
+    let batch = session.make_train_batch(0xF00D).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let stats = trainer.step(&batch).unwrap();
+        assert!(stats.loss.is_finite());
+        losses.push(stats.loss);
+    }
+    assert_eq!(trainer.steps(), 12, "≥ 10 optimizer steps drove the warm pipeline");
+    assert!(
+        *losses.last().unwrap() < losses[0] * 0.95,
+        "loss must descend: {losses:?}"
+    );
+    session.shutdown();
+}
+
+#[test]
+fn trainer_descends_on_dense_dlrm_with_momentum() {
+    let g = dlrm::dense_training(&dlrm::DlrmConfig {
+        batch: 64,
+        dense_features: 8,
+        bottom_mlp: vec![16, 8],
+        top_mlp: vec![16, 1],
+        ..dlrm::DlrmConfig::default()
+    });
+    let session = Session::builder().graph(g).tile_rows(16).build().unwrap();
+    assert!(session.is_trainable(), "{:?}", session.not_streamable_reason());
+    let mut trainer = session
+        .trainer_with(OptimizerKind::Sgd { lr: 0.1, momentum: 0.8 })
+        .unwrap();
+    let batch = session.make_train_batch(0xD1CE).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..20 {
+        losses.push(trainer.step(&batch).unwrap().loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        *losses.last().unwrap() < losses[0] * 0.95,
+        "momentum SGD must descend: {losses:?}"
+    );
+    session.shutdown();
+}
+
+#[test]
+fn backpressure_with_tiny_queues_still_completes() {
+    // More in-flight tiles than any ring can hold: the microbatch must
+    // drain through backpressure (blocking pushes) without wedging —
+    // the unit-rate dataflow graph is deadlock-free for any capacity ≥ 1.
+    let g = dlrm::dense_training(&dlrm::DlrmConfig {
+        batch: 96,
+        dense_features: 6,
+        bottom_mlp: vec![8],
+        top_mlp: vec![8, 1],
+        ..dlrm::DlrmConfig::default()
+    });
+    let session = Session::builder().graph(g).tile_rows(8).queue_capacity(2).build().unwrap();
+    let plan = session.train_plan().unwrap();
+    assert!(plan.n_tiles() > plan.pipeline.queue_capacity * 2, "{}", plan.n_tiles());
+    let mut trainer = session.trainer().unwrap();
+    let batch = session.make_train_batch(3).unwrap();
+    for _ in 0..2 {
+        let stats = trainer.step(&batch).unwrap();
+        assert!(stats.loss.is_finite());
+        assert_eq!(stats.tiles, 12);
+    }
+    session.shutdown();
+}
+
+#[test]
+fn gather_apps_fall_back_with_reason_naming_the_op() {
+    // Full DLRM training carries embedding-bag gathers: §5.1-excluded,
+    // so the session keeps simulate() and the reason names the gather.
+    let session = Session::builder().app("DLRM").training(true).build().unwrap();
+    assert!(!session.is_trainable());
+    let reason = session.not_streamable_reason().expect("typed fallback reason");
+    assert!(reason.contains("gather"), "{reason}");
+    assert!(reason.contains("emb"), "reason names the node: {reason}");
+    let err = session.trainer().unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<SessionError>(),
+        Some(SessionError::NotStreamable { .. })
+    ));
+    // The documented fallback still works.
+    assert!(session.simulate().is_ok());
+}
+
+#[test]
+fn cold_training_session_has_plan_but_no_trainer() {
+    let session =
+        Session::builder().graph(tiny_nerf()).tile_rows(16).warm(false).build().unwrap();
+    assert!(session.is_trainable());
+    assert_eq!(session.threads_spawned(), 0);
+    let err = session.trainer().unwrap_err();
+    assert!(matches!(err.downcast_ref::<SessionError>(), Some(SessionError::Cold)));
+}
+
+#[test]
+fn default_tile_rows_divides_odd_batches() {
+    // batch 100: floor(100/16) = 6 does not divide 100 — the default must
+    // fall back to a divisor (5) instead of rejecting the graph.
+    let g = nerf::training(&nerf::NerfConfig {
+        batch: 100,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 2,
+        skip_at: 1,
+    });
+    let session = Session::builder().graph(g).warm(false).build().unwrap();
+    let plan = session
+        .train_plan()
+        .unwrap_or_else(|| panic!("odd batch must stream: {:?}", session.not_streamable_reason()));
+    assert_eq!(plan.batch_rows % plan.tile_rows, 0);
+    assert_eq!(plan.tile_rows, 5);
+}
+
+#[test]
+fn train_batch_and_split_validate_shapes() {
+    let session =
+        Session::builder().graph(tiny_nerf()).tile_rows(16).warm(false).build().unwrap();
+    let plan = session.train_plan().unwrap();
+    // Sources: pos_enc, dir_enc, target — in graph order, target last.
+    let names: Vec<&str> = plan.sources.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, vec!["pos_enc", "dir_enc", "target"]);
+    let batch = session.make_train_batch(1).unwrap();
+    let tiles = split_batch(plan, &batch).unwrap();
+    assert_eq!(tiles.len(), 3);
+    assert!(tiles.iter().all(|per| per.len() == plan.n_tiles()));
+    assert_eq!(tiles[0][0].dims, vec![plan.tile_rows, 8]);
+    // Wrong dims are rejected.
+    let mut bad = batch.clone();
+    bad.inputs[0] = kitsune::runtime::Tensor::zeros(&[4, 8]);
+    assert!(split_batch(plan, &bad).is_err());
+}
