@@ -15,12 +15,15 @@ artifacts:
 # Interpreter hot-path trajectory: kernel GFLOP/s first (stages a part
 # file), then session warm/cold/reference throughput, which folds both
 # into BENCH_interp.json at the repo root; then training steps/sec
-# (warm DAG pipeline vs serial baseline) into BENCH_train.json.
+# (warm DAG pipeline vs serial baseline) into BENCH_train.json; then
+# scheduler scaling (GEMM + warm pipeline + DAG training at 1/2/4/N
+# workers) into BENCH_sched.json.
 # BENCH_SMOKE=1 for a fast CI smoke run that still emits the JSONs.
 bench:
 	cargo bench --bench kernel_throughput
 	cargo bench --bench session_throughput
 	cargo bench --bench train_throughput
+	cargo bench --bench sched_scaling
 
 # The full paper-figure bench suite (fig*/table*/ablation/...).
 bench-paper:

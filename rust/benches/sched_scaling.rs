@@ -1,0 +1,322 @@
+//! Scheduler scaling: how the one shared work-stealing pool
+//! (`kitsune::sched`) performs under its three tenants as worker count
+//! grows —
+//!
+//! * GEMM GFLOP/s (row-panel fork-join inside one matmul kernel);
+//! * warm pipeline tiles/sec (`PipelineService` stage pumps), against a
+//!   hand-rolled dedicated-OS-thread stage pool over the *same* lowered
+//!   stages — the architecture the pumps replaced;
+//! * DAG training steps/sec at 1 vs 2 pumps per stage.
+//!
+//! Numbers are measured on whatever host runs the bench —
+//! `host_parallelism` is recorded so a 1-core container's flat scaling
+//! reads as what it is, not a regression.
+//!
+//! Writes `BENCH_sched.json` at the repo root.
+//! Run: `cargo bench --bench sched_scaling` (`BENCH_SMOKE=1` for CI).
+
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::compiler::{compile, SelectOptions};
+use kitsune::queue::{PushError, RingQueue};
+use kitsune::runtime::interp::{
+    matmul_par_threshold, set_matmul_par_threshold, Instr, Program,
+};
+use kitsune::runtime::{bound_executable, ArtifactStore, Rng, Tensor};
+use kitsune::sched::{self, Scheduler};
+use kitsune::session::{lower_app, nerf_trunk_graph, LowerOptions, PipelineService, Session};
+use kitsune::sim::GpuConfig;
+use kitsune::train::OptimizerKind;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const TILE_ROWS: usize = 64;
+const ROWS: usize = 2048;
+const IN_DIM: usize = 60;
+const HIDDEN: usize = 64;
+const OUT_DIM: usize = 3;
+
+fn tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
+    let numel: usize = dims.iter().product();
+    Tensor { dims: dims.to_vec(), data: (0..numel).map(|_| rng.normal()).collect() }
+}
+
+fn make_tiles(n: usize, seed: u64, rows: usize, dim: usize) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| Tensor {
+            dims: vec![rows, dim],
+            data: (0..rows * dim).map(|_| rng.normal()).collect(),
+        })
+        .collect()
+}
+
+fn time_per_iter(min_time_s: f64, mut f: impl FnMut()) -> f64 {
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_time_s || iters >= 1 << 22 {
+            return dt / iters as f64;
+        }
+        iters *= 2;
+    }
+}
+
+/// Ascending deduplicated worker counts: 1, 2, 4 and the host's
+/// available parallelism.
+fn worker_counts(host: usize) -> Vec<usize> {
+    let mut ws = vec![1usize, 2, 4, host.max(1)];
+    ws.sort_unstable();
+    ws.dedup();
+    ws
+}
+
+/// The dedicated-thread baseline the cooperative pumps replaced: one OS
+/// thread per stage worker, blocking pops, countdown-latch close. Runs
+/// `batches x tiles_per_batch` tiles through the same lowered store and
+/// returns steady-state tiles/sec (one unmeasured priming batch).
+fn dedicated_pool_tiles_per_sec(
+    store: &Arc<ArtifactStore>,
+    pipeline: &kitsune::coordinator::SpatialPipeline,
+    tiles_per_batch: usize,
+    batches: usize,
+    rows: usize,
+    dim: usize,
+) -> anyhow::Result<f64> {
+    type Tile = (usize, Tensor);
+    let n_stages = pipeline.stages.len();
+    let queues: Vec<Arc<RingQueue<Tile>>> = (0..=n_stages)
+        .map(|_| RingQueue::with_capacity(pipeline.queue_capacity))
+        .collect();
+    let mut elapsed = 0.0f64;
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        for (si, stage) in pipeline.stages.iter().enumerate() {
+            let remaining = Arc::new(AtomicUsize::new(stage.workers));
+            for _ in 0..stage.workers {
+                let in_q = Arc::clone(&queues[si]);
+                let out_q = Arc::clone(&queues[si + 1]);
+                let remaining = Arc::clone(&remaining);
+                let entry = stage.entry.clone();
+                let weights = Arc::clone(&stage.weights);
+                let store = Arc::clone(store);
+                scope.spawn(move || {
+                    while let Some((seq, tile)) = in_q.pop() {
+                        let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
+                        args.push(&tile);
+                        args.extend(weights.iter());
+                        let out = store
+                            .run_f32_ref(&entry, &args)
+                            .expect("baseline stage kernel")
+                            .remove(0);
+                        if let Err(PushError::Closed(_)) = out_q.push((seq, out)) {
+                            break;
+                        }
+                    }
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        out_q.close();
+                    }
+                });
+            }
+        }
+        // Feed batches from this thread, draining outputs as we go so
+        // bounded rings can never wedge the feeder.
+        let src = &queues[0];
+        let out_q = &queues[n_stages];
+        let mut run_batch = |seed: u64| -> anyhow::Result<()> {
+            let mut got = 0usize;
+            for (seq, t) in make_tiles(tiles_per_batch, seed, rows, dim).into_iter().enumerate()
+            {
+                src.push((seq, t)).map_err(|_| anyhow::anyhow!("source closed early"))?;
+                while out_q.try_pop().is_ok() {
+                    got += 1;
+                }
+            }
+            while got < tiles_per_batch {
+                out_q.pop().ok_or_else(|| anyhow::anyhow!("pipeline closed early"))?;
+                got += 1;
+            }
+            Ok(())
+        };
+        run_batch(999)?; // prime
+        let t0 = Instant::now();
+        for b in 0..batches {
+            run_batch(b as u64)?;
+        }
+        elapsed = t0.elapsed().as_secs_f64();
+        queues[0].close();
+        Ok(())
+    })?;
+    Ok((tiles_per_batch * batches) as f64 / elapsed.max(1e-12))
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke();
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let counts = worker_counts(host);
+    let min_time = if smoke { 0.02 } else { 0.25 };
+    println!("scheduler scaling (host parallelism: {host}):");
+
+    // ---- GEMM row-panel fork-join -------------------------------------
+    // Force the parallel path regardless of size, then restore.
+    let n = if smoke { 128usize } else { 384 };
+    let mut rng = Rng::new(0xACE5);
+    let p = Program { n_inputs: 2, instrs: vec![Instr::Matmul { a: 0, b: 1 }], outputs: vec![2] };
+    let inputs = [tensor(&mut rng, &[n, n]), tensor(&mut rng, &[n, n])];
+    let flops = 2.0 * (n * n * n) as f64;
+    let saved_threshold = matmul_par_threshold();
+    set_matmul_par_threshold(1);
+    let mut gemm_gflops: Vec<(usize, f64)> = Vec::new();
+    for &w in &counts {
+        let s = Scheduler::with_workers(w);
+        let secs = sched::with_scheduler(&s, || {
+            time_per_iter(min_time, || {
+                std::hint::black_box(p.run(&inputs).unwrap());
+            })
+        });
+        s.shutdown();
+        let gf = flops / secs / 1e9;
+        // The kernel caps its own fan-out at 4 panels; more workers only
+        // help the other pool tenants.
+        println!("  gemm {n}^3 @ {w} workers: {gf:>7.2} GFLOP/s");
+        gemm_gflops.push((w, gf));
+    }
+    set_matmul_par_threshold(saved_threshold);
+
+    // ---- warm pipeline stage pumps vs dedicated threads ---------------
+    let (tiles_per_batch, batches) = if smoke { (8usize, 2usize) } else { (32, 6) };
+    let g = nerf_trunk_graph(ROWS, IN_DIM, HIDDEN, OUT_DIM);
+    let app = compile(&g, &GpuConfig::a100(), &SelectOptions::default())?;
+    let low = lower_app(
+        &g,
+        &app,
+        &LowerOptions { tile_rows: Some(TILE_ROWS), ..LowerOptions::default() },
+    )?;
+    let execs = low
+        .entries
+        .iter()
+        .map(|(spec, program, weights)| {
+            (spec.clone(), bound_executable(spec.name.clone(), program.clone(), weights.clone()))
+        })
+        .collect();
+    let store = Arc::new(ArtifactStore::from_executables("sched-scaling", execs));
+
+    let dedicated_tps = dedicated_pool_tiles_per_sec(
+        &store,
+        &low.pipeline,
+        tiles_per_batch,
+        batches,
+        low.tile_rows,
+        low.in_dim,
+    )?;
+    println!("  pipeline dedicated threads:      {dedicated_tps:>8.1} tiles/s");
+
+    let mut pipe_tps: Vec<(usize, f64)> = Vec::new();
+    for &w in &counts {
+        let s = Scheduler::with_workers(w);
+        let svc = sched::with_scheduler(&s, || {
+            PipelineService::start(Arc::clone(&store), &low.pipeline, vec![
+                low.tile_rows,
+                low.in_dim,
+            ])
+        })?;
+        svc.submit(make_tiles(tiles_per_batch, 999, low.tile_rows, low.in_dim))?.wait()?;
+        let t0 = Instant::now();
+        for b in 0..batches {
+            let out = svc
+                .submit(make_tiles(tiles_per_batch, b as u64, low.tile_rows, low.in_dim))?
+                .wait()?;
+            assert_eq!(out.outputs.len(), tiles_per_batch);
+        }
+        let tps = (tiles_per_batch * batches) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        svc.shutdown();
+        s.shutdown();
+        println!(
+            "  pipeline pumps @ {w} workers:     {tps:>8.1} tiles/s  ({:.2}x vs dedicated)",
+            tps / dedicated_tps.max(1e-12)
+        );
+        pipe_tps.push((w, tps));
+    }
+
+    // ---- DAG training: pumps per stage --------------------------------
+    let nerf_cfg = if smoke {
+        kitsune::apps::nerf::NerfConfig {
+            batch: 128,
+            pos_enc: 8,
+            dir_enc: 4,
+            hidden: 16,
+            depth: 3,
+            skip_at: 1,
+        }
+    } else {
+        kitsune::apps::nerf::NerfConfig {
+            batch: 512,
+            pos_enc: 16,
+            dir_enc: 8,
+            hidden: 32,
+            depth: 4,
+            skip_at: 2,
+        }
+    };
+    let steps = if smoke { 3usize } else { 10 };
+    let mut train_sps: Vec<(usize, f64)> = Vec::new();
+    for pumps in [1usize, 2] {
+        let session = Session::builder()
+            .graph(kitsune::apps::nerf::training(&nerf_cfg))
+            .tile_rows(nerf_cfg.batch / 16)
+            .train_workers(pumps)
+            .build()?;
+        let mut trainer = session.trainer_with(OptimizerKind::sgd(1e-2))?;
+        let batch = session.make_train_batch(0xBE9C)?;
+        trainer.step(&batch)?; // prime
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            trainer.step(&batch)?;
+        }
+        let sps = steps as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        session.shutdown();
+        println!("  training @ {pumps} pumps/stage:     {sps:>8.2} steps/s");
+        train_sps.push((pumps, sps));
+    }
+    let train_speedup = train_sps[1].1 / train_sps[0].1.max(1e-12);
+    println!("  training 2-pump over 1-pump:     {train_speedup:.2}x");
+
+    // ---- BENCH_sched.json ---------------------------------------------
+    let root = artifact_root();
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"sched_scaling\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"host_parallelism\": {host},");
+    let _ = writeln!(json, "  \"gemm\": {{");
+    let _ = writeln!(json, "    \"n\": {n},");
+    for (i, (w, gf)) in gemm_gflops.iter().enumerate() {
+        let comma = if i + 1 < gemm_gflops.len() { "," } else { "" };
+        let _ = writeln!(json, "    \"gflops_w{w}\": {gf:.3}{comma}");
+    }
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"pipeline\": {{");
+    let _ = writeln!(json, "    \"tiles_per_batch\": {tiles_per_batch},");
+    let _ = writeln!(json, "    \"batches\": {batches},");
+    let _ = writeln!(json, "    \"dedicated_tiles_per_sec\": {dedicated_tps:.2},");
+    for (i, (w, tps)) in pipe_tps.iter().enumerate() {
+        let comma = if i + 1 < pipe_tps.len() { "," } else { "" };
+        let _ = writeln!(json, "    \"pump_tiles_per_sec_w{w}\": {tps:.2}{comma}");
+    }
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"train\": {{");
+    let _ = writeln!(json, "    \"steps\": {steps},");
+    for (w, sps) in &train_sps {
+        let _ = writeln!(json, "    \"steps_per_sec_pumps{w}\": {sps:.3},");
+    }
+    let _ = writeln!(json, "    \"two_pump_over_one\": {train_speedup:.3}");
+    let _ = writeln!(json, "  }}");
+    json.push_str("}\n");
+    let out_path = root.join("BENCH_sched.json");
+    std::fs::write(&out_path, json)?;
+    println!("scheduler scaling written to {}", out_path.display());
+    Ok(())
+}

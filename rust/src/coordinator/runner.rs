@@ -117,7 +117,7 @@ pub fn run_streaming(
         .collect();
 
     let mut outputs: Vec<Option<Tensor>> = vec![None; n_tiles];
-    std::thread::scope(|scope| -> Result<()> {
+    crate::sched::dedicated_scope(|scope| -> Result<()> {
         // `ArtifactStore` is `Sync` by the Backend/Executable contract, so
         // stage threads share it directly.
         let failed = &failed;

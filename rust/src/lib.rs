@@ -19,6 +19,7 @@
 //! | CUDA spatial-pipeline runtime (Fig 6) | [`coordinator`] (real threads + ring queues) |
 //! | Fig 6 host API (`cudaPipelineCreate` → `AddKernel` → launch) | [`session`] (builder → persistent pipeline → `submit`) |
 //! | Training on dataflow (§6.4, Figs 12/14: multicast + skip links) | [`train`] (DAG pipeline, gradient taps, optimizer, `Trainer`) |
+//! | §4 "keep every resource busy at once" on the host runtime | [`sched`] (one work-stealing pool under GEMM panels, stage pumps, DAG training) |
 //!
 //! [`session`] is the **single public entry point** for running anything:
 //! `Session::builder().app("nerf").build()?` compiles once, lowers the
@@ -46,6 +47,7 @@ pub mod ilp;
 pub mod compiler;
 pub mod exec;
 pub mod coordinator;
+pub mod sched;
 pub mod runtime;
 pub mod session;
 pub mod train;

@@ -17,8 +17,31 @@
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A one-shot callback registered with [`RingQueue::park_on_item`] /
+/// [`RingQueue::park_on_space`]: fired (exactly once) when the queue
+/// becomes non-empty / non-full respectively, or when it closes.
+/// Cooperative stage pumps use wakers to return their scheduler worker
+/// to the pool instead of blocking it on an empty or full edge.
+pub type Waker = Box<dyn FnOnce() + Send + 'static>;
+
+/// Spin iterations before a *blocking* `push`/`pop` parks on the queue's
+/// condvar (first a short `spin_loop` burst, then yields).
+const SPIN_LIMIT: u32 = 256;
+
+/// Process-wide count of blocking-path spin iterations — the
+/// observability hook behind the "an idle warm pipeline burns ~0 CPU"
+/// regression test. Cooperative pumps never spin here (they park via
+/// wakers); only legacy blocking `push`/`pop` callers contribute.
+static IDLE_SPINS: AtomicU64 = AtomicU64::new(0);
+
+/// Total blocking-path spin iterations since process start.
+pub fn idle_spin_count() -> u64 {
+    IDLE_SPINS.load(Ordering::Relaxed)
+}
 
 /// Pad to a cache line to avoid false sharing (paper: "synchronization
 /// variables are all padded to the size of a cache line").
@@ -32,6 +55,12 @@ struct Slot<T> {
     value: UnsafeCell<MaybeUninit<T>>,
 }
 
+/// Waker lists, guarded by one mutex (shared with both condvars).
+struct Waiters {
+    on_item: Vec<Waker>,
+    on_space: Vec<Waker>,
+}
+
 /// Bounded multi-producer multi-consumer ring queue.
 pub struct RingQueue<T> {
     slots: Box<[Slot<T>]>,
@@ -41,6 +70,17 @@ pub struct RingQueue<T> {
     /// Consumer ticket counter (rd in Fig 4).
     head: CachePadded<AtomicUsize>,
     closed: AtomicBool,
+    /// Registered wakers (cooperative pumps) for each side.
+    waiters: Mutex<Waiters>,
+    /// Parked or registered waiters per side: condvar sleepers plus
+    /// registered wakers. Producers/consumers check this on the fast
+    /// path (after a SeqCst fence) and skip the lock when it is zero.
+    item_waiters: AtomicUsize,
+    space_waiters: AtomicUsize,
+    /// Condvars for *blocking* `pop`/`push` callers, paired with
+    /// `waiters`' mutex.
+    item_cv: Condvar,
+    space_cv: Condvar,
 }
 
 unsafe impl<T: Send> Send for RingQueue<T> {}
@@ -102,6 +142,11 @@ impl<T> RingQueue<T> {
             tail: CachePadded(AtomicUsize::new(0)),
             head: CachePadded(AtomicUsize::new(0)),
             closed: AtomicBool::new(false),
+            waiters: Mutex::new(Waiters { on_item: Vec::new(), on_space: Vec::new() }),
+            item_waiters: AtomicUsize::new(0),
+            space_waiters: AtomicUsize::new(0),
+            item_cv: Condvar::new(),
+            space_cv: Condvar::new(),
         })
     }
 
@@ -141,6 +186,7 @@ impl<T> RingQueue<T> {
                         unsafe { (*slot.value.get()).write(value) };
                         // wr_release: publish to the consumer with ticket+1.
                         slot.seq.0.store(ticket + 1, Ordering::Release);
+                        self.notify_item();
                         return Ok(());
                     }
                     Err(t) => ticket = t,
@@ -173,6 +219,7 @@ impl<T> RingQueue<T> {
                         // rd_release: free the entry for the producer one
                         // lap ahead.
                         slot.seq.0.store(ticket + self.mask + 1, Ordering::Release);
+                        self.notify_space();
                         return Ok(value);
                     }
                     Err(t) => ticket = t,
@@ -189,10 +236,12 @@ impl<T> RingQueue<T> {
         }
     }
 
-    /// Blocking push: spins (with yields) while the ring is full —
-    /// mirrors the producer CTA spinning in `wr_acquire`. Returns
-    /// [`PushError::Closed`] (with the value) once the queue is closed:
-    /// the only error a blocking producer can observe.
+    /// Blocking push: spins briefly while the ring is full — mirroring
+    /// the producer CTA spinning in `wr_acquire` — then *parks* on the
+    /// queue's condvar until a consumer frees a slot (no sleep-tier
+    /// spin burn). Returns [`PushError::Closed`] (with the value) once
+    /// the queue is closed: the only error a blocking producer can
+    /// observe.
     pub fn push(&self, mut value: T) -> Result<(), PushError<T>> {
         let mut spins = 0u32;
         loop {
@@ -201,21 +250,44 @@ impl<T> RingQueue<T> {
                 Err(PushError::Closed(v)) => return Err(PushError::Closed(v)),
                 Err(PushError::Full(v)) => {
                     value = v;
-                    backoff(&mut spins);
+                    if spins < SPIN_LIMIT {
+                        spins += 1;
+                        IDLE_SPINS.fetch_add(1, Ordering::Relaxed);
+                        if spins < 64 {
+                            std::hint::spin_loop();
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    } else {
+                        self.wait_space();
+                    }
                 }
             }
         }
     }
 
-    /// Blocking pop: spins until data arrives; returns `None` once the
-    /// queue is closed *and* drained (pipeline shutdown).
+    /// Blocking pop: spins briefly, then parks until data arrives;
+    /// returns `None` once the queue is closed *and* drained (pipeline
+    /// shutdown).
     pub fn pop(&self) -> Option<T> {
         let mut spins = 0u32;
         loop {
             match self.try_pop() {
                 Ok(v) => return Some(v),
                 Err(PopError::Closed) => return None,
-                Err(PopError::Empty) => backoff(&mut spins),
+                Err(PopError::Empty) => {
+                    if spins < SPIN_LIMIT {
+                        spins += 1;
+                        IDLE_SPINS.fetch_add(1, Ordering::Relaxed);
+                        if spins < 64 {
+                            std::hint::spin_loop();
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    } else {
+                        self.wait_item();
+                    }
+                }
             }
         }
     }
@@ -249,10 +321,154 @@ impl<T> RingQueue<T> {
         n
     }
 
+    /// Non-blocking batched dequeue: drain up to `max` buffered values
+    /// into `out` without ever waiting. Returns the number appended
+    /// (possibly less than `max`); errors only when *nothing* could be
+    /// popped — `Empty` (park and retry) or `Closed` (end of stream).
+    pub fn try_pop_many(&self, out: &mut Vec<T>, max: usize) -> Result<usize, PopError> {
+        let mut n = 0;
+        while n < max {
+            match self.try_pop() {
+                Ok(v) => {
+                    out.push(v);
+                    n += 1;
+                }
+                Err(e) => {
+                    if n == 0 {
+                        return Err(e);
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Register a one-shot waker fired when the queue becomes non-empty
+    /// (or closes). If it is *already* non-empty or closed, the waker
+    /// fires immediately on this thread. Exactly-once semantics: each
+    /// registered waker is invoked once, by whichever of
+    /// push/close/immediate-recheck gets there first.
+    ///
+    /// The consumer must observe `Empty` *before* registering; the SeqCst
+    /// fence pairing with [`Self::notify_item`] guarantees that a push
+    /// racing with registration is seen by at least one side (Dekker
+    /// store-buffering argument), so no wakeup is lost.
+    pub fn park_on_item(&self, waker: Waker) {
+        let fire_now = {
+            let mut g = self.waiters.lock().unwrap();
+            self.item_waiters.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            if !self.is_empty() || self.is_closed() {
+                self.item_waiters.fetch_sub(1, Ordering::SeqCst);
+                true
+            } else {
+                g.on_item.push(waker);
+                return;
+            }
+        };
+        if fire_now {
+            waker();
+        }
+    }
+
+    /// Register a one-shot waker fired when the queue has free space (or
+    /// closes). Mirror of [`Self::park_on_item`] for producers.
+    pub fn park_on_space(&self, waker: Waker) {
+        let fire_now = {
+            let mut g = self.waiters.lock().unwrap();
+            self.space_waiters.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            if self.len() < self.capacity() || self.is_closed() {
+                self.space_waiters.fetch_sub(1, Ordering::SeqCst);
+                true
+            } else {
+                g.on_space.push(waker);
+                return;
+            }
+        };
+        if fire_now {
+            waker();
+        }
+    }
+
+    /// Park the calling thread until the queue likely has space, the
+    /// queue closes, or a short timeout elapses — a bounded wait for
+    /// producers that must interleave a cancellation check (e.g. the
+    /// training feeder polling the pipeline's dead flag) with
+    /// backpressure. Never misses a wakeup (same fence protocol as
+    /// [`Self::park_on_space`]); the timeout only bounds the recheck.
+    pub fn wait_space(&self) {
+        let guard = self.waiters.lock().unwrap();
+        self.space_waiters.fetch_add(1, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        if self.len() >= self.capacity() && !self.is_closed() {
+            let _ = self.space_cv.wait_timeout(guard, Duration::from_millis(20)).unwrap();
+        }
+        self.space_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Park the calling thread until the queue is likely non-empty, the
+    /// queue closes, or a short timeout elapses. Consumer mirror of
+    /// [`Self::wait_space`].
+    pub fn wait_item(&self) {
+        let guard = self.waiters.lock().unwrap();
+        self.item_waiters.fetch_add(1, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        if self.is_empty() && !self.is_closed() {
+            let _ = self.item_cv.wait_timeout(guard, Duration::from_millis(20)).unwrap();
+        }
+        self.item_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake the item side: drain registered item wakers and signal
+    /// parked blocking consumers. Fast path (no waiters) is a fence +
+    /// one relaxed load.
+    fn notify_item(&self) {
+        fence(Ordering::SeqCst);
+        if self.item_waiters.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let fired = {
+            let mut g = self.waiters.lock().unwrap();
+            let fired = std::mem::take(&mut g.on_item);
+            self.item_waiters.fetch_sub(fired.len(), Ordering::SeqCst);
+            self.item_cv.notify_all();
+            fired
+        };
+        // Fire outside the lock: wakers reschedule pump tasks and must
+        // not re-enter queue state under our waiter mutex.
+        for w in fired {
+            w();
+        }
+    }
+
+    /// Wake the space side. Mirror of [`Self::notify_item`].
+    fn notify_space(&self) {
+        fence(Ordering::SeqCst);
+        if self.space_waiters.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let fired = {
+            let mut g = self.waiters.lock().unwrap();
+            let fired = std::mem::take(&mut g.on_space);
+            self.space_waiters.fetch_sub(fired.len(), Ordering::SeqCst);
+            self.space_cv.notify_all();
+            fired
+        };
+        for w in fired {
+            w();
+        }
+    }
+
     /// Close the queue: subsequent producers fail, consumers drain then
-    /// observe end. See [`PushError`] for the concurrent-close caveat.
+    /// observe end. Fires every registered waker and wakes every parked
+    /// thread, on both sides. See [`PushError`] for the
+    /// concurrent-close caveat.
     pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
+        self.notify_item();
+        self.notify_space();
     }
 
     pub fn is_closed(&self) -> bool {
@@ -269,20 +485,6 @@ impl<T> Drop for RingQueue<T> {
             let slot = &self.slots[t & self.mask];
             unsafe { (*slot.value.get()).assume_init_drop() };
         }
-    }
-}
-
-fn backoff(spins: &mut u32) {
-    *spins += 1;
-    if *spins < 64 {
-        std::hint::spin_loop();
-    } else if *spins < 4096 {
-        std::thread::yield_now();
-    } else {
-        // Long-idle tier: a persistent session's warm worker pool parks
-        // here between batches instead of burning a core per worker. The
-        // 50µs nap is noise next to a stage kernel but caps idle CPU.
-        std::thread::sleep(std::time::Duration::from_micros(50));
     }
 }
 
@@ -438,6 +640,85 @@ mod tests {
             assert_eq!(Arc::strong_count(&token), 3);
         }
         assert_eq!(Arc::strong_count(&token), 1);
+    }
+
+    #[test]
+    fn try_pop_many_never_blocks() {
+        let q: Arc<RingQueue<u32>> = RingQueue::with_capacity(8);
+        let mut out = Vec::new();
+        assert_eq!(q.try_pop_many(&mut out, 4), Err(PopError::Empty));
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.try_pop_many(&mut out, 3), Ok(3));
+        assert_eq!(out, vec![0, 1, 2]);
+        assert_eq!(q.try_pop_many(&mut out, 10), Ok(2));
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        q.close();
+        assert_eq!(q.try_pop_many(&mut out, 4), Err(PopError::Closed));
+    }
+
+    #[test]
+    fn item_waker_fires_on_push_or_immediately() {
+        let q: Arc<RingQueue<u32>> = RingQueue::with_capacity(4);
+        let fired = Arc::new(AtomicUsize::new(0));
+        // Empty queue: waker is deferred until the next push.
+        let f = Arc::clone(&fired);
+        q.park_on_item(Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "no data yet");
+        q.try_push(7).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "push fires the waker");
+        // Non-empty queue: waker fires immediately at registration.
+        let f = Arc::clone(&fired);
+        q.park_on_item(Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+        // Exactly once: a second push does not re-fire consumed wakers.
+        q.try_push(8).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn space_waker_fires_on_pop_and_close_fires_all() {
+        let q: Arc<RingQueue<u32>> = RingQueue::with_capacity(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        q.park_on_space(Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "queue full, waker parked");
+        assert_eq!(q.try_pop().unwrap(), 1);
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "pop fires the space waker");
+        // Refill, park both sides, then close: everything fires.
+        q.try_push(3).unwrap();
+        let f1 = Arc::clone(&fired);
+        q.park_on_space(Box::new(move || {
+            f1.fetch_add(1, Ordering::SeqCst);
+        }));
+        let q2: Arc<RingQueue<u32>> = RingQueue::with_capacity(2);
+        let f2 = Arc::clone(&fired);
+        q2.park_on_item(Box::new(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        }));
+        q.close();
+        q2.close();
+        assert_eq!(fired.load(Ordering::SeqCst), 3, "close fires parked wakers");
+    }
+
+    #[test]
+    fn parked_blocking_pop_wakes_on_push() {
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(4);
+        let c = Arc::clone(&q);
+        let consumer = thread::spawn(move || c.pop());
+        // Give the consumer time to spin down and park on the condvar.
+        thread::sleep(Duration::from_millis(30));
+        q.push(42).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(42));
     }
 
     /// Mini property test (no proptest offline): randomized interleavings

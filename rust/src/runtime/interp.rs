@@ -885,25 +885,56 @@ const MR: usize = 4;
 /// See [`MR`].
 const NR: usize = 8;
 
-/// FLOP count below which a matmul stays on the calling thread: one
-/// streamed NeRF-trunk tile (and every unit-test shape) is far cheaper
-/// than a thread spawn/join, and the pipeline already runs stages on
-/// their own worker threads.
-const PAR_MIN_FLOPS: usize = 1 << 21;
+/// Default FLOP count below which a matmul stays on the calling thread:
+/// one streamed NeRF-trunk tile (and every unit-test shape) is far
+/// cheaper than a fork-join, and the pipeline already runs stages as
+/// pool tasks.
+const DEFAULT_PAR_MIN_FLOPS: usize = 1 << 21;
 
-/// Cap on row-panel worker threads for a single matmul call.
+/// Cap on row-panel tasks for a single matmul call.
 const PAR_MAX_WORKERS: usize = 4;
 
+/// Current parallel threshold; 0 means "not initialized yet" (first
+/// read consults `KITSUNE_MATMUL_THRESHOLD`, then the default).
+static PAR_THRESHOLD: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// The FLOP threshold (2·m·k·n) at or above which matmuls fan out into
+/// row-panel tasks on the shared scheduler. Initialized from the
+/// `KITSUNE_MATMUL_THRESHOLD` env var on first use (falling back to
+/// ~2 MFLOP); override programmatically with
+/// [`set_matmul_par_threshold`]. Both sides of the threshold are
+/// bitwise-identical — this knob trades fork-join overhead against
+/// panel parallelism, never numerics.
+pub fn matmul_par_threshold() -> usize {
+    let cur = PAR_THRESHOLD.load(std::sync::atomic::Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let init = std::env::var("KITSUNE_MATMUL_THRESHOLD")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(DEFAULT_PAR_MIN_FLOPS);
+    PAR_THRESHOLD.store(init, std::sync::atomic::Ordering::Relaxed);
+    init
+}
+
+/// Set the parallel-matmul FLOP threshold (clamped to ≥ 1; 1 forces
+/// every ≥2-row matmul parallel, `usize::MAX` forces serial).
+pub fn set_matmul_par_threshold(flops: usize) {
+    PAR_THRESHOLD.store(flops.max(1), std::sync::atomic::Ordering::Relaxed);
+}
+
 /// Worker count the kernel will use for an `m x k x n` matmul: 1
-/// (serial) below [`PAR_MIN_FLOPS`], else up to [`PAR_MAX_WORKERS`]
-/// row panels (bounded by the machine's parallelism and by `m`).
+/// (serial) below [`matmul_par_threshold`], else up to
+/// [`PAR_MAX_WORKERS`] row panels (bounded by the current scheduler's
+/// worker count and by `m`).
 pub fn matmul_workers(m: usize, k: usize, n: usize) -> usize {
     let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
-    if flops < PAR_MIN_FLOPS || m < 2 {
+    if flops < matmul_par_threshold() || m < 2 {
         return 1;
     }
-    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    hw.min(PAR_MAX_WORKERS).min(m)
+    crate::sched::current().workers().min(PAR_MAX_WORKERS).min(m)
 }
 
 /// `a (T?) @ b (T?) (+ bias)`. Logical shapes are derived from the
@@ -953,13 +984,15 @@ fn matmul_opt(
     if workers <= 1 || n == 0 {
         matmul_panel(&a.data, &b.data, &mut out, 0, m, k, n, lda, ldb, ta, tb, bias_data);
     } else {
-        // Row-panel split over a scoped worker set: each thread owns a
-        // disjoint slice of output rows, so no synchronization beyond
-        // the join, and per-element math is untouched.
+        // Row-panel split over a fork-join scope on the shared
+        // scheduler: each task owns a disjoint slice of output rows, so
+        // no synchronization beyond the join, and per-element math is
+        // untouched. The panel decomposition is identical to the serial
+        // path's single full-range call, keeping results bitwise equal.
         let rows_per = m.div_ceil(workers);
         let a_data = a.data.as_slice();
         let b_data = b.data.as_slice();
-        std::thread::scope(|scope| {
+        crate::sched::scope(|scope| {
             for (pi, panel) in out.chunks_mut(rows_per * n).enumerate() {
                 let i0 = pi * rows_per;
                 let rows = panel.len() / n;
@@ -1652,16 +1685,52 @@ mod tests {
         assert!(plan.retire.iter().all(|rs| !rs.contains(&5)));
     }
 
+    /// Serializes tests that read or write the global parallel-matmul
+    /// threshold (cargo runs tests on parallel threads).
+    static THRESHOLD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn matmul_worker_threshold() {
+        let _g = THRESHOLD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_matmul_par_threshold(DEFAULT_PAR_MIN_FLOPS);
         // Tiny shapes stay serial (bitwise identity is vacuous there; the
-        // point is to not pay spawn cost per unit-test-sized tile).
+        // point is to not pay fork-join cost per unit-test-sized tile).
         assert_eq!(matmul_workers(4, 4, 4), 1);
         assert_eq!(matmul_workers(64, 60, 64), 1);
         assert_eq!(matmul_workers(1, 4096, 4096), 1);
         // Big shapes may go parallel, bounded by the cap.
         let w = matmul_workers(512, 512, 512);
         assert!((1..=4).contains(&w));
+    }
+
+    #[test]
+    fn matmul_threshold_both_sides_bitwise_equal() {
+        // The threshold knob moves work between the serial path and the
+        // scheduler's row-panel path; it must never move a single bit.
+        let _g = THRESHOLD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        struct Restore;
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                set_matmul_par_threshold(DEFAULT_PAR_MIN_FLOPS);
+            }
+        }
+        let _restore = Restore;
+        let mut rng = Rng::new(23);
+        let a = Tensor { dims: vec![96, 80], data: (0..96 * 80).map(|_| rng.normal()).collect() };
+        let b = Tensor { dims: vec![80, 72], data: (0..80 * 72).map(|_| rng.normal()).collect() };
+        let p = Program { n_inputs: 2, instrs: vec![Instr::Matmul { a: 0, b: 1 }], outputs: vec![2] };
+        // Far side: threshold above the shape's FLOPs → serial.
+        set_matmul_par_threshold(usize::MAX);
+        let serial = p.run(&[a.clone(), b.clone()]).unwrap();
+        // Near side: threshold 1 → row panels, on a pool wide enough to
+        // actually split even on a single-core host.
+        set_matmul_par_threshold(1);
+        let pool = crate::sched::Scheduler::with_workers(4);
+        let par = crate::sched::with_scheduler(&pool, || p.run(&[a, b])).unwrap();
+        pool.shutdown();
+        let sb: Vec<u32> = serial[0].data.iter().map(|v| v.to_bits()).collect();
+        let pb: Vec<u32> = par[0].data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sb, pb, "threshold must not change numerics");
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! One unified work-stealing runtime: the single source of compute
+//! threads in the crate.
+//!
+//! Kitsune's dataflow argument (§4 of the paper) is that spatial
+//! execution wins by keeping every execution resource busy at once
+//! instead of temporally multiplexing them per operator. Before this
+//! module the host runtime fragmented the CPU exactly that way: the
+//! interpreter spawned scoped threads per large GEMM, the session
+//! pipeline kept dedicated per-stage worker threads, and the training
+//! executor pinned one thread per DAG stage — idle cores in one layer
+//! could not help another. `kitsune::sched` replaces all three thread
+//! sources with one persistent pool:
+//!
+//! - per-worker deques with a shared injector: workers pop their own
+//!   deque LIFO (cache-warm fork-join) and steal from the injector and
+//!   other workers FIFO (fair pipeline pumps);
+//! - idle workers park on a condvar (no spin-burn) and are woken by the
+//!   first push;
+//! - worker count defaults to the machine's available parallelism and
+//!   can be overridden with `KITSUNE_WORKERS`;
+//! - a scoped fork-join API ([`scope`]/[`join`]) lets panel-parallel
+//!   GEMM borrow stack data without lifetime gymnastics, with a helping
+//!   join (the waiting thread executes pool tasks) so scopes opened
+//!   from pool workers cannot deadlock the pool.
+//!
+//! Stage pumps (see `session::service` and `train::exec`) run as
+//! cooperative tasks on this pool: they never block a worker thread —
+//! on an empty/full ring queue they register a waker with the queue and
+//! return the worker to the pool.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A unit of work for the pool.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Hard cap on `KITSUNE_WORKERS` so a typo cannot fork-bomb the host.
+const MAX_WORKERS: usize = 256;
+
+/// The work-stealing scheduler. One global instance ([`Scheduler::global`])
+/// backs all services by default; tests and benches can stand up private
+/// pools with [`Scheduler::with_workers`] and route services onto them
+/// with [`with_scheduler`].
+pub struct Scheduler {
+    /// Shared FIFO injector: external submissions and pump reschedules.
+    /// FIFO here is a fairness requirement — cooperative pumps re-inject
+    /// themselves, and LIFO would starve other pumps at 1 worker.
+    injector: Mutex<VecDeque<Task>>,
+    /// Per-worker deques: owner pops LIFO (back), thieves steal FIFO (front).
+    locals: Vec<Mutex<VecDeque<Task>>>,
+    idle_lock: Mutex<()>,
+    idle_cv: Condvar,
+    /// Workers currently inside the parking section.
+    sleepers: AtomicUsize,
+    /// Tasks pushed but not yet popped (incremented before push, so a
+    /// parker that reads 0 after registering as a sleeper is guaranteed
+    /// the producer's wake check will see it).
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Tasks that panicked (scope tasks catch their own panics and
+    /// re-raise at the join point instead; this counts detached tasks).
+    panics: AtomicUsize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+struct WorkerCtx {
+    sched: Arc<Scheduler>,
+    /// `Some(i)` on pool worker `i`; `None` on an external thread that
+    /// entered via [`with_scheduler`].
+    index: Option<usize>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<WorkerCtx>> = const { RefCell::new(None) };
+}
+
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("KITSUNE_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_WORKERS);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Scheduler {
+    /// Stand up a private pool with exactly `n` workers (min 1).
+    pub fn with_workers(n: usize) -> Arc<Scheduler> {
+        let n = n.clamp(1, MAX_WORKERS);
+        let sched = Arc::new(Scheduler {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            panics: AtomicUsize::new(0),
+            threads: Mutex::new(Vec::new()),
+        });
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = Arc::clone(&sched);
+            let h = std::thread::Builder::new()
+                .name(format!("kitsune-sched-{i}"))
+                .spawn(move || worker_loop(s, i))
+                .expect("spawn kitsune-sched worker");
+            handles.push(h);
+        }
+        *sched.threads.lock().unwrap() = handles;
+        sched
+    }
+
+    /// The process-wide pool. Sized by `KITSUNE_WORKERS` if set, else the
+    /// machine's available parallelism. Never shut down.
+    pub fn global() -> Arc<Scheduler> {
+        static GLOBAL: OnceLock<Arc<Scheduler>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| Scheduler::with_workers(default_workers())))
+    }
+
+    /// Number of worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Detached tasks that panicked (scope-spawned tasks re-raise at the
+    /// join point and are not counted here).
+    pub fn panics(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Submit a detached task to the shared FIFO injector.
+    pub fn spawn(&self, task: Task) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.injector.lock().unwrap().push_back(task);
+        self.wake_one();
+    }
+
+    /// Push a scope task: LIFO onto the current worker's deque when the
+    /// caller is a worker of this pool (cache-warm fork-join), else the
+    /// injector.
+    fn push_scoped(&self, task: Task) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        let local = CURRENT.with(|c| {
+            c.borrow().as_ref().and_then(|ctx| {
+                if std::ptr::eq(Arc::as_ptr(&ctx.sched), self) {
+                    ctx.index
+                } else {
+                    None
+                }
+            })
+        });
+        match local {
+            Some(i) => self.locals[i].lock().unwrap().push_back(task),
+            None => self.injector.lock().unwrap().push_back(task),
+        }
+        self.wake_one();
+    }
+
+    fn wake_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.idle_lock.lock().unwrap();
+            self.idle_cv.notify_one();
+        }
+    }
+
+    fn wake_all(&self) {
+        let _g = self.idle_lock.lock().unwrap();
+        self.idle_cv.notify_all();
+    }
+
+    /// Pop the next runnable task: own deque LIFO, then injector FIFO,
+    /// then steal from other workers FIFO.
+    fn find_task(&self, home: Option<usize>) -> Option<Task> {
+        if let Some(h) = home {
+            if let Some(t) = self.locals[h].lock().unwrap().pop_back() {
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return Some(t);
+        }
+        let n = self.locals.len();
+        let start = home.map_or(0, |h| h + 1);
+        for off in 0..n {
+            let i = (start + off) % n;
+            if Some(i) == home {
+                continue;
+            }
+            if let Some(t) = self.locals[i].lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn run_task(&self, task: Task) {
+        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Stop the pool and join its threads. Only meaningful for private
+    /// pools; must be called from a thread outside the pool. Remaining
+    /// queued tasks are drained before the workers exit.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake_all();
+        let handles = std::mem::take(&mut *self.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sched: Arc<Scheduler>, index: usize) {
+    CURRENT.with(|c| {
+        *c.borrow_mut() = Some(WorkerCtx { sched: Arc::clone(&sched), index: Some(index) });
+    });
+    let mut idle = 0u32;
+    loop {
+        if let Some(task) = sched.find_task(Some(index)) {
+            idle = 0;
+            sched.run_task(task);
+            continue;
+        }
+        if sched.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        idle += 1;
+        if idle <= 16 {
+            std::hint::spin_loop();
+        } else if idle <= 64 {
+            std::thread::yield_now();
+        } else {
+            // Park. The sleeper count is incremented *before* re-checking
+            // `pending` under the idle lock; a producer increments
+            // `pending` before its wake check reads `sleepers`, so in the
+            // SeqCst total order at least one side sees the other — no
+            // lost wakeup. The timeout is a pure backstop.
+            let guard = sched.idle_lock.lock().unwrap();
+            sched.sleepers.fetch_add(1, Ordering::SeqCst);
+            if sched.pending.load(Ordering::SeqCst) == 0
+                && !sched.shutdown.load(Ordering::SeqCst)
+            {
+                let _ = sched.idle_cv.wait_timeout(guard, Duration::from_millis(10)).unwrap();
+            }
+            sched.sleepers.fetch_sub(1, Ordering::SeqCst);
+            idle = 17; // back to the yield tier after waking
+        }
+    }
+}
+
+/// The scheduler the current thread is bound to: the pool this worker
+/// belongs to, the pool installed by an enclosing [`with_scheduler`], or
+/// the global pool.
+pub fn current() -> Arc<Scheduler> {
+    CURRENT
+        .with(|c| c.borrow().as_ref().map(|ctx| Arc::clone(&ctx.sched)))
+        .unwrap_or_else(Scheduler::global)
+}
+
+/// Run `f` with `sched` installed as the current thread's scheduler, so
+/// services started inside (and [`scope`]/[`join`] calls) use it instead
+/// of the global pool. Restores the previous binding on exit, including
+/// on panic.
+pub fn with_scheduler<R>(sched: &Arc<Scheduler>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<WorkerCtx>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            let _ = CURRENT.try_with(|c| *c.borrow_mut() = prev);
+        }
+    }
+    let prev = CURRENT.with(|c| {
+        c.borrow_mut().replace(WorkerCtx { sched: Arc::clone(sched), index: None })
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+struct ScopeLatch {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// A fork-join scope over the pool: tasks spawned on it may borrow from
+/// the enclosing stack frame (`'env`), and [`scope`] does not return
+/// until every spawned task has finished.
+pub struct Scope<'env> {
+    sched: Arc<Scheduler>,
+    latch: Arc<ScopeLatch>,
+    /// Invariant over `'env`, like `std::thread::Scope`.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Spawn a task that may borrow from the scope's environment. Panics
+    /// inside the task are captured and re-raised from [`scope`].
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.latch.remaining.fetch_add(1, Ordering::SeqCst);
+        let latch = Arc::clone(&self.latch);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = latch.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            latch.remaining.fetch_sub(1, Ordering::SeqCst);
+        });
+        // SAFETY: `scope` joins every spawned task before returning (even
+        // when the body or a task panics), so borrows of `'env` captured
+        // by the task never outlive the frame they point into. This is
+        // the same lifetime erasure `std::thread::scope` performs
+        // internally.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        self.sched.push_scoped(task);
+    }
+}
+
+/// Run a fork-join scope on the current scheduler (see [`current`]).
+///
+/// The calling thread *helps* while joining: it executes pool tasks
+/// until all scope tasks have completed, so scopes opened from pool
+/// workers (nested parallelism) cannot deadlock the pool, and external
+/// callers contribute a core instead of blocking.
+pub fn scope<'env, F, R>(f: F) -> R
+where
+    F: FnOnce(&Scope<'env>) -> R,
+{
+    scope_on(&current(), f)
+}
+
+/// [`scope`] on an explicit pool.
+pub fn scope_on<'env, F, R>(sched: &Arc<Scheduler>, f: F) -> R
+where
+    F: FnOnce(&Scope<'env>) -> R,
+{
+    let latch = Arc::new(ScopeLatch {
+        remaining: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    });
+    let s = Scope {
+        sched: Arc::clone(sched),
+        latch: Arc::clone(&latch),
+        _env: PhantomData,
+    };
+    let result = catch_unwind(AssertUnwindSafe(|| f(&s)));
+    drop(s);
+    // Helping join: run pool tasks while our scope tasks are in flight.
+    let home = CURRENT.with(|c| {
+        c.borrow().as_ref().and_then(|ctx| {
+            if std::ptr::eq(Arc::as_ptr(&ctx.sched), Arc::as_ptr(sched)) {
+                ctx.index
+            } else {
+                None
+            }
+        })
+    });
+    let mut idle = 0u32;
+    while latch.remaining.load(Ordering::SeqCst) != 0 {
+        if let Some(task) = sched.find_task(home) {
+            idle = 0;
+            sched.run_task(task);
+        } else {
+            idle += 1;
+            if idle <= 32 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+    let task_panic = latch.panic.lock().unwrap().take();
+    match result {
+        Err(p) => resume_unwind(p),
+        Ok(r) => {
+            if let Some(p) = task_panic {
+                resume_unwind(p);
+            }
+            r
+        }
+    }
+}
+
+/// Run two closures, potentially in parallel, returning both results.
+/// `a` may run on another worker; `b` runs on the calling thread.
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB,
+    RA: Send,
+{
+    let mut ra: Option<RA> = None;
+    let rb = scope(|s| {
+        s.spawn(|| ra = Some(a()));
+        b()
+    });
+    (ra.expect("sched::join: spawned closure joined"), rb)
+}
+
+/// Countdown used by services to drain their pool tasks at shutdown:
+/// each pump calls [`LiveCount::done`] exactly once when it retires, and
+/// `shutdown`/`Drop` block in [`LiveCount::wait_zero`] until no task
+/// still references the service's stage state.
+pub struct LiveCount {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl LiveCount {
+    pub fn new(n: usize) -> Arc<LiveCount> {
+        Arc::new(LiveCount { n: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    /// Retire one participant.
+    pub fn done(&self) {
+        let mut g = self.n.lock().unwrap();
+        *g = g.saturating_sub(1);
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every participant has retired.
+    pub fn wait_zero(&self) {
+        let mut g = self.n.lock().unwrap();
+        while *g != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// An OS-thread scope for the deprecated dedicated-thread paths (the
+/// legacy per-call `coordinator::runner`) and for test harnesses: same
+/// API as `std::thread::scope`, routed through this module so every
+/// thread the crate creates is accounted for in one place.
+pub fn dedicated_scope<'env, F, R>(f: F) -> R
+where
+    F: for<'scope> FnOnce(&'scope std::thread::Scope<'scope, 'env>) -> R,
+{
+    std::thread::scope(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_runs_all_tasks_and_allows_borrows() {
+        let sched = Scheduler::with_workers(2);
+        let mut results = vec![0u64; 64];
+        scope_on(&sched, |s| {
+            for (i, slot) in results.iter_mut().enumerate() {
+                s.spawn(move || *slot = (i as u64) * 3);
+            }
+        });
+        for (i, v) in results.iter().enumerate() {
+            assert_eq!(*v, (i as u64) * 3);
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn join_returns_both_results() {
+        let (a, b) = join(|| 2 + 2, || "ok");
+        assert_eq!(a, 4);
+        assert_eq!(b, "ok");
+    }
+
+    #[test]
+    fn detached_spawn_executes() {
+        let sched = Scheduler::with_workers(1);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let hits = Arc::clone(&hits);
+            sched.spawn(Box::new(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let t0 = std::time::Instant::now();
+        while hits.load(Ordering::SeqCst) != 32 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "detached tasks stalled");
+            std::thread::yield_now();
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn with_scheduler_binds_current() {
+        let sched = Scheduler::with_workers(1);
+        with_scheduler(&sched, || {
+            assert!(Arc::ptr_eq(&current(), &sched));
+        });
+        sched.shutdown();
+    }
+
+    #[test]
+    fn live_count_waits_for_all() {
+        let live = LiveCount::new(3);
+        let sched = Scheduler::with_workers(2);
+        for _ in 0..3 {
+            let live = Arc::clone(&live);
+            sched.spawn(Box::new(move || live.done()));
+        }
+        live.wait_zero();
+        sched.shutdown();
+    }
+}

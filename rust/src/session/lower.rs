@@ -43,11 +43,22 @@ pub struct LowerOptions {
     pub tile_rows: Option<usize>,
     /// Seed for He-initialized stage weights.
     pub seed: u64,
+    /// Pump tasks per training-DAG stage (default 1). More than one
+    /// lets tiles of a stage compute out of order; the executor's
+    /// sequence reorder buffer restores emission order, so results stay
+    /// bitwise-identical to the serial oracle.
+    pub train_workers: usize,
 }
 
 impl Default for LowerOptions {
     fn default() -> Self {
-        LowerOptions { gemm_workers: 2, queue_capacity: 8, tile_rows: None, seed: 0xC0FFEE }
+        LowerOptions {
+            gemm_workers: 2,
+            queue_capacity: 8,
+            tile_rows: None,
+            seed: 0xC0FFEE,
+            train_workers: 1,
+        }
     }
 }
 

@@ -131,6 +131,7 @@ pub struct SessionBuilder {
     queue_capacity: usize,
     tile_rows: Option<usize>,
     seed: u64,
+    train_workers: usize,
     warm: bool,
 }
 
@@ -148,6 +149,7 @@ impl Default for SessionBuilder {
             queue_capacity: 8,
             tile_rows: None,
             seed: 0xC0FFEE,
+            train_workers: 1,
             warm: true,
         }
     }
@@ -229,6 +231,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Pump tasks per training-DAG stage (default 1). Raising this lets
+    /// a stage's tiles compute out of order on the shared scheduler; the
+    /// executor's sequence reorder buffer keeps emission — and therefore
+    /// results — bitwise-identical to the serial oracle.
+    pub fn train_workers(mut self, n: usize) -> Self {
+        self.train_workers = n.max(1);
+        self
+    }
+
     /// `warm(false)` skips standing up the worker pool — compile/lower/
     /// simulate only (used by `kitsune compile`). Default: warm.
     pub fn warm(mut self, warm: bool) -> Self {
@@ -252,6 +263,7 @@ impl SessionBuilder {
             queue_capacity,
             tile_rows,
             seed,
+            train_workers,
             warm,
         } = self;
 
@@ -297,7 +309,8 @@ impl SessionBuilder {
         let mut not_streamable = None;
         if let Some(g) = &graph {
             let c = compile(g, &cfg, &select)?;
-            let opts = LowerOptions { gemm_workers, queue_capacity, tile_rows, seed };
+            let opts =
+                LowerOptions { gemm_workers, queue_capacity, tile_rows, seed, train_workers };
             if g.backward_start.is_some() {
                 // Training graphs lower onto the DAG pipeline (multicast +
                 // skip links); the linear lowering below can never stream a

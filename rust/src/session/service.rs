@@ -1,6 +1,6 @@
-//! The persistent pipeline service: stage worker threads and ring queues
-//! stood up once at session build, serving concurrently submitted batches
-//! until shutdown.
+//! The persistent pipeline service: cooperative stage pumps and ring
+//! queues stood up once at session build, serving concurrently submitted
+//! batches until shutdown.
 //!
 //! This replaces the per-call thread scope of
 //! [`crate::coordinator::run_streaming`] (spawn, stream, join — no warm
@@ -10,15 +10,24 @@
 //! in-batch index — the sequence-tagged in-flight table — so any number
 //! of callers can interleave batches through the same warm pipeline and
 //! each still receives its outputs in submission order.
+//!
+//! Stage workers are **pumps**: cooperative tasks on the shared
+//! [`crate::sched`] work-stealing pool rather than dedicated threads.
+//! A pump never blocks a pool worker — when its input queue is empty
+//! (or its output queue full) it registers a one-shot waker with the
+//! queue and returns the worker to the pool; the waker re-injects the
+//! pump when the edge changes state. Stage compute and the
+//! interpreter's GEMM row panels therefore share the same cores under
+//! one scheduler, which is the whole point of the unified runtime.
 
 use crate::coordinator::{SpatialPipeline, StageMetrics};
 use crate::graph::ResourceClass;
-use crate::queue::{PushError, RingQueue};
+use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::{ArtifactStore, Tensor};
+use crate::sched::{self, LiveCount, Scheduler};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// One tile in flight: owning ticket, index within the batch, payload.
@@ -143,10 +152,12 @@ impl StageStat {
     }
 }
 
-/// Persistent stage worker pools + ring queues for one pipeline.
+/// Persistent stage pumps + ring queues for one pipeline.
 pub struct PipelineService {
     source: Arc<RingQueue<Tile>>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Countdown of live pump tasks; shutdown drains it to zero so no
+    /// scheduler task still references stage state when it returns.
+    live: Arc<LiveCount>,
     stats: Arc<Vec<StageStat>>,
     spawned: Arc<AtomicUsize>,
     /// Submit/shutdown synchronization. `RingQueue::close` is advisory
@@ -161,10 +172,11 @@ pub struct PipelineService {
 }
 
 impl PipelineService {
-    /// Stand up the worker pools: one ring queue per stage boundary, each
-    /// stage's workers as long-lived threads, plus one sink thread
-    /// routing finished tiles back to their tickets. Threads are created
-    /// here — never on the submit path.
+    /// Stand up the stage pumps: one ring queue per stage boundary, each
+    /// stage's workers as cooperative tasks on the current scheduler
+    /// (see [`sched::current`]), plus one sink pump routing finished
+    /// tiles back to their tickets. Tasks are created here — never on
+    /// the submit path.
     pub fn start(
         store: Arc<ArtifactStore>,
         pipeline: &SpatialPipeline,
@@ -195,81 +207,57 @@ impl PipelineService {
                 })
                 .collect(),
         );
+        let scheduler = sched::current();
+        let total_pumps = pipeline.stages.iter().map(|s| s.workers).sum::<usize>() + 1;
+        let live = LiveCount::new(total_pumps);
         let spawned = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-
-        // If any spawn fails partway, already-spawned workers must not be
-        // leaked blocked on never-closed queues: close every queue (pop
-        // then returns None) and join the partial pool before erroring.
-        let abort = |handles: Vec<JoinHandle<()>>, e: anyhow::Error| -> anyhow::Error {
-            for q in &queues {
-                q.close();
-            }
-            for h in handles {
-                let _ = h.join();
-            }
-            e
-        };
 
         for (si, stage) in pipeline.stages.iter().enumerate() {
-            // Countdown latch: the stage's last worker to exit closes the
-            // downstream queue, so sibling pushes are never cut off.
-            let latch = Arc::new(AtomicUsize::new(stage.workers));
-            for wi in 0..stage.workers {
-                let in_q = Arc::clone(&queues[si]);
-                let out_q = Arc::clone(&queues[si + 1]);
-                let latch = Arc::clone(&latch);
-                let store = Arc::clone(&store);
-                let stats = Arc::clone(&stats);
-                let entry = stage.entry.clone();
-                // Arc bump only — the worker borrows weights per tile.
-                let weights = Arc::clone(&stage.weights);
-                let spawn_result = std::thread::Builder::new()
-                    .name(format!("kitsune-{}-{wi}", stage.name))
-                    .spawn(move || {
-                        stage_worker(&store, &entry, &weights, &in_q, &out_q, &stats[si]);
-                        if latch.fetch_sub(1, Ordering::AcqRel) == 1 {
-                            out_q.close();
-                        }
-                    });
-                let handle = match spawn_result {
-                    Ok(h) => h,
-                    Err(e) => return Err(abort(handles, anyhow!("spawning stage worker: {e}"))),
+            let shared = Arc::new(StageShared {
+                store: Arc::clone(&store),
+                entry: stage.entry.clone(),
+                // Arc bump only — pumps borrow weights per tile.
+                weights: Arc::clone(&stage.weights),
+                in_q: Arc::clone(&queues[si]),
+                out_q: Arc::clone(&queues[si + 1]),
+                stats: Arc::clone(&stats),
+                si,
+                // Countdown latch: the stage's last pump to retire closes
+                // the downstream queue, so sibling pushes are never cut
+                // off.
+                latch: AtomicUsize::new(stage.workers),
+                live: Arc::clone(&live),
+                sched: Arc::clone(&scheduler),
+            });
+            for _ in 0..stage.workers {
+                let pump = StagePump {
+                    shared: Arc::clone(&shared),
+                    inbox: Vec::new(),
+                    pending: None,
+                    poisoned: false,
+                    parked: None,
                 };
                 // Counted at the spawn site, so the census is exact the
                 // moment start() returns (and any future spawn path must
                 // go through the same accounting).
                 spawned.fetch_add(1, Ordering::SeqCst);
-                handles.push(handle);
+                scheduler.spawn(Box::new(move || pump.run()));
             }
         }
 
-        // Sink: route finished tiles back to their tickets, draining
-        // bursts so completion costs one backoff cycle per burst.
-        let sink_q = Arc::clone(&queues[n_stages]);
-        let sink_result = std::thread::Builder::new()
-            .name("kitsune-sink".to_string())
-            .spawn(move || {
-                let mut burst: Vec<Tile> = Vec::new();
-                loop {
-                    burst.clear();
-                    if sink_q.pop_many(&mut burst, SINK_BURST) == 0 {
-                        break;
-                    }
-                    for (ticket, idx, t) in burst.drain(..) {
-                        ticket.complete(idx, t);
-                    }
-                }
-            });
-        match sink_result {
-            Ok(h) => handles.push(h),
-            Err(e) => return Err(abort(handles, anyhow!("spawning sink: {e}"))),
-        }
+        // Sink pump: route finished tiles back to their tickets, draining
+        // bursts so completion costs one pop cycle per burst.
+        let sink = SinkPump {
+            q: Arc::clone(&queues[n_stages]),
+            live: Arc::clone(&live),
+            sched: Arc::clone(&scheduler),
+        };
         spawned.fetch_add(1, Ordering::SeqCst);
+        scheduler.spawn(Box::new(move || sink.run()));
 
         Ok(PipelineService {
             source: Arc::clone(&queues[0]),
-            handles: Mutex::new(handles),
+            live,
             stats,
             spawned,
             gate: std::sync::RwLock::new(false),
@@ -315,17 +303,21 @@ impl PipelineService {
         self.stats.iter().map(StageStat::snapshot).collect()
     }
 
-    /// Total threads this service has ever spawned (stage workers +
+    /// Total pump tasks this service has ever created (stage workers +
     /// sink). Constant after [`PipelineService::start`] returns — the
-    /// warm-submit test asserts exactly this.
+    /// warm-submit test asserts exactly this. (Kept under its historical
+    /// name: pumps are the scheduler-task successors of the old
+    /// dedicated worker threads, with the same census semantics.)
     pub fn threads_spawned(&self) -> usize {
         self.spawned.load(Ordering::SeqCst)
     }
 
-    /// Close the source queue and join every worker. Idempotent. Waits
-    /// out any in-flight `submit` first (producer-side close — see the
-    /// `gate` field docs); tiles already in flight drain, and their
-    /// tickets complete normally.
+    /// Close the source queue and drain every pump task. Idempotent.
+    /// Waits out any in-flight `submit` first (producer-side close — see
+    /// the `gate` field docs); tiles already in flight drain, and their
+    /// tickets complete normally. When this returns, no scheduler task
+    /// references this service's stage state any more. Must be called
+    /// from outside the scheduler's worker pool (any user thread).
     pub fn shutdown(&self) {
         {
             let mut gate = self.gate.write().unwrap();
@@ -335,10 +327,7 @@ impl PipelineService {
             *gate = true;
         }
         self.source.close();
-        let mut handles = self.handles.lock().unwrap();
-        for h in handles.drain(..) {
-            let _ = h.join();
-        }
+        self.live.wait_zero();
     }
 }
 
@@ -348,72 +337,209 @@ impl Drop for PipelineService {
     }
 }
 
-/// Tiles a stage worker drains per backoff cycle. Small enough that
-/// sibling workers of the same stage still share a burst-sized batch,
-/// large enough to skip most per-tile backoff entries.
+/// Tiles a stage pump drains per refill. Small enough that sibling
+/// pumps of the same stage still share a burst-sized batch, large enough
+/// to skip most per-tile queue entries.
 const STAGE_BURST: usize = 4;
 
-/// Tiles the sink drains per backoff cycle.
+/// Tiles the sink drains per burst.
 const SINK_BURST: usize = 64;
 
-/// One stage worker: drain a burst of tagged tiles, run the stage entry
-/// over each (weights *borrowed*, tile moved — nothing cloned at the
-/// stage boundary), forward the results. Kernel failures poison only the
-/// owning ticket — the pipeline keeps serving other batches.
-fn stage_worker(
-    store: &ArtifactStore,
-    entry: &str,
-    weights: &[Tensor],
-    in_q: &RingQueue<Tile>,
-    out_q: &RingQueue<Tile>,
-    stat: &StageStat,
-) {
-    let mut burst: Vec<Tile> = Vec::new();
-    'serve: loop {
-        let w0 = Instant::now();
-        burst.clear();
-        if in_q.pop_many(&mut burst, STAGE_BURST) == 0 {
-            break;
+/// Tiles a stage pump processes before re-injecting itself into the
+/// scheduler's FIFO, so sibling pumps get a turn even on a one-worker
+/// pool.
+const PUMP_YIELD_TILES: usize = 16;
+
+/// Immutable state shared by all pumps of one stage.
+struct StageShared {
+    store: Arc<ArtifactStore>,
+    entry: String,
+    weights: Arc<Vec<Tensor>>,
+    in_q: Arc<RingQueue<Tile>>,
+    out_q: Arc<RingQueue<Tile>>,
+    stats: Arc<Vec<StageStat>>,
+    si: usize,
+    latch: AtomicUsize,
+    live: Arc<LiveCount>,
+    sched: Arc<Scheduler>,
+}
+
+/// One cooperative stage worker. Owns its in-flight tiles; moves itself
+/// between scheduler tasks and queue wakers, so exactly one incarnation
+/// exists at any time and the body runs single-threaded without locks.
+struct StagePump {
+    shared: Arc<StageShared>,
+    /// Tiles popped from the input edge but not yet processed.
+    inbox: Vec<Tile>,
+    /// Computed output awaiting space on the output edge.
+    pending: Option<Tile>,
+    /// Downstream closed mid-flight: drain remaining input by failing
+    /// tickets instead of computing into a void.
+    poisoned: bool,
+    /// When the pump parked (for wait-time accounting on resume).
+    parked: Option<Instant>,
+}
+
+impl StagePump {
+    fn stat(&self) -> &StageStat {
+        &self.shared.stats[self.shared.si]
+    }
+
+    /// Run until out of work (park on a queue waker), out of input
+    /// (retire), or out of time-slice (re-inject). Never blocks.
+    fn run(mut self) {
+        if let Some(p0) = self.parked.take() {
+            self.stat().wait_ns.fetch_add(p0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
-        stat.wait_ns.fetch_add(w0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let mut poisoned = false;
-        for (ticket, idx, tile) in burst.drain(..) {
-            if poisoned {
-                // Downstream already closed: account the rest of the
-                // burst as failed so no waiter hangs.
-                ticket.fail("pipeline shut down mid-flight".to_string());
-                continue;
-            }
-            let b0 = Instant::now();
-            let result = {
-                let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
-                args.push(&tile);
-                args.extend(weights.iter());
-                store.run_f32_ref(entry, &args)
-            };
-            match result {
-                Ok(outs) => match outs.into_iter().next() {
-                    Some(out) => {
-                        stat.busy_ns.fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        stat.tiles.fetch_add(1, Ordering::Relaxed);
-                        let w1 = Instant::now();
-                        if let Err(PushError::Closed((t, _, _))) = out_q.push((ticket, idx, out)) {
-                            // Downstream closed mid-flight (shutdown):
-                            // the tile cannot complete — fail its ticket
-                            // so no waiter hangs.
-                            t.fail("pipeline shut down mid-flight".to_string());
-                            poisoned = true;
-                            continue;
-                        }
-                        stat.wait_ns.fetch_add(w1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut quota = PUMP_YIELD_TILES;
+        loop {
+            // 1. Flush the pending output first: it holds the loop
+            // invariant that at most one computed tile is buffered.
+            if let Some(tile) = self.pending.take() {
+                match self.shared.out_q.try_push(tile) {
+                    Ok(()) => {}
+                    Err(PushError::Full(t)) => {
+                        self.pending = Some(t);
+                        return self.park_on_space();
                     }
-                    None => ticket.fail(format!("{entry}: produced no output")),
-                },
-                Err(e) => ticket.fail(format!("stage {entry} failed: {e:#}")),
+                    Err(PushError::Closed((ticket, _, _))) => {
+                        // Downstream closed mid-flight (shutdown): the
+                        // tile cannot complete — fail its ticket so no
+                        // waiter hangs.
+                        ticket.fail("pipeline shut down mid-flight".to_string());
+                        self.poisoned = true;
+                    }
+                }
+            }
+            // 2. Refill the inbox when empty.
+            if self.inbox.is_empty() {
+                match self.shared.in_q.try_pop_many(&mut self.inbox, STAGE_BURST) {
+                    Ok(_) => {}
+                    Err(PopError::Empty) => return self.park_on_item(),
+                    Err(PopError::Closed) => return self.retire(),
+                }
+            }
+            // 3. Process one tile (weights *borrowed*, tile moved —
+            // nothing cloned at the stage boundary). Kernel failures
+            // poison only the owning ticket — the pipeline keeps serving
+            // other batches.
+            let (ticket, idx, tile) = self.inbox.remove(0);
+            if self.poisoned {
+                ticket.fail("pipeline shut down mid-flight".to_string());
+            } else {
+                let b0 = Instant::now();
+                let result = {
+                    let weights = self.shared.weights.as_slice();
+                    let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
+                    args.push(&tile);
+                    args.extend(weights.iter());
+                    self.shared.store.run_f32_ref(&self.shared.entry, &args)
+                };
+                match result {
+                    Ok(outs) => match outs.into_iter().next() {
+                        Some(out) => {
+                            self.stat()
+                                .busy_ns
+                                .fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            self.stat().tiles.fetch_add(1, Ordering::Relaxed);
+                            self.pending = Some((ticket, idx, out));
+                        }
+                        None => ticket.fail(format!("{}: produced no output", self.shared.entry)),
+                    },
+                    Err(e) => {
+                        ticket.fail(format!("stage {} failed: {e:#}", self.shared.entry));
+                    }
+                }
+            }
+            quota -= 1;
+            if quota == 0 {
+                return self.reinject();
             }
         }
-        if poisoned {
-            break 'serve;
+    }
+
+    /// Park until the input edge has data (or closes). The waker
+    /// re-injects the pump; it is fired at most once, so exactly one
+    /// incarnation of the pump ever exists.
+    fn park_on_item(mut self) {
+        self.parked = Some(Instant::now());
+        let q = Arc::clone(&self.shared.in_q);
+        let sched = Arc::clone(&self.shared.sched);
+        q.park_on_item(Box::new(move || {
+            sched.spawn(Box::new(move || self.run()));
+        }));
+    }
+
+    /// Park until the output edge has space (or closes).
+    fn park_on_space(mut self) {
+        self.parked = Some(Instant::now());
+        let q = Arc::clone(&self.shared.out_q);
+        let sched = Arc::clone(&self.shared.sched);
+        q.park_on_space(Box::new(move || {
+            sched.spawn(Box::new(move || self.run()));
+        }));
+    }
+
+    /// Time-slice expired: go to the back of the scheduler's FIFO.
+    fn reinject(self) {
+        let sched = Arc::clone(&self.shared.sched);
+        sched.spawn(Box::new(move || self.run()));
+    }
+
+    /// Input closed and drained: fail anything still held (possible only
+    /// when poisoned), let the stage's last pump close the downstream
+    /// edge, and retire from the live count.
+    fn retire(self) {
+        debug_assert!(self.pending.is_none(), "retire with unflushed output");
+        for (ticket, _, _) in self.inbox {
+            ticket.fail("pipeline shut down mid-flight".to_string());
         }
+        if let Some((ticket, _, _)) = self.pending {
+            ticket.fail("pipeline shut down mid-flight".to_string());
+        }
+        let shared = self.shared;
+        if shared.latch.fetch_sub(1, Ordering::AcqRel) == 1 {
+            shared.out_q.close();
+        }
+        shared.live.done();
+    }
+}
+
+/// Cooperative sink: drain bursts of finished tiles back to their
+/// tickets; park on the sink edge when it idles, retire when it closes.
+struct SinkPump {
+    q: Arc<RingQueue<Tile>>,
+    live: Arc<LiveCount>,
+    sched: Arc<Scheduler>,
+}
+
+impl SinkPump {
+    fn run(self) {
+        let mut burst: Vec<Tile> = Vec::new();
+        for _ in 0..PUMP_YIELD_TILES {
+            burst.clear();
+            match self.q.try_pop_many(&mut burst, SINK_BURST) {
+                Ok(_) => {
+                    for (ticket, idx, t) in burst.drain(..) {
+                        ticket.complete(idx, t);
+                    }
+                }
+                Err(PopError::Empty) => {
+                    let q = Arc::clone(&self.q);
+                    let sched = Arc::clone(&self.sched);
+                    q.park_on_item(Box::new(move || {
+                        sched.spawn(Box::new(move || self.run()));
+                    }));
+                    return;
+                }
+                Err(PopError::Closed) => {
+                    self.live.done();
+                    return;
+                }
+            }
+        }
+        // Time-slice expired with data still flowing: re-inject.
+        let sched = Arc::clone(&self.sched);
+        sched.spawn(Box::new(move || self.run()));
     }
 }

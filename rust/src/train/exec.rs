@@ -1,16 +1,26 @@
 //! The persistent DAG-pipeline executor behind [`crate::train::Trainer`]:
-//! stage worker threads and per-edge ring queues stood up once, serving
-//! microbatch training steps until shutdown — the training counterpart
-//! of [`crate::session::PipelineService`], generalized from a linear
-//! chain to the multicast / skip-link DAG a [`TrainPlan`] describes.
+//! cooperative stage pumps and per-edge ring queues stood up once,
+//! serving microbatch training steps until shutdown — the training
+//! counterpart of [`crate::session::PipelineService`], generalized from
+//! a linear chain to the multicast / skip-link DAG a [`TrainPlan`]
+//! describes.
 //!
-//! Execution model: every stage runs **one** worker; each queue edge has
-//! one producer and one consumer, so FIFO order delivers tile `seq`s in
-//! lockstep and a multi-input stage simply pops one tile from each input
-//! edge — no reorder buffer. Multicast producers push a clone per
-//! consumer queue. Parameters live in one shared `RwLock` store: stage
-//! workers take read locks per tile; the trainer write-locks between
-//! steps (the pipeline is drained then, so updates never race a kernel).
+//! Execution model: each stage runs one or more **pumps** — cooperative
+//! tasks on the shared [`crate::sched`] work-stealing pool that never
+//! block a worker (empty/full edges register queue wakers instead).
+//! Each queue edge has one producing and one consuming stage, so FIFO
+//! order delivers tile `seq`s in lockstep; a multi-input stage pops one
+//! tile from each input edge under its intake lock. With several pumps
+//! per stage, tiles may *complete* out of order inside the stage, so
+//! emission goes through a per-stage **sequence reorder buffer**: intake
+//! assigns each gathered tile a monotonic arrival index, and outputs are
+//! routed strictly in arrival order (which equals input FIFO order, and
+//! therefore `seq` order within a step) — preserving the bitwise
+//! pipeline==serial-oracle contract. Multicast producers push a clone
+//! per consumer queue, in the same route order as the single-worker
+//! executor. Parameters live in one shared `RwLock` store: pumps take
+//! read locks per tile; the trainer write-locks between steps (the
+//! pipeline is drained then, so updates never race a kernel).
 //!
 //! [`serial_step`] re-executes the same stage programs tile-by-tile on
 //! the calling thread and folds taps through the same accumulator — the
@@ -19,15 +29,15 @@
 
 use super::accumulate::mean_in_order;
 use super::lower::{TapKind, TrainPlan};
-use crate::queue::{PushError, RingQueue};
-use crate::runtime::interp::ExecPlan;
+use crate::queue::{PopError, PushError, RingQueue};
+use crate::runtime::interp::{ExecPlan, Program};
 use crate::runtime::Tensor;
+use crate::sched::{self, LiveCount, Scheduler};
 use crate::Result;
 use anyhow::{anyhow, ensure};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
-use std::thread::JoinHandle;
 
 /// A sequence-tagged tile on one queue edge.
 type SeqTile = (usize, Tensor);
@@ -125,16 +135,18 @@ impl StepTable {
     }
 }
 
-/// Persistent training pipeline: per-edge ring queues, one worker thread
-/// per stage, a sink thread routing taps into the step table, and the
-/// shared mutable parameter store.
+/// Persistent training pipeline: per-edge ring queues, one or more
+/// pumps per stage on the shared scheduler, a sink pump routing taps
+/// into the step table, and the shared mutable parameter store.
 pub struct TrainService {
     plan: Arc<TrainPlan>,
     pub(crate) params: Arc<RwLock<Vec<Tensor>>>,
     /// Per source port: the queues its tiles fan out to.
     src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>>,
     table: Arc<StepTable>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Countdown of live pump tasks; shutdown (and Drop) drain it to
+    /// zero so no scheduler task still references stage state after.
+    svc_live: Arc<LiveCount>,
     spawned: usize,
     /// One step in flight at a time; shutdown waits out the current one.
     step_lock: Mutex<()>,
@@ -143,10 +155,11 @@ pub struct TrainService {
 }
 
 impl TrainService {
-    /// Stand up the DAG: queues from the plan's edges, one worker per
-    /// stage, the sink, and the parameter store seeded from the plan's
-    /// deterministic initial values. Threads are created here — never on
-    /// the step path.
+    /// Stand up the DAG: queues from the plan's edges, the per-stage
+    /// pump tasks on the shared scheduler (`workers` per stage from the
+    /// lowering), the sink pump, and the parameter store seeded from the
+    /// plan's deterministic initial values. Tasks are spawned here —
+    /// never on the step path.
     pub fn start(plan: Arc<TrainPlan>) -> Result<TrainService> {
         let n_stages = plan.stages.len();
         ensure!(n_stages > 0, "training pipeline needs at least one stage");
@@ -207,8 +220,17 @@ impl TrainService {
         ));
         let table = Arc::new(StepTable::new());
         let dead = Arc::new(AtomicBool::new(false));
-        let latch = Arc::new(AtomicUsize::new(n_stages));
-        let mut handles = Vec::with_capacity(n_stages + 1);
+        let all_latch = Arc::new(AtomicUsize::new(n_stages));
+        let scheduler = sched::current();
+
+        // Pump census: the lowering sets per-stage worker counts on the
+        // pipeline's stage specs (default 1 — see `LowerOptions::
+        // train_workers`); plus one sink pump.
+        let workers_of = |si: usize| -> usize {
+            plan.pipeline.stages.get(si).map(|s| s.workers).unwrap_or(1).max(1)
+        };
+        let spawned = (0..n_stages).map(&workers_of).sum::<usize>() + 1;
+        let svc_live = LiveCount::new(spawned);
 
         let mut out_routes_iter = out_routes.into_iter();
         let mut stage_in_iter = stage_in.into_iter();
@@ -220,62 +242,56 @@ impl TrainService {
                 .map(|q| q.expect("validated above"))
                 .collect();
             let routes = out_routes_iter.next().expect("out_routes parallel to stages");
-            let program = sp.program.clone();
-            let exec_plan = program.plan();
-            let param_idx = sp.param_idx.clone();
-            let name = sp.name.clone();
-            let params = Arc::clone(&params);
-            let table = Arc::clone(&table);
-            let dead = Arc::clone(&dead);
-            let latch = Arc::clone(&latch);
-            let sink_q = Arc::clone(&sink_q);
-            let handle = std::thread::Builder::new()
-                .name(format!("kitsune-train-{si}"))
-                .spawn(move || {
-                    stage_worker(
-                        &name, &program, &exec_plan, &param_idx, &params, &in_queues,
-                        &routes, &sink_q, &table, &dead,
-                    );
-                    // Cascade the exit both ways: downstream consumers see
-                    // end-of-stream, and upstream producers blocked pushing
-                    // into this stage observe Closed instead of hanging.
-                    for q in &in_queues {
-                        q.close();
-                    }
-                    for port in &routes {
-                        for r in port {
-                            if let Route::Queue(q) = r {
-                                q.close();
-                            }
-                        }
-                    }
-                    if latch.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        sink_q.close();
-                    }
-                })
-                .map_err(|e| anyhow!("spawning train stage worker: {e}"))?;
-            handles.push(handle);
+            let n_ports = in_queues.len();
+            let workers = workers_of(si);
+            let shared = Arc::new(TrainStageShared {
+                name: sp.name.clone(),
+                program: sp.program.clone(),
+                exec_plan: sp.program.plan(),
+                param_idx: sp.param_idx.clone(),
+                params: Arc::clone(&params),
+                in_queues,
+                routes,
+                sink_q: Arc::clone(&sink_q),
+                table: Arc::clone(&table),
+                dead: Arc::clone(&dead),
+                intake: Mutex::new(Intake {
+                    counter: 0,
+                    partial: (0..n_ports).map(|_| None).collect(),
+                    closing: false,
+                }),
+                emit: Mutex::new(Emit {
+                    next: 0,
+                    ready: BTreeMap::new(),
+                    inflight: None,
+                    poisoned: false,
+                }),
+                live: AtomicUsize::new(workers),
+                all_latch: Arc::clone(&all_latch),
+                svc_live: Arc::clone(&svc_live),
+                sched: Arc::clone(&scheduler),
+            });
+            for _ in 0..workers {
+                let pump = TrainPump { shared: Arc::clone(&shared), closer: false };
+                scheduler.spawn(Box::new(move || pump.run()));
+            }
         }
 
-        // Sink: route tap deliveries into the step table.
-        let sink_table = Arc::clone(&table);
-        let sink_handle = std::thread::Builder::new()
-            .name("kitsune-train-sink".to_string())
-            .spawn(move || {
-                while let Some((tap, seq, t)) = sink_q.pop() {
-                    sink_table.complete(tap, seq, t);
-                }
-            })
-            .map_err(|e| anyhow!("spawning train sink: {e}"))?;
-        handles.push(sink_handle);
-        let spawned = n_stages + 1;
+        // Sink pump: route tap deliveries into the step table.
+        let sink = TrainSinkPump {
+            q: Arc::clone(&sink_q),
+            table: Arc::clone(&table),
+            svc_live: Arc::clone(&svc_live),
+            sched: Arc::clone(&scheduler),
+        };
+        scheduler.spawn(Box::new(move || sink.run()));
 
         Ok(TrainService {
             plan,
             params,
             src_routes,
             table,
-            handles: Mutex::new(handles),
+            svc_live,
             spawned,
             step_lock: Mutex::new(()),
             dead,
@@ -292,7 +308,8 @@ impl TrainService {
         self.params.read().unwrap().clone()
     }
 
-    /// Threads this service spawned (stage workers + sink).
+    /// Pump tasks this service spawned (stage pumps + sink) — kept
+    /// under the historical name from the dedicated-thread runtime.
     pub fn threads_spawned(&self) -> usize {
         self.spawned
     }
@@ -312,10 +329,28 @@ impl TrainService {
         'feed: for seq in 0..n_tiles {
             for (port, routes) in self.src_routes.iter().enumerate() {
                 for q in routes {
-                    let payload = (seq, tiles[port][seq].clone());
-                    if let Err(PushError::Closed(_)) = q.push(payload) {
-                        self.table.fail("training pipeline closed during feed".to_string());
-                        break 'feed;
+                    let mut payload = (seq, tiles[port][seq].clone());
+                    loop {
+                        match q.try_push(payload) {
+                            Ok(()) => break,
+                            Err(PushError::Closed(_)) => {
+                                self.table
+                                    .fail("training pipeline closed during feed".to_string());
+                                break 'feed;
+                            }
+                            Err(PushError::Full(p)) => {
+                                // A dead pipeline stops draining; bail out
+                                // instead of blocking on a full queue.
+                                if self.dead.load(Ordering::Acquire) {
+                                    self.table.fail(
+                                        "training pipeline failed during feed".to_string(),
+                                    );
+                                    break 'feed;
+                                }
+                                payload = p;
+                                q.wait_space();
+                            }
+                        }
                     }
                 }
             }
@@ -324,8 +359,9 @@ impl TrainService {
         fold_taps(&self.plan, slots)
     }
 
-    /// Close every source queue and join the workers. Idempotent; waits
-    /// out an in-flight step first.
+    /// Close every source queue and drain the pump tasks. Idempotent;
+    /// waits out an in-flight step first. Must be called from outside
+    /// the scheduler's worker pool (the step/Drop path always is).
     pub fn shutdown(&self) {
         {
             let _step = self.step_lock.lock().unwrap();
@@ -338,10 +374,7 @@ impl TrainService {
                 }
             }
         }
-        let mut handles = self.handles.lock().unwrap();
-        for h in handles.drain(..) {
-            let _ = h.join();
-        }
+        self.svc_live.wait_zero();
     }
 }
 
@@ -351,85 +384,422 @@ impl Drop for TrainService {
     }
 }
 
-/// One stage worker: pop one tile per input edge (sequence-aligned by
-/// FIFO construction), run the stage program against the current
-/// parameters, route each output port (cloning per extra consumer).
-#[allow(clippy::too_many_arguments)]
-fn stage_worker(
-    name: &str,
-    program: &crate::runtime::interp::Program,
-    exec_plan: &ExecPlan,
-    param_idx: &[usize],
-    params: &RwLock<Vec<Tensor>>,
-    in_queues: &[Arc<RingQueue<SeqTile>>],
-    routes: &[Vec<Route>],
-    sink_q: &RingQueue<SinkItem>,
-    table: &StepTable,
-    dead: &AtomicBool,
-) {
-    let mut ins: Vec<SeqTile> = Vec::with_capacity(in_queues.len());
-    'serve: loop {
-        ins.clear();
-        for q in in_queues {
-            match q.pop() {
-                Some(v) => ins.push(v),
-                None => break 'serve,
-            }
+/// Tiles a pump processes before requeueing itself (FIFO) so sibling
+/// pumps and other stages get scheduler time.
+const TRAIN_PUMP_YIELD: usize = 8;
+/// Sink pump batch size per `try_pop_many` call.
+const TRAIN_SINK_BURST: usize = 64;
+
+/// Intake side of a stage, under one lock: gather one tile from every
+/// input port, then stamp the complete set with a monotonic arrival
+/// index. Queue edges are FIFO and single-consumer-locked here, so
+/// arrival order equals submission order — within a step, `seq` order.
+struct Intake {
+    /// Next arrival index (monotonic across steps; never reset).
+    counter: usize,
+    /// Partially gathered set: one slot per input port.
+    partial: Vec<Option<SeqTile>>,
+    /// An input edge closed; no further sets will be gathered.
+    closing: bool,
+}
+
+/// Emission side of a stage: the sequence reorder buffer. Pumps insert
+/// computed outputs keyed by arrival index; `flush` routes them
+/// strictly in arrival order, so multi-worker stages emit exactly the
+/// single-worker (and serial-oracle) tile order.
+struct Emit {
+    /// Arrival index the next emission must carry.
+    next: usize,
+    /// Completed, not-yet-emitted outputs keyed by arrival index.
+    ready: BTreeMap<usize, EmitItem>,
+    /// An emission mid-route that hit a full queue; resumed before any
+    /// later arrival is considered (single-emitter invariant).
+    inflight: Option<Inflight>,
+    /// A downstream queue closed (shutdown or failure cascade); later
+    /// emissions are dropped instead of routed.
+    poisoned: bool,
+}
+
+struct EmitItem {
+    seq: usize,
+    outs: Vec<Tensor>,
+}
+
+/// Routing cursor for one emission: `outs[port]` is taken by the last
+/// route of that port (earlier routes clone), and `(port, route)` marks
+/// where to resume after a Full stall.
+struct Inflight {
+    seq: usize,
+    outs: Vec<Option<Tensor>>,
+    port: usize,
+    route: usize,
+}
+
+enum GatherResult {
+    /// A complete, sequence-aligned input set.
+    Ready { arrival: usize, seq: usize, tiles: Vec<Tensor> },
+    /// Input port `.0` has nothing buffered yet.
+    Empty(usize),
+    /// An input edge closed: end of stream.
+    Closed,
+    /// Input edges delivered mismatched `seq`s — a wiring bug.
+    Desync,
+}
+
+/// Which queue event a stalled pump must wait for.
+enum Parked {
+    Item(Arc<RingQueue<SeqTile>>),
+    Space(Arc<RingQueue<SeqTile>>),
+    SinkSpace(Arc<RingQueue<SinkItem>>),
+}
+
+enum FlushOutcome {
+    /// Nothing further to emit right now (buffer empty or gap at `next`).
+    Clear,
+    /// Emission blocked on a full downstream queue.
+    Stall(Parked),
+}
+
+enum RouteOutcome {
+    Done { saw_closed: bool },
+    Stall(Inflight, Parked),
+}
+
+/// Everything a stage's pumps share.
+struct TrainStageShared {
+    name: String,
+    program: Program,
+    exec_plan: ExecPlan,
+    param_idx: Vec<usize>,
+    params: Arc<RwLock<Vec<Tensor>>>,
+    in_queues: Vec<Arc<RingQueue<SeqTile>>>,
+    routes: Vec<Vec<Route>>,
+    sink_q: Arc<RingQueue<SinkItem>>,
+    table: Arc<StepTable>,
+    dead: Arc<AtomicBool>,
+    intake: Mutex<Intake>,
+    emit: Mutex<Emit>,
+    /// Pumps of this stage still running; the last to retire drains the
+    /// reorder buffer and cascades the close downstream.
+    live: AtomicUsize,
+    /// Stages not yet fully retired; the last one closes the sink queue.
+    all_latch: Arc<AtomicUsize>,
+    svc_live: Arc<LiveCount>,
+    sched: Arc<Scheduler>,
+}
+
+impl TrainStageShared {
+    /// Try to gather one sequence-aligned tile set under the intake lock.
+    fn gather(&self) -> GatherResult {
+        let mut intake = self.intake.lock().unwrap();
+        if intake.closing {
+            return GatherResult::Closed;
         }
-        let seq = ins[0].0;
-        if ins.iter().any(|(s, _)| *s != seq) {
-            dead.store(true, Ordering::Release);
-            table.fail(format!("stage {name}: input streams desynchronized"));
-            break 'serve;
-        }
-        let result = {
-            let guard = params.read().unwrap();
-            let mut args: Vec<&Tensor> = ins.iter().map(|(_, t)| t).collect();
-            args.extend(param_idx.iter().map(|&i| &guard[i]));
-            program.run_with_plan(&args, &[], exec_plan)
-        };
-        let outs = match result {
-            Ok(outs) => outs,
-            Err(e) => {
-                dead.store(true, Ordering::Release);
-                table.fail(format!("train stage {name} failed: {e:#}"));
-                break 'serve;
-            }
-        };
-        if outs.len() != routes.len() {
-            dead.store(true, Ordering::Release);
-            table.fail(format!(
-                "train stage {name}: {} outputs for {} ports",
-                outs.len(),
-                routes.len()
-            ));
-            break 'serve;
-        }
-        for (port, out) in outs.into_iter().enumerate() {
-            let port_routes = &routes[port];
-            let n = port_routes.len();
-            if n == 0 {
+        for (p, q) in self.in_queues.iter().enumerate() {
+            if intake.partial[p].is_some() {
                 continue;
             }
-            // Multicast: clone for every consumer but the last.
-            for r in &port_routes[..n - 1] {
-                if !send(r, seq, out.clone(), sink_q) {
-                    break 'serve;
+            match q.try_pop() {
+                Ok(v) => intake.partial[p] = Some(v),
+                Err(PopError::Empty) => return GatherResult::Empty(p),
+                Err(PopError::Closed) => {
+                    intake.closing = true;
+                    return GatherResult::Closed;
                 }
             }
-            if !send(&port_routes[n - 1], seq, out, sink_q) {
-                break 'serve;
+        }
+        let seq = intake.partial[0].as_ref().expect("slot filled above").0;
+        if intake.partial.iter().any(|t| t.as_ref().expect("filled").0 != seq) {
+            return GatherResult::Desync;
+        }
+        let arrival = intake.counter;
+        intake.counter += 1;
+        let tiles = intake
+            .partial
+            .iter_mut()
+            .map(|t| t.take().expect("filled").1)
+            .collect();
+        GatherResult::Ready { arrival, seq, tiles }
+    }
+
+    /// Run the stage program on one gathered tile set against the
+    /// current parameters (read lock held only for the kernel).
+    fn compute(&self, tiles: &[Tensor]) -> Result<Vec<Tensor>> {
+        let guard = self.params.read().unwrap();
+        let mut args: Vec<&Tensor> = tiles.iter().collect();
+        args.extend(self.param_idx.iter().map(|&i| &guard[i]));
+        self.program.run_with_plan(&args, &[], &self.exec_plan)
+    }
+
+    /// Park a computed tile set in the reorder buffer.
+    fn insert(&self, arrival: usize, seq: usize, outs: Vec<Tensor>) {
+        let mut emit = self.emit.lock().unwrap();
+        emit.ready.insert(arrival, EmitItem { seq, outs });
+    }
+
+    /// Drain the reorder buffer in arrival order. The emit lock is held
+    /// only to take/advance; routing happens outside it. Because `next`
+    /// advances only after an item is fully routed, at most one pump
+    /// routes at a time — concurrent callers see a gap and return
+    /// `Clear`.
+    fn flush(&self) -> FlushOutcome {
+        loop {
+            let (inflight, poisoned) = {
+                let mut emit = self.emit.lock().unwrap();
+                let inf = match emit.inflight.take() {
+                    Some(inf) => inf,
+                    None => {
+                        let next = emit.next;
+                        match emit.ready.remove(&next) {
+                            Some(item) => Inflight {
+                                seq: item.seq,
+                                outs: item.outs.into_iter().map(Some).collect(),
+                                port: 0,
+                                route: 0,
+                            },
+                            None => return FlushOutcome::Clear,
+                        }
+                    }
+                };
+                (inf, emit.poisoned)
+            };
+            let outcome = if poisoned {
+                // Downstream already closed; drop the payload.
+                RouteOutcome::Done { saw_closed: true }
+            } else {
+                self.route_inflight(inflight)
+            };
+            match outcome {
+                RouteOutcome::Done { saw_closed } => {
+                    let mut emit = self.emit.lock().unwrap();
+                    emit.next += 1;
+                    if saw_closed {
+                        emit.poisoned = true;
+                    }
+                }
+                RouteOutcome::Stall(inf, parked) => {
+                    self.emit.lock().unwrap().inflight = Some(inf);
+                    return FlushOutcome::Stall(parked);
+                }
             }
         }
     }
+
+    /// Route one emission from its cursor: per output port, clone for
+    /// every consumer but the last (same multicast order as the serial
+    /// executor). `Closed` destinations swallow the payload — that only
+    /// happens during a shutdown or failure cascade, when no step is
+    /// waiting on the tiles.
+    fn route_inflight(&self, mut inf: Inflight) -> RouteOutcome {
+        let mut saw_closed = false;
+        while inf.port < self.routes.len() {
+            let port_routes = &self.routes[inf.port];
+            let n = port_routes.len();
+            if n == 0 || inf.outs[inf.port].is_none() {
+                inf.port += 1;
+                inf.route = 0;
+                continue;
+            }
+            while inf.route < n {
+                let last = inf.route == n - 1;
+                let payload = if last {
+                    inf.outs[inf.port].take().expect("checked above")
+                } else {
+                    inf.outs[inf.port].as_ref().expect("checked above").clone()
+                };
+                match &port_routes[inf.route] {
+                    Route::Queue(q) => match q.try_push((inf.seq, payload)) {
+                        Ok(()) => {}
+                        Err(PushError::Closed(_)) => saw_closed = true,
+                        Err(PushError::Full((_, p))) => {
+                            if last {
+                                inf.outs[inf.port] = Some(p);
+                            }
+                            return RouteOutcome::Stall(inf, Parked::Space(Arc::clone(q)));
+                        }
+                    },
+                    Route::Sink(tap) => match self.sink_q.try_push((*tap, inf.seq, payload)) {
+                        Ok(()) => {}
+                        Err(PushError::Closed(_)) => saw_closed = true,
+                        Err(PushError::Full((_, _, p))) => {
+                            if last {
+                                inf.outs[inf.port] = Some(p);
+                            }
+                            return RouteOutcome::Stall(
+                                inf,
+                                Parked::SinkSpace(Arc::clone(&self.sink_q)),
+                            );
+                        }
+                    },
+                }
+                inf.route += 1;
+            }
+            inf.port += 1;
+            inf.route = 0;
+        }
+        RouteOutcome::Done { saw_closed }
+    }
 }
 
-/// Deliver one tile along a route; `false` means the destination closed
-/// (shutdown or failure cascade) and the worker should exit.
-fn send(route: &Route, seq: usize, t: Tensor, sink_q: &RingQueue<SinkItem>) -> bool {
-    match route {
-        Route::Queue(q) => q.push((seq, t)).is_ok(),
-        Route::Sink(tap) => sink_q.push((*tap, seq, t)).is_ok(),
+/// One cooperative stage worker. Runs as a scheduler task: it never
+/// blocks a pool thread — on an empty input or full output it registers
+/// a queue waker that respawns it, and returns. The pump that retires
+/// last flips into *closer* mode: it drains the reorder buffer, then
+/// cascades the close to downstream edges.
+struct TrainPump {
+    shared: Arc<TrainStageShared>,
+    closer: bool,
+}
+
+impl TrainPump {
+    fn run(mut self) {
+        if self.closer {
+            match self.shared.flush() {
+                // A gap at `next` here means the pump that owned that
+                // arrival died (compute failure) — abandon the rest.
+                FlushOutcome::Clear => self.cascade_close(),
+                FlushOutcome::Stall(parked) => self.park(parked),
+            }
+            return;
+        }
+        let mut quota = TRAIN_PUMP_YIELD;
+        loop {
+            if let FlushOutcome::Stall(parked) = self.shared.flush() {
+                return self.park(parked);
+            }
+            match self.shared.gather() {
+                GatherResult::Ready { arrival, seq, tiles } => {
+                    let outs = match self.shared.compute(&tiles) {
+                        Ok(outs) => outs,
+                        Err(e) => {
+                            self.shared.dead.store(true, Ordering::Release);
+                            self.shared.table.fail(format!(
+                                "train stage {} failed: {e:#}",
+                                self.shared.name
+                            ));
+                            return self.retire();
+                        }
+                    };
+                    if outs.len() != self.shared.routes.len() {
+                        self.shared.dead.store(true, Ordering::Release);
+                        self.shared.table.fail(format!(
+                            "train stage {}: {} outputs for {} ports",
+                            self.shared.name,
+                            outs.len(),
+                            self.shared.routes.len()
+                        ));
+                        return self.retire();
+                    }
+                    self.shared.insert(arrival, seq, outs);
+                    quota -= 1;
+                    if quota == 0 {
+                        // Requeue FIFO so siblings and other stages run.
+                        let sched = Arc::clone(&self.shared.sched);
+                        sched.spawn(Box::new(move || self.run()));
+                        return;
+                    }
+                }
+                GatherResult::Empty(p) => {
+                    let q = Arc::clone(&self.shared.in_queues[p]);
+                    return self.park(Parked::Item(q));
+                }
+                GatherResult::Desync => {
+                    self.shared.dead.store(true, Ordering::Release);
+                    self.shared.table.fail(format!(
+                        "stage {}: input streams desynchronized",
+                        self.shared.name
+                    ));
+                    return self.retire();
+                }
+                GatherResult::Closed => return self.retire(),
+            }
+        }
+    }
+
+    /// Register a waker that respawns this pump when the queue event
+    /// fires, then yield the pool thread. Parked pumps still count as
+    /// live: `close()` fires all registered wakers, so a shutdown or
+    /// failure cascade always resumes (and then retires) them.
+    fn park(self, parked: Parked) {
+        let sched = Arc::clone(&self.shared.sched);
+        let waker = Box::new(move || {
+            sched.spawn(Box::new(move || self.run()));
+        });
+        match parked {
+            Parked::Item(q) => q.park_on_item(waker),
+            Parked::Space(q) => q.park_on_space(waker),
+            Parked::SinkSpace(q) => q.park_on_space(waker),
+        }
+    }
+
+    /// This pump is done serving. The last of a stage's pumps re-enters
+    /// as the closer (recursion depth one: closer mode never retires).
+    fn retire(mut self) {
+        if self.shared.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.closer = true;
+            self.run();
+        } else {
+            self.shared.svc_live.done();
+        }
+    }
+
+    /// Cascade the stage's exit both ways: upstream producers blocked on
+    /// our inputs observe Closed instead of hanging, downstream
+    /// consumers see end-of-stream. The last stage overall closes the
+    /// sink queue.
+    fn cascade_close(&self) {
+        for q in &self.shared.in_queues {
+            q.close();
+        }
+        for port in &self.shared.routes {
+            for r in port {
+                if let Route::Queue(q) = r {
+                    q.close();
+                }
+            }
+        }
+        if self.shared.all_latch.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.shared.sink_q.close();
+        }
+        self.shared.svc_live.done();
+    }
+}
+
+/// Cooperative sink pump: drains tap deliveries into the step table in
+/// bursts, parking on the sink queue when it runs dry.
+struct TrainSinkPump {
+    q: Arc<RingQueue<SinkItem>>,
+    table: Arc<StepTable>,
+    svc_live: Arc<LiveCount>,
+    sched: Arc<Scheduler>,
+}
+
+impl TrainSinkPump {
+    fn run(self) {
+        let mut buf: Vec<SinkItem> = Vec::with_capacity(TRAIN_SINK_BURST);
+        for _ in 0..TRAIN_PUMP_YIELD {
+            match self.q.try_pop_many(&mut buf, TRAIN_SINK_BURST) {
+                Ok(_) => {
+                    for (tap, seq, t) in buf.drain(..) {
+                        self.table.complete(tap, seq, t);
+                    }
+                }
+                Err(PopError::Empty) => {
+                    let sched = Arc::clone(&self.sched);
+                    let q = Arc::clone(&self.q);
+                    q.park_on_item(Box::new(move || {
+                        sched.spawn(Box::new(move || self.run()));
+                    }));
+                    return;
+                }
+                Err(PopError::Closed) => {
+                    self.svc_live.done();
+                    return;
+                }
+            }
+        }
+        let sched = Arc::clone(&self.sched);
+        sched.spawn(Box::new(move || self.run()));
     }
 }
 

@@ -462,10 +462,10 @@ pub fn lower_training(g: &Graph, opts: &LowerOptions) -> Result<TrainPlan> {
             entry: name.clone(),
             class,
             weights: Arc::new(Vec::new()),
-            // Single worker per stage: the DAG executor relies on FIFO
-            // edges delivering tiles in sequence order, so stage-internal
-            // parallelism comes from the blocked matmul kernels instead.
-            workers: 1,
+            // Pumps per stage: tiles may compute out of order when >1;
+            // the executor's sequence reorder buffer restores FIFO
+            // emission order, so results stay bitwise-identical.
+            workers: opts.train_workers.max(1),
         });
         stage_plans.push(StagePlan {
             name,

@@ -1,0 +1,40 @@
+//! Regression: an idle warm pipeline must burn ~no CPU.
+//!
+//! Before the queue got real parking, blocking `push`/`pop` fell into a
+//! sleep-tiered spin loop, so a warm-but-idle session kept all stage
+//! threads spinning. Now waiters register wakers / park on a condvar
+//! after a short bounded spin, and [`kitsune::queue::idle_spin_count`]
+//! counts every spin iteration process-wide — so "idle burns CPU"
+//! regressions show up as a counter delta.
+//!
+//! This lives in its own integration-test binary so no sibling test's
+//! queue traffic pollutes the process-wide counter window.
+
+use kitsune::queue::idle_spin_count;
+use kitsune::session::{nerf_trunk_graph, Session};
+use std::time::Duration;
+
+#[test]
+fn idle_warm_pipeline_burns_no_spins() {
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(2)
+        .build()
+        .unwrap();
+    // Prime the pipeline so every pump has run at least once.
+    let tiles = session.make_tiles(8, 7).unwrap();
+    let out = session.submit(tiles).unwrap().wait().unwrap();
+    assert_eq!(out.outputs.len(), 8);
+
+    // Let in-flight pumps settle, then measure a quiet window.
+    std::thread::sleep(Duration::from_millis(50));
+    let before = idle_spin_count();
+    std::thread::sleep(Duration::from_millis(400));
+    let spins = idle_spin_count() - before;
+    assert!(
+        spins < 10_000,
+        "idle warm pipeline spun {spins} times in 400ms — queue parking regressed"
+    );
+    session.shutdown();
+}

@@ -1,0 +1,142 @@
+//! Stress tests for the unified work-stealing scheduler
+//! (`kitsune::sched`) — the single pool under GEMM panels, session
+//! stage pumps, and DAG training pumps:
+//!
+//! * nested fork-join produces the exact sequential result;
+//! * a small pool drains a large oversubscribed task wave (stealing);
+//! * a panicking task propagates to the scope caller;
+//! * `join` results are deterministic across repeats;
+//! * multi-pump DAG training stays bitwise-identical to the serial
+//!   oracle (the sequence reorder buffer emits in order even when tiles
+//!   complete out of order).
+
+use kitsune::sched::{self, LiveCount, Scheduler};
+use kitsune::session::Session;
+use kitsune::train::{serial_step, split_batch};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Parallel recursive sum over a slice via nested `join` calls.
+fn psum(xs: &[u64]) -> u64 {
+    if xs.len() <= 16 {
+        return xs.iter().sum();
+    }
+    let (lo, hi) = xs.split_at(xs.len() / 2);
+    let (a, b) = sched::join(|| psum(lo), || psum(hi));
+    a + b
+}
+
+#[test]
+fn nested_fork_join_matches_sequential_sum() {
+    let xs: Vec<u64> = (0..4096).map(|i| i * i + 1).collect();
+    let want: u64 = xs.iter().sum();
+    let sched = Scheduler::with_workers(4);
+    let got = sched::with_scheduler(&sched, || psum(&xs));
+    assert_eq!(got, want);
+    sched.shutdown();
+}
+
+#[test]
+fn oversubscribed_spawn_wave_drains_by_stealing() {
+    // Far more tasks than workers; every task must run exactly once.
+    let sched = Scheduler::with_workers(4);
+    let hits = AtomicUsize::new(0);
+    sched::scope_on(&sched, |s| {
+        for _ in 0..200 {
+            s.spawn(|| {
+                // Spin a little so tasks overlap and queues go non-empty.
+                for _ in 0..50 {
+                    std::hint::spin_loop();
+                }
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 200);
+    assert_eq!(sched.panics(), 0);
+    sched.shutdown();
+}
+
+#[test]
+#[should_panic(expected = "boom")]
+fn panic_in_scoped_task_propagates_to_caller() {
+    let sched = Scheduler::with_workers(2);
+    sched::scope_on(&sched, |s| {
+        s.spawn(|| panic!("boom"));
+        s.spawn(|| { /* healthy sibling still runs */ });
+    });
+}
+
+#[test]
+fn join_results_are_deterministic() {
+    let sched = Scheduler::with_workers(3);
+    sched::with_scheduler(&sched, || {
+        for round in 0..64u64 {
+            let (a, b) = sched::join(move || round * 3 + 1, move || round * 7 + 2);
+            assert_eq!(a, round * 3 + 1);
+            assert_eq!(b, round * 7 + 2);
+        }
+    });
+    sched.shutdown();
+}
+
+#[test]
+fn detached_spawns_complete_via_live_count() {
+    let sched = Scheduler::with_workers(2);
+    let live = LiveCount::new(64);
+    let hits = Arc::new(AtomicUsize::new(0));
+    for _ in 0..64 {
+        let live = Arc::clone(&live);
+        let hits = Arc::clone(&hits);
+        sched.spawn(Box::new(move || {
+            hits.fetch_add(1, Ordering::Relaxed);
+            live.done();
+        }));
+    }
+    live.wait_zero();
+    assert_eq!(hits.load(Ordering::Relaxed), 64);
+    sched.shutdown();
+}
+
+/// The tentpole ordering guarantee: with several pumps per training
+/// stage, tiles may *compute* out of order, but the per-stage sequence
+/// reorder buffer emits in arrival order — so whole training steps stay
+/// bitwise-identical to the single-threaded serial oracle.
+#[test]
+fn multi_pump_training_matches_serial_oracle_bitwise() {
+    let g = kitsune::apps::nerf::training(&kitsune::apps::nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    });
+    let session = Session::builder().graph(g).tile_rows(8).train_workers(3).build().unwrap();
+    let plan = session.train_plan().unwrap();
+    // 3 pumps per stage + the sink pump.
+    assert_eq!(session.threads_spawned(), plan.pipeline.stages.len() * 3 + 1);
+
+    let batch = session.make_train_batch(42).unwrap();
+    let tiles = split_batch(plan, &batch).unwrap();
+    let mut trainer = session.trainer().unwrap();
+
+    for step in 0..2 {
+        let params: Vec<_> = trainer.params().into_iter().map(|(_, t)| t).collect();
+        let serial = serial_step(plan, &params, &tiles).unwrap();
+        let stats = trainer.step(&batch).unwrap();
+        assert_eq!(
+            stats.loss.to_bits(),
+            serial.loss.to_bits(),
+            "step {step}: multi-pump loss must match the serial oracle bitwise"
+        );
+        for (name, grad) in &stats.grads {
+            let pi = plan.params.iter().position(|p| &p.name == name).unwrap();
+            let want = serial.grads[pi].as_ref().expect("oracle gradient present");
+            let gb: Vec<u32> = grad.data.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "step {step}: gradient `{name}` must match bitwise");
+        }
+    }
+    session.shutdown();
+}

@@ -140,6 +140,55 @@ fn shutdown_then_submit_fails_cleanly_and_is_idempotent() {
 }
 
 #[test]
+fn shutdown_under_load_resolves_every_ticket() {
+    // Clients hammer the session while the main thread shuts it down:
+    // shutdown must drain every pump task before returning, and every
+    // ticket must resolve — completed batches with full output, cut-off
+    // batches with the typed shutdown error. Nothing may hang or panic.
+    let session = small_session();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..4usize {
+            let session = &session;
+            handles.push(scope.spawn(move || {
+                let mut ok = 0usize;
+                let mut cut = 0usize;
+                for b in 0..16usize {
+                    // Tile synthesis is independent of the pool's state.
+                    let tiles = session.make_tiles(3, (c * 16 + b) as u64 + 1).unwrap();
+                    match session.submit(tiles) {
+                        Ok(ticket) => match ticket.wait() {
+                            Ok(out) => {
+                                assert_eq!(out.outputs.len(), 3);
+                                ok += 1;
+                            }
+                            Err(e) => {
+                                assert!(e.to_string().contains("shut down"), "{e}");
+                                cut += 1;
+                            }
+                        },
+                        Err(e) => {
+                            assert!(e.to_string().contains("shut down"), "{e}");
+                            cut += 1;
+                        }
+                    }
+                }
+                (ok, cut)
+            }));
+        }
+        // Let the clients get some batches in flight, then pull the plug.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        session.shutdown();
+        for h in handles {
+            let (ok, cut) = h.join().unwrap();
+            assert_eq!(ok + cut, 16, "every ticket resolved exactly once");
+        }
+    });
+    // Idempotent after the storm.
+    session.shutdown();
+}
+
+#[test]
 fn non_streamable_app_reports_typed_error_but_simulates() {
     // DLRM's embedding gathers are excluded from sf-nodes (§5.1), so its
     // plan has bulk-sync items: the session simulates but cannot stream.
