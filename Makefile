@@ -17,13 +17,16 @@ artifacts:
 # into BENCH_interp.json at the repo root; then training steps/sec
 # (warm DAG pipeline vs serial baseline) into BENCH_train.json; then
 # scheduler scaling (GEMM + warm pipeline + DAG training at 1/2/4/N
-# workers) into BENCH_sched.json.
+# workers) into BENCH_sched.json; then the serving-tier load sweep
+# (latency percentiles vs offered load, saturation knee, shed rate)
+# into BENCH_serve.json.
 # BENCH_SMOKE=1 for a fast CI smoke run that still emits the JSONs.
 bench:
 	cargo bench --bench kernel_throughput
 	cargo bench --bench session_throughput
 	cargo bench --bench train_throughput
 	cargo bench --bench sched_scaling
+	cargo bench --bench serve_load
 
 # The full paper-figure bench suite (fig*/table*/ablation/...).
 bench-paper:

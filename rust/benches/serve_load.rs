@@ -1,0 +1,195 @@
+//! Serving tier under offered load: closed-loop clients sweep the
+//! `kitsune::serve` tier (continuous batching + EDF deadlines over one
+//! warm pipeline) at increasing concurrency, recording completed
+//! throughput, latency percentiles (p50/p95/p99) and shed rate at each
+//! point, plus the saturation knee — the first client count where
+//! completed throughput stops growing.
+//!
+//! Writes `BENCH_serve.json` at the repo root.
+//! Run: `cargo bench --bench serve_load` (`BENCH_SMOKE=1` for CI).
+
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::serve::{BatchPolicy, ServeConfig, ServeError, Server};
+use kitsune::session::{nerf_trunk_graph, Session};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TILES_PER_REQUEST: usize = 2;
+
+struct Point {
+    clients: usize,
+    offered_rps: f64,
+    completed_rps: f64,
+    tiles_per_sec: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    shed_rate: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke();
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let counts: Vec<usize> = if smoke { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 16] };
+    let duration_s = if smoke { 0.25 } else { 1.0 };
+    let deadline = Duration::from_millis(if smoke { 500 } else { 200 });
+    println!(
+        "serve load sweep (host parallelism: {host}, {}s/point, deadline {:?}):",
+        duration_s, deadline
+    );
+
+    // One warm pipeline shared across points; a fresh server per point so
+    // each point's counters and latency histogram start clean.
+    let session = Arc::new(
+        Session::builder()
+            .graph(nerf_trunk_graph(512, 60, 64, 3))
+            .tile_rows(64)
+            .workers(2)
+            .build()?,
+    );
+    session.run(session.make_tiles(4, 0xFACE)?)?; // prime the kernels
+
+    let mut points: Vec<Point> = Vec::new();
+    for &clients in &counts {
+        let server = Server::single(
+            "trunk",
+            Arc::clone(&session),
+            ServeConfig {
+                batch: BatchPolicy { max_tiles: 16, max_delay: Duration::from_micros(500) },
+                queue_depth: 64,
+                default_deadline: None,
+            },
+        );
+        let stop = AtomicBool::new(false);
+        let t0 = Instant::now();
+        let (attempted, completed, shed, tiles_done) =
+            std::thread::scope(|scope| -> anyhow::Result<(u64, u64, u64, u64)> {
+                let mut joins = Vec::new();
+                for c in 0..clients {
+                    let server = &server;
+                    let session = &session;
+                    let stop = &stop;
+                    joins.push(scope.spawn(move || -> anyhow::Result<(u64, u64, u64, u64)> {
+                        let template = session.make_tiles(TILES_PER_REQUEST, 0xA0 + c as u64)?;
+                        let (mut att, mut comp, mut sh, mut tiles) = (0u64, 0u64, 0u64, 0u64);
+                        while !stop.load(Ordering::Relaxed) {
+                            att += 1;
+                            match server.submit("trunk", template.clone(), Some(deadline)) {
+                                Ok(h) => match h.wait() {
+                                    Ok(r) => {
+                                        comp += 1;
+                                        tiles += r.outputs.len() as u64;
+                                    }
+                                    Err(
+                                        ServeError::DeadlineExceeded { .. }
+                                        | ServeError::ShuttingDown,
+                                    ) => sh += 1,
+                                    Err(e) => return Err(anyhow::anyhow!(e)),
+                                },
+                                Err(
+                                    ServeError::DeadlineExceeded { .. }
+                                    | ServeError::AdmissionRejected { .. },
+                                ) => {
+                                    sh += 1;
+                                    // Shed: back off a beat before retrying.
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                                Err(e) => return Err(anyhow::anyhow!(e)),
+                            }
+                        }
+                        Ok((att, comp, sh, tiles))
+                    }));
+                }
+                std::thread::sleep(Duration::from_secs_f64(duration_s));
+                stop.store(true, Ordering::Relaxed);
+                let mut totals = (0u64, 0u64, 0u64, 0u64);
+                for j in joins {
+                    let (a, c, s, t) = j.join().expect("client thread panicked")?;
+                    totals.0 += a;
+                    totals.1 += c;
+                    totals.2 += s;
+                    totals.3 += t;
+                }
+                Ok(totals)
+            })?;
+        let wall = t0.elapsed().as_secs_f64().max(1e-12);
+        let stats = server.stats();
+        server.shutdown();
+        anyhow::ensure!(session.in_flight() == 0, "in-flight table must drain between points");
+        let p = Point {
+            clients,
+            offered_rps: attempted as f64 / wall,
+            completed_rps: completed as f64 / wall,
+            tiles_per_sec: tiles_done as f64 / wall,
+            p50_ms: stats.latency.p50_ms,
+            p95_ms: stats.latency.p95_ms,
+            p99_ms: stats.latency.p99_ms,
+            shed_rate: shed as f64 / (attempted.max(1)) as f64,
+        };
+        println!(
+            "  {clients:>3} clients: offered {:>8.1} req/s  completed {:>8.1} req/s  \
+             ({:>8.1} tiles/s)  p50 {:>7.2} ms  p99 {:>7.2} ms  shed {:>5.1}%",
+            p.offered_rps,
+            p.completed_rps,
+            p.tiles_per_sec,
+            p.p50_ms,
+            p.p99_ms,
+            p.shed_rate * 100.0
+        );
+        points.push(p);
+    }
+    session.shutdown();
+
+    // Saturation knee: the first point whose completed throughput gains
+    // less than 10% over the previous one (0 = still scaling at the top
+    // of the sweep).
+    let mut knee_clients = 0usize;
+    for w in points.windows(2) {
+        if w[1].completed_rps < w[0].completed_rps * 1.10 {
+            knee_clients = w[1].clients;
+            break;
+        }
+    }
+    if knee_clients == 0 {
+        println!("  no saturation knee within the sweep (still scaling)");
+    } else {
+        println!("  saturation knee at {knee_clients} clients");
+    }
+
+    // ---- BENCH_serve.json ---------------------------------------------
+    let root = artifact_root();
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"serve_load\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"host_parallelism\": {host},");
+    let _ = writeln!(json, "  \"duration_s\": {duration_s},");
+    let _ = writeln!(json, "  \"tiles_per_request\": {TILES_PER_REQUEST},");
+    let _ = writeln!(json, "  \"deadline_ms\": {},", deadline.as_millis());
+    let _ = writeln!(json, "  \"points\": [");
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 < points.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"clients\": {}, \"offered_rps\": {:.2}, \"completed_rps\": {:.2}, \
+             \"tiles_per_sec\": {:.2}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"shed_rate\": {:.4}}}{comma}",
+            p.clients,
+            p.offered_rps,
+            p.completed_rps,
+            p.tiles_per_sec,
+            p.p50_ms,
+            p.p95_ms,
+            p.p99_ms,
+            p.shed_rate
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"knee_clients\": {knee_clients}");
+    json.push_str("}\n");
+    let out_path = root.join("BENCH_serve.json");
+    std::fs::write(&out_path, json)?;
+    println!("serve load sweep written to {}", out_path.display());
+    Ok(())
+}

@@ -1,16 +1,20 @@
-//! `kitsune serve` — the real spatial-pipeline coordinator, driven
-//! end-to-end through the [`crate::session`] façade: the NeRF-class
-//! trunk graph is compiled (subgraph selection → pipeline design → ILP),
-//! the compiled plan is lowered to a spatial pipeline with synthesized
-//! stage kernels, and a *warm* worker pool serves streamed tiles from
-//! concurrent clients — reported against the serial (bulk-sync analog)
-//! baseline.
+//! `kitsune serve` — the serving tier on the warm spatial pipeline:
+//! the NeRF-class trunk graph is compiled (subgraph selection →
+//! pipeline design → ILP), lowered to a spatial pipeline with
+//! synthesized stage kernels, registered in a [`crate::serve`]
+//! [`ModelRegistry`], and driven by closed-loop concurrent clients
+//! through the continuous-batching, deadline-aware [`Server`] —
+//! reported against the serial (bulk-sync analog) baseline with
+//! latency percentiles, queue depth, and shed counters.
 
 use super::pipeline::SpatialPipeline;
 use crate::graph::ResourceClass;
 use crate::runtime::{ArtifactStore, Rng, Tensor};
+use crate::serve::{BatchPolicy, ModelRegistry, ServeConfig, ServeError, Server};
 use crate::session::{nerf_trunk_graph, Session};
 use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Legacy hand-built demo pipeline over the AOT artifact entries
 /// (`stage_trunk0/1`, `stage_head`), with He-init weights when no
@@ -55,11 +59,43 @@ pub fn input_tiles(store: &ArtifactStore, entry: &str, n: usize) -> Result<Vec<T
         .collect())
 }
 
+/// Every `kitsune serve` flag with its argument shape — printed by
+/// `--help` and by the unknown-flag error so misspellings name the
+/// valid options instead of being ignored.
+pub const SERVE_FLAGS: &[(&str, &str)] = &[
+    ("--tiles N", "total tiles per client batch round (default 64)"),
+    ("--workers N", "worker pumps per TENSOR stage (default 2)"),
+    ("--hidden N", "trunk hidden width (default 64)"),
+    ("--clients N", "concurrent closed-loop clients (default 4)"),
+    ("--requests N", "requests per client (default 4)"),
+    ("--deadline-ms N", "per-request deadline; 0 = none (default 0)"),
+    ("--max-batch N", "batching window: max tiles per round (default 32)"),
+    ("--max-delay-us N", "batching window: max coalescing delay (default 2000)"),
+    ("--queue-depth N", "admission queue bound in requests (default 256)"),
+    ("--models N", "trunk variants resident at once (default 1)"),
+    ("--mem-budget-mb N", "registry memory budget; 0 = unlimited (default 0)"),
+];
+
+fn serve_usage() -> String {
+    let mut s = String::from("kitsune serve options:\n");
+    for (flag, desc) in SERVE_FLAGS {
+        s.push_str(&format!("  {flag:<20} {desc}\n"));
+    }
+    s
+}
+
 pub fn serve(args: &[&str]) -> Result<()> {
     let mut tiles = 64usize;
     let mut workers = 2usize;
     let mut hidden = 64usize;
     let mut clients = 4usize;
+    let mut requests = 4usize;
+    let mut deadline_ms = 0u64;
+    let mut max_batch = 32usize;
+    let mut max_delay_us = 2_000u64;
+    let mut queue_depth = 256usize;
+    let mut models = 1usize;
+    let mut mem_budget_mb = 0u64;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match *a {
@@ -67,51 +103,81 @@ pub fn serve(args: &[&str]) -> Result<()> {
             "--workers" => workers = it.next().context("--workers N")?.parse()?,
             "--hidden" => hidden = it.next().context("--hidden N")?.parse()?,
             "--clients" => clients = it.next().context("--clients N")?.parse()?,
-            other => anyhow::bail!("unknown serve flag {other}"),
+            "--requests" => requests = it.next().context("--requests N")?.parse()?,
+            "--deadline-ms" => deadline_ms = it.next().context("--deadline-ms N")?.parse()?,
+            "--max-batch" => max_batch = it.next().context("--max-batch N")?.parse()?,
+            "--max-delay-us" => max_delay_us = it.next().context("--max-delay-us N")?.parse()?,
+            "--queue-depth" => queue_depth = it.next().context("--queue-depth N")?.parse()?,
+            "--models" => models = it.next().context("--models N")?.parse()?,
+            "--mem-budget-mb" => {
+                mem_budget_mb = it.next().context("--mem-budget-mb N")?.parse()?
+            }
+            "--help" | "-h" => {
+                print!("{}", serve_usage());
+                return Ok(());
+            }
+            other => anyhow::bail!("unknown serve flag {other}\n{}", serve_usage()),
         }
     }
     let clients = clients.max(1);
+    let requests = requests.max(1);
+    let models = models.max(1);
 
-    // One façade from graph to execution: compile once, lower the plan,
-    // stand up the persistent pipeline.
-    let session = Session::builder()
-        .graph(nerf_trunk_graph(8192, 60, hidden, 3))
-        .workers(workers)
-        .tile_rows(128)
-        .build()?;
-    let compiled = session.compiled().expect("session has a graph");
-    let pipeline = session.pipeline().expect("trunk graph streams");
-    println!(
-        "compiled {}: {} sf-node(s) -> {} pipeline stages, {} worker threads (warm)",
-        session.name(),
-        compiled.pipelines.len(),
-        pipeline.stages.len(),
-        session.threads_spawned()
-    );
-    let allocs: Vec<usize> = compiled
-        .pipelines
-        .iter()
-        .flat_map(|lp| lp.balanced.alloc.iter().copied())
-        .collect();
-    for (s, a) in pipeline.stages.iter().zip(&allocs) {
-        println!(
-            "  stage {:<10} [{:?}] entry {:<28} workers={} (ILP a_i={a})",
-            s.name, s.class, s.entry, s.workers
+    // Stand up the registry: `models` trunk variants (halving hidden
+    // width), each its own compiled + lowered warm pipeline.
+    let budget = if mem_budget_mb == 0 { None } else { Some(mem_budget_mb * 1024 * 1024) };
+    let registry = Arc::new(ModelRegistry::new(budget));
+    let mut model_names: Vec<String> = Vec::new();
+    for m in 0..models {
+        let h = (hidden >> m).max(8);
+        let name = if m == 0 { "nerf-trunk".to_string() } else { format!("nerf-trunk-h{h}") };
+        let session = Arc::new(
+            Session::builder()
+                .graph(nerf_trunk_graph(8192, 60, h, 3))
+                .workers(workers)
+                .tile_rows(128)
+                .build()?,
         );
+        if m == 0 {
+            let compiled = session.compiled().expect("session has a graph");
+            let pipeline = session.pipeline().expect("trunk graph streams");
+            println!(
+                "compiled {}: {} sf-node(s) -> {} pipeline stages, {} worker threads (warm)",
+                session.name(),
+                compiled.pipelines.len(),
+                pipeline.stages.len(),
+                session.threads_spawned()
+            );
+            let allocs: Vec<usize> = compiled
+                .pipelines
+                .iter()
+                .flat_map(|lp| lp.balanced.alloc.iter().copied())
+                .collect();
+            for (s, a) in pipeline.stages.iter().zip(&allocs) {
+                println!(
+                    "  stage {:<10} [{:?}] entry {:<28} workers={} (ILP a_i={a})",
+                    s.name, s.class, s.entry, s.workers
+                );
+            }
+        }
+        let evicted = registry.insert(name.clone(), session).map_err(|e| anyhow::anyhow!(e))?;
+        if !evicted.is_empty() {
+            println!("  evicted {} to fit memory budget", evicted.join(", "));
+        }
+        model_names.push(name);
+    }
+    for (name, bytes) in registry.accounting() {
+        println!("  model {name:<16} resident {:>8.2} MiB", bytes as f64 / (1024.0 * 1024.0));
     }
 
-    let inputs = session.make_tiles(tiles, 0xFEED)?;
-
+    // Serial (bulk-sync analog) baseline + warm correctness check on the
+    // primary model.
+    let primary = registry.get(&model_names[0]).map_err(|e| anyhow::anyhow!(e))?;
+    let inputs = primary.make_tiles(tiles, 0xFEED)?;
     println!("\nserial (bulk-sync analog), {tiles} tiles:");
-    let serial = session.run_serial(inputs.clone())?;
-    println!(
-        "  {:.1} ms  ({:.1} tiles/s)",
-        serial.elapsed_s * 1e3,
-        serial.tiles_per_sec()
-    );
-
-    // Warm single-caller batch.
-    let run = session.run(inputs)?;
+    let serial = primary.run_serial(inputs.clone())?;
+    println!("  {:.1} ms  ({:.1} tiles/s)", serial.elapsed_s * 1e3, serial.tiles_per_sec());
+    let run = primary.run(inputs)?;
     println!("warm spatial pipeline, 1 client:");
     println!(
         "  {:.1} ms  ({:.1} tiles/s)  speedup {:.2}x",
@@ -119,8 +185,6 @@ pub fn serve(args: &[&str]) -> Result<()> {
         run.tiles_per_sec(),
         serial.elapsed_s / run.elapsed_s.max(1e-12)
     );
-
-    // Correctness: pipeline output must equal serial output exactly.
     let max_err = run
         .outputs
         .iter()
@@ -129,39 +193,96 @@ pub fn serve(args: &[&str]) -> Result<()> {
         .fold(0.0f32, f32::max);
     anyhow::ensure!(max_err < 1e-5, "pipeline output mismatch: {max_err:.2e}");
 
-    // Concurrent clients through the same warm pipeline.
-    let threads_before = session.threads_spawned();
+    // The serving tier: continuous batching + EDF deadlines over the
+    // registry, driven by closed-loop concurrent clients.
+    let server = Server::new(
+        Arc::clone(&registry),
+        ServeConfig {
+            batch: BatchPolicy {
+                max_tiles: max_batch,
+                max_delay: Duration::from_micros(max_delay_us),
+            },
+            queue_depth,
+            default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        },
+    );
+    let threads_before = primary.threads_spawned();
     let per_client = (tiles / clients).max(1);
     let t0 = std::time::Instant::now();
+    let mut served_tiles = 0usize;
+    let mut shed = 0usize;
     std::thread::scope(|scope| -> Result<()> {
         let mut joins = Vec::new();
         for c in 0..clients {
-            let session = &session;
-            joins.push(scope.spawn(move || -> Result<usize> {
-                let batch = session.make_tiles(per_client, 0xBEEF + c as u64)?;
-                let out = session.submit(batch)?.wait()?;
-                Ok(out.outputs.len())
+            let server = &server;
+            let model_names = &model_names;
+            let primary = &primary;
+            joins.push(scope.spawn(move || -> Result<(usize, usize)> {
+                let model = &model_names[c % model_names.len()];
+                let mut ok = 0usize;
+                let mut shed = 0usize;
+                for r in 0..requests {
+                    let batch =
+                        primary.make_tiles(per_client, 0xBEEF + (c * requests + r) as u64)?;
+                    match server.submit(model, batch, None) {
+                        Ok(handle) => match handle.wait() {
+                            Ok(reply) => ok += reply.outputs.len(),
+                            Err(
+                                ServeError::DeadlineExceeded { .. } | ServeError::ShuttingDown,
+                            ) => shed += 1,
+                            Err(e) => anyhow::bail!("client {c} request {r}: {e}"),
+                        },
+                        Err(
+                            ServeError::DeadlineExceeded { .. }
+                            | ServeError::AdmissionRejected { .. },
+                        ) => shed += 1,
+                        Err(e) => anyhow::bail!("client {c} request {r}: {e}"),
+                    }
+                }
+                Ok((ok, shed))
             }));
         }
-        let mut total = 0usize;
         for j in joins {
-            total += j.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+            let (ok, s) = j.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+            served_tiles += ok;
+            shed += s;
         }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "warm spatial pipeline, {clients} concurrent clients x {per_client} tiles:\n  \
-             {:.1} ms  ({:.1} tiles/s aggregate)",
-            wall * 1e3,
-            total as f64 / wall.max(1e-12)
-        );
         Ok(())
     })?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "serve tier, {clients} clients x {requests} requests x {per_client} tiles:\n  \
+         {:.1} ms  ({:.1} tiles/s aggregate, {shed} shed)",
+        wall * 1e3,
+        served_tiles as f64 / wall.max(1e-12)
+    );
     anyhow::ensure!(
-        session.threads_spawned() == threads_before,
+        primary.threads_spawned() == threads_before,
         "submit must never spawn stage threads"
     );
 
-    for m in &session.metrics() {
+    let stats = server.stats();
+    println!(
+        "  admitted {}  completed {}  rejected {}  shed(deadline {} + shutdown {})  failed {}",
+        stats.admitted,
+        stats.completed,
+        stats.rejected,
+        stats.shed_deadline,
+        stats.shed_shutdown,
+        stats.failed
+    );
+    println!(
+        "  latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms  \
+         (est {:.0} us/tile, queue {} deep, {} tiles in flight)",
+        stats.latency.p50_ms,
+        stats.latency.p95_ms,
+        stats.latency.p99_ms,
+        stats.latency.max_ms,
+        stats.est_tile_us,
+        stats.queue_depth,
+        stats.in_flight_tiles
+    );
+    for m in &primary.metrics() {
         println!(
             "  stage {:<10} [{:?}] workers={} tiles={} busy {:>7.1} ms  wait {:>7.1} ms  util {:>4.0}%",
             m.name,
@@ -173,7 +294,11 @@ pub fn serve(args: &[&str]) -> Result<()> {
             m.utilization() * 100.0
         );
     }
-    println!("max |pipeline - serial| = {max_err:.2e}; threads spawned: {threads_before} (all at build)");
-    session.shutdown();
+    println!(
+        "max |pipeline - serial| = {max_err:.2e}; threads spawned: {threads_before} (all at build)"
+    );
+    server.shutdown();
+    anyhow::ensure!(primary.in_flight() == 0, "in-flight table must drain at shutdown");
+    registry.shutdown_all();
     Ok(())
 }

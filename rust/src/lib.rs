@@ -20,6 +20,7 @@
 //! | Fig 6 host API (`cudaPipelineCreate` → `AddKernel` → launch) | [`session`] (builder → persistent pipeline → `submit`) |
 //! | Training on dataflow (§6.4, Figs 12/14: multicast + skip links) | [`train`] (DAG pipeline, gradient taps, optimizer, `Trainer`) |
 //! | §4 "keep every resource busy at once" on the host runtime | [`sched`] (one work-stealing pool under GEMM panels, stage pumps, DAG training) |
+//! | Many independent requests through one persistent pipeline | [`serve`] (continuous batching, EDF deadlines, multi-model residency, SLO stats) |
 //!
 //! [`session`] is the **single public entry point** for running anything:
 //! `Session::builder().app("nerf").build()?` compiles once, lowers the
@@ -50,6 +51,7 @@ pub mod coordinator;
 pub mod sched;
 pub mod runtime;
 pub mod session;
+pub mod serve;
 pub mod train;
 pub mod report;
 pub mod bench;

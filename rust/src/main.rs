@@ -7,7 +7,7 @@
 //! kitsune all             # every experiment in order
 //! kitsune apps [--dump]   # application graph inventory
 //! kitsune compile <app>   # show compiler output for one app
-//! kitsune serve ...       # run the real coordinator on AOT artifacts
+//! kitsune serve ...       # serving tier: continuous batching + deadlines
 //! ```
 
 use anyhow::{bail, Result};
@@ -60,9 +60,13 @@ fn print_help() {
          \x20 compile <APP> [--train]\n\
          \x20                     compiler output (sf-nodes, stages, allocation);\n\
          \x20                     searches the inference suite, then training\n\
-         \x20 serve [--tiles N] [--workers N] [--hidden N] [--clients N]\n\
-         \x20                     warm spatial pipeline via the session façade:\n\
-         \x20                     compile -> lower -> persistent workers -> concurrent submit"
+         \x20 serve [--tiles N] [--workers N] [--hidden N] [--clients N] [--requests N]\n\
+         \x20       [--deadline-ms N] [--max-batch N] [--max-delay-us N] [--queue-depth N]\n\
+         \x20       [--models N] [--mem-budget-mb N]\n\
+         \x20                     serving tier on the warm spatial pipeline:\n\
+         \x20                     continuous batching, EDF deadlines + load shedding,\n\
+         \x20                     multi-model registry, latency percentiles\n\
+         \x20                     (`serve --help` lists every flag)"
     );
 }
 

@@ -42,7 +42,7 @@ use std::time::Duration;
 pub type Task = Box<dyn FnOnce() + Send + 'static>;
 
 /// Hard cap on `KITSUNE_WORKERS` so a typo cannot fork-bomb the host.
-const MAX_WORKERS: usize = 256;
+pub const MAX_WORKERS: usize = 256;
 
 /// The work-stealing scheduler. One global instance ([`Scheduler::global`])
 /// backs all services by default; tests and benches can stand up private
@@ -81,15 +81,51 @@ thread_local! {
     static CURRENT: RefCell<Option<WorkerCtx>> = const { RefCell::new(None) };
 }
 
-fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("KITSUNE_WORKERS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n.min(MAX_WORKERS);
-            }
+/// Warn (once per variable, process-wide) that an environment override
+/// could not be parsed, naming the bad value and the fallback in use.
+/// Shared by `KITSUNE_WORKERS` here and the `KITSUNE_SERVE_*` knobs in
+/// [`crate::serve`].
+fn warn_bad_env_once(var: &str, raw: &str, fallback: usize) {
+    static WARNED: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    let mut warned = WARNED.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    if warned.iter().any(|v| v == var) {
+        return;
+    }
+    warned.push(var.to_string());
+    eprintln!(
+        "kitsune: ignoring {var}={raw:?} (not a positive integer); \
+         falling back to {fallback}"
+    );
+}
+
+/// Resolve one `usize` environment override against its raw string
+/// value: positive integers are clamped to `max`, anything else warns
+/// once (naming the bad value and the fallback) and yields `fallback`.
+/// Split out from [`env_usize`] so the parse/clamp/warn policy is unit
+/// testable without mutating the process environment.
+pub fn resolve_env_usize(var: &str, raw: &str, fallback: usize, max: usize) -> usize {
+    match raw.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => n.min(max),
+        _ => {
+            warn_bad_env_once(var, raw, fallback);
+            fallback
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Read a `usize` knob from the environment: unset yields `fallback`,
+/// set-but-unparseable warns once and yields `fallback`, valid values
+/// clamp to `max`.
+pub fn env_usize(var: &str, fallback: usize, max: usize) -> usize {
+    match std::env::var(var) {
+        Ok(raw) => resolve_env_usize(var, &raw, fallback, max),
+        Err(_) => fallback,
+    }
+}
+
+fn default_workers() -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    env_usize("KITSUNE_WORKERS", host, MAX_WORKERS)
 }
 
 impl Scheduler {
@@ -512,6 +548,18 @@ mod tests {
             assert!(Arc::ptr_eq(&current(), &sched));
         });
         sched.shutdown();
+    }
+
+    #[test]
+    fn env_override_clamps_to_max_workers() {
+        // A huge-but-valid KITSUNE_WORKERS clamps instead of fork-bombing.
+        assert_eq!(resolve_env_usize("KITSUNE_WORKERS", "99999", 4, MAX_WORKERS), MAX_WORKERS);
+        // In-range values pass through (whitespace tolerated).
+        assert_eq!(resolve_env_usize("KITSUNE_WORKERS", " 8 ", 4, MAX_WORKERS), 8);
+        // Unparseable and zero values warn (once) and fall back.
+        assert_eq!(resolve_env_usize("KITSUNE_WORKERS", "banana", 4, MAX_WORKERS), 4);
+        assert_eq!(resolve_env_usize("KITSUNE_WORKERS", "0", 4, MAX_WORKERS), 4);
+        assert_eq!(resolve_env_usize("KITSUNE_SERVE_QUEUE_DEPTH", "-3", 256, 1 << 20), 256);
     }
 
     #[test]

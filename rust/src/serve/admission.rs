@@ -1,0 +1,263 @@
+//! Deadline-aware admission: a bounded EDF (earliest-deadline-first)
+//! queue between the submit path and the dispatcher.
+//!
+//! Requests carry an optional absolute deadline; the dispatcher always
+//! pulls the request with the least slack next (ties and deadline-free
+//! requests fall back to FIFO by admission sequence). The queue is
+//! bounded — `try_push` refuses above capacity, which is the
+//! backpressure surface [`crate::serve::Server::try_submit`] exposes —
+//! and closing it lets the dispatcher drain what is left for shedding.
+
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted-but-not-yet-dispatched request. Generic over the
+/// payload so the queue's ordering and bounds are unit-testable alone.
+#[derive(Debug)]
+pub struct Pending<T> {
+    /// Admission sequence (FIFO tiebreak).
+    pub seq: u64,
+    /// Absolute deadline, if the request carries one.
+    pub deadline: Option<Instant>,
+    /// Tiles this request will occupy in the pipeline.
+    pub tiles: usize,
+    pub payload: T,
+}
+
+struct Entry<T>(Pending<T>);
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.seq == other.0.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    /// Max-heap priority: earliest deadline wins; deadline-carrying
+    /// requests outrank deadline-free ones; equal deadlines break FIFO.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let ord = match (self.0.deadline, other.0.deadline) {
+            (Some(a), Some(b)) => b.cmp(&a),
+            (Some(_), None) => std::cmp::Ordering::Greater,
+            (None, Some(_)) => std::cmp::Ordering::Less,
+            (None, None) => std::cmp::Ordering::Equal,
+        };
+        ord.then_with(|| other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum AdmitError<T> {
+    /// Queue at capacity — backpressure; the request is handed back.
+    Full(Pending<T>),
+    /// Queue closed (server shutting down).
+    Closed(Pending<T>),
+}
+
+/// Result of a bounded pop.
+pub enum PopOutcome<T> {
+    Item(Pending<T>),
+    /// Nothing arrived within the timeout.
+    Empty,
+    /// Closed and fully drained — the dispatcher can retire.
+    Closed,
+}
+
+struct Inner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    tiles: usize,
+    closed: bool,
+}
+
+/// Bounded EDF queue: one mutex + two condvars (item side for the
+/// dispatcher, space side for blocking submitters).
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    item_cv: Condvar,
+    space_cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { heap: BinaryHeap::new(), tiles: 0, closed: false }),
+            item_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tiles across all queued requests (admission wait estimation).
+    pub fn queued_tiles(&self) -> usize {
+        self.inner.lock().unwrap().tiles
+    }
+
+    /// Non-blocking bounded push.
+    pub fn try_push(&self, req: Pending<T>) -> Result<(), AdmitError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(AdmitError::Closed(req));
+        }
+        if g.heap.len() >= self.capacity {
+            return Err(AdmitError::Full(req));
+        }
+        g.tiles += req.tiles;
+        g.heap.push(Entry(req));
+        drop(g);
+        self.item_cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop the highest-priority request, waiting up to `timeout` for one
+    /// to arrive. Returns `Closed` only once closed *and* drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopOutcome<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(Entry(req)) = g.heap.pop() {
+                g.tiles -= req.tiles;
+                drop(g);
+                self.space_cv.notify_one();
+                return PopOutcome::Item(req);
+            }
+            if g.closed {
+                return PopOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopOutcome::Empty;
+            }
+            let (guard, _) = self.item_cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Block up to `timeout` for the queue to have room (or close).
+    /// Returns `true` if a subsequent `try_push` has a chance.
+    pub fn wait_space(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed || g.heap.len() < self.capacity {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.space_cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the queue: further pushes fail, waiters wake; queued
+    /// requests stay poppable so the dispatcher can shed them.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.item_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(seq: u64, deadline_ms: Option<u64>, base: Instant) -> Pending<u64> {
+        Pending {
+            seq,
+            deadline: deadline_ms.map(|ms| base + Duration::from_millis(ms)),
+            tiles: 1,
+            payload: seq,
+        }
+    }
+
+    fn pop_now<T>(q: &AdmissionQueue<T>) -> Pending<T> {
+        match q.pop_timeout(Duration::ZERO) {
+            PopOutcome::Item(r) => r,
+            _ => panic!("expected an item"),
+        }
+    }
+
+    #[test]
+    fn pops_in_edf_order_with_fifo_tiebreak() {
+        let q = AdmissionQueue::new(16);
+        let base = Instant::now();
+        // Out-of-order deadlines; two without deadlines; a tie at 50ms.
+        q.try_push(req(0, Some(200), base)).unwrap();
+        q.try_push(req(1, None, base)).unwrap();
+        q.try_push(req(2, Some(50), base)).unwrap();
+        q.try_push(req(3, Some(50), base)).unwrap();
+        q.try_push(req(4, None, base)).unwrap();
+        q.try_push(req(5, Some(10), base)).unwrap();
+        let order: Vec<u64> = (0..6).map(|_| pop_now(&q).seq).collect();
+        assert_eq!(order, vec![5, 2, 3, 0, 1, 4], "EDF then FIFO");
+    }
+
+    #[test]
+    fn bounded_push_refuses_above_capacity() {
+        let q = AdmissionQueue::new(2);
+        let base = Instant::now();
+        q.try_push(req(0, None, base)).unwrap();
+        q.try_push(req(1, None, base)).unwrap();
+        assert_eq!(q.queued_tiles(), 2);
+        match q.try_push(req(2, None, base)) {
+            Err(AdmitError::Full(r)) => assert_eq!(r.seq, 2),
+            _ => panic!("expected Full"),
+        }
+        // Popping frees space.
+        let _ = pop_now(&q);
+        q.try_push(req(3, None, base)).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = AdmissionQueue::new(4);
+        let base = Instant::now();
+        q.try_push(req(0, None, base)).unwrap();
+        q.close();
+        match q.try_push(req(1, None, base)) {
+            Err(AdmitError::Closed(_)) => {}
+            _ => panic!("expected Closed"),
+        }
+        assert!(matches!(q.pop_timeout(Duration::ZERO), PopOutcome::Item(_)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), PopOutcome::Closed));
+        assert!(q.wait_space(Duration::ZERO), "closed queue never blocks submitters");
+    }
+
+    #[test]
+    fn pop_timeout_times_out_empty() {
+        let q: AdmissionQueue<()> = AdmissionQueue::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), PopOutcome::Empty));
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+}

@@ -1,0 +1,145 @@
+//! Continuous/dynamic batching policy: how the dispatcher coalesces
+//! queued requests into dispatch rounds.
+//!
+//! A round opens when the first request is pulled from the admission
+//! queue and closes when either `max_tiles` tiles have been gathered or
+//! `max_delay` has elapsed since the round opened — the classic
+//! max-batch/max-delay window. Rounds are *continuous*: a new round
+//! opens immediately, so the pipeline never waits for the previous
+//! round to drain (no head-of-line blocking between rounds; the
+//! in-flight high-water mark in the dispatcher bounds pipeline
+//! occupancy instead).
+
+use std::time::{Duration, Instant};
+
+/// The coalescing window for the serve tier's dispatcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Close a round once this many tiles have been gathered (also the
+    /// dispatcher's in-flight refill increment).
+    pub max_tiles: usize,
+    /// Close a round this long after its first request even if under
+    /// `max_tiles` — bounds the queueing latency batching can add.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_tiles: 32, max_delay: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    /// Clamp degenerate configurations (a zero-tile window would never
+    /// dispatch anything).
+    pub fn normalized(self) -> Self {
+        BatchPolicy { max_tiles: self.max_tiles.max(1), max_delay: self.max_delay }
+    }
+}
+
+/// Pure round-accumulation state machine, driven by the dispatcher and
+/// unit-tested on its own: tracks tiles gathered this round and when
+/// the round opened.
+#[derive(Debug)]
+pub struct BatchBuilder {
+    policy: BatchPolicy,
+    tiles: usize,
+    opened: Option<Instant>,
+}
+
+impl BatchBuilder {
+    pub fn new(policy: BatchPolicy) -> Self {
+        BatchBuilder { policy: policy.normalized(), tiles: 0, opened: None }
+    }
+
+    /// Account one admitted request of `n_tiles`; opens the round on the
+    /// first call.
+    pub fn admit(&mut self, n_tiles: usize, now: Instant) {
+        if self.opened.is_none() {
+            self.opened = Some(now);
+        }
+        self.tiles += n_tiles;
+    }
+
+    /// Tiles gathered in the current round.
+    pub fn tiles(&self) -> usize {
+        self.tiles
+    }
+
+    /// Is a round open (at least one request admitted)?
+    pub fn is_open(&self) -> bool {
+        self.opened.is_some()
+    }
+
+    /// Should the open round be dispatched now? True once full
+    /// (`max_tiles`) or once `max_delay` has elapsed since it opened.
+    pub fn should_dispatch(&self, now: Instant) -> bool {
+        match self.opened {
+            None => false,
+            Some(t0) => {
+                self.tiles >= self.policy.max_tiles
+                    || now.duration_since(t0) >= self.policy.max_delay
+            }
+        }
+    }
+
+    /// Time left in the delay window (how long the dispatcher may keep
+    /// waiting for more requests). Zero when the round must dispatch.
+    pub fn remaining_delay(&self, now: Instant) -> Duration {
+        match self.opened {
+            None => self.policy.max_delay,
+            Some(_) if self.tiles >= self.policy.max_tiles => Duration::ZERO,
+            Some(t0) => self.policy.max_delay.saturating_sub(now.duration_since(t0)),
+        }
+    }
+
+    /// Close the round, resetting for the next one.
+    pub fn reset(&mut self) {
+        self.tiles = 0;
+        self.opened = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_closes_on_max_tiles() {
+        let mut b = BatchBuilder::new(BatchPolicy {
+            max_tiles: 4,
+            max_delay: Duration::from_secs(60),
+        });
+        let t0 = Instant::now();
+        assert!(!b.should_dispatch(t0));
+        b.admit(2, t0);
+        assert!(!b.should_dispatch(t0));
+        assert!(b.remaining_delay(t0) > Duration::ZERO);
+        b.admit(2, t0);
+        assert!(b.should_dispatch(t0), "full round must dispatch");
+        assert_eq!(b.remaining_delay(t0), Duration::ZERO);
+        b.reset();
+        assert!(!b.is_open());
+        assert_eq!(b.tiles(), 0);
+    }
+
+    #[test]
+    fn round_closes_on_max_delay() {
+        let mut b = BatchBuilder::new(BatchPolicy {
+            max_tiles: 1_000,
+            max_delay: Duration::from_millis(5),
+        });
+        let t0 = Instant::now();
+        b.admit(1, t0);
+        assert!(!b.should_dispatch(t0));
+        let later = t0 + Duration::from_millis(6);
+        assert!(b.should_dispatch(later), "expired window must dispatch");
+        assert_eq!(b.remaining_delay(later), Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_max_tiles_is_normalized() {
+        let b = BatchBuilder::new(BatchPolicy { max_tiles: 0, max_delay: Duration::ZERO });
+        assert_eq!(b.policy.max_tiles, 1);
+    }
+}

@@ -1,0 +1,626 @@
+//! `kitsune::serve` — a continuous-batching, SLO-aware serving tier on
+//! the warm pipeline.
+//!
+//! The paper's spatial pipelines shine when many independent requests
+//! stream through one persistent pipeline instead of being serialized
+//! per client (the scheduling shape Opara argues for). This module
+//! turns the session facade's ticketed submission into that serving
+//! system:
+//!
+//! * **continuous/dynamic batching** ([`batch`]): an admission queue
+//!   coalesces queued requests into dispatch rounds up to a
+//!   max-batch/max-delay window ([`BatchPolicy`]), keeping the pipeline
+//!   fed without head-of-line blocking between rounds;
+//! * **deadline + SLO-aware scheduling** ([`admission`]): requests
+//!   carry optional deadlines, dispatch order is earliest-deadline-first,
+//!   and load is shed with typed [`ServeError::DeadlineExceeded`] /
+//!   [`ServeError::AdmissionRejected`] when the queue depth or the
+//!   estimated wait exceeds budget — backpressure reaches callers
+//!   through the bounded [`Server::try_submit`];
+//! * **multi-model residency** ([`registry`]): several warm sessions
+//!   resident at once under one memory budget with LRU eviction;
+//! * **observability** ([`stats`]): per-request latency histograms
+//!   (p50/p95/p99), queue-depth and shed counters via [`Server::stats`].
+//!
+//! ```no_run
+//! use kitsune::serve::{Server, ServeConfig};
+//! use kitsune::session::{nerf_trunk_graph, Session};
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//!
+//! let session = Arc::new(
+//!     Session::builder().graph(nerf_trunk_graph(8192, 60, 64, 3)).tile_rows(128).build()?,
+//! );
+//! let server = Server::single("nerf", session, ServeConfig::default());
+//! let tiles = server.registry().get("nerf")?.make_tiles(4, 7)?;
+//! let handle = server.try_submit("nerf", tiles, Some(Duration::from_millis(250)))?;
+//! let reply = handle.wait()?;
+//! println!("{} tiles in {:?}  p99 {:.2} ms",
+//!          reply.outputs.len(), reply.latency, server.stats().latency.p99_ms);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The dispatcher is one control-plane OS thread per server: it never
+//! computes (stage kernels still run as cooperative pumps on
+//! [`crate::sched`]); it only moves requests between the admission
+//! queue and the pipelines and reaps finished tickets via the
+//! non-blocking [`crate::session::Ticket::try_wait`].
+
+pub mod admission;
+pub mod batch;
+pub mod registry;
+pub mod stats;
+
+pub use batch::{BatchBuilder, BatchPolicy};
+pub use registry::{session_resident_bytes, ModelRegistry};
+pub use stats::{LatencyHistogram, LatencySnapshot, ServeStats, StatsSnapshot};
+
+use admission::{AdmitError, AdmissionQueue, Pending, PopOutcome};
+use crate::runtime::Tensor;
+use crate::sched::env_usize;
+use crate::session::{Session, Ticket};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Typed serving failure modes. Every admitted request resolves as
+/// exactly one of completed / shed / failed; submission itself can be
+/// refused with the first three variants.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue at capacity — backpressure; retry later.
+    AdmissionRejected { depth: usize, capacity: usize },
+    /// The request's deadline cannot (or could not) be met; shed.
+    DeadlineExceeded { deadline_ms: u64 },
+    /// No model registered under this name.
+    UnknownModel { name: String, available: Vec<String> },
+    /// Registering the model would exceed the registry's memory budget
+    /// even after evicting every idle model.
+    BudgetExceeded { requested: u64, resident: u64, budget: u64 },
+    /// Malformed request (tile dims, non-streamable model).
+    BadRequest(String),
+    /// The server is shutting down.
+    ShuttingDown,
+    /// A stage kernel failed while serving the request.
+    Stage(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::AdmissionRejected { depth, capacity } => {
+                write!(f, "admission rejected: queue depth {depth} at capacity {capacity}")
+            }
+            ServeError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline exceeded: {deadline_ms} ms budget cannot be met; request shed")
+            }
+            ServeError::UnknownModel { name, available } => {
+                write!(f, "unknown model `{name}` — registered: {}", available.join(", "))
+            }
+            ServeError::BudgetExceeded { requested, resident, budget } => write!(
+                f,
+                "memory budget exceeded: model needs {requested} B, {resident} B resident \
+                 of {budget} B budget (nothing idle left to evict)"
+            ),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Stage(msg) => write!(f, "stage failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A served request's successful outcome.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// Output tiles, in the request's submission order.
+    pub outputs: Vec<Tensor>,
+    /// End-to-end latency: admission to delivery.
+    pub latency: Duration,
+}
+
+/// Exactly-once resolution slot shared between the caller's handle and
+/// the dispatcher.
+struct ResponseShared {
+    state: Mutex<Option<Result<ServeResult, ServeError>>>,
+    cv: Condvar,
+}
+
+impl ResponseShared {
+    fn new() -> Arc<Self> {
+        Arc::new(ResponseShared { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// First resolution wins; later calls are ignored (the dispatcher's
+    /// paths are disjoint per request, so a second call is a logic bug).
+    fn resolve(&self, r: Result<ServeResult, ServeError>) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.is_none(), "response resolved twice");
+        if s.is_none() {
+            *s = Some(r);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Caller's handle to one admitted request.
+pub struct ResponseHandle {
+    shared: Arc<ResponseShared>,
+}
+
+impl ResponseHandle {
+    /// Block until the request resolves (completed, shed, or failed).
+    pub fn wait(self) -> Result<ServeResult, ServeError> {
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.take() {
+                return r;
+            }
+            s = self.shared.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Non-consuming poll: has the request resolved?
+    pub fn is_done(&self) -> bool {
+        self.shared.state.lock().unwrap().is_some()
+    }
+}
+
+/// Serving-tier configuration. Environment knobs (`KITSUNE_SERVE_*`)
+/// seed the defaults; unparseable values warn once and fall back, the
+/// same policy as `KITSUNE_WORKERS` (see [`crate::sched::env_usize`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Coalescing window (`KITSUNE_SERVE_MAX_BATCH` tiles /
+    /// `KITSUNE_SERVE_MAX_DELAY_US`).
+    pub batch: BatchPolicy,
+    /// Admission queue bound (`KITSUNE_SERVE_QUEUE_DEPTH` requests).
+    pub queue_depth: usize,
+    /// Deadline applied to requests that do not carry one (None: no SLO).
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch: BatchPolicy {
+                max_tiles: env_usize("KITSUNE_SERVE_MAX_BATCH", 32, 1 << 16),
+                max_delay: Duration::from_micros(
+                    env_usize("KITSUNE_SERVE_MAX_DELAY_US", 2_000, 10_000_000) as u64,
+                ),
+            },
+            queue_depth: env_usize("KITSUNE_SERVE_QUEUE_DEPTH", 256, 1 << 20),
+            default_deadline: None,
+        }
+    }
+}
+
+/// Request payload carried through the admission queue.
+struct RequestPayload {
+    model: String,
+    tiles: Vec<Tensor>,
+    handle: Arc<ResponseShared>,
+    enqueued: Instant,
+}
+
+type Req = Pending<RequestPayload>;
+
+/// State shared between submitters and the dispatcher.
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    queue: AdmissionQueue<RequestPayload>,
+    stats: ServeStats,
+    /// EWMA of per-tile service time (ns); 0 until the first completion.
+    est_tile_ns: AtomicU64,
+    /// Tiles dispatched into pipelines and not yet reaped.
+    inflight_tiles: AtomicUsize,
+    cfg: ServeConfig,
+    seq: AtomicU64,
+    closing: AtomicBool,
+}
+
+impl Shared {
+    fn est_tile_ns(&self) -> u64 {
+        self.est_tile_ns.load(Ordering::Relaxed)
+    }
+
+    /// Fold one completed batch into the per-tile service-time EWMA.
+    fn observe_service(&self, elapsed: Duration, n_tiles: usize) {
+        if n_tiles == 0 {
+            return;
+        }
+        let sample = (elapsed.as_nanos() / n_tiles as u128).min(u128::from(u64::MAX)) as u64;
+        let old = self.est_tile_ns.load(Ordering::Relaxed);
+        let new = if old == 0 { sample } else { (old * 4 + sample) / 5 };
+        self.est_tile_ns.store(new, Ordering::Relaxed);
+    }
+
+    /// Estimated wait for a new request of `n_tiles`, from everything
+    /// queued ahead of it plus tiles already in flight. Conservative: it
+    /// assumes serial drain (pipeline overlap only makes it finish
+    /// sooner).
+    fn estimated_wait(&self, n_tiles: usize) -> Duration {
+        let est = self.est_tile_ns();
+        if est == 0 {
+            return Duration::ZERO;
+        }
+        let tiles =
+            self.queue.queued_tiles() + self.inflight_tiles.load(Ordering::SeqCst) + n_tiles;
+        Duration::from_nanos(est.saturating_mul(tiles as u64))
+    }
+}
+
+/// One request dispatched into a pipeline, awaiting its ticket.
+struct InFlight {
+    ticket: Ticket,
+    handle: Arc<ResponseShared>,
+    n_tiles: usize,
+    enqueued: Instant,
+}
+
+/// The serving tier: admission queue + dispatcher over a
+/// [`ModelRegistry`] of warm sessions.
+pub struct Server {
+    shared: Arc<Shared>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Stand up the serving tier over `registry`: spawns the dispatcher
+    /// (one control-plane thread; all compute stays on the scheduler's
+    /// pumps).
+    pub fn new(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Server {
+        let cfg = ServeConfig { batch: cfg.batch.normalized(), ..cfg };
+        let shared = Arc::new(Shared {
+            registry,
+            queue: AdmissionQueue::new(cfg.queue_depth),
+            stats: ServeStats::default(),
+            est_tile_ns: AtomicU64::new(0),
+            inflight_tiles: AtomicUsize::new(0),
+            cfg,
+            seq: AtomicU64::new(0),
+            closing: AtomicBool::new(false),
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("kitsune-serve-dispatch".to_string())
+                .spawn(move || dispatch_loop(shared))
+                .expect("spawn serve dispatcher")
+        };
+        Server { shared, dispatcher: Mutex::new(Some(dispatcher)) }
+    }
+
+    /// Convenience: a server over a single model (budget-less registry).
+    pub fn single(name: impl Into<String>, session: Arc<Session>, cfg: ServeConfig) -> Server {
+        Server::new(ModelRegistry::single(name, session), cfg)
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.shared.cfg
+    }
+
+    /// Bounded, non-blocking submission — the backpressure surface.
+    /// Refuses with [`ServeError::AdmissionRejected`] when the queue is
+    /// at capacity and with [`ServeError::DeadlineExceeded`] when the
+    /// estimated wait already blows the deadline's slack.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        tiles: Vec<Tensor>,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, ServeError> {
+        self.submit_inner(model, tiles, deadline, false)
+    }
+
+    /// Like [`Server::try_submit`], but blocks while the queue is full
+    /// instead of refusing (still sheds on hopeless deadlines).
+    pub fn submit(
+        &self,
+        model: &str,
+        tiles: Vec<Tensor>,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, ServeError> {
+        self.submit_inner(model, tiles, deadline, true)
+    }
+
+    fn submit_inner(
+        &self,
+        model: &str,
+        tiles: Vec<Tensor>,
+        deadline: Option<Duration>,
+        block: bool,
+    ) -> Result<ResponseHandle, ServeError> {
+        let shared = &self.shared;
+        if shared.closing.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        if tiles.is_empty() {
+            return Err(ServeError::BadRequest("empty request (no tiles)".to_string()));
+        }
+        let session = shared.registry.get(model)?;
+        let Some(dims) = session.tile_dims() else {
+            return Err(ServeError::BadRequest(format!(
+                "model `{model}` is not streamable (no warm pipeline)"
+            )));
+        };
+        for t in &tiles {
+            if t.dims != dims {
+                return Err(ServeError::BadRequest(format!(
+                    "tile dims {:?} != model `{model}` input {:?}",
+                    t.dims, dims
+                )));
+            }
+        }
+        let budget = deadline.or(shared.cfg.default_deadline);
+        let now = Instant::now();
+        if let Some(d) = budget {
+            // SLO-aware shed at admission: if everything already queued
+            // or in flight is estimated to take longer than this
+            // request's whole budget, admitting it only wastes capacity.
+            let est = shared.estimated_wait(tiles.len());
+            if est > d {
+                shared.stats.refused_deadline.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::DeadlineExceeded { deadline_ms: d.as_millis() as u64 });
+            }
+        }
+        let handle = ResponseShared::new();
+        let mut req = Req {
+            seq: shared.seq.fetch_add(1, Ordering::SeqCst),
+            deadline: budget.map(|d| now + d),
+            tiles: tiles.len(),
+            payload: RequestPayload {
+                model: model.to_string(),
+                tiles,
+                handle: Arc::clone(&handle),
+                enqueued: now,
+            },
+        };
+        loop {
+            match shared.queue.try_push(req) {
+                Ok(()) => {
+                    shared.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(ResponseHandle { shared: handle });
+                }
+                Err(AdmitError::Closed(_)) => return Err(ServeError::ShuttingDown),
+                Err(AdmitError::Full(r)) => {
+                    if !block {
+                        shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(ServeError::AdmissionRejected {
+                            depth: shared.queue.len(),
+                            capacity: shared.queue.capacity(),
+                        });
+                    }
+                    req = r;
+                    shared.queue.wait_space(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    /// Point-in-time snapshot of the serving tier's counters, queue
+    /// depth, in-flight tiles, and latency percentiles.
+    pub fn stats(&self) -> StatsSnapshot {
+        let shared = &self.shared;
+        shared.stats.snapshot(
+            shared.queue.len(),
+            shared.inflight_tiles.load(Ordering::SeqCst),
+            shared.est_tile_ns() as f64 / 1_000.0,
+        )
+    }
+
+    /// Requests queued for dispatch right now.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Tiles dispatched into pipelines and not yet reaped.
+    pub fn in_flight_tiles(&self) -> usize {
+        self.shared.inflight_tiles.load(Ordering::SeqCst)
+    }
+
+    /// Drain the tier: queued-but-undispatched requests are shed
+    /// ([`ServeError::ShuttingDown`]), in-flight tiles drain to
+    /// completion, the dispatcher retires. Idempotent; also runs on
+    /// `Drop`. Registered sessions stay warm (the registry owns them).
+    pub fn shutdown(&self) {
+        self.shared.closing.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher poll granularity while requests are in flight.
+const POLL: Duration = Duration::from_micros(200);
+/// Dispatcher wait while fully idle (close() wakes it immediately).
+const IDLE_WAIT: Duration = Duration::from_millis(10);
+
+/// The dispatcher: pull EDF-ordered requests, coalesce them into
+/// max-batch/max-delay rounds, shed hopeless deadlines, feed the
+/// pipelines up to the in-flight high-water mark, and reap completed
+/// tickets back to their handles.
+fn dispatch_loop(shared: Arc<Shared>) {
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut builder = BatchBuilder::new(shared.cfg.batch);
+    let mut round: Vec<Req> = Vec::new();
+    loop {
+        reap(&shared, &mut inflight);
+        if shared.closing.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = Instant::now();
+        let wait = if builder.is_open() {
+            builder.remaining_delay(now).min(POLL)
+        } else if inflight.is_empty() {
+            IDLE_WAIT
+        } else {
+            POLL
+        };
+        match shared.queue.pop_timeout(wait) {
+            PopOutcome::Item(req) => {
+                builder.admit(req.tiles, Instant::now());
+                round.push(req);
+            }
+            PopOutcome::Empty => {}
+            PopOutcome::Closed => break,
+        }
+        if builder.is_open() && builder.should_dispatch(Instant::now()) {
+            dispatch_round(&shared, &mut round, &mut inflight);
+            builder.reset();
+        }
+    }
+    // Shutdown: shed the open round and everything still queued; drain
+    // every in-flight ticket so no handle is left hanging and the
+    // pipelines' in-flight tables return to empty.
+    for req in round.drain(..) {
+        shed_shutdown(&shared, req);
+    }
+    // Keep draining until the queue reports Closed (closed *and* empty):
+    // a submitter that passed the closing check may still land one push
+    // before `shutdown()` closes the queue, and stopping at Empty would
+    // leave that request's handle unresolved forever.
+    loop {
+        match shared.queue.pop_timeout(Duration::from_millis(1)) {
+            PopOutcome::Item(req) => shed_shutdown(&shared, req),
+            PopOutcome::Empty => {}
+            PopOutcome::Closed => break,
+        }
+    }
+    while !inflight.is_empty() {
+        reap_blocking(&shared, &mut inflight, Duration::from_millis(5));
+    }
+}
+
+fn shed_shutdown(shared: &Shared, req: Req) {
+    shared.stats.shed_shutdown.fetch_add(1, Ordering::Relaxed);
+    req.payload.handle.resolve(Err(ServeError::ShuttingDown));
+}
+
+/// Dispatch one coalesced round in EDF order: per request, shed if its
+/// deadline is already (or is estimated to be) unmeetable, otherwise
+/// submit its tiles to the model's warm pipeline. Blocks (reaping) when
+/// the in-flight high-water mark is hit, so a slow pipeline backs
+/// pressure up into the admission queue instead of into unbounded
+/// submissions.
+fn dispatch_round(shared: &Arc<Shared>, round: &mut Vec<Req>, inflight: &mut Vec<InFlight>) {
+    let high_water = shared.cfg.batch.max_tiles.saturating_mul(2).max(1);
+    for req in round.drain(..) {
+        if shared.closing.load(Ordering::SeqCst) {
+            shed_shutdown(shared, req);
+            continue;
+        }
+        let now = Instant::now();
+        if let Some(deadline) = req.deadline {
+            let est = Duration::from_nanos(
+                shared.est_tile_ns().saturating_mul(
+                    (shared.inflight_tiles.load(Ordering::SeqCst) + req.tiles) as u64,
+                ),
+            );
+            if now >= deadline || now + est > deadline {
+                shared.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                req.payload.handle.resolve(Err(ServeError::DeadlineExceeded {
+                    deadline_ms: deadline
+                        .saturating_duration_since(req.payload.enqueued)
+                        .as_millis() as u64,
+                }));
+                continue;
+            }
+        }
+        while shared.inflight_tiles.load(Ordering::SeqCst) + req.tiles > high_water
+            && !inflight.is_empty()
+        {
+            reap_blocking(shared, inflight, Duration::from_micros(500));
+        }
+        let RequestPayload { model, tiles, handle, enqueued } = req.payload;
+        let n_tiles = tiles.len();
+        let session = match shared.registry.get(&model) {
+            Ok(s) => s,
+            Err(e) => {
+                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                handle.resolve(Err(e));
+                continue;
+            }
+        };
+        match session.submit(tiles) {
+            Ok(ticket) => {
+                shared.inflight_tiles.fetch_add(n_tiles, Ordering::SeqCst);
+                inflight.push(InFlight { ticket, handle, n_tiles, enqueued });
+            }
+            Err(e) => {
+                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                handle.resolve(Err(ServeError::Stage(format!("{e:#}"))));
+            }
+        }
+    }
+}
+
+/// Reap every completed in-flight ticket (non-blocking).
+fn reap(shared: &Arc<Shared>, inflight: &mut Vec<InFlight>) {
+    if inflight.is_empty() {
+        return;
+    }
+    let mut still = Vec::with_capacity(inflight.len());
+    for f in inflight.drain(..) {
+        let InFlight { ticket, handle, n_tiles, enqueued } = f;
+        match ticket.try_wait() {
+            Ok(result) => finish(shared, handle, n_tiles, enqueued, result),
+            Err(ticket) => still.push(InFlight { ticket, handle, n_tiles, enqueued }),
+        }
+    }
+    *inflight = still;
+}
+
+/// Block up to `timeout` on the oldest in-flight ticket, then sweep the
+/// rest non-blocking — used while waiting out the high-water mark and
+/// during shutdown drain.
+fn reap_blocking(shared: &Arc<Shared>, inflight: &mut Vec<InFlight>, timeout: Duration) {
+    if inflight.is_empty() {
+        return;
+    }
+    let InFlight { ticket, handle, n_tiles, enqueued } = inflight.remove(0);
+    match ticket.wait_timeout(timeout) {
+        Ok(result) => finish(shared, handle, n_tiles, enqueued, result),
+        Err(ticket) => inflight.insert(0, InFlight { ticket, handle, n_tiles, enqueued }),
+    }
+    reap(shared, inflight);
+}
+
+/// Deliver one resolved ticket to its handle, updating counters, the
+/// latency histogram, and the service-time estimate.
+fn finish(
+    shared: &Arc<Shared>,
+    handle: Arc<ResponseShared>,
+    n_tiles: usize,
+    enqueued: Instant,
+    result: anyhow::Result<crate::session::BatchResult>,
+) {
+    shared.inflight_tiles.fetch_sub(n_tiles, Ordering::SeqCst);
+    match result {
+        Ok(batch) => {
+            let latency = enqueued.elapsed();
+            shared.observe_service(Duration::from_secs_f64(batch.elapsed_s), n_tiles);
+            shared.stats.completed.fetch_add(1, Ordering::Relaxed);
+            shared.stats.latency.record(latency);
+            handle.resolve(Ok(ServeResult { outputs: batch.outputs, latency }));
+        }
+        Err(e) => {
+            shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+            handle.resolve(Err(ServeError::Stage(format!("{e:#}"))));
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Multi-model residency: several warm [`Session`] pipelines resident
+//! at once, with per-model memory accounting and an LRU
+//! eviction/refusal policy against a configured budget.
+//!
+//! Residency cost of a model is what its warm pipeline pins in host
+//! memory: the sum of every stage's weight tensors plus the ring-queue
+//! pool between stages (capacity × tile bytes per edge). When inserting
+//! a model would exceed the budget, least-recently-used *idle* models
+//! (zero tiles in flight) are evicted — shut down and dropped — and if
+//! that still cannot make room the insert is refused with a typed
+//! [`ServeError::BudgetExceeded`].
+
+use super::ServeError;
+use crate::session::Session;
+use std::sync::{Arc, Mutex};
+
+/// Bytes a warm session pins: stage weights + inter-stage queue pool.
+/// Tile bytes are estimated from the input tile spec (stage output dims
+/// vary but stay within the same order for the suite's pipelines).
+pub fn session_resident_bytes(session: &Session) -> u64 {
+    let Some(pipeline) = session.pipeline() else {
+        return 0;
+    };
+    let weight_bytes: u64 = pipeline
+        .stages
+        .iter()
+        .map(|s| {
+            s.weights.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>()
+        })
+        .sum();
+    let tile_bytes: u64 =
+        session.tile_dims().map(|d| d.iter().product::<usize>() as u64 * 4).unwrap_or(0);
+    let n_edges = pipeline.stages.len() as u64 + 1;
+    weight_bytes + n_edges * pipeline.queue_capacity as u64 * tile_bytes
+}
+
+struct Model {
+    name: String,
+    session: Arc<Session>,
+    bytes: u64,
+    /// Logical LRU clock value of the last `get`.
+    last_used: u64,
+}
+
+struct RegistryInner {
+    models: Vec<Model>,
+    tick: u64,
+}
+
+/// Named warm sessions under one memory budget.
+pub struct ModelRegistry {
+    budget: Option<u64>,
+    inner: Mutex<RegistryInner>,
+}
+
+impl ModelRegistry {
+    /// `budget_bytes: None` disables accounting-based refusal.
+    pub fn new(budget_bytes: Option<u64>) -> Self {
+        ModelRegistry {
+            budget: budget_bytes,
+            inner: Mutex::new(RegistryInner { models: Vec::new(), tick: 0 }),
+        }
+    }
+
+    /// Convenience: a budget-less registry holding one model.
+    pub fn single(name: impl Into<String>, session: Arc<Session>) -> Arc<Self> {
+        let r = Arc::new(ModelRegistry::new(None));
+        r.insert(name, session).expect("budget-less insert cannot fail");
+        r
+    }
+
+    pub fn budget_bytes(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Register a warm session under `name` (replacing any same-named
+    /// model). Evicts least-recently-used idle models as needed to fit
+    /// the budget; returns the evicted names. Refuses (typed) when the
+    /// budget cannot be met even after evicting everything idle.
+    pub fn insert(
+        &self,
+        name: impl Into<String>,
+        session: Arc<Session>,
+    ) -> Result<Vec<String>, ServeError> {
+        let name = name.into();
+        let bytes = session_resident_bytes(&session);
+        let mut evicted_sessions: Vec<(String, Arc<Session>)> = Vec::new();
+        let mut g = self.inner.lock().unwrap();
+        // Replacement frees the old entry's accounting first.
+        if let Some(pos) = g.models.iter().position(|m| m.name == name) {
+            let old = g.models.remove(pos);
+            evicted_sessions.push((old.name.clone(), old.session));
+        }
+        if let Some(budget) = self.budget {
+            let mut resident: u64 = g.models.iter().map(|m| m.bytes).sum();
+            while resident + bytes > budget {
+                // Oldest idle model goes first.
+                let victim = g
+                    .models
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, m)| m.session.in_flight() == 0)
+                    .min_by_key(|(_, m)| m.last_used)
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(i) => {
+                        let old = g.models.remove(i);
+                        resident -= old.bytes;
+                        evicted_sessions.push((old.name.clone(), old.session));
+                    }
+                    None => {
+                        // Roll back the replacement removal? The old
+                        // same-named model was already displaced by
+                        // intent; refusal only blocks the new insert.
+                        drop(g);
+                        for (_, s) in &evicted_sessions {
+                            s.shutdown();
+                        }
+                        return Err(ServeError::BudgetExceeded {
+                            requested: bytes,
+                            resident,
+                            budget,
+                        });
+                    }
+                }
+            }
+        }
+        g.tick += 1;
+        let last_used = g.tick;
+        g.models.push(Model { name, session, bytes, last_used });
+        drop(g);
+        let mut names = Vec::new();
+        for (n, s) in evicted_sessions {
+            s.shutdown();
+            names.push(n);
+        }
+        Ok(names)
+    }
+
+    /// Look up a model, bumping its LRU clock.
+    pub fn get(&self, name: &str) -> Result<Arc<Session>, ServeError> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.models.iter_mut().find(|m| m.name == name) {
+            Some(m) => {
+                m.last_used = tick;
+                Ok(Arc::clone(&m.session))
+            }
+            None => Err(ServeError::UnknownModel {
+                name: name.to_string(),
+                available: g.models.iter().map(|m| m.name.clone()).collect(),
+            }),
+        }
+    }
+
+    /// Evict one model by name (shut down and dropped). `false` if absent.
+    pub fn evict(&self, name: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.models.iter().position(|m| m.name == name) {
+            Some(i) => {
+                let old = g.models.remove(i);
+                drop(g);
+                old.session.shutdown();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Registered model names, in insertion order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// (name, resident bytes) per model.
+    pub fn accounting(&self) -> Vec<(String, u64)> {
+        self.inner.lock().unwrap().models.iter().map(|m| (m.name.clone(), m.bytes)).collect()
+    }
+
+    /// Total resident bytes across registered models.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().models.iter().map(|m| m.bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shut every registered session down (used at server shutdown).
+    pub fn shutdown_all(&self) {
+        let sessions: Vec<Arc<Session>> = {
+            let g = self.inner.lock().unwrap();
+            g.models.iter().map(|m| Arc::clone(&m.session)).collect()
+        };
+        for s in sessions {
+            s.shutdown();
+        }
+    }
+}

@@ -554,6 +554,14 @@ impl Session {
         self.service.as_ref().map(PipelineService::metrics).unwrap_or_default()
     }
 
+    /// Tiles currently in flight through the warm inference pipeline
+    /// (submitted, not yet resolved). Zero for cold or training-only
+    /// sessions and whenever the pipeline is idle — the serve tier's
+    /// no-ticket-leak invariant checks exactly this.
+    pub fn in_flight(&self) -> usize {
+        self.service.as_ref().map(PipelineService::in_flight).unwrap_or(0)
+    }
+
     /// Total threads the warm pools have ever spawned (inference pipeline
     /// and/or training DAG) — constant after `build()`; asserted by the
     /// warm-submit test.

@@ -28,7 +28,7 @@ use crate::sched::{self, LiveCount, Scheduler};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One tile in flight: owning ticket, index within the batch, payload.
 type Tile = (Arc<TicketInner>, usize, Tensor);
@@ -54,6 +54,11 @@ impl BatchResult {
 struct TicketInner {
     state: Mutex<TicketState>,
     done: Condvar,
+    /// The owning service's in-flight tile counter: incremented by the
+    /// batch size at submit, decremented once per tile as it completes or
+    /// fails — so [`PipelineService::in_flight`] reads exactly the number
+    /// of tiles between `submit` and ticket resolution.
+    depth: Arc<AtomicUsize>,
 }
 
 struct TicketState {
@@ -63,7 +68,8 @@ struct TicketState {
 }
 
 impl TicketInner {
-    fn new(n: usize) -> Self {
+    fn new(n: usize, depth: Arc<AtomicUsize>) -> Self {
+        depth.fetch_add(n, Ordering::SeqCst);
         TicketInner {
             state: Mutex::new(TicketState {
                 outputs: vec![None; n],
@@ -71,6 +77,7 @@ impl TicketInner {
                 error: None,
             }),
             done: Condvar::new(),
+            depth,
         }
     }
 
@@ -79,6 +86,7 @@ impl TicketInner {
         let mut s = self.state.lock().unwrap();
         if s.outputs[idx].is_none() {
             s.remaining -= 1;
+            self.depth.fetch_sub(1, Ordering::SeqCst);
         }
         s.outputs[idx] = Some(t);
         if s.remaining == 0 {
@@ -92,7 +100,9 @@ impl TicketInner {
         if s.error.is_none() {
             s.error = Some(msg);
         }
-        s.remaining = s.remaining.saturating_sub(n);
+        let dec = n.min(s.remaining);
+        s.remaining -= dec;
+        self.depth.fetch_sub(dec, Ordering::SeqCst);
         if s.remaining == 0 {
             self.done.notify_all();
         }
@@ -117,6 +127,57 @@ impl Ticket {
         while s.remaining > 0 {
             s = self.inner.done.wait(s).unwrap();
         }
+        let result = Self::take_result(&mut s, &self.submitted);
+        drop(s);
+        result
+    }
+
+    /// Non-consuming poll: has every tile of the batch drained? A `true`
+    /// here means [`Ticket::wait`]/[`Ticket::try_wait`] will not block.
+    pub fn is_done(&self) -> bool {
+        self.inner.state.lock().unwrap().remaining == 0
+    }
+
+    /// Non-blocking wait: the batch result if it has completed, else the
+    /// ticket back — so a poller (e.g. the serve tier's dispatcher) can
+    /// keep servicing other work and retry.
+    pub fn try_wait(self) -> std::result::Result<Result<BatchResult>, Ticket> {
+        let mut s = self.inner.state.lock().unwrap();
+        if s.remaining > 0 {
+            drop(s);
+            return Err(self);
+        }
+        let result = Self::take_result(&mut s, &self.submitted);
+        drop(s);
+        Ok(result)
+    }
+
+    /// Bounded wait: block up to `timeout` for the batch to complete.
+    /// Returns the ticket back on timeout so the caller decides what to
+    /// do with the still-in-flight batch (the deadline path in
+    /// [`crate::serve`] sheds the request but keeps draining the ticket).
+    pub fn wait_timeout(
+        self,
+        timeout: Duration,
+    ) -> std::result::Result<Result<BatchResult>, Ticket> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.inner.state.lock().unwrap();
+        while s.remaining > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                drop(s);
+                return Err(self);
+            }
+            let (guard, _timed_out) =
+                self.inner.done.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+        let result = Self::take_result(&mut s, &self.submitted);
+        drop(s);
+        Ok(result)
+    }
+
+    fn take_result(s: &mut TicketState, submitted: &Instant) -> Result<BatchResult> {
         if let Some(e) = s.error.take() {
             return Err(anyhow!(e));
         }
@@ -125,7 +186,7 @@ impl Ticket {
             .iter_mut()
             .map(|o| o.take().expect("completed ticket has a hole"))
             .collect();
-        Ok(BatchResult { outputs, elapsed_s: self.submitted.elapsed().as_secs_f64() })
+        Ok(BatchResult { outputs, elapsed_s: submitted.elapsed().as_secs_f64() })
     }
 }
 
@@ -169,6 +230,9 @@ pub struct PipelineService {
     /// The flag is `true` once shut down.
     gate: std::sync::RwLock<bool>,
     tile_dims: Vec<usize>,
+    /// Tiles submitted but not yet resolved (completed or failed) —
+    /// the in-flight table depth, exposed for admission control.
+    inflight: Arc<AtomicUsize>,
 }
 
 impl PipelineService {
@@ -262,6 +326,7 @@ impl PipelineService {
             spawned,
             gate: std::sync::RwLock::new(false),
             tile_dims,
+            inflight: Arc::new(AtomicUsize::new(0)),
         })
     }
 
@@ -283,7 +348,7 @@ impl PipelineService {
             );
         }
         let n = inputs.len();
-        let inner = Arc::new(TicketInner::new(n));
+        let inner = Arc::new(TicketInner::new(n, Arc::clone(&self.inflight)));
         let submitted = Instant::now();
         for (i, t) in inputs.into_iter().enumerate() {
             if let Err(PushError::Closed(_)) = self.source.push((Arc::clone(&inner), i, t)) {
@@ -301,6 +366,13 @@ impl PipelineService {
     /// Per-stage metrics accumulated since the service started.
     pub fn metrics(&self) -> Vec<StageMetrics> {
         self.stats.iter().map(StageStat::snapshot).collect()
+    }
+
+    /// Tiles currently between `submit` and ticket resolution — the
+    /// depth of the in-flight table. Zero on an idle pipeline; the serve
+    /// tier's admission control reads this to estimate wait.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
     }
 
     /// Total pump tasks this service has ever created (stage workers +

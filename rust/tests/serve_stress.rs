@@ -1,0 +1,290 @@
+//! Stress and contract tests for the `kitsune::serve` tier: bounded
+//! admission under overload, exactly-once resolution of every admitted
+//! request (completed / shed / deadline-exceeded — never hung), clean
+//! shutdown under load with an empty in-flight table, and the model
+//! registry's memory-budget eviction/refusal policy.
+
+use kitsune::runtime::Tensor;
+use kitsune::serve::{
+    session_resident_bytes, BatchPolicy, ModelRegistry, ServeConfig, ServeError, Server,
+};
+use kitsune::session::{nerf_trunk_graph, Session};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Small warm session: 4-stage trunk pipeline over 4x6 tiles.
+fn small_session() -> Arc<Session> {
+    Arc::new(
+        Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .workers(2)
+            .build()
+            .unwrap(),
+    )
+}
+
+fn fast_config(queue_depth: usize) -> ServeConfig {
+    ServeConfig {
+        batch: BatchPolicy { max_tiles: 8, max_delay: Duration::from_micros(200) },
+        queue_depth,
+        default_deadline: None,
+    }
+}
+
+#[test]
+fn blocking_submit_completes_every_request_under_pressure() {
+    // More concurrent clients than the queue admits at once: `submit`
+    // must backpressure (block), never drop, and every request must
+    // complete with its own outputs.
+    let session = small_session();
+    let server = Server::single("trunk", Arc::clone(&session), fast_config(4));
+    const CLIENTS: usize = 6;
+    const REQUESTS: usize = 8;
+    const TILES: usize = 2;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let server = &server;
+            let session = &session;
+            joins.push(scope.spawn(move || {
+                for r in 0..REQUESTS {
+                    let tiles = session.make_tiles(TILES, 1 + (c * REQUESTS + r) as u64).unwrap();
+                    let reply = server.submit("trunk", tiles, None).unwrap().wait().unwrap();
+                    assert_eq!(reply.outputs.len(), TILES, "client {c} request {r}");
+                    assert!(reply.latency > Duration::ZERO);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+    let stats = server.stats();
+    assert_eq!(stats.admitted, (CLIENTS * REQUESTS) as u64);
+    assert_eq!(stats.completed, stats.admitted);
+    assert_eq!(stats.admitted, stats.resolved(), "every admitted request resolved");
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(stats.in_flight_tiles, 0);
+    assert_eq!(stats.latency.count, stats.completed);
+    assert!(stats.latency.p99_ms >= stats.latency.p50_ms);
+    server.shutdown();
+    assert_eq!(session.in_flight(), 0, "no ticket leaks");
+}
+
+#[test]
+fn try_submit_rejects_past_admission_limit_and_leaks_nothing() {
+    // A burst far past the queue bound through the non-blocking path:
+    // overflow is refused with the typed backpressure error, and the
+    // requests that were admitted all resolve.
+    let session = small_session();
+    let server = Server::single("trunk", Arc::clone(&session), fast_config(2));
+    let mut handles = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..64u64 {
+        let tiles = session.make_tiles(1, i + 1).unwrap();
+        match server.try_submit("trunk", tiles, None) {
+            Ok(h) => handles.push(h),
+            Err(ServeError::AdmissionRejected { depth, capacity }) => {
+                assert!(depth >= capacity, "rejected below capacity: {depth}/{capacity}");
+                assert_eq!(capacity, 2);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    let admitted = handles.len() as u64;
+    for h in handles {
+        let reply = h.wait().expect("admitted requests complete");
+        assert_eq!(reply.outputs.len(), 1);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.admitted, admitted);
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(stats.admitted, stats.resolved());
+    server.shutdown();
+    assert_eq!(session.in_flight(), 0);
+}
+
+#[test]
+fn hopeless_deadlines_are_shed_with_typed_errors() {
+    let session = small_session();
+    let server = Server::single("trunk", Arc::clone(&session), fast_config(64));
+    // One deadline-free request primes the service-time estimate.
+    let tiles = session.make_tiles(4, 1).unwrap();
+    let reply = server.submit("trunk", tiles, None).unwrap().wait().unwrap();
+    assert_eq!(reply.outputs.len(), 4);
+    // A 1 ns budget can never be met: refused at admission (estimated
+    // wait over budget) or shed at dispatch — either way the caller sees
+    // DeadlineExceeded exactly once, never a hang.
+    let tiles = session.make_tiles(4, 2).unwrap();
+    let outcome = match server.try_submit("trunk", tiles, Some(Duration::from_nanos(1))) {
+        Ok(handle) => handle.wait(),
+        Err(e) => Err(e),
+    };
+    match outcome {
+        Err(ServeError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // A generous deadline sails through.
+    let tiles = session.make_tiles(4, 3).unwrap();
+    let reply =
+        server.submit("trunk", tiles, Some(Duration::from_secs(30))).unwrap().wait().unwrap();
+    assert_eq!(reply.outputs.len(), 4);
+    let stats = server.stats();
+    assert_eq!(stats.refused_deadline + stats.shed_deadline, 1);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.admitted, stats.resolved());
+    server.shutdown();
+    assert_eq!(session.in_flight(), 0);
+}
+
+#[test]
+fn malformed_requests_get_typed_refusals() {
+    let session = small_session();
+    let server = Server::single("trunk", Arc::clone(&session), fast_config(16));
+    match server.try_submit("trunk", Vec::new(), None) {
+        Err(ServeError::BadRequest(msg)) => assert!(msg.contains("empty"), "{msg}"),
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    match server.try_submit("trunk", vec![Tensor::zeros(&[3, 3])], None) {
+        Err(ServeError::BadRequest(msg)) => assert!(msg.contains("dims"), "{msg}"),
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    match server.try_submit("nope", session.make_tiles(1, 1).unwrap(), None) {
+        Err(ServeError::UnknownModel { name, available }) => {
+            assert_eq!(name, "nope");
+            assert_eq!(available, vec!["trunk".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    // Refusals are not admissions; the tier stays reconciled.
+    let stats = server.stats();
+    assert_eq!(stats.admitted, 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_resolves_every_handle_and_drains() {
+    // Clients hammer the tier while the main thread shuts it down:
+    // every submission resolves as exactly one of completed / shed /
+    // shutting-down — nothing hangs — and the pipeline's in-flight
+    // table returns to empty.
+    let session = small_session();
+    let server = Server::single("trunk", Arc::clone(&session), fast_config(8));
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..4usize {
+            let server = &server;
+            let session = &session;
+            joins.push(scope.spawn(move || {
+                let mut ok = 0usize;
+                let mut cut = 0usize;
+                for r in 0..24usize {
+                    let tiles = session.make_tiles(2, 1 + (c * 24 + r) as u64).unwrap();
+                    match server.submit("trunk", tiles, None) {
+                        Ok(handle) => match handle.wait() {
+                            Ok(reply) => {
+                                assert_eq!(reply.outputs.len(), 2);
+                                ok += 1;
+                            }
+                            Err(ServeError::ShuttingDown) => cut += 1,
+                            Err(e) => panic!("client {c} request {r}: {e}"),
+                        },
+                        Err(ServeError::ShuttingDown) => cut += 1,
+                        Err(e) => panic!("client {c} request {r}: {e}"),
+                    }
+                }
+                (ok, cut)
+            }));
+        }
+        // Let requests get in flight, then pull the plug mid-storm.
+        std::thread::sleep(Duration::from_millis(15));
+        server.shutdown();
+        for j in joins {
+            let (ok, cut) = j.join().unwrap();
+            assert_eq!(ok + cut, 24, "every request resolved exactly once");
+        }
+    });
+    // Idempotent, and the tier reconciles: all admitted requests ended
+    // in a terminal bucket and no tickets leaked.
+    server.shutdown();
+    let stats = server.stats();
+    assert_eq!(stats.admitted, stats.resolved(), "{stats:?}");
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(stats.in_flight_tiles, 0);
+    assert_eq!(session.in_flight(), 0, "in-flight table drained");
+    match server.try_submit("trunk", session.make_tiles(1, 7).unwrap(), None) {
+        Err(ServeError::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+}
+
+#[test]
+fn registry_budget_evicts_lru_idle_then_refuses() {
+    let a = small_session();
+    let b = small_session();
+    let bytes = session_resident_bytes(&a);
+    assert!(bytes > 0, "a warm pipeline pins memory");
+    // Room for one model, not two: inserting the second evicts the
+    // (idle) first, LRU-style.
+    let registry = ModelRegistry::new(Some(bytes + bytes / 2));
+    assert!(registry.insert("a", Arc::clone(&a)).unwrap().is_empty());
+    assert_eq!(registry.resident_bytes(), bytes);
+    let evicted = registry.insert("b", Arc::clone(&b)).unwrap();
+    assert_eq!(evicted, vec!["a".to_string()]);
+    assert_eq!(registry.names(), vec!["b".to_string()]);
+    match registry.get("a") {
+        Err(ServeError::UnknownModel { available, .. }) => {
+            assert_eq!(available, vec!["b".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    registry.get("b").unwrap();
+    registry.shutdown_all();
+
+    // A budget no model fits under refuses with the typed error.
+    let c = small_session();
+    let tiny = ModelRegistry::new(Some(1));
+    match tiny.insert("c", c) {
+        Err(ServeError::BudgetExceeded { requested, budget, .. }) => {
+            assert_eq!(budget, 1);
+            assert!(requested > 1);
+        }
+        other => panic!("expected BudgetExceeded, got {other:?}"),
+    }
+    assert!(tiny.is_empty());
+}
+
+#[test]
+fn multi_model_serving_routes_by_name() {
+    let registry = Arc::new(ModelRegistry::new(None));
+    registry.insert("small", small_session()).unwrap();
+    registry
+        .insert(
+            "wide",
+            Arc::new(
+                Session::builder()
+                    .graph(nerf_trunk_graph(64, 6, 32, 3))
+                    .tile_rows(4)
+                    .workers(2)
+                    .build()
+                    .unwrap(),
+            ),
+        )
+        .unwrap();
+    let server = Server::new(Arc::clone(&registry), fast_config(16));
+    for name in ["small", "wide"] {
+        let session = registry.get(name).unwrap();
+        let tiles = session.make_tiles(3, 11).unwrap();
+        let reply = server.submit(name, tiles, None).unwrap().wait().unwrap();
+        assert_eq!(reply.outputs.len(), 3, "model {name}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 2);
+    server.shutdown();
+    for name in ["small", "wide"] {
+        assert_eq!(registry.get(name).unwrap().in_flight(), 0);
+    }
+    registry.shutdown_all();
+}

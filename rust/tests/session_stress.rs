@@ -119,6 +119,63 @@ fn concurrent_submissions_preserve_per_ticket_order() {
 }
 
 #[test]
+fn ticket_try_wait_polls_without_blocking() {
+    let session = small_session();
+    let ticket = session.submit(session.make_tiles(6, 21).unwrap()).unwrap();
+    // Poll until done: try_wait hands the ticket back while tiles are in
+    // flight instead of blocking, so a dispatcher can service other work.
+    let mut ticket = ticket;
+    let out = loop {
+        match ticket.try_wait() {
+            Ok(result) => break result.unwrap(),
+            Err(t) => {
+                assert!(!t.is_done());
+                ticket = t;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+    };
+    assert_eq!(out.outputs.len(), 6);
+    assert_eq!(session.in_flight(), 0, "in-flight table drains with the ticket");
+}
+
+#[test]
+fn ticket_wait_timeout_returns_ticket_then_result() {
+    let session = small_session();
+    let ticket = session.submit(session.make_tiles(8, 22).unwrap()).unwrap();
+    // A zero timeout on a just-submitted batch almost always hands the
+    // ticket back; either way the ticket stays usable and a generous
+    // timeout must then deliver the full batch.
+    let ticket = match ticket.wait_timeout(std::time::Duration::ZERO) {
+        Ok(result) => {
+            assert_eq!(result.unwrap().outputs.len(), 8);
+            assert_eq!(session.in_flight(), 0);
+            return;
+        }
+        Err(t) => t,
+    };
+    let out = ticket.wait_timeout(std::time::Duration::from_secs(30)).unwrap_or_else(|_| {
+        panic!("batch did not complete within 30s");
+    });
+    assert_eq!(out.unwrap().outputs.len(), 8);
+    assert_eq!(session.in_flight(), 0);
+}
+
+#[test]
+fn in_flight_counts_submitted_tiles_until_reaped() {
+    let session = small_session();
+    assert_eq!(session.in_flight(), 0);
+    let t1 = session.submit(session.make_tiles(4, 31).unwrap()).unwrap();
+    let t2 = session.submit(session.make_tiles(3, 32).unwrap()).unwrap();
+    // Submission registers the tiles immediately (completion races the
+    // assertion, so only an upper bound is stable here).
+    assert!(session.in_flight() <= 7);
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+    assert_eq!(session.in_flight(), 0, "both tickets drained");
+}
+
+#[test]
 fn submission_validates_tile_dims() {
     let session = small_session();
     let err = session.submit(vec![Tensor::zeros(&[3, 3])]).unwrap_err();
