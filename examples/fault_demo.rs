@@ -1,0 +1,210 @@
+//! Fault-injection determinism driver: run a warm pipeline under the
+//! chaos spec in `KITSUNE_FAULT` and *verify* the typed outcome, exiting
+//! non-zero on any deviation.
+//!
+//! CI runs this example many times per spec — same spec, same typed
+//! failure, every run — which is the contract that makes `KITSUNE_FAULT`
+//! a debugging tool rather than a flake generator:
+//!
+//! ```sh
+//! KITSUNE_FAULT="panic:stage=2:tile=3"  cargo run --release --example fault_demo
+//! KITSUNE_FAULT="queue_close:edge=1"    cargo run --release --example fault_demo
+//! KITSUNE_FAULT="nan:loss:step=0"       cargo run --release --example fault_demo
+//! ```
+//!
+//! With `KITSUNE_FAULT` unset the demo runs the same pipelines fault-free
+//! (and asserts that they succeed), so the same binary doubles as a
+//! no-fault smoke test.
+
+use kitsune::fault::{FailureCause, FaultPlan, FaultSpec, Health};
+use kitsune::runtime::RuntimeError;
+use kitsune::session::{nerf_trunk_graph, Session, Ticket};
+use kitsune::train::StepOutcome;
+use std::time::Duration;
+
+/// Bounded wait: a hung ticket is exactly the failure mode this driver
+/// exists to catch, so it must terminate the process, not stall CI.
+fn wait_bounded(t: Ticket) -> anyhow::Result<kitsune::session::BatchResult> {
+    match t.wait_timeout(Duration::from_secs(60)) {
+        Ok(r) => r,
+        Err(_) => {
+            eprintln!("FAIL: ticket did not resolve within 60s (hung ticket)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn stage_failure(err: &anyhow::Error) -> kitsune::fault::StageFailure {
+    match err.downcast_ref::<RuntimeError>() {
+        Some(RuntimeError::StageFailed(f)) => f.clone(),
+        _ => {
+            eprintln!("FAIL: untyped error (expected RuntimeError::StageFailed): {err:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The parsed spec this process is expected to reproduce. The session
+/// itself re-parses `KITSUNE_FAULT` through [`FaultPlan::from_env`]; this
+/// copy only tells the driver what outcome to demand.
+fn expected_specs() -> Vec<FaultSpec> {
+    let raw = match std::env::var("KITSUNE_FAULT") {
+        Ok(raw) => raw,
+        Err(_) => return Vec::new(),
+    };
+    let plan = match FaultPlan::parse(&raw) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("FAIL: bad KITSUNE_FAULT {raw:?}: {msg}");
+            std::process::exit(2);
+        }
+    };
+    // Drain the private armed set through the public take_* surface.
+    let mut specs = Vec::new();
+    for edge in plan.take_queue_closes() {
+        specs.push(FaultSpec::QueueClose { edge });
+    }
+    for stage in 0..64usize {
+        for tile in 0..64u64 {
+            if plan.take_panic(stage, tile) {
+                specs.push(FaultSpec::Panic { stage, tile });
+            }
+        }
+    }
+    for step in 0..64u64 {
+        if plan.take_nan_loss(step) {
+            specs.push(FaultSpec::NanLoss { step });
+        }
+        if plan.take_nan_grad(step) {
+            specs.push(FaultSpec::NanGrad { step });
+        }
+    }
+    specs
+}
+
+/// Drive the inference pipeline: `n` single-tile tickets, then report
+/// which (if any) failed and how.
+fn run_inference(expect: &[FaultSpec]) -> anyhow::Result<()> {
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(1)
+        .build()?;
+    let n_stages = session.pipeline().expect("trunk streams").stages.len();
+    let n_tiles = 8usize;
+    let structural = expect.iter().any(|s| matches!(s, FaultSpec::QueueClose { .. }));
+    // A panic spec outside this demo's pipeline/tile range never strikes;
+    // treat it as a clean run rather than demanding a failure.
+    let panic_at = expect.iter().find_map(|s| match s {
+        FaultSpec::Panic { stage, tile } if *stage < n_stages && *tile < n_tiles as u64 => {
+            Some((*stage, *tile))
+        }
+        _ => None,
+    });
+    let tiles = session.make_tiles(n_tiles, 0xFA17)?;
+    let tickets: Vec<Ticket> =
+        tiles.into_iter().map(|t| session.submit(vec![t])).collect::<Result<_, _>>()?;
+    let mut failures = Vec::new();
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        match wait_bounded(ticket) {
+            Ok(out) => assert_eq!(out.outputs.len(), 1),
+            Err(e) => failures.push((i, stage_failure(&e))),
+        }
+    }
+
+    if structural {
+        // Every ticket behind the dead edge resolves typed; none complete
+        // past it, none hang.
+        assert!(
+            matches!(session.health(), Health::Failed { .. }),
+            "queue_close must fail the pipeline: {:?}",
+            session.health()
+        );
+        assert!(!failures.is_empty(), "queue_close must fail tickets");
+        for (i, f) in &failures {
+            assert!(
+                matches!(f.cause, FailureCause::QueueClosed),
+                "ticket {i}: expected QueueClosed, got {f}"
+            );
+        }
+        println!(
+            "ok: queue_close failed {}/{} tickets typed, pipeline Failed, none hung",
+            failures.len(),
+            n_tiles
+        );
+    } else if let Some((stage, tile)) = panic_at {
+        assert_eq!(
+            failures.len(),
+            1,
+            "exactly the afflicted ticket fails (got {failures:?})"
+        );
+        let (i, f) = &failures[0];
+        assert_eq!(*i as u64, tile, "tile ordinal is deterministic: {f}");
+        assert_eq!(f.stage_index, Some(stage), "{f}");
+        assert!(matches!(&f.cause, FailureCause::Panic(m) if m.contains("injected fault")), "{f}");
+        // Supervised restart: the pipeline returns to Healthy.
+        let t0 = std::time::Instant::now();
+        while !session.health().is_healthy() {
+            if t0.elapsed() > Duration::from_secs(10) {
+                eprintln!("FAIL: health stuck at {:?}", session.health());
+                std::process::exit(2);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        println!("ok: panic at stage {stage} tile {tile} failed 1/{n_tiles} tickets, recovered");
+    } else {
+        assert!(failures.is_empty(), "fault-free run must not fail: {failures:?}");
+        println!("ok: {n_tiles}/{n_tiles} tickets completed fault-free");
+    }
+    session.shutdown();
+    Ok(())
+}
+
+/// Drive two training steps so `nan:loss:step=0/1` and `nan:grad` specs
+/// have a surface to strike.
+fn run_training(expect: &[FaultSpec]) -> anyhow::Result<()> {
+    let nan_step = expect.iter().find_map(|s| match s {
+        FaultSpec::NanLoss { step } | FaultSpec::NanGrad { step } => Some(*step),
+        _ => None,
+    });
+    let Some(nan_step) = nan_step else { return Ok(()) };
+    let g = kitsune::apps::nerf::training(&kitsune::apps::nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    });
+    let session = Session::builder().graph(g).tile_rows(16).build()?;
+    let mut trainer = session.trainer()?;
+    let batch = session.make_train_batch(7)?;
+    for step in 0..=nan_step + 1 {
+        let stats = trainer.step(&batch)?;
+        if step == nan_step {
+            assert!(
+                matches!(stats.outcome, StepOutcome::Skipped { .. }),
+                "step {step} must be skipped by the non-finite guard: {:?}",
+                stats.outcome
+            );
+        } else {
+            assert_eq!(stats.outcome, StepOutcome::Applied, "step {step}");
+            assert!(stats.loss.is_finite());
+        }
+    }
+    println!("ok: training skipped step {nan_step}, neighbors applied");
+    session.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let expect = expected_specs();
+    match std::env::var("KITSUNE_FAULT") {
+        Ok(raw) => println!("fault_demo: KITSUNE_FAULT={raw:?} -> {expect:?}"),
+        Err(_) => println!("fault_demo: no fault armed (clean smoke run)"),
+    }
+    run_inference(&expect)?;
+    run_training(&expect)?;
+    println!("fault_demo: PASS");
+    Ok(())
+}

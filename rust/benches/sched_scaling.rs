@@ -219,10 +219,12 @@ fn main() -> anyhow::Result<()> {
     for &w in &counts {
         let s = Scheduler::with_workers(w);
         let svc = sched::with_scheduler(&s, || {
-            PipelineService::start(Arc::clone(&store), &low.pipeline, vec![
-                low.tile_rows,
-                low.in_dim,
-            ])
+            PipelineService::start(
+                Arc::clone(&store),
+                &low.pipeline,
+                vec![low.tile_rows, low.in_dim],
+                Arc::new(kitsune::fault::FaultPlan::new()),
+            )
         })?;
         svc.submit(make_tiles(tiles_per_batch, 999, low.tile_rows, low.in_dim))?.wait()?;
         let t0 = Instant::now();

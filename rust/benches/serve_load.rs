@@ -9,6 +9,7 @@
 //! Run: `cargo bench --bench serve_load` (`BENCH_SMOKE=1` for CI).
 
 use kitsune::bench::{artifact_root, smoke};
+use kitsune::fault::FaultPlan;
 use kitsune::serve::{BatchPolicy, ServeConfig, ServeError, Server};
 use kitsune::session::{nerf_trunk_graph, Session};
 use std::fmt::Write as _;
@@ -27,6 +28,44 @@ struct Point {
     p95_ms: f64,
     p99_ms: f64,
     shed_rate: f64,
+}
+
+/// Supervision-overhead probe: the same pipeline workload with (a) the
+/// default empty fault plan (production hot path — one branch per tile)
+/// and (b) an *armed but never-matching* plan, which pays the full spec
+/// scan on every tile. Returns (clean tiles/s, armed tiles/s, overhead
+/// fraction). The robustness contract is that (a) costs < 2% vs the
+/// pre-supervision pipeline, for which (b) is the conservative bound —
+/// it does strictly more work per tile than (a).
+fn fault_overhead(smoke: bool) -> anyhow::Result<(f64, f64, f64)> {
+    let build = |plan: Option<FaultPlan>| -> anyhow::Result<Session> {
+        let mut b = Session::builder()
+            .graph(nerf_trunk_graph(512, 60, 64, 3))
+            .tile_rows(64)
+            .workers(2);
+        if let Some(p) = plan {
+            b = b.fault_plan(p);
+        }
+        b.build()
+    };
+    let reps = if smoke { 4 } else { 16 };
+    let measure = |session: &Session| -> anyhow::Result<f64> {
+        session.run(session.make_tiles(4, 1)?)?; // prime the kernels
+        let tiles = session.make_tiles(32, 2)?;
+        let t0 = Instant::now();
+        let mut n = 0u64;
+        for _ in 0..reps {
+            n += session.run(tiles.clone())?.outputs.len() as u64;
+        }
+        Ok(n as f64 / t0.elapsed().as_secs_f64().max(1e-12))
+    };
+    let clean = build(None)?;
+    let clean_tps = measure(&clean)?;
+    clean.shutdown();
+    let armed = build(Some(FaultPlan::new().panic_at(usize::MAX, u64::MAX)))?;
+    let armed_tps = measure(&armed)?;
+    armed.shutdown();
+    Ok((clean_tps, armed_tps, clean_tps / armed_tps.max(1e-12) - 1.0))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -60,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                 batch: BatchPolicy { max_tiles: 16, max_delay: Duration::from_micros(500) },
                 queue_depth: 64,
                 default_deadline: None,
+                max_retries: 1,
             },
         );
         let stop = AtomicBool::new(false);
@@ -158,6 +198,14 @@ fn main() -> anyhow::Result<()> {
         println!("  saturation knee at {knee_clients} clients");
     }
 
+    // Fault-injection harness overhead on the no-fault path.
+    let (clean_tps, armed_tps, overhead) = fault_overhead(smoke)?;
+    println!(
+        "  fault harness overhead: clean {clean_tps:.0} tiles/s vs armed {armed_tps:.0} \
+         tiles/s ({:+.2}%)",
+        overhead * 100.0
+    );
+
     // ---- BENCH_serve.json ---------------------------------------------
     let root = artifact_root();
     let mut json = String::from("{\n");
@@ -186,6 +234,11 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"fault_overhead\": {{\"clean_tiles_per_sec\": {clean_tps:.2}, \
+         \"armed_tiles_per_sec\": {armed_tps:.2}, \"overhead_frac\": {overhead:.4}}},"
+    );
     let _ = writeln!(json, "  \"knee_clients\": {knee_clients}");
     json.push_str("}\n");
     let out_path = root.join("BENCH_serve.json");

@@ -124,6 +124,7 @@ fn main() -> anyhow::Result<()> {
         Arc::clone(&store),
         &low.pipeline,
         vec![low.tile_rows, low.in_dim],
+        Arc::new(kitsune::fault::FaultPlan::new()),
     )?;
     svc.submit(make_tiles(tiles_per_batch, 999, low.tile_rows, low.in_dim))?.wait()?;
     let t0 = Instant::now();

@@ -204,6 +204,7 @@ pub fn serve(args: &[&str]) -> Result<()> {
             },
             queue_depth,
             default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            ..ServeConfig::default()
         },
     );
     let threads_before = primary.threads_spawned();

@@ -231,15 +231,18 @@ pub fn run_serial(
     let start = Instant::now();
     let n_tiles = inputs.len();
     let mut outputs = Vec::with_capacity(n_tiles);
-    for t in inputs {
+    for (seq, t) in inputs.into_iter().enumerate() {
         let mut cur = t;
-        for stage in &pipeline.stages {
-            let outs = {
+        for (si, stage) in pipeline.stages.iter().enumerate() {
+            // Same supervision contract as the pipeline pumps: a stage
+            // panic surfaces as a typed StageFailure, not an unwind.
+            let outs = crate::fault::catch_stage(&stage.entry, Some(si), Some(seq as u64), || {
                 let mut args: Vec<&Tensor> = Vec::with_capacity(1 + stage.weights.len());
                 args.push(&cur);
                 args.extend(stage.weights.iter());
-                store.run_f32_ref(&stage.entry, &args)?
-            };
+                store.run_f32_ref(&stage.entry, &args)
+            })
+            .map_err(|f| f.into_error())?;
             cur = outs.into_iter().next().ok_or_else(|| anyhow!("no output"))?;
         }
         outputs.push(cur);

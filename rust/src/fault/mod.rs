@@ -1,0 +1,619 @@
+//! Fault tolerance for long-lived spatial pipelines: typed stage
+//! failures, poison-tile propagation, pipeline health, and a
+//! deterministic fault-injection harness.
+//!
+//! Kitsune's persistent pipelines turn one bad kernel launch into a
+//! poisoned *resident* structure: a panicking stage used to unwind into
+//! the scheduler, strand the in-flight table, and wedge every request
+//! queued behind it. This module makes failure a first-class value
+//! instead:
+//!
+//! * [`StageFailure`] — the one typed failure record produced everywhere
+//!   a stage program runs (session pumps, DAG training pumps, serial
+//!   oracles, fork-join GEMM panels). Built by [`catch_stage`], which
+//!   fences every stage execution with `catch_unwind`.
+//! * [`Envelope`] — the item type flowing through
+//!   [`crate::queue::RingQueue`] edges: `Ok(tile)` or
+//!   `Poison(StageFailure)`. Downstream stages forward poison without
+//!   computing, so exactly the afflicted ticket/step fails while
+//!   unrelated in-flight tiles complete — the pipeline degrades
+//!   per-tile, not per-process.
+//! * [`Health`] / [`HealthState`] — the `Healthy → Degraded → Failed`
+//!   state machine a supervised pipeline publishes; the serving tier
+//!   consults it to retry or shed admitted requests.
+//! * [`RestartPolicy`] — bounded stage-restart budget with exponential
+//!   backoff, used by the session supervisor when it respawns a failed
+//!   pump.
+//! * [`FaultPlan`] — the deterministic injection harness behind the
+//!   `KITSUNE_FAULT` environment knob (grammar below) and the
+//!   programmatic [`crate::session::SessionBuilder::fault_plan`] hook.
+//!   Every armed fault fires exactly once, at a fixed stage/tile/step,
+//!   so chaos tests are reproducible in CI rather than flaky.
+//!
+//! # `KITSUNE_FAULT` grammar
+//!
+//! Comma- or semicolon-separated specs, parsed once per process with
+//! the same warn-once policy as the `KITSUNE_*` scheduler knobs
+//! (see [`crate::sched::env_usize`]):
+//!
+//! ```text
+//! panic:stage=2:tile=7     # stage 2's pump panics on its 8th tile (0-based)
+//! nan:loss:step=3          # training step 3 folds a NaN loss
+//! nan:grad:step=3          # training step 3 produces a NaN gradient
+//! queue_close:edge=1       # pipeline edge queue 1 is closed at startup
+//! ```
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Why a stage execution failed. All payloads are pre-rendered strings
+/// so the whole failure record stays `Clone + Eq` and can cross queue
+/// edges, ticket tables and the `anyhow` downcast boundary untouched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureCause {
+    /// The stage program panicked; payload is the panic message.
+    Panic(String),
+    /// The stage program returned a kernel/runtime error.
+    Kernel(String),
+    /// The stage produced a non-finite value (NaN/Inf loss or gradient).
+    NonFinite {
+        /// What was non-finite, e.g. `"loss"` or `"grad mlp/w0"`.
+        what: String,
+    },
+    /// A queue edge the stage depends on closed mid-flight (shutdown or
+    /// a torn-down neighbor).
+    QueueClosed,
+}
+
+/// A typed record of one stage failure: which stage died, on which tile
+/// (when known), and why. This is what poison tiles carry, what tickets
+/// and training steps resolve with (via
+/// [`crate::runtime::RuntimeError::StageFailed`]), and what the health
+/// machine logs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageFailure {
+    /// Artifact entry / stage name (e.g. `"nerf_trunk_stage1_fwd"`).
+    pub stage: String,
+    /// Position in the pipeline, when the stage knows it.
+    pub stage_index: Option<usize>,
+    /// Per-stage tile sequence number the failure struck at, when known.
+    pub tile_seq: Option<u64>,
+    pub cause: FailureCause,
+}
+
+impl StageFailure {
+    pub fn new(stage: impl Into<String>, cause: FailureCause) -> Self {
+        StageFailure { stage: stage.into(), stage_index: None, tile_seq: None, cause }
+    }
+
+    /// Tag the failure with its pipeline stage index.
+    pub fn at_index(mut self, si: usize) -> Self {
+        self.stage_index = Some(si);
+        self
+    }
+
+    /// Tag the failure with the per-stage tile sequence it struck at.
+    pub fn at_tile(mut self, seq: u64) -> Self {
+        self.tile_seq = Some(seq);
+        self
+    }
+
+    /// A shutdown/teardown failure: the queue edge under `stage` closed
+    /// before the tile could be delivered.
+    pub fn closed(stage: impl Into<String>) -> Self {
+        StageFailure::new(stage, FailureCause::QueueClosed)
+    }
+
+    /// Wrap into the crate error type (downcastable to
+    /// [`crate::runtime::RuntimeError::StageFailed`]).
+    pub fn into_error(self) -> anyhow::Error {
+        crate::runtime::RuntimeError::StageFailed(self).into()
+    }
+}
+
+impl std::fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stage '{}'", self.stage)?;
+        if let Some(si) = self.stage_index {
+            write!(f, " (index {si})")?;
+        }
+        if let Some(seq) = self.tile_seq {
+            write!(f, " at tile {seq}")?;
+        }
+        match &self.cause {
+            FailureCause::Panic(msg) => write!(f, " panicked: {msg}"),
+            FailureCause::Kernel(msg) => write!(f, " failed: {msg}"),
+            FailureCause::NonFinite { what } => write!(f, " produced non-finite {what}"),
+            // Keep "shut down" in this rendering: callers assert on it
+            // to distinguish orderly teardown from stage faults.
+            FailureCause::QueueClosed => write!(f, ": pipeline shut down mid-flight"),
+        }
+    }
+}
+
+impl std::error::Error for StageFailure {}
+
+/// Render a panic payload (from `catch_unwind`) as a string. `panic!`
+/// with a format string yields `String`; `panic!("literal")` yields
+/// `&'static str`; anything else is opaque.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one stage program execution inside a panic fence. Panics become
+/// [`FailureCause::Panic`], `Err` returns become [`FailureCause::Kernel`]
+/// — either way the caller gets a typed [`StageFailure`] instead of an
+/// unwind into the scheduler.
+///
+/// `AssertUnwindSafe` is sound here because every caller either owns its
+/// inputs or re-reads shared state (weights, artifact store) fresh on
+/// the next tile — a half-updated local buffer dies with the closure.
+pub fn catch_stage<T>(
+    stage: &str,
+    stage_index: Option<usize>,
+    tile_seq: Option<u64>,
+    f: impl FnOnce() -> anyhow::Result<T>,
+) -> Result<T, StageFailure> {
+    let fail = |cause| StageFailure { stage: stage.to_string(), stage_index, tile_seq, cause };
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(fail(FailureCause::Kernel(format!("{e:#}")))),
+        Err(payload) => Err(fail(FailureCause::Panic(panic_message(payload.as_ref())))),
+    }
+}
+
+/// The item type on every supervised queue edge: a live tile, or the
+/// failure that consumed it. Poison keeps the edge's sequence space
+/// dense — multicast and skip edges forward it like any other item, so
+/// seq-aligned consumers never desynchronize around a failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Envelope<T> {
+    Ok(T),
+    Poison(StageFailure),
+}
+
+impl<T> Envelope<T> {
+    pub fn is_poison(&self) -> bool {
+        matches!(self, Envelope::Poison(_))
+    }
+}
+
+/// Pipeline health as published by a supervised service.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Health {
+    /// All stages live.
+    Healthy,
+    /// `stage` failed and is being restarted; in-flight work on it fails
+    /// typed, new work queues behind the restart.
+    Degraded { stage: String },
+    /// `stage` exhausted its restart budget (or a structural edge died);
+    /// the pipeline completes what it can and fails the rest. Terminal.
+    Failed { stage: String },
+}
+
+impl Health {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, Health::Healthy)
+    }
+}
+
+struct HealthInner {
+    health: Health,
+    restarts: u64,
+    failures: u64,
+}
+
+/// Shared, thread-safe holder for a pipeline's [`Health`], with restart
+/// and failure counters for observability. Transitions:
+/// `Healthy → Degraded` ([`HealthState::degrade`]), `Degraded → Healthy`
+/// ([`HealthState::restore`], counted as one restart), `* → Failed`
+/// ([`HealthState::fail`], terminal — later transitions are ignored).
+pub struct HealthState {
+    inner: Mutex<HealthInner>,
+}
+
+impl Default for HealthState {
+    fn default() -> Self {
+        HealthState {
+            inner: Mutex::new(HealthInner { health: Health::Healthy, restarts: 0, failures: 0 }),
+        }
+    }
+}
+
+impl HealthState {
+    pub fn snapshot(&self) -> Health {
+        self.inner.lock().unwrap().health.clone()
+    }
+
+    /// Record a stage failure: `Healthy`/`Degraded` become
+    /// `Degraded { stage }`; `Failed` is sticky.
+    pub fn degrade(&self, stage: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.failures += 1;
+        if !matches!(g.health, Health::Failed { .. }) {
+            g.health = Health::Degraded { stage: stage.to_string() };
+        }
+    }
+
+    /// A restarted stage came back: `Degraded → Healthy` (counted);
+    /// other states unchanged.
+    pub fn restore(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if matches!(g.health, Health::Degraded { .. }) {
+            g.health = Health::Healthy;
+            g.restarts += 1;
+        }
+    }
+
+    /// Terminal failure: the restart budget is spent or the pipeline
+    /// structure itself died.
+    pub fn fail(&self, stage: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if !matches!(g.health, Health::Failed { .. }) {
+            g.health = Health::Failed { stage: stage.to_string() };
+        }
+    }
+
+    /// Stage restarts completed over this pipeline's lifetime.
+    pub fn restarts(&self) -> u64 {
+        self.inner.lock().unwrap().restarts
+    }
+
+    /// Stage failures observed (including ones later recovered).
+    pub fn failures(&self) -> u64 {
+        self.inner.lock().unwrap().failures
+    }
+}
+
+/// Bounded-retry stage restart policy with exponential backoff.
+#[derive(Debug, Clone)]
+pub struct RestartPolicy {
+    /// Restarts allowed per stage before the pipeline goes `Failed`
+    /// (`KITSUNE_STAGE_RESTARTS`, default 2, min 1).
+    pub max_restarts: usize,
+    /// First-restart delay; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl RestartPolicy {
+    pub fn from_env() -> Self {
+        RestartPolicy {
+            max_restarts: crate::sched::env_usize("KITSUNE_STAGE_RESTARTS", 2, 64),
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+        }
+    }
+
+    /// Delay before restart `attempt` (0-based): `base * 2^attempt`,
+    /// capped at `max_backoff`.
+    pub fn backoff(&self, attempt: usize) -> Duration {
+        let mult = 1u32 << attempt.min(16) as u32;
+        self.base_backoff.saturating_mul(mult).min(self.max_backoff)
+    }
+}
+
+/// One deterministic fault to inject.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Panic inside stage `stage`'s program on its `tile`-th execution
+    /// (0-based, counted per stage).
+    Panic { stage: usize, tile: u64 },
+    /// Replace training step `step`'s folded loss with NaN (0-based).
+    NanLoss { step: u64 },
+    /// Corrupt the first gradient of training step `step` with NaN.
+    NanGrad { step: u64 },
+    /// Close pipeline edge queue `edge` at service startup.
+    QueueClose { edge: usize },
+}
+
+struct ArmedSpec {
+    spec: FaultSpec,
+    /// One-shot: flipped false by whichever execution matches first, so
+    /// a restarted stage does not re-trip the same fault.
+    armed: AtomicBool,
+}
+
+/// A set of armed [`FaultSpec`]s consulted at fixed points in the
+/// runtime (stage compute, loss fold, gradient fold, service startup).
+/// Each spec fires exactly once; an empty plan is free on the hot path
+/// (one branch on a plan that is almost always [`FaultPlan::is_empty`]).
+#[derive(Default)]
+pub struct FaultPlan {
+    specs: Vec<ArmedSpec>,
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.specs.iter().map(|a| &a.spec)).finish()
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn from_specs(specs: Vec<FaultSpec>) -> Self {
+        FaultPlan {
+            specs: specs
+                .into_iter()
+                .map(|spec| ArmedSpec { spec, armed: AtomicBool::new(true) })
+                .collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Builder: arm a stage panic.
+    pub fn panic_at(mut self, stage: usize, tile: u64) -> Self {
+        self.specs
+            .push(ArmedSpec { spec: FaultSpec::Panic { stage, tile }, armed: AtomicBool::new(true) });
+        self
+    }
+
+    /// Builder: arm a NaN loss at `step`.
+    pub fn nan_loss(mut self, step: u64) -> Self {
+        self.specs
+            .push(ArmedSpec { spec: FaultSpec::NanLoss { step }, armed: AtomicBool::new(true) });
+        self
+    }
+
+    /// Builder: arm a NaN gradient at `step`.
+    pub fn nan_grad(mut self, step: u64) -> Self {
+        self.specs
+            .push(ArmedSpec { spec: FaultSpec::NanGrad { step }, armed: AtomicBool::new(true) });
+        self
+    }
+
+    /// Builder: arm an edge-queue close at startup.
+    pub fn queue_close(mut self, edge: usize) -> Self {
+        self.specs
+            .push(ArmedSpec { spec: FaultSpec::QueueClose { edge }, armed: AtomicBool::new(true) });
+        self
+    }
+
+    fn take(&self, want: &FaultSpec) -> bool {
+        self.specs.iter().any(|a| {
+            a.spec == *want
+                && a.armed.compare_exchange(true, false, Ordering::AcqRel, Ordering::Relaxed).is_ok()
+        })
+    }
+
+    /// Consume an armed panic for (`stage`, `tile`), if any.
+    pub fn take_panic(&self, stage: usize, tile: u64) -> bool {
+        !self.is_empty() && self.take(&FaultSpec::Panic { stage, tile })
+    }
+
+    /// Panic if a panic fault is armed for this (stage, tile). The
+    /// message names the injection site so tests can assert on it.
+    pub fn maybe_panic(&self, stage: usize, tile: u64) {
+        if self.take_panic(stage, tile) {
+            panic!("injected fault: panic at stage {stage} tile {tile}");
+        }
+    }
+
+    /// Consume an armed NaN-loss for `step`, if any.
+    pub fn take_nan_loss(&self, step: u64) -> bool {
+        !self.is_empty() && self.take(&FaultSpec::NanLoss { step })
+    }
+
+    /// Consume an armed NaN-gradient for `step`, if any.
+    pub fn take_nan_grad(&self, step: u64) -> bool {
+        !self.is_empty() && self.take(&FaultSpec::NanGrad { step })
+    }
+
+    /// Consume every armed edge-close spec (called once at service
+    /// startup); returns the edge indices to close.
+    pub fn take_queue_closes(&self) -> Vec<usize> {
+        self.specs
+            .iter()
+            .filter_map(|a| match a.spec {
+                FaultSpec::QueueClose { edge }
+                    if a.armed
+                        .compare_exchange(true, false, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok() =>
+                {
+                    Some(edge)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Parse a `KITSUNE_FAULT` string (see module docs for the
+    /// grammar). Whole-string parse: one malformed spec rejects the
+    /// plan, so a typo cannot silently drop half a chaos scenario.
+    pub fn parse(raw: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for part in raw.split([',', ';']).map(str::trim).filter(|s| !s.is_empty()) {
+            let spec = parse_spec(part).ok_or_else(|| {
+                format!(
+                    "bad fault spec {part:?} (expected panic:stage=N:tile=M, \
+                     nan:loss:step=S, nan:grad:step=S, or queue_close:edge=K)"
+                )
+            })?;
+            specs.push(spec);
+        }
+        Ok(FaultPlan::from_specs(specs))
+    }
+
+    /// The process-wide plan from `KITSUNE_FAULT`, parsed once. Unset or
+    /// malformed (warns once, same policy as the scheduler's env knobs)
+    /// yields an empty plan.
+    pub fn from_env() -> Arc<FaultPlan> {
+        static PLAN: OnceLock<Arc<FaultPlan>> = OnceLock::new();
+        Arc::clone(PLAN.get_or_init(|| {
+            let raw = match std::env::var("KITSUNE_FAULT") {
+                Ok(raw) => raw,
+                Err(_) => return Arc::new(FaultPlan::default()),
+            };
+            match FaultPlan::parse(&raw) {
+                Ok(plan) => Arc::new(plan),
+                Err(msg) => {
+                    crate::sched::warn_env_once(
+                        "KITSUNE_FAULT",
+                        &format!(
+                            "kitsune: ignoring KITSUNE_FAULT={raw:?}: {msg}; \
+                             no faults will be injected"
+                        ),
+                    );
+                    Arc::new(FaultPlan::default())
+                }
+            }
+        }))
+    }
+}
+
+fn parse_kv(s: &str, key: &str) -> Option<u64> {
+    let (k, v) = s.split_once('=')?;
+    if k != key {
+        return None;
+    }
+    v.parse().ok()
+}
+
+fn parse_spec(s: &str) -> Option<FaultSpec> {
+    let fields: Vec<&str> = s.split(':').collect();
+    match fields.as_slice() {
+        ["panic", a, b] => Some(FaultSpec::Panic {
+            stage: parse_kv(a, "stage")? as usize,
+            tile: parse_kv(b, "tile")?,
+        }),
+        ["nan", "loss", a] => Some(FaultSpec::NanLoss { step: parse_kv(a, "step")? }),
+        ["nan", "grad", a] => Some(FaultSpec::NanGrad { step: parse_kv(a, "step")? }),
+        ["queue_close", a] => Some(FaultSpec::QueueClose { edge: parse_kv(a, "edge")? as usize }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan =
+            FaultPlan::parse("panic:stage=2:tile=7, nan:loss:step=3; nan:grad:step=0,queue_close:edge=1")
+                .unwrap();
+        assert!(plan.take_panic(2, 7));
+        assert!(plan.take_nan_loss(3));
+        assert!(plan.take_nan_grad(0));
+        assert_eq!(plan.take_queue_closes(), vec![1]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "panic:stage=2",          // missing tile
+            "panic:tile=7:stage=2",   // wrong field order
+            "nan:loss:step=x",        // non-numeric
+            "queue_close:1",          // missing key
+            "panik:stage=0:tile=0",   // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        // Empty string is a valid empty plan.
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let plan = FaultPlan::new().panic_at(1, 4).nan_loss(2);
+        assert!(!plan.take_panic(1, 3), "wrong tile does not fire");
+        assert!(!plan.take_panic(0, 4), "wrong stage does not fire");
+        assert!(plan.take_panic(1, 4));
+        assert!(!plan.take_panic(1, 4), "one-shot");
+        assert!(plan.take_nan_loss(2));
+        assert!(!plan.take_nan_loss(2));
+    }
+
+    #[test]
+    fn catch_stage_converts_panics_and_errors() {
+        let ok = catch_stage("s", Some(0), Some(1), || Ok(42));
+        assert_eq!(ok.unwrap(), 42);
+
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence the injected panic
+        let p = catch_stage::<()>("s", Some(2), Some(7), || panic!("kaboom {}", 9));
+        std::panic::set_hook(hook);
+        let f = p.unwrap_err();
+        assert_eq!(f.stage_index, Some(2));
+        assert_eq!(f.tile_seq, Some(7));
+        assert_eq!(f.cause, FailureCause::Panic("kaboom 9".into()));
+        assert!(f.to_string().contains("panicked: kaboom 9"), "{f}");
+
+        let k = catch_stage::<()>("s", None, None, || Err(anyhow::anyhow!("bad kernel")));
+        match k.unwrap_err().cause {
+            FailureCause::Kernel(msg) => assert!(msg.contains("bad kernel")),
+            other => panic!("expected Kernel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_closed_display_mentions_shutdown() {
+        // The session stress tests distinguish orderly teardown by this
+        // substring; keep it stable.
+        let f = StageFailure::closed("stage3").at_index(3);
+        assert!(f.to_string().contains("shut down"), "{f}");
+    }
+
+    #[test]
+    fn health_machine_transitions() {
+        let h = HealthState::default();
+        assert!(h.snapshot().is_healthy());
+        h.degrade("s1");
+        assert_eq!(h.snapshot(), Health::Degraded { stage: "s1".into() });
+        h.restore();
+        assert!(h.snapshot().is_healthy());
+        assert_eq!(h.restarts(), 1);
+        assert_eq!(h.failures(), 1);
+        // restore without degrade is a no-op
+        h.restore();
+        assert_eq!(h.restarts(), 1);
+        h.fail("s2");
+        assert_eq!(h.snapshot(), Health::Failed { stage: "s2".into() });
+        // Failed is terminal.
+        h.degrade("s3");
+        h.restore();
+        assert_eq!(h.snapshot(), Health::Failed { stage: "s2".into() });
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy {
+            max_restarts: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(1));
+        assert_eq!(p.backoff(1), Duration::from_millis(2));
+        assert_eq!(p.backoff(5), Duration::from_millis(32));
+        assert_eq!(p.backoff(6), Duration::from_millis(50), "capped");
+        assert_eq!(p.backoff(60), Duration::from_millis(50), "shift clamped");
+    }
+
+    #[test]
+    fn envelope_poison_round_trip() {
+        let e: Envelope<u32> = Envelope::Poison(StageFailure::new(
+            "s",
+            FailureCause::NonFinite { what: "loss".into() },
+        ));
+        assert!(e.is_poison());
+        let c = e.clone();
+        assert_eq!(e, c);
+        assert!(!Envelope::Ok(1u32).is_poison());
+    }
+}

@@ -21,6 +21,7 @@
 //! | Training on dataflow (§6.4, Figs 12/14: multicast + skip links) | [`train`] (DAG pipeline, gradient taps, optimizer, `Trainer`) |
 //! | §4 "keep every resource busy at once" on the host runtime | [`sched`] (one work-stealing pool under GEMM panels, stage pumps, DAG training) |
 //! | Many independent requests through one persistent pipeline | [`serve`] (continuous batching, EDF deadlines, multi-model residency, SLO stats) |
+//! | Failure as a first-class dataflow value | [`fault`] (typed `StageFailure`, poison tiles, health machine, supervised restart, deterministic injection) |
 //!
 //! [`session`] is the **single public entry point** for running anything:
 //! `Session::builder().app("nerf").build()?` compiles once, lowers the
@@ -49,6 +50,7 @@ pub mod compiler;
 pub mod exec;
 pub mod coordinator;
 pub mod sched;
+pub mod fault;
 pub mod runtime;
 pub mod session;
 pub mod serve;

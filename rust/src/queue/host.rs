@@ -466,7 +466,14 @@ impl<T> RingQueue<T> {
     /// thread, on both sides. See [`PushError`] for the
     /// concurrent-close caveat.
     pub fn close(&self) {
-        self.closed.store(true, Ordering::Release);
+        // SeqCst store: `park_on_*` does W(waiter count) → fence →
+        // R(closed) while close does W(closed) → fence (in notify_*) →
+        // R(waiter count). Keeping the closed store in the SeqCst total
+        // order makes the no-lost-wakeup Dekker argument hold on its
+        // own, without leaning on the waiter-mutex ordering — a parker
+        // that misses the flag is guaranteed to be seen (and fired) by
+        // the notify pass, even when close races the registration.
+        self.closed.store(true, Ordering::SeqCst);
         self.notify_item();
         self.notify_space();
     }

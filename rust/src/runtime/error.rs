@@ -20,6 +20,13 @@ pub enum RuntimeError {
     /// The manifest names an entry the active backend cannot execute
     /// (e.g. an arbitrary HLO program under the interpreter backend).
     UnsupportedEntry { name: String, backend: &'static str },
+    /// A pipeline stage died while this tile/step was in flight: the
+    /// payload records which stage, where, and why. Produced by the
+    /// supervised session/train pumps via [`crate::fault::catch_stage`];
+    /// callers that want to react to the taxonomy (panic vs kernel error
+    /// vs non-finite vs shutdown) downcast and match on
+    /// [`crate::fault::FailureCause`].
+    StageFailed(crate::fault::StageFailure),
     /// An SSA program read a register after its value was moved out
     /// (in-place consumption or output extraction). The interpreter's
     /// liveness pass makes this unreachable for well-formed programs, so
@@ -47,6 +54,7 @@ impl fmt::Display for RuntimeError {
                  build with `--features pjrt` (and the real xla crate) to execute \
                  arbitrary HLO entries"
             ),
+            RuntimeError::StageFailed(failure) => write!(f, "{failure}"),
             RuntimeError::DeadRegister { reg } => write!(
                 f,
                 "register {reg} was moved out of the value file before this read — \
@@ -68,6 +76,20 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("make artifacts"), "{s}");
         assert!(s.contains("artifacts"), "{s}");
+    }
+
+    #[test]
+    fn stage_failed_downcasts_and_displays() {
+        use crate::fault::{FailureCause, StageFailure};
+        let failure = StageFailure::new("stage2", FailureCause::Panic("boom".into()))
+            .at_index(2)
+            .at_tile(7);
+        let any = failure.clone().into_error();
+        match any.downcast_ref::<RuntimeError>() {
+            Some(RuntimeError::StageFailed(got)) => assert_eq!(*got, failure),
+            other => panic!("expected StageFailed, got {other:?}"),
+        }
+        assert!(any.to_string().contains("panicked: boom"), "{any}");
     }
 
     #[test]

@@ -996,7 +996,9 @@ fn matmul_opt(
             for (pi, panel) in out.chunks_mut(rows_per * n).enumerate() {
                 let i0 = pi * rows_per;
                 let rows = panel.len() / n;
-                scope.spawn(move || {
+                // Label each panel with its output-row range so a panic
+                // inside one names the dying panel at the join.
+                scope.spawn_labeled(format!("gemm panel rows {i0}..{}", i0 + rows), move || {
                     matmul_panel(
                         a_data,
                         b_data,

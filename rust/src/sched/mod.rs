@@ -86,16 +86,27 @@ thread_local! {
 /// Shared by `KITSUNE_WORKERS` here and the `KITSUNE_SERVE_*` knobs in
 /// [`crate::serve`].
 fn warn_bad_env_once(var: &str, raw: &str, fallback: usize) {
+    warn_env_once(
+        var,
+        &format!(
+            "kitsune: ignoring {var}={raw:?} (not a positive integer); \
+             falling back to {fallback}"
+        ),
+    );
+}
+
+/// Emit `msg` to stderr at most once per process for `var` — the shared
+/// warn-once policy behind every `KITSUNE_*` environment knob (worker
+/// counts here, the serve knobs, and the `KITSUNE_FAULT` injection spec
+/// in [`crate::fault`]).
+pub fn warn_env_once(var: &str, msg: &str) {
     static WARNED: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
     let mut warned = WARNED.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
     if warned.iter().any(|v| v == var) {
         return;
     }
     warned.push(var.to_string());
-    eprintln!(
-        "kitsune: ignoring {var}={raw:?} (not a positive integer); \
-         falling back to {fallback}"
-    );
+    eprintln!("{msg}");
 }
 
 /// Resolve one `usize` environment override against its raw string
@@ -329,7 +340,9 @@ pub fn with_scheduler<R>(sched: &Arc<Scheduler>, f: impl FnOnce() -> R) -> R {
 
 struct ScopeLatch {
     remaining: AtomicUsize,
-    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// First panic among the scope's tasks, tagged with the task's label
+    /// so the re-raise names *which* fork-join branch died.
+    panic: Mutex<Option<(String, Box<dyn Any + Send>)>>,
 }
 
 /// A fork-join scope over the pool: tasks spawned on it may borrow from
@@ -338,24 +351,40 @@ struct ScopeLatch {
 pub struct Scope<'env> {
     sched: Arc<Scheduler>,
     latch: Arc<ScopeLatch>,
+    /// Counter behind the default `task #N` labels of [`Scope::spawn`].
+    next_task: AtomicUsize,
     /// Invariant over `'env`, like `std::thread::Scope`.
     _env: PhantomData<&'env mut &'env ()>,
 }
 
 impl<'env> Scope<'env> {
     /// Spawn a task that may borrow from the scope's environment. Panics
-    /// inside the task are captured and re-raised from [`scope`].
+    /// inside the task are captured and re-raised from [`scope`], labeled
+    /// `task #N` in spawn order; use [`Scope::spawn_labeled`] to name the
+    /// task something meaningful (e.g. which GEMM panel it computes).
     pub fn spawn<F>(&self, f: F)
     where
         F: FnOnce() + Send + 'env,
     {
+        let n = self.next_task.fetch_add(1, Ordering::Relaxed);
+        self.spawn_labeled(format!("task #{n}"), f);
+    }
+
+    /// [`Scope::spawn`] with an explicit label, reported if the task
+    /// panics (aligned with [`crate::fault::StageFailure`] semantics: a
+    /// failure names the unit of work that died, not just the payload).
+    pub fn spawn_labeled<F>(&self, label: impl Into<String>, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let label = label.into();
         self.latch.remaining.fetch_add(1, Ordering::SeqCst);
         let latch = Arc::clone(&self.latch);
         let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
             if let Err(p) = catch_unwind(AssertUnwindSafe(f)) {
                 let mut slot = latch.panic.lock().unwrap();
                 if slot.is_none() {
-                    *slot = Some(p);
+                    *slot = Some((label, p));
                 }
             }
             latch.remaining.fetch_sub(1, Ordering::SeqCst);
@@ -397,6 +426,7 @@ where
     let s = Scope {
         sched: Arc::clone(sched),
         latch: Arc::clone(&latch),
+        next_task: AtomicUsize::new(0),
         _env: PhantomData,
     };
     let result = catch_unwind(AssertUnwindSafe(|| f(&s)));
@@ -429,8 +459,13 @@ where
     match result {
         Err(p) => resume_unwind(p),
         Ok(r) => {
-            if let Some(p) = task_panic {
-                resume_unwind(p);
+            if let Some((label, payload)) = task_panic {
+                // Re-raise with the dying task's label and original
+                // message as the payload, so callers (and the session
+                // pumps' `catch_stage` fences above us) see *which*
+                // fork-join branch died, not a bare payload.
+                let msg = crate::fault::panic_message(payload.as_ref());
+                panic!("sched::scope: {label} panicked: {msg}");
             }
             r
         }

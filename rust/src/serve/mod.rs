@@ -56,6 +56,7 @@ pub use registry::{session_resident_bytes, ModelRegistry};
 pub use stats::{LatencyHistogram, LatencySnapshot, ServeStats, StatsSnapshot};
 
 use admission::{AdmitError, AdmissionQueue, Pending, PopOutcome};
+use crate::fault::Health;
 use crate::runtime::Tensor;
 use crate::sched::env_usize;
 use crate::session::{Session, Ticket};
@@ -181,6 +182,10 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Deadline applied to requests that do not carry one (None: no SLO).
     pub default_deadline: Option<Duration>,
+    /// Failed attempts a request may retry (`KITSUNE_SERVE_RETRIES`).
+    /// Retries re-enter the admission queue (EDF order) and stay
+    /// deadline-aware: a blown deadline sheds instead of retrying.
+    pub max_retries: usize,
 }
 
 impl Default for ServeConfig {
@@ -194,6 +199,7 @@ impl Default for ServeConfig {
             },
             queue_depth: env_usize("KITSUNE_SERVE_QUEUE_DEPTH", 256, 1 << 20),
             default_deadline: None,
+            max_retries: env_usize("KITSUNE_SERVE_RETRIES", 1, 16),
         }
     }
 }
@@ -204,6 +210,8 @@ struct RequestPayload {
     tiles: Vec<Tensor>,
     handle: Arc<ResponseShared>,
     enqueued: Instant,
+    /// Failed attempts this request may still retry.
+    retries_left: usize,
 }
 
 type Req = Pending<RequestPayload>;
@@ -256,9 +264,22 @@ impl Shared {
 /// One request dispatched into a pipeline, awaiting its ticket.
 struct InFlight {
     ticket: Ticket,
+    ctx: ReqCtx,
+}
+
+/// Everything needed to resolve (or retry) a dispatched request once
+/// its ticket settles.
+struct ReqCtx {
     handle: Arc<ResponseShared>,
     n_tiles: usize,
     enqueued: Instant,
+    model: String,
+    deadline: Option<Instant>,
+    /// Cloned input tiles kept for a retry — populated only while the
+    /// target pipeline is Degraded (the no-fault fast path never pays
+    /// for the clone).
+    retry_tiles: Option<Vec<Tensor>>,
+    retries_left: usize,
 }
 
 /// The serving tier: admission queue + dispatcher over a
@@ -381,6 +402,7 @@ impl Server {
                 tiles,
                 handle: Arc::clone(&handle),
                 enqueued: now,
+                retries_left: shared.cfg.max_retries,
             },
         };
         loop {
@@ -546,7 +568,8 @@ fn dispatch_round(shared: &Arc<Shared>, round: &mut Vec<Req>, inflight: &mut Vec
         {
             reap_blocking(shared, inflight, Duration::from_micros(500));
         }
-        let RequestPayload { model, tiles, handle, enqueued } = req.payload;
+        let deadline = req.deadline;
+        let RequestPayload { model, tiles, handle, enqueued, retries_left } = req.payload;
         let n_tiles = tiles.len();
         let session = match shared.registry.get(&model) {
             Ok(s) => s,
@@ -556,17 +579,112 @@ fn dispatch_round(shared: &Arc<Shared>, round: &mut Vec<Req>, inflight: &mut Vec
                 continue;
             }
         };
+        // Supervision gate: a Failed pipeline cannot serve — count the
+        // failed attempt synchronously (its tiles never enter the
+        // pipeline, so they stay available for the retry) and let the
+        // retry/shed policy resolve the request.
+        if let Health::Failed { stage } = session.health() {
+            let payload = RequestPayload { model, tiles, handle, enqueued, retries_left };
+            retry_or_resolve(
+                shared,
+                payload,
+                deadline,
+                ServeError::Stage(format!("pipeline failed at stage `{stage}`")),
+            );
+            continue;
+        }
+        // Keep a clone for retry only while supervision has flagged the
+        // pipeline; the healthy fast path never pays for it.
+        let retry_tiles = if retries_left > 0 && !session.health().is_healthy() {
+            Some(tiles.clone())
+        } else {
+            None
+        };
         match session.submit(tiles) {
             Ok(ticket) => {
                 shared.inflight_tiles.fetch_add(n_tiles, Ordering::SeqCst);
-                inflight.push(InFlight { ticket, handle, n_tiles, enqueued });
+                inflight.push(InFlight {
+                    ticket,
+                    ctx: ReqCtx {
+                        handle,
+                        n_tiles,
+                        enqueued,
+                        model,
+                        deadline,
+                        retry_tiles,
+                        retries_left,
+                    },
+                });
             }
             Err(e) => {
-                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
-                handle.resolve(Err(ServeError::Stage(format!("{e:#}"))));
+                // `submit` consumed the tiles; a retry is possible only
+                // from the Degraded-path clone.
+                let payload = RequestPayload {
+                    model,
+                    tiles: retry_tiles.unwrap_or_default(),
+                    handle,
+                    enqueued,
+                    retries_left,
+                };
+                retry_or_resolve(shared, payload, deadline, ServeError::Stage(format!("{e:#}")));
             }
         }
     }
+}
+
+/// A dispatched attempt failed. Shed on a blown deadline, re-enqueue
+/// for another attempt while the retry budget and input tiles allow,
+/// resolve failed otherwise. Retries ride the same admission queue, so
+/// EDF ordering still holds against new arrivals; `admitted` is not
+/// re-counted — every admitted request resolves exactly once.
+fn retry_or_resolve(
+    shared: &Shared,
+    mut payload: RequestPayload,
+    deadline: Option<Instant>,
+    err: ServeError,
+) {
+    let now = Instant::now();
+    if let Some(d) = deadline {
+        if now >= d {
+            shared.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            payload.handle.resolve(Err(ServeError::DeadlineExceeded {
+                deadline_ms: d.saturating_duration_since(payload.enqueued).as_millis() as u64,
+            }));
+            return;
+        }
+    }
+    if payload.retries_left > 0
+        && !payload.tiles.is_empty()
+        && !shared.closing.load(Ordering::SeqCst)
+    {
+        payload.retries_left -= 1;
+        let n_tiles = payload.tiles.len();
+        let req = Req {
+            seq: shared.seq.fetch_add(1, Ordering::SeqCst),
+            deadline,
+            tiles: n_tiles,
+            payload,
+        };
+        match shared.queue.try_push(req) {
+            Ok(()) => {
+                shared.stats.retried.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(AdmitError::Closed(r)) => {
+                shed_shutdown(shared, r);
+                return;
+            }
+            Err(AdmitError::Full(r)) => {
+                // Queue saturated — the dispatcher must not block on
+                // itself; resolve with the attempt's failure.
+                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                r.payload.handle.resolve(Err(err));
+                return;
+            }
+        }
+    }
+    shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+    payload.handle.resolve(Err(err));
 }
 
 /// Reap every completed in-flight ticket (non-blocking).
@@ -576,10 +694,10 @@ fn reap(shared: &Arc<Shared>, inflight: &mut Vec<InFlight>) {
     }
     let mut still = Vec::with_capacity(inflight.len());
     for f in inflight.drain(..) {
-        let InFlight { ticket, handle, n_tiles, enqueued } = f;
+        let InFlight { ticket, ctx } = f;
         match ticket.try_wait() {
-            Ok(result) => finish(shared, handle, n_tiles, enqueued, result),
-            Err(ticket) => still.push(InFlight { ticket, handle, n_tiles, enqueued }),
+            Ok(result) => finish(shared, ctx, result),
+            Err(ticket) => still.push(InFlight { ticket, ctx }),
         }
     }
     *inflight = still;
@@ -592,23 +710,19 @@ fn reap_blocking(shared: &Arc<Shared>, inflight: &mut Vec<InFlight>, timeout: Du
     if inflight.is_empty() {
         return;
     }
-    let InFlight { ticket, handle, n_tiles, enqueued } = inflight.remove(0);
+    let InFlight { ticket, ctx } = inflight.remove(0);
     match ticket.wait_timeout(timeout) {
-        Ok(result) => finish(shared, handle, n_tiles, enqueued, result),
-        Err(ticket) => inflight.insert(0, InFlight { ticket, handle, n_tiles, enqueued }),
+        Ok(result) => finish(shared, ctx, result),
+        Err(ticket) => inflight.insert(0, InFlight { ticket, ctx }),
     }
     reap(shared, inflight);
 }
 
 /// Deliver one resolved ticket to its handle, updating counters, the
-/// latency histogram, and the service-time estimate.
-fn finish(
-    shared: &Arc<Shared>,
-    handle: Arc<ResponseShared>,
-    n_tiles: usize,
-    enqueued: Instant,
-    result: anyhow::Result<crate::session::BatchResult>,
-) {
+/// latency histogram, and the service-time estimate. A failed ticket
+/// goes through the deadline-aware retry/shed policy.
+fn finish(shared: &Arc<Shared>, ctx: ReqCtx, result: anyhow::Result<crate::session::BatchResult>) {
+    let ReqCtx { handle, n_tiles, enqueued, model, deadline, retry_tiles, retries_left } = ctx;
     shared.inflight_tiles.fetch_sub(n_tiles, Ordering::SeqCst);
     match result {
         Ok(batch) => {
@@ -619,8 +733,14 @@ fn finish(
             handle.resolve(Ok(ServeResult { outputs: batch.outputs, latency }));
         }
         Err(e) => {
-            shared.stats.failed.fetch_add(1, Ordering::Relaxed);
-            handle.resolve(Err(ServeError::Stage(format!("{e:#}"))));
+            let payload = RequestPayload {
+                model,
+                tiles: retry_tiles.unwrap_or_default(),
+                handle,
+                enqueued,
+                retries_left,
+            };
+            retry_or_resolve(shared, payload, deadline, ServeError::Stage(format!("{e:#}")));
         }
     }
 }

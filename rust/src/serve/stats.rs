@@ -136,6 +136,10 @@ pub struct ServeStats {
     pub completed: AtomicU64,
     /// Requests whose stage kernel failed.
     pub failed: AtomicU64,
+    /// Failed attempts re-enqueued for another try (supervision-aware
+    /// retry). A retried request is still pending, so this counter is
+    /// *not* part of the admitted == resolved invariant.
+    pub retried: AtomicU64,
     /// End-to-end latency (enqueue → delivery) of completed requests.
     pub latency: LatencyHistogram,
 }
@@ -151,6 +155,9 @@ pub struct StatsSnapshot {
     pub shed_shutdown: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Failed attempts re-enqueued for another try (not a terminal
+    /// state — excluded from [`StatsSnapshot::resolved`]).
+    pub retried: u64,
     /// Requests queued for dispatch right now.
     pub queue_depth: usize,
     /// Tiles in flight through pipelines right now.
@@ -190,6 +197,7 @@ impl ServeStats {
             shed_shutdown: self.shed_shutdown.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
             queue_depth,
             in_flight_tiles,
             est_tile_us,

@@ -47,6 +47,7 @@ pub use service::{BatchResult, PipelineService, Ticket};
 
 use crate::apps;
 use crate::compiler::{compile, CompiledApp, SelectOptions};
+use crate::fault::{FaultPlan, Health};
 use crate::coordinator::{run_serial, PipelineRun, SpatialPipeline, StageMetrics};
 use crate::graph::{EwKind, Graph, GraphBuilder, GraphKind};
 use crate::report::{evaluate_compiled, AppEval};
@@ -133,6 +134,7 @@ pub struct SessionBuilder {
     seed: u64,
     train_workers: usize,
     warm: bool,
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for SessionBuilder {
@@ -151,6 +153,7 @@ impl Default for SessionBuilder {
             seed: 0xC0FFEE,
             train_workers: 1,
             warm: true,
+            fault: None,
         }
     }
 }
@@ -247,6 +250,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Install a programmatic fault-injection plan for this session's
+    /// pipelines (see [`crate::fault::FaultPlan`]). Defaults to the
+    /// process-wide plan parsed from `KITSUNE_FAULT` (empty when unset),
+    /// so production sessions pay one branch per tile on an empty plan.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(Arc::new(plan));
+        self
+    }
+
     /// Compile once, lower the compiled plan onto the coordinator, and
     /// (when the graph streams and the session is warm) stand up the
     /// persistent stage worker pools.
@@ -265,7 +277,9 @@ impl SessionBuilder {
             seed,
             train_workers,
             warm,
+            fault,
         } = self;
+        let fault_plan = fault.unwrap_or_else(FaultPlan::from_env);
 
         let (name, graph) = match (graph, app) {
             (Some(g), _) => (g.name.clone(), Some(g)),
@@ -319,7 +333,7 @@ impl SessionBuilder {
                     Ok(plan) => {
                         let plan = Arc::new(plan);
                         let svc = if warm {
-                            Some(TrainService::start(Arc::clone(&plan))?)
+                            Some(TrainService::start(Arc::clone(&plan), Arc::clone(&fault_plan))?)
                         } else {
                             None
                         };
@@ -360,6 +374,7 @@ impl SessionBuilder {
                                 Arc::clone(&store),
                                 &pipeline,
                                 vec![tile_rows, in_dim],
+                                Arc::clone(&fault_plan),
                             )?);
                         }
                         lowered = Some(LoweredState {
@@ -552,6 +567,22 @@ impl Session {
     /// Per-stage metrics accumulated since build (warm sessions only).
     pub fn metrics(&self) -> Vec<StageMetrics> {
         self.service.as_ref().map(PipelineService::metrics).unwrap_or_default()
+    }
+
+    /// Current health of the warm pipeline (inference service or
+    /// training executor): `Degraded` while a failed stage is being
+    /// restarted, `Failed` once a restart budget is exhausted or a
+    /// structural edge died. Cold / simulation-only sessions report
+    /// `Healthy`. The serve tier consults this to retry or shed admitted
+    /// requests.
+    pub fn health(&self) -> Health {
+        if let Some(svc) = &self.service {
+            return svc.health();
+        }
+        if let Some(TrainState { service: Some(svc), .. }) = &self.train {
+            return svc.health();
+        }
+        Health::Healthy
     }
 
     /// Tiles currently in flight through the warm inference pipeline

@@ -19,8 +19,32 @@
 //! pump when the edge changes state. Stage compute and the
 //! interpreter's GEMM row panels therefore share the same cores under
 //! one scheduler, which is the whole point of the unified runtime.
+//!
+//! # Failure semantics
+//!
+//! Every stage execution runs inside [`crate::fault::catch_stage`]:
+//! panics and kernel errors become a typed
+//! [`StageFailure`] instead of unwinding into the scheduler. The failed
+//! tile is forwarded downstream as [`Envelope::Poison`] — the edge's
+//! sequence space stays dense, downstream stages skip the compute, and
+//! the sink resolves exactly the afflicted slot of the owning ticket
+//! with [`crate::runtime::RuntimeError::StageFailed`]. Unrelated
+//! in-flight tiles complete normally: the pipeline degrades per-tile,
+//! not per-process.
+//!
+//! The failing pump incarnation retires and the service *supervises*
+//! it: the pipeline's [`HealthState`] transitions to `Degraded`, and a
+//! replacement pump (same stage state, weights re-read from the shared
+//! artifact binding on every tile) is respawned after an exponential
+//! backoff, up to [`RestartPolicy::max_restarts`] per stage. A stage
+//! that exhausts its budget turns the pipeline `Failed`: the dead pump
+//! keeps draining its edge but converts every tile to poison, so every
+//! ticket still resolves — typed, never hung.
 
 use crate::coordinator::{SpatialPipeline, StageMetrics};
+use crate::fault::{
+    catch_stage, Envelope, FaultPlan, Health, HealthState, RestartPolicy, StageFailure,
+};
 use crate::graph::ResourceClass;
 use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::{ArtifactStore, Tensor};
@@ -30,8 +54,9 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One tile in flight: owning ticket, index within the batch, payload.
-type Tile = (Arc<TicketInner>, usize, Tensor);
+/// One tile in flight: owning ticket, index within the batch, payload —
+/// a live tensor or the poison record of the failure that consumed it.
+type Tile = (Arc<TicketInner>, usize, Envelope<Tensor>);
 
 /// Result of one completed batch.
 #[derive(Debug, Clone)]
@@ -49,8 +74,8 @@ impl BatchResult {
 }
 
 /// In-flight table entry for one submitted batch: slots filled by the
-/// sink thread as tiles complete (in any order), a countdown of
-/// outstanding tiles, and the first error if a stage kernel failed.
+/// sink as tiles complete (in any order), a countdown of outstanding
+/// tiles, and the first typed failure if any tile was lost.
 struct TicketInner {
     state: Mutex<TicketState>,
     done: Condvar,
@@ -63,8 +88,12 @@ struct TicketInner {
 
 struct TicketState {
     outputs: Vec<Option<Tensor>>,
+    /// Per-slot terminal-event guard: a tile resolves (completes or
+    /// fails) exactly once, no matter which drain path delivers the
+    /// event — the invariant behind "`Ticket::wait` never hangs".
+    resolved: Vec<bool>,
     remaining: usize,
-    error: Option<String>,
+    error: Option<StageFailure>,
 }
 
 impl TicketInner {
@@ -73,6 +102,7 @@ impl TicketInner {
         TicketInner {
             state: Mutex::new(TicketState {
                 outputs: vec![None; n],
+                resolved: vec![false; n],
                 remaining: n,
                 error: None,
             }),
@@ -84,32 +114,33 @@ impl TicketInner {
     /// Sink: deliver the finished tile for slot `idx`.
     fn complete(&self, idx: usize, t: Tensor) {
         let mut s = self.state.lock().unwrap();
-        if s.outputs[idx].is_none() {
-            s.remaining -= 1;
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+        if s.resolved[idx] {
+            return;
         }
+        s.resolved[idx] = true;
         s.outputs[idx] = Some(t);
+        s.remaining -= 1;
+        self.depth.fetch_sub(1, Ordering::SeqCst);
         if s.remaining == 0 {
             self.done.notify_all();
         }
     }
 
-    /// Account `n` tiles as failed/abandoned, recording the first error.
-    fn fail_n(&self, n: usize, msg: String) {
+    /// Resolve slot `idx` as failed, recording the first failure.
+    fn fail_tile(&self, idx: usize, failure: StageFailure) {
         let mut s = self.state.lock().unwrap();
-        if s.error.is_none() {
-            s.error = Some(msg);
+        if s.resolved[idx] {
+            return;
         }
-        let dec = n.min(s.remaining);
-        s.remaining -= dec;
-        self.depth.fetch_sub(dec, Ordering::SeqCst);
+        s.resolved[idx] = true;
+        s.remaining -= 1;
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        if s.error.is_none() {
+            s.error = Some(failure);
+        }
         if s.remaining == 0 {
             self.done.notify_all();
         }
-    }
-
-    fn fail(&self, msg: String) {
-        self.fail_n(1, msg);
     }
 }
 
@@ -178,8 +209,8 @@ impl Ticket {
     }
 
     fn take_result(s: &mut TicketState, submitted: &Instant) -> Result<BatchResult> {
-        if let Some(e) = s.error.take() {
-            return Err(anyhow!(e));
+        if let Some(failure) = s.error.take() {
+            return Err(failure.into_error());
         }
         let outputs = s
             .outputs
@@ -233,6 +264,8 @@ pub struct PipelineService {
     /// Tiles submitted but not yet resolved (completed or failed) —
     /// the in-flight table depth, exposed for admission control.
     inflight: Arc<AtomicUsize>,
+    /// `Healthy → Degraded (restarting) → Failed` for the whole pipeline.
+    health: Arc<HealthState>,
 }
 
 impl PipelineService {
@@ -241,10 +274,16 @@ impl PipelineService {
     /// (see [`sched::current`]), plus one sink pump routing finished
     /// tiles back to their tickets. Tasks are created here — never on
     /// the submit path.
+    ///
+    /// `plan` is the fault-injection harness (usually
+    /// [`FaultPlan::from_env`] — empty unless `KITSUNE_FAULT` is set):
+    /// armed `queue_close` specs fire here, at startup; armed panics
+    /// fire inside the matching stage's compute fence.
     pub fn start(
         store: Arc<ArtifactStore>,
         pipeline: &SpatialPipeline,
         tile_dims: Vec<usize>,
+        plan: Arc<FaultPlan>,
     ) -> Result<PipelineService> {
         let n_stages = pipeline.stages.len();
         ensure!(n_stages > 0, "pipeline service needs at least one stage");
@@ -257,6 +296,17 @@ impl PipelineService {
         let queues: Vec<Arc<RingQueue<Tile>>> = (0..=n_stages)
             .map(|_| RingQueue::with_capacity(pipeline.queue_capacity))
             .collect();
+        let health = Arc::new(HealthState::default());
+        // Injected structural faults: tear an edge down before the first
+        // tile flows. Consumers of the edge retire at startup and the
+        // close cascades; producers fail their tiles typed at the push.
+        for e in plan.take_queue_closes() {
+            if e < queues.len() {
+                queues[e].close();
+                health.fail(&format!("edge {e}"));
+            }
+        }
+        let policy = RestartPolicy::from_env();
         let stats: Arc<Vec<StageStat>> = Arc::new(
             pipeline
                 .stages
@@ -280,7 +330,9 @@ impl PipelineService {
             let shared = Arc::new(StageShared {
                 store: Arc::clone(&store),
                 entry: stage.entry.clone(),
-                // Arc bump only — pumps borrow weights per tile.
+                // Arc bump only — pumps borrow weights per tile, so a
+                // respawned pump re-binds the same artifact-store-backed
+                // weight set without copying.
                 weights: Arc::clone(&stage.weights),
                 in_q: Arc::clone(&queues[si]),
                 out_q: Arc::clone(&queues[si + 1]),
@@ -292,6 +344,11 @@ impl PipelineService {
                 latch: AtomicUsize::new(stage.workers),
                 live: Arc::clone(&live),
                 sched: Arc::clone(&scheduler),
+                plan: Arc::clone(&plan),
+                health: Arc::clone(&health),
+                policy: policy.clone(),
+                restarts: AtomicUsize::new(0),
+                tiles_seen: AtomicU64::new(0),
             });
             for _ in 0..stage.workers {
                 let pump = StagePump {
@@ -299,6 +356,7 @@ impl PipelineService {
                     inbox: Vec::new(),
                     pending: None,
                     poisoned: false,
+                    dead: None,
                     parked: None,
                 };
                 // Counted at the spawn site, so the census is exact the
@@ -327,6 +385,7 @@ impl PipelineService {
             gate: std::sync::RwLock::new(false),
             tile_dims,
             inflight: Arc::new(AtomicUsize::new(0)),
+            health,
         })
     }
 
@@ -351,12 +410,15 @@ impl PipelineService {
         let inner = Arc::new(TicketInner::new(n, Arc::clone(&self.inflight)));
         let submitted = Instant::now();
         for (i, t) in inputs.into_iter().enumerate() {
-            if let Err(PushError::Closed(_)) = self.source.push((Arc::clone(&inner), i, t)) {
-                // Unreachable under the gate (close happens only after
-                // in-flight submits finish), kept as belt-and-braces:
-                // account this and all remaining tiles as failed so
-                // wait() cannot hang.
-                inner.fail_n(n - i, "session shut down during submit".to_string());
+            let item = (Arc::clone(&inner), i, Envelope::Ok(t));
+            if let Err(PushError::Closed(_)) = self.source.push(item) {
+                // The source is closed: either an injected edge-0 fault
+                // or (belt-and-braces — the gate makes it unreachable) a
+                // racing shutdown. Resolve this and every unpushed slot
+                // typed so wait() cannot hang.
+                for j in i..n {
+                    inner.fail_tile(j, StageFailure::closed("source").at_index(0));
+                }
                 break;
             }
         }
@@ -375,11 +437,25 @@ impl PipelineService {
         self.inflight.load(Ordering::SeqCst)
     }
 
+    /// Current pipeline health (see [`Health`]): `Degraded` while a
+    /// failed stage pump is being restarted, `Failed` once a stage
+    /// exhausts its restart budget or a structural edge dies.
+    pub fn health(&self) -> Health {
+        self.health.snapshot()
+    }
+
+    /// Shared handle to the health machine (restart/failure counters).
+    pub fn health_state(&self) -> Arc<HealthState> {
+        Arc::clone(&self.health)
+    }
+
     /// Total pump tasks this service has ever created (stage workers +
     /// sink). Constant after [`PipelineService::start`] returns — the
     /// warm-submit test asserts exactly this. (Kept under its historical
     /// name: pumps are the scheduler-task successors of the old
-    /// dedicated worker threads, with the same census semantics.)
+    /// dedicated worker threads, with the same census semantics.
+    /// Supervised restarts re-inject the *same* pump object and are not
+    /// new spawns.)
     pub fn threads_spawned(&self) -> usize {
         self.spawned.load(Ordering::SeqCst)
     }
@@ -434,6 +510,16 @@ struct StageShared {
     latch: AtomicUsize,
     live: Arc<LiveCount>,
     sched: Arc<Scheduler>,
+    /// Deterministic fault-injection harness (empty in production).
+    plan: Arc<FaultPlan>,
+    health: Arc<HealthState>,
+    policy: RestartPolicy,
+    /// Failures consumed from the stage's restart budget (shared across
+    /// sibling pumps of the stage).
+    restarts: AtomicUsize,
+    /// Per-stage tile ordinal: the `tile=` coordinate of the injection
+    /// grammar counts *computed* tiles on this stage, in pop order.
+    tiles_seen: AtomicU64,
 }
 
 /// One cooperative stage worker. Owns its in-flight tiles; moves itself
@@ -448,6 +534,10 @@ struct StagePump {
     /// Downstream closed mid-flight: drain remaining input by failing
     /// tickets instead of computing into a void.
     poisoned: bool,
+    /// The stage exhausted its restart budget: keep draining the edge,
+    /// but forward every tile as poison carrying this failure, so every
+    /// ticket behind the dead stage still resolves typed.
+    dead: Option<StageFailure>,
     /// When the pump parked (for wait-time accounting on resume).
     parked: Option<Instant>,
 }
@@ -455,6 +545,18 @@ struct StagePump {
 impl StagePump {
     fn stat(&self) -> &StageStat {
         &self.shared.stats[self.shared.si]
+    }
+
+    /// The typed failure for a tile this pump must drop (downstream or
+    /// upstream edge closed under it): poison keeps its original record,
+    /// a live tile becomes a `QueueClosed` failure at this stage.
+    fn drop_failure(&self, env: Envelope<Tensor>) -> StageFailure {
+        match env {
+            Envelope::Poison(f) => f,
+            Envelope::Ok(_) => {
+                StageFailure::closed(&self.shared.entry).at_index(self.shared.si)
+            }
+        }
     }
 
     /// Run until out of work (park on a queue waker), out of input
@@ -474,11 +576,12 @@ impl StagePump {
                         self.pending = Some(t);
                         return self.park_on_space();
                     }
-                    Err(PushError::Closed((ticket, _, _))) => {
-                        // Downstream closed mid-flight (shutdown): the
-                        // tile cannot complete — fail its ticket so no
-                        // waiter hangs.
-                        ticket.fail("pipeline shut down mid-flight".to_string());
+                    Err(PushError::Closed((ticket, idx, env))) => {
+                        // Downstream closed mid-flight (shutdown or an
+                        // injected edge fault): the tile cannot reach the
+                        // sink — resolve its slot here so no waiter hangs.
+                        let f = self.drop_failure(env);
+                        ticket.fail_tile(idx, f);
                         self.poisoned = true;
                     }
                 }
@@ -492,34 +595,61 @@ impl StagePump {
                 }
             }
             // 3. Process one tile (weights *borrowed*, tile moved —
-            // nothing cloned at the stage boundary). Kernel failures
-            // poison only the owning ticket — the pipeline keeps serving
-            // other batches.
-            let (ticket, idx, tile) = self.inbox.remove(0);
+            // nothing cloned at the stage boundary). Kernel failures and
+            // panics poison only the owning tile — the pipeline keeps
+            // serving other batches.
+            let (ticket, idx, env) = self.inbox.remove(0);
             if self.poisoned {
-                ticket.fail("pipeline shut down mid-flight".to_string());
-            } else {
-                let b0 = Instant::now();
-                let result = {
-                    let weights = self.shared.weights.as_slice();
-                    let mut args: Vec<&Tensor> = Vec::with_capacity(1 + weights.len());
-                    args.push(&tile);
-                    args.extend(weights.iter());
-                    self.shared.store.run_f32_ref(&self.shared.entry, &args)
+                let f = self.drop_failure(env);
+                ticket.fail_tile(idx, f);
+            } else if let Some(dead) = &self.dead {
+                let f = match env {
+                    Envelope::Poison(p) => p,
+                    Envelope::Ok(_) => dead.clone(),
                 };
-                match result {
-                    Ok(outs) => match outs.into_iter().next() {
-                        Some(out) => {
-                            self.stat()
-                                .busy_ns
-                                .fetch_add(b0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                            self.stat().tiles.fetch_add(1, Ordering::Relaxed);
-                            self.pending = Some((ticket, idx, out));
+                self.pending = Some((ticket, idx, Envelope::Poison(f)));
+            } else {
+                match env {
+                    // Poison from upstream: skip the compute, forward the
+                    // record — the sink resolves the afflicted slot.
+                    Envelope::Poison(f) => {
+                        self.pending = Some((ticket, idx, Envelope::Poison(f)));
+                    }
+                    Envelope::Ok(tile) => {
+                        let seq = self.shared.tiles_seen.fetch_add(1, Ordering::Relaxed);
+                        let b0 = Instant::now();
+                        let shared = &self.shared;
+                        let result =
+                            catch_stage(&shared.entry, Some(shared.si), Some(seq), || {
+                                shared.plan.maybe_panic(shared.si, seq);
+                                let weights = shared.weights.as_slice();
+                                let mut args: Vec<&Tensor> =
+                                    Vec::with_capacity(1 + weights.len());
+                                args.push(&tile);
+                                args.extend(weights.iter());
+                                let outs = shared.store.run_f32_ref(&shared.entry, &args)?;
+                                outs.into_iter().next().ok_or_else(|| {
+                                    anyhow!("{}: produced no output", shared.entry)
+                                })
+                            });
+                        match result {
+                            Ok(out) => {
+                                self.stat().busy_ns.fetch_add(
+                                    b0.elapsed().as_nanos() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                self.stat().tiles.fetch_add(1, Ordering::Relaxed);
+                                self.pending = Some((ticket, idx, Envelope::Ok(out)));
+                            }
+                            Err(failure) => {
+                                // Poison the afflicted tile, then hand this
+                                // incarnation to the supervisor (restart
+                                // with backoff, or go dead).
+                                self.pending =
+                                    Some((ticket, idx, Envelope::Poison(failure.clone())));
+                                return self.supervise(failure);
+                            }
                         }
-                        None => ticket.fail(format!("{}: produced no output", self.shared.entry)),
-                    },
-                    Err(e) => {
-                        ticket.fail(format!("stage {} failed: {e:#}", self.shared.entry));
                     }
                 }
             }
@@ -527,6 +657,37 @@ impl StagePump {
             if quota == 0 {
                 return self.reinject();
             }
+        }
+    }
+
+    /// A stage execution failed. Degrade the pipeline and either respawn
+    /// this pump (same inbox/pending, weights re-bound from the shared
+    /// artifact binding) after an exponential backoff, or — once the
+    /// stage's restart budget is spent — mark the pipeline `Failed` and
+    /// come back as a poison-forwarding drain so nothing behind the dead
+    /// stage ever hangs.
+    fn supervise(mut self, failure: StageFailure) {
+        let shared = Arc::clone(&self.shared);
+        shared.health.degrade(&shared.entry);
+        let attempt = shared.restarts.fetch_add(1, Ordering::SeqCst);
+        if attempt < shared.policy.max_restarts {
+            let delay = shared.policy.backoff(attempt);
+            self.parked = Some(Instant::now());
+            // A detached timer thread, not a pool task: sleeping must not
+            // occupy a scheduler worker. Bounded by the restart budget.
+            std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                let sched = Arc::clone(&self.shared.sched);
+                let health = Arc::clone(&self.shared.health);
+                sched.spawn(Box::new(move || {
+                    health.restore();
+                    self.run()
+                }));
+            });
+        } else {
+            shared.health.fail(&shared.entry);
+            self.dead = Some(failure);
+            self.run();
         }
     }
 
@@ -558,16 +719,26 @@ impl StagePump {
         sched.spawn(Box::new(move || self.run()));
     }
 
-    /// Input closed and drained: fail anything still held (possible only
-    /// when poisoned), let the stage's last pump close the downstream
-    /// edge, and retire from the live count.
-    fn retire(self) {
-        debug_assert!(self.pending.is_none(), "retire with unflushed output");
-        for (ticket, _, _) in self.inbox {
-            ticket.fail("pipeline shut down mid-flight".to_string());
+    /// Input closed and drained: resolve anything still held (possible
+    /// only when poisoned), let the stage's last pump close the
+    /// downstream edge, and retire from the live count.
+    fn retire(mut self) {
+        debug_assert!(
+            self.pending.is_none() || self.poisoned,
+            "retire with unflushed output"
+        );
+        for (ticket, idx, env) in std::mem::take(&mut self.inbox) {
+            let f = match env {
+                Envelope::Poison(f) => f,
+                Envelope::Ok(_) => {
+                    StageFailure::closed(&self.shared.entry).at_index(self.shared.si)
+                }
+            };
+            ticket.fail_tile(idx, f);
         }
-        if let Some((ticket, _, _)) = self.pending {
-            ticket.fail("pipeline shut down mid-flight".to_string());
+        if let Some((ticket, idx, env)) = self.pending.take() {
+            let f = self.drop_failure(env);
+            ticket.fail_tile(idx, f);
         }
         let shared = self.shared;
         if shared.latch.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -578,7 +749,9 @@ impl StagePump {
 }
 
 /// Cooperative sink: drain bursts of finished tiles back to their
-/// tickets; park on the sink edge when it idles, retire when it closes.
+/// tickets — completing live tiles, resolving poisoned ones with their
+/// typed failure; park on the sink edge when it idles, retire when it
+/// closes.
 struct SinkPump {
     q: Arc<RingQueue<Tile>>,
     live: Arc<LiveCount>,
@@ -592,8 +765,11 @@ impl SinkPump {
             burst.clear();
             match self.q.try_pop_many(&mut burst, SINK_BURST) {
                 Ok(_) => {
-                    for (ticket, idx, t) in burst.drain(..) {
-                        ticket.complete(idx, t);
+                    for (ticket, idx, env) in burst.drain(..) {
+                        match env {
+                            Envelope::Ok(t) => ticket.complete(idx, t),
+                            Envelope::Poison(f) => ticket.fail_tile(idx, f),
+                        }
                     }
                 }
                 Err(PopError::Empty) => {

@@ -22,6 +22,18 @@
 //! read locks per tile; the trainer write-locks between steps (the
 //! pipeline is drained then, so updates never race a kernel).
 //!
+//! **Fault containment**: every tile crosses edges inside an
+//! [`Envelope`] — a stage whose kernel panics or errors emits
+//! `Poison(StageFailure)` on all its output ports at that arrival index
+//! instead of dying, so the reorder buffer stays gapless and every
+//! downstream consumer (including skip links) stays seq-aligned.
+//! Poisoned sets skip compute and forward; the sink records the first
+//! failure on the step table, and `run_step` surfaces it as a typed
+//! [`crate::runtime::RuntimeError::StageFailed`] once the step fully
+//! drains — the *next* step runs on a clean pipeline. Only structural
+//! faults (desynchronized inputs, wrong output arity, the sink stream
+//! closing mid-step) kill the pipeline, via the `dead` latch.
+//!
 //! [`serial_step`] re-executes the same stage programs tile-by-tile on
 //! the calling thread and folds taps through the same accumulator — the
 //! bitwise oracle the pipeline is tested against, and the baseline
@@ -29,6 +41,9 @@
 
 use super::accumulate::mean_in_order;
 use super::lower::{TapKind, TrainPlan};
+use crate::fault::{
+    catch_stage, Envelope, FailureCause, FaultPlan, Health, HealthState, StageFailure,
+};
 use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::interp::{ExecPlan, Program};
 use crate::runtime::Tensor;
@@ -36,14 +51,14 @@ use crate::sched::{self, LiveCount, Scheduler};
 use crate::Result;
 use anyhow::{anyhow, ensure};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
-/// A sequence-tagged tile on one queue edge.
-type SeqTile = (usize, Tensor);
+/// A sequence-tagged envelope on one queue edge: live tile or poison.
+type SeqTile = (usize, Envelope<Tensor>);
 
 /// A tap delivery routed to the sink: `(tap index, seq, payload)`.
-type SinkItem = (usize, usize, Tensor);
+type SinkItem = (usize, usize, Envelope<Tensor>);
 
 /// Result of one microbatch step: mean per-tile loss and mean per-tile
 /// parameter gradients (slot `i` pairs with `TrainPlan::params[i]`;
@@ -70,8 +85,16 @@ struct StepTable {
 struct StepState {
     /// `slots[tap][seq]`.
     slots: Vec<Vec<Option<Tensor>>>,
+    /// `resolved[tap][seq]`: delivered exactly once, live or poison.
+    resolved: Vec<Vec<bool>>,
     remaining: usize,
-    error: Option<String>,
+    /// First poison delivery of the step. The step still waits for the
+    /// full drain (neighbor tiles finish; the pipeline is clean for the
+    /// next step), then surfaces this as the step error.
+    failure: Option<StageFailure>,
+    /// Structural failure: remaining deliveries will never arrive, so
+    /// the waiter is unblocked immediately.
+    abort: Option<StageFailure>,
     active: bool,
 }
 
@@ -80,8 +103,10 @@ impl StepTable {
         StepTable {
             state: Mutex::new(StepState {
                 slots: Vec::new(),
+                resolved: Vec::new(),
                 remaining: 0,
-                error: None,
+                failure: None,
+                abort: None,
                 active: false,
             }),
             done: Condvar::new(),
@@ -91,7 +116,10 @@ impl StepTable {
     fn begin(&self, n_taps: usize, n_tiles: usize) {
         let mut s = self.state.lock().unwrap();
         s.slots = vec![vec![None; n_tiles]; n_taps];
+        s.resolved = vec![vec![false; n_tiles]; n_taps];
         s.remaining = n_taps * n_tiles;
+        s.failure = None;
+        s.abort = None;
         s.active = true;
     }
 
@@ -100,36 +128,79 @@ impl StepTable {
         if !s.active {
             return; // stale delivery from a failed step
         }
-        let Some(slot) = s.slots.get_mut(tap).and_then(|row| row.get_mut(seq)) else {
-            s.error = Some(format!("sink delivery out of range: tap {tap} seq {seq}"));
+        let st = &mut *s;
+        let Some(done) = st.resolved.get_mut(tap).and_then(|row| row.get_mut(seq)) else {
+            Self::abort_locked(st, tap, seq);
             self.done.notify_all();
             return;
         };
-        if slot.is_none() {
-            *slot = Some(t);
-            s.remaining -= 1;
-            if s.remaining == 0 {
+        if !*done {
+            *done = true;
+            st.slots[tap][seq] = Some(t);
+            st.remaining -= 1;
+            if st.remaining == 0 {
                 self.done.notify_all();
             }
         }
     }
 
-    fn fail(&self, msg: String) {
+    /// A poison envelope reached the sink: the slot resolves with no
+    /// tensor, the failure is recorded, and the step keeps draining.
+    fn poison(&self, tap: usize, seq: usize, f: StageFailure) {
         let mut s = self.state.lock().unwrap();
-        if s.error.is_none() {
-            s.error = Some(msg);
+        if !s.active {
+            return;
+        }
+        let st = &mut *s;
+        let Some(done) = st.resolved.get_mut(tap).and_then(|row| row.get_mut(seq)) else {
+            Self::abort_locked(st, tap, seq);
+            self.done.notify_all();
+            return;
+        };
+        if !*done {
+            *done = true;
+            st.remaining -= 1;
+            if st.failure.is_none() {
+                st.failure = Some(f);
+            }
+            if st.remaining == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    /// Record an out-of-range delivery as a structural abort (lock held
+    /// by the caller — no re-entry into `fail`).
+    fn abort_locked(st: &mut StepState, tap: usize, seq: usize) {
+        if st.abort.is_none() {
+            st.abort = Some(StageFailure::new(
+                "sink",
+                FailureCause::Kernel(format!("sink delivery out of range: tap {tap} seq {seq}")),
+            ));
+        }
+    }
+
+    /// Structural failure: unblock the waiter now — outstanding
+    /// deliveries will never arrive. No-op between steps, so the
+    /// shutdown cascade (which also closes the sink) stays silent.
+    fn fail(&self, f: StageFailure) {
+        let mut s = self.state.lock().unwrap();
+        if s.active && s.abort.is_none() {
+            s.abort = Some(f);
         }
         self.done.notify_all();
     }
 
     fn wait(&self) -> Result<Vec<Vec<Option<Tensor>>>> {
         let mut s = self.state.lock().unwrap();
-        while s.remaining > 0 && s.error.is_none() {
+        while s.remaining > 0 && s.abort.is_none() {
             s = self.done.wait(s).unwrap();
         }
         s.active = false;
-        if let Some(e) = s.error.take() {
-            return Err(anyhow!(e));
+        let abort = s.abort.take();
+        let failure = s.failure.take();
+        if let Some(f) = abort.or(failure) {
+            return Err(f.into_error());
         }
         Ok(std::mem::take(&mut s.slots))
     }
@@ -152,6 +223,12 @@ pub struct TrainService {
     step_lock: Mutex<()>,
     dead: Arc<AtomicBool>,
     shut: AtomicBool,
+    /// Deterministic fault-injection plan (inert when empty).
+    fault: Arc<FaultPlan>,
+    health: Arc<HealthState>,
+    /// Monotonic step counter — the coordinate `nan:loss:step=N` /
+    /// `nan:grad:step=N` fault specs key on.
+    steps: AtomicU64,
 }
 
 impl TrainService {
@@ -160,7 +237,7 @@ impl TrainService {
     /// lowering), the sink pump, and the parameter store seeded from the
     /// plan's deterministic initial values. Tasks are spawned here —
     /// never on the step path.
-    pub fn start(plan: Arc<TrainPlan>) -> Result<TrainService> {
+    pub fn start(plan: Arc<TrainPlan>, fault: Arc<FaultPlan>) -> Result<TrainService> {
         let n_stages = plan.stages.len();
         ensure!(n_stages > 0, "training pipeline needs at least one stage");
 
@@ -184,12 +261,14 @@ impl TrainService {
             .collect();
         let mut src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>> =
             vec![Vec::new(); plan.sources.len()];
+        let mut edge_queues: Vec<(usize, Arc<RingQueue<SeqTile>>)> = Vec::new();
         let sink_q: Arc<RingQueue<SinkItem>> =
             RingQueue::with_capacity(plan.pipeline.queue_capacity * 4);
-        for e in &plan.pipeline.edges {
+        for (ei, e) in plan.pipeline.edges.iter().enumerate() {
             match e.to {
                 Some(to) => {
                     let q = RingQueue::with_capacity(e.capacity.max(2));
+                    edge_queues.push((ei, Arc::clone(&q)));
                     let slot = stage_in
                         .get_mut(to)
                         .and_then(|ports| ports.get_mut(e.to_port))
@@ -214,6 +293,20 @@ impl TrainService {
                 ensure!(q.is_some(), "stage {si} input port {p} has no feeding edge");
             }
         }
+
+        let health = Arc::new(HealthState::default());
+        // Injected edge failures fire before any traffic: the affected
+        // stages observe end-of-stream, the cascade retires the DAG, and
+        // every subsequent step fails typed (QueueClosed) — never hangs.
+        for ei in fault.take_queue_closes() {
+            for (idx, q) in &edge_queues {
+                if *idx == ei {
+                    q.close();
+                    health.fail(&format!("edge {ei}"));
+                }
+            }
+        }
+        drop(edge_queues);
 
         let params = Arc::new(RwLock::new(
             plan.params.iter().map(|p| p.init.clone()).collect::<Vec<Tensor>>(),
@@ -246,6 +339,7 @@ impl TrainService {
             let workers = workers_of(si);
             let shared = Arc::new(TrainStageShared {
                 name: sp.name.clone(),
+                si,
                 program: sp.program.clone(),
                 exec_plan: sp.program.plan(),
                 param_idx: sp.param_idx.clone(),
@@ -255,6 +349,9 @@ impl TrainService {
                 sink_q: Arc::clone(&sink_q),
                 table: Arc::clone(&table),
                 dead: Arc::clone(&dead),
+                fault: Arc::clone(&fault),
+                health: Arc::clone(&health),
+                tiles_seen: AtomicU64::new(0),
                 intake: Mutex::new(Intake {
                     counter: 0,
                     partial: (0..n_ports).map(|_| None).collect(),
@@ -296,6 +393,9 @@ impl TrainService {
             step_lock: Mutex::new(()),
             dead,
             shut: AtomicBool::new(false),
+            fault,
+            health,
+            steps: AtomicU64::new(0),
         })
     }
 
@@ -314,37 +414,52 @@ impl TrainService {
         self.spawned
     }
 
+    /// Current supervision state of the pipeline.
+    pub fn health(&self) -> Health {
+        self.health.snapshot()
+    }
+
+    /// Shared handle to the supervision state machine.
+    pub fn health_state(&self) -> Arc<HealthState> {
+        Arc::clone(&self.health)
+    }
+
     /// Run one microbatch step: `tiles[port][seq]` per source port.
     /// Blocks until every tap drained, then folds gradients/loss in tile
     /// order. One step runs at a time; parameter updates happen outside
     /// (see [`crate::train::Trainer`]).
+    ///
+    /// A stage failure mid-step poisons only this step's afflicted
+    /// tiles: the step drains fully, returns the typed
+    /// [`crate::runtime::RuntimeError::StageFailed`], and the next step
+    /// runs on a clean pipeline.
     pub fn run_step(&self, tiles: Vec<Vec<Tensor>>) -> Result<StepOutput> {
         let _step = self.step_lock.lock().unwrap();
         ensure!(
             !self.dead.load(Ordering::Acquire) && !self.shut.load(Ordering::Acquire),
             "training pipeline is shut down"
         );
+        let step = self.steps.fetch_add(1, Ordering::Relaxed);
         let n_tiles = validate_tiles(&self.plan, &tiles)?;
         self.table.begin(self.plan.taps.len(), n_tiles);
         'feed: for seq in 0..n_tiles {
             for (port, routes) in self.src_routes.iter().enumerate() {
                 for q in routes {
-                    let mut payload = (seq, tiles[port][seq].clone());
+                    let mut payload = (seq, Envelope::Ok(tiles[port][seq].clone()));
                     loop {
                         match q.try_push(payload) {
                             Ok(()) => break,
                             Err(PushError::Closed(_)) => {
-                                self.table
-                                    .fail("training pipeline closed during feed".to_string());
+                                self.table.fail(StageFailure::closed("source feed"));
                                 break 'feed;
                             }
                             Err(PushError::Full(p)) => {
                                 // A dead pipeline stops draining; bail out
-                                // instead of blocking on a full queue.
+                                // instead of blocking on a full queue. (The
+                                // killing pump recorded the real cause
+                                // first — this fail is its fallback.)
                                 if self.dead.load(Ordering::Acquire) {
-                                    self.table.fail(
-                                        "training pipeline failed during feed".to_string(),
-                                    );
+                                    self.table.fail(StageFailure::closed("source feed"));
                                     break 'feed;
                                 }
                                 payload = p;
@@ -356,7 +471,23 @@ impl TrainService {
             }
         }
         let slots = self.table.wait()?;
-        fold_taps(&self.plan, slots)
+        let mut out = fold_taps(&self.plan, slots)?;
+        // Deterministic numeric-fault injection (`nan:loss:step=N` /
+        // `nan:grad:step=N`): corrupt the folded step result so the
+        // trainer's non-finite guard is exercised end to end.
+        if self.fault.take_nan_loss(step) {
+            out.loss = f32::NAN;
+        }
+        if self.fault.take_nan_grad(step) {
+            if let Some(g) = out.grads.iter_mut().flatten().next() {
+                if let Some(v) = g.data.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        // A fully drained, fully live step proves the stage recovered.
+        self.health.restore();
+        Ok(out)
     }
 
     /// Close every source queue and drain the pump tasks. Idempotent;
@@ -422,7 +553,7 @@ struct Emit {
 
 struct EmitItem {
     seq: usize,
-    outs: Vec<Tensor>,
+    outs: Vec<Envelope<Tensor>>,
 }
 
 /// Routing cursor for one emission: `outs[port]` is taken by the last
@@ -430,14 +561,14 @@ struct EmitItem {
 /// where to resume after a Full stall.
 struct Inflight {
     seq: usize,
-    outs: Vec<Option<Tensor>>,
+    outs: Vec<Option<Envelope<Tensor>>>,
     port: usize,
     route: usize,
 }
 
 enum GatherResult {
     /// A complete, sequence-aligned input set.
-    Ready { arrival: usize, seq: usize, tiles: Vec<Tensor> },
+    Ready { arrival: usize, seq: usize, tiles: Vec<Envelope<Tensor>> },
     /// Input port `.0` has nothing buffered yet.
     Empty(usize),
     /// An input edge closed: end of stream.
@@ -468,6 +599,9 @@ enum RouteOutcome {
 /// Everything a stage's pumps share.
 struct TrainStageShared {
     name: String,
+    /// Stage index in `TrainPlan::stages` — the coordinate
+    /// `panic:stage=N` fault specs key on.
+    si: usize,
     program: Program,
     exec_plan: ExecPlan,
     param_idx: Vec<usize>,
@@ -477,6 +611,11 @@ struct TrainStageShared {
     sink_q: Arc<RingQueue<SinkItem>>,
     table: Arc<StepTable>,
     dead: Arc<AtomicBool>,
+    fault: Arc<FaultPlan>,
+    health: Arc<HealthState>,
+    /// Live tile sets this stage has computed — the `tile=N` injection
+    /// coordinate (monotonic across steps; poisoned sets don't count).
+    tiles_seen: AtomicU64,
     intake: Mutex<Intake>,
     emit: Mutex<Emit>,
     /// Pumps of this stage still running; the last to retire drains the
@@ -523,16 +662,21 @@ impl TrainStageShared {
     }
 
     /// Run the stage program on one gathered tile set against the
-    /// current parameters (read lock held only for the kernel).
-    fn compute(&self, tiles: &[Tensor]) -> Result<Vec<Tensor>> {
-        let guard = self.params.read().unwrap();
-        let mut args: Vec<&Tensor> = tiles.iter().collect();
-        args.extend(self.param_idx.iter().map(|&i| &guard[i]));
-        self.program.run_with_plan(&args, &[], &self.exec_plan)
+    /// current parameters (read lock held only for the kernel), under
+    /// panic supervision: a panicking or erroring kernel becomes a
+    /// typed [`StageFailure`] instead of unwinding into the scheduler.
+    fn compute(&self, tile_seq: u64, tiles: &[Tensor]) -> std::result::Result<Vec<Tensor>, StageFailure> {
+        catch_stage(&self.name, Some(self.si), Some(tile_seq), || {
+            self.fault.maybe_panic(self.si, tile_seq);
+            let guard = self.params.read().unwrap();
+            let mut args: Vec<&Tensor> = tiles.iter().collect();
+            args.extend(self.param_idx.iter().map(|&i| &guard[i]));
+            self.program.run_with_plan(&args, &[], &self.exec_plan)
+        })
     }
 
     /// Park a computed tile set in the reorder buffer.
-    fn insert(&self, arrival: usize, seq: usize, outs: Vec<Tensor>) {
+    fn insert(&self, arrival: usize, seq: usize, outs: Vec<Envelope<Tensor>>) {
         let mut emit = self.emit.lock().unwrap();
         emit.ready.insert(arrival, EmitItem { seq, outs });
     }
@@ -656,7 +800,7 @@ impl TrainPump {
         if self.closer {
             match self.shared.flush() {
                 // A gap at `next` here means the pump that owned that
-                // arrival died (compute failure) — abandon the rest.
+                // arrival died (structural failure) — abandon the rest.
                 FlushOutcome::Clear => self.cascade_close(),
                 FlushOutcome::Stall(parked) => self.park(parked),
             }
@@ -669,27 +813,59 @@ impl TrainPump {
             }
             match self.shared.gather() {
                 GatherResult::Ready { arrival, seq, tiles } => {
-                    let outs = match self.shared.compute(&tiles) {
-                        Ok(outs) => outs,
-                        Err(e) => {
-                            self.shared.dead.store(true, Ordering::Release);
-                            self.shared.table.fail(format!(
-                                "train stage {} failed: {e:#}",
-                                self.shared.name
-                            ));
-                            return self.retire();
+                    let n_ports = self.shared.routes.len();
+                    // Merge the input envelopes: any poison skips
+                    // compute and forwards on every port, keeping the
+                    // reorder buffer gapless and consumers seq-aligned.
+                    let mut poison: Option<StageFailure> = None;
+                    let mut live: Vec<Tensor> = Vec::with_capacity(tiles.len());
+                    for env in tiles {
+                        match env {
+                            Envelope::Ok(t) => live.push(t),
+                            Envelope::Poison(f) => {
+                                if poison.is_none() {
+                                    poison = Some(f);
+                                }
+                            }
+                        }
+                    }
+                    let outs: Vec<Envelope<Tensor>> = match poison {
+                        Some(f) => vec![Envelope::Poison(f); n_ports],
+                        None => {
+                            let tile_seq =
+                                self.shared.tiles_seen.fetch_add(1, Ordering::Relaxed);
+                            match self.shared.compute(tile_seq, &live) {
+                                Ok(outs) if outs.len() == n_ports => {
+                                    outs.into_iter().map(Envelope::Ok).collect()
+                                }
+                                Ok(outs) => {
+                                    // Wrong arity is a wiring bug, not a
+                                    // per-tile fault: downstream port
+                                    // accounting is unsalvageable.
+                                    self.shared.dead.store(true, Ordering::Release);
+                                    self.shared.health.fail(&self.shared.name);
+                                    self.shared.table.fail(
+                                        StageFailure::new(
+                                            &self.shared.name,
+                                            FailureCause::Kernel(format!(
+                                                "{} outputs for {n_ports} ports",
+                                                outs.len()
+                                            )),
+                                        )
+                                        .at_index(self.shared.si),
+                                    );
+                                    return self.retire();
+                                }
+                                Err(failure) => {
+                                    // Contained: this tile set becomes
+                                    // poison; the pump (and the step's
+                                    // other tiles) keep going.
+                                    self.shared.health.degrade(&self.shared.name);
+                                    vec![Envelope::Poison(failure); n_ports]
+                                }
+                            }
                         }
                     };
-                    if outs.len() != self.shared.routes.len() {
-                        self.shared.dead.store(true, Ordering::Release);
-                        self.shared.table.fail(format!(
-                            "train stage {}: {} outputs for {} ports",
-                            self.shared.name,
-                            outs.len(),
-                            self.shared.routes.len()
-                        ));
-                        return self.retire();
-                    }
                     self.shared.insert(arrival, seq, outs);
                     quota -= 1;
                     if quota == 0 {
@@ -705,10 +881,14 @@ impl TrainPump {
                 }
                 GatherResult::Desync => {
                     self.shared.dead.store(true, Ordering::Release);
-                    self.shared.table.fail(format!(
-                        "stage {}: input streams desynchronized",
-                        self.shared.name
-                    ));
+                    self.shared.health.fail(&self.shared.name);
+                    self.shared.table.fail(
+                        StageFailure::new(
+                            &self.shared.name,
+                            FailureCause::Kernel("input streams desynchronized".to_string()),
+                        )
+                        .at_index(self.shared.si),
+                    );
                     return self.retire();
                 }
                 GatherResult::Closed => return self.retire(),
@@ -780,8 +960,11 @@ impl TrainSinkPump {
         for _ in 0..TRAIN_PUMP_YIELD {
             match self.q.try_pop_many(&mut buf, TRAIN_SINK_BURST) {
                 Ok(_) => {
-                    for (tap, seq, t) in buf.drain(..) {
-                        self.table.complete(tap, seq, t);
+                    for (tap, seq, env) in buf.drain(..) {
+                        match env {
+                            Envelope::Ok(t) => self.table.complete(tap, seq, t),
+                            Envelope::Poison(f) => self.table.poison(tap, seq, f),
+                        }
                     }
                 }
                 Err(PopError::Empty) => {
@@ -793,6 +976,12 @@ impl TrainSinkPump {
                     return;
                 }
                 Err(PopError::Closed) => {
+                    // If a step is mid-flight when the sink stream ends,
+                    // its outstanding deliveries will never arrive —
+                    // unblock the waiter with a typed shutdown failure
+                    // instead of hanging it. (No-op between steps, so
+                    // orderly shutdown stays silent.)
+                    self.table.fail(StageFailure::closed("sink"));
                     self.svc_live.done();
                     return;
                 }
@@ -853,7 +1042,9 @@ fn fold_taps(plan: &TrainPlan, mut slots: Vec<Vec<Option<Tensor>>>) -> Result<St
 /// Serial oracle / baseline: execute the same stage programs tile by
 /// tile on the calling thread (explicit `params`, plan order) and fold
 /// the same taps. Bitwise-identical to the pipeline by construction —
-/// same programs, same per-tile values, same fold order.
+/// same programs, same per-tile values, same fold order. Stage panics
+/// are supervised the same way as in the pipeline: converted to a typed
+/// [`StageFailure`] instead of unwinding into the caller.
 pub fn serial_step(
     plan: &TrainPlan,
     params: &[Tensor],
@@ -897,7 +1088,10 @@ pub fn serial_step(
                     args.push(v);
                 }
                 args.extend(sp.param_idx.iter().map(|&i| &params[i]));
-                sp.program.run_with_plan(&args, &[], &exec_plans[si])?
+                catch_stage(&sp.name, Some(si), Some(seq as u64), || {
+                    sp.program.run_with_plan(&args, &[], &exec_plans[si])
+                })
+                .map_err(|f| f.into_error())?
             };
             for (p, o) in outs.into_iter().enumerate() {
                 vals.insert((si, p), o);

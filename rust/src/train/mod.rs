@@ -117,18 +117,32 @@ pub fn split_batch(plan: &TrainPlan, batch: &TrainBatch) -> Result<Vec<Vec<Tenso
     Ok(out)
 }
 
+/// Whether a step's optimizer update was applied, or skipped by the
+/// non-finite guard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Loss and gradients were finite; the update was applied.
+    Applied,
+    /// A non-finite loss or gradient was detected: the optimizer update
+    /// (and its step count) was skipped and the parameters are bitwise
+    /// unchanged — one bad microbatch never corrupts the weights.
+    Skipped { reason: String },
+}
+
 /// Statistics of one optimizer step.
 #[derive(Debug, Clone)]
 pub struct StepStats {
     /// Mean per-tile loss of the microbatch.
     pub loss: f32,
     /// The averaged gradients applied this step (tap order: one entry
-    /// per tapped parameter, named).
+    /// per tapped parameter, named). Empty when the step was skipped.
     pub grads: Vec<(String, Tensor)>,
     /// Tiles streamed through the pipeline this step.
     pub tiles: usize,
     /// Wall time from submit to parameters updated.
     pub elapsed_s: f64,
+    /// Applied, or skipped by the non-finite guard.
+    pub outcome: StepOutcome,
 }
 
 /// The training loop driver: streams microbatches through the warm DAG
@@ -175,6 +189,33 @@ impl<'s> Trainer<'s> {
         let n_tiles = tiles[0].len();
         let StepOutput { loss, grads } = self.service.run_step(tiles)?;
 
+        // Non-finite guard: a NaN/Inf loss or gradient (numeric blowup,
+        // or an injected `nan:loss` fault) must never reach the
+        // optimizer — skip the update, report it, keep training.
+        let non_finite = if !loss.is_finite() {
+            Some(format!("loss is {loss}"))
+        } else {
+            grads.iter().enumerate().find_map(|(i, grad)| {
+                grad.as_ref().and_then(|g| {
+                    g.data.iter().any(|v| !v.is_finite()).then(|| {
+                        format!(
+                            "gradient for `{}` has a non-finite element",
+                            plan.params[i].name
+                        )
+                    })
+                })
+            })
+        };
+        if let Some(reason) = non_finite {
+            return Ok(StepStats {
+                loss,
+                grads: Vec::new(),
+                tiles: n_tiles,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+                outcome: StepOutcome::Skipped { reason },
+            });
+        }
+
         // Weight-update stage: the pipeline is drained, so the write
         // lock is uncontended and stage workers see the new parameters
         // on the next step's first tile.
@@ -189,6 +230,12 @@ impl<'s> Trainer<'s> {
             }
         }
         self.optimizer.end_step();
-        Ok(StepStats { loss, grads: named, tiles: n_tiles, elapsed_s: t0.elapsed().as_secs_f64() })
+        Ok(StepStats {
+            loss,
+            grads: named,
+            tiles: n_tiles,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            outcome: StepOutcome::Applied,
+        })
     }
 }

@@ -1,0 +1,309 @@
+//! Deterministic fault injection through the supervised dataflow stack
+//! (`kitsune::fault`):
+//!
+//! * an injected panic at *each* stage of the lowered NeRF-trunk pipeline
+//!   fails exactly the afflicted ticket — typed, downcastable to
+//!   `RuntimeError::StageFailed` — while neighbor tickets complete, and
+//!   the supervised restart returns the pipeline to `Healthy`;
+//! * a `queue_close` structural fault resolves every ticket typed (the
+//!   "shut down" rendering) with zero hung waiters and zero leaked
+//!   in-flight tiles;
+//! * a NaN loss / NaN gradient skips the optimizer update with the
+//!   parameters bitwise unchanged, and descent resumes on the next step;
+//! * a stage panic inside the training DAG fails the step typed, the
+//!   next step runs clean, and health is restored;
+//! * the serve tier retries a request against a `Failed` pipeline until
+//!   the retry budget is spent, then resolves it typed, preserving the
+//!   `admitted == completed + failed + shed` invariant.
+//!
+//! Every wait in this file is bounded: a hang is a test failure, not a
+//! stuck CI job — that is the satellite "tickets never hang" pin.
+
+use kitsune::apps::nerf;
+use kitsune::fault::{FailureCause, FaultPlan, Health};
+use kitsune::runtime::RuntimeError;
+use kitsune::serve::{ServeConfig, ServeError, Server};
+use kitsune::session::{nerf_trunk_graph, BatchResult, Session, Ticket};
+use kitsune::train::{OptimizerKind, StepOutcome};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bounded ticket wait: resolves within 30 s or the test fails. Hung
+/// tickets are the bug class this suite exists to catch.
+fn wait_bounded(t: Ticket) -> kitsune::Result<BatchResult> {
+    match t.wait_timeout(Duration::from_secs(30)) {
+        Ok(r) => r,
+        Err(_) => panic!("ticket failed to resolve within 30s — hung ticket"),
+    }
+}
+
+/// Poll until the session reports `Healthy` (bounded).
+fn await_healthy(session: &Session) {
+    let t0 = Instant::now();
+    while !session.health().is_healthy() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "pipeline health did not recover: {:?}",
+            session.health()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Extract the typed stage failure from an `anyhow` error, or fail.
+fn stage_failure(err: &anyhow::Error) -> kitsune::fault::StageFailure {
+    match err.downcast_ref::<RuntimeError>() {
+        Some(RuntimeError::StageFailed(f)) => f.clone(),
+        other => panic!("expected RuntimeError::StageFailed, got {other:?} ({err:#})"),
+    }
+}
+
+/// The tiny NeRF training graph from `train_e2e` — skip concat and
+/// multicast backward in play, small enough for interpreter speed.
+fn tiny_nerf() -> kitsune::graph::Graph {
+    nerf::training(&nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    })
+}
+
+#[test]
+fn injected_panic_at_each_stage_fails_only_the_afflicted_ticket() {
+    // Stage count of the lowered trunk (probe is cold: no pools spawned).
+    let probe = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .warm(false)
+        .build()
+        .unwrap();
+    let n_stages = probe.pipeline().unwrap().stages.len();
+    assert!(n_stages >= 4, "nerf trunk must lower to >= 4 stages, got {n_stages}");
+
+    for si in 0..n_stages {
+        // One worker per stage: per-stage tile ordinals match submission
+        // order, so `panic_at(si, 2)` deterministically strikes the third
+        // single-tile batch.
+        let session = Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .workers(1)
+            .fault_plan(FaultPlan::new().panic_at(si, 2))
+            .build()
+            .unwrap();
+        let tiles = session.make_tiles(5, 0xBEEF).unwrap();
+        let tickets: Vec<Ticket> =
+            tiles.into_iter().map(|t| session.submit(vec![t]).unwrap()).collect();
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let r = wait_bounded(ticket);
+            if i == 2 {
+                let err = r.expect_err("afflicted ticket must fail typed");
+                let failure = stage_failure(&err);
+                assert_eq!(failure.stage_index, Some(si), "{failure}");
+                assert_eq!(failure.tile_seq, Some(2), "{failure}");
+                assert!(
+                    matches!(&failure.cause, FailureCause::Panic(m) if m.contains("injected fault")),
+                    "cause must carry the injection message: {failure}"
+                );
+            } else {
+                let out = r.unwrap_or_else(|e| {
+                    panic!("neighbor ticket {i} must complete (stage {si} injected): {e:#}")
+                });
+                assert_eq!(out.outputs.len(), 1);
+            }
+        }
+        // Supervised restart: back to Healthy, and fresh work flows.
+        await_healthy(&session);
+        let more = session.make_tiles(2, 0xD00D).unwrap();
+        let out = wait_bounded(session.submit(more).unwrap())
+            .unwrap_or_else(|e| panic!("post-restart submit must succeed (stage {si}): {e:#}"));
+        assert_eq!(out.outputs.len(), 2);
+        session.shutdown();
+    }
+}
+
+#[test]
+fn queue_close_injection_resolves_every_ticket_typed_and_leaks_nothing() {
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(1)
+        .fault_plan(FaultPlan::new().queue_close(1))
+        .build()
+        .unwrap();
+    // The structural fault fires at startup, before any traffic.
+    assert!(
+        matches!(session.health(), Health::Failed { .. }),
+        "closed edge must fail the pipeline: {:?}",
+        session.health()
+    );
+    let tiles = session.make_tiles(4, 1).unwrap();
+    let err = wait_bounded(session.submit(tiles).unwrap())
+        .expect_err("tickets behind a dead edge must fail, not hang");
+    assert!(err.to_string().contains("shut down"), "{err:#}");
+    let failure = stage_failure(&err);
+    assert_eq!(failure.cause, FailureCause::QueueClosed, "{failure}");
+    // Every tile resolved: the in-flight table drains to zero.
+    let t0 = Instant::now();
+    while session.in_flight() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "leaked in-flight tiles");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    session.shutdown();
+}
+
+#[test]
+fn nan_loss_skips_the_optimizer_update_params_bitwise_unchanged() {
+    let session = Session::builder()
+        .graph(tiny_nerf())
+        .tile_rows(16)
+        .fault_plan(FaultPlan::new().nan_loss(1))
+        .build()
+        .unwrap();
+    let mut trainer = session.trainer_with(OptimizerKind::adam(1e-2)).unwrap();
+    let batch = session.make_train_batch(0xF00D).unwrap();
+
+    let s0 = trainer.step(&batch).unwrap();
+    assert_eq!(s0.outcome, StepOutcome::Applied);
+    let loss0 = s0.loss;
+    assert!(loss0.is_finite());
+
+    // Step 1: the injected NaN loss trips the non-finite guard.
+    let before = trainer.params();
+    let s1 = trainer.step(&batch).unwrap();
+    assert!(s1.loss.is_nan(), "injected NaN loss must surface: {}", s1.loss);
+    assert!(
+        matches!(&s1.outcome, StepOutcome::Skipped { reason } if reason.contains("loss")),
+        "{:?}",
+        s1.outcome
+    );
+    assert!(s1.grads.is_empty(), "skipped step reports no applied gradients");
+    assert_eq!(trainer.steps(), 1, "skipped step must not advance the optimizer");
+    let after = trainer.params();
+    for ((n0, t0), (n1, t1)) in before.iter().zip(&after) {
+        assert_eq!(n0, n1);
+        let b0: Vec<u32> = t0.data.iter().map(|v| v.to_bits()).collect();
+        let b1: Vec<u32> = t1.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b0, b1, "`{n0}` must be bitwise unchanged after a skipped step");
+    }
+
+    // Descent resumes from the uncorrupted parameters.
+    let mut last = loss0;
+    for _ in 0..6 {
+        let s = trainer.step(&batch).unwrap();
+        assert_eq!(s.outcome, StepOutcome::Applied);
+        assert!(s.loss.is_finite());
+        last = s.loss;
+    }
+    assert!(last < loss0, "descent must resume after the skipped step: {last} vs {loss0}");
+    session.shutdown();
+}
+
+#[test]
+fn nan_grad_skips_the_optimizer_update() {
+    let session = Session::builder()
+        .graph(tiny_nerf())
+        .tile_rows(16)
+        .fault_plan(FaultPlan::new().nan_grad(0))
+        .build()
+        .unwrap();
+    let mut trainer = session.trainer().unwrap();
+    let batch = session.make_train_batch(0xBAD).unwrap();
+    let before = trainer.params();
+    let s0 = trainer.step(&batch).unwrap();
+    assert!(s0.loss.is_finite(), "only a gradient was corrupted");
+    assert!(
+        matches!(&s0.outcome, StepOutcome::Skipped { reason } if reason.contains("non-finite")),
+        "{:?}",
+        s0.outcome
+    );
+    assert_eq!(trainer.steps(), 0);
+    let after = trainer.params();
+    for ((n0, t0), (_, t1)) in before.iter().zip(&after) {
+        let b0: Vec<u32> = t0.data.iter().map(|v| v.to_bits()).collect();
+        let b1: Vec<u32> = t1.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b0, b1, "`{n0}` must be bitwise unchanged");
+    }
+    // The guard is per-step: the next step applies normally.
+    let s1 = trainer.step(&batch).unwrap();
+    assert_eq!(s1.outcome, StepOutcome::Applied);
+    session.shutdown();
+}
+
+#[test]
+fn train_stage_panic_fails_the_step_typed_then_recovers() {
+    let session = Session::builder()
+        .graph(tiny_nerf())
+        .tile_rows(16)
+        .fault_plan(FaultPlan::new().panic_at(0, 0))
+        .build()
+        .unwrap();
+    let mut trainer = session.trainer().unwrap();
+    let batch = session.make_train_batch(42).unwrap();
+
+    let err = trainer.step(&batch).expect_err("injected stage panic must fail the step");
+    let failure = stage_failure(&err);
+    assert_eq!(failure.stage_index, Some(0), "{failure}");
+    assert!(matches!(failure.cause, FailureCause::Panic(_)), "{failure}");
+
+    // The fault is one-shot: the next step runs clean over the same warm
+    // pumps (per-tile poison never kills the train executor), and the
+    // fully-live step restores health.
+    let s = trainer.step(&batch).unwrap();
+    assert_eq!(s.outcome, StepOutcome::Applied);
+    assert!(s.loss.is_finite());
+    assert!(session.health().is_healthy(), "{:?}", session.health());
+    session.shutdown();
+}
+
+#[test]
+fn serve_retries_then_resolves_typed_on_a_dead_model() {
+    let session = Arc::new(
+        Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .workers(1)
+            .fault_plan(FaultPlan::new().queue_close(1))
+            .build()
+            .unwrap(),
+    );
+    assert!(matches!(session.health(), Health::Failed { .. }));
+    let cfg = ServeConfig { max_retries: 2, ..ServeConfig::default() };
+    let server = Server::single("nerf", Arc::clone(&session), cfg);
+    let tiles = session.make_tiles(2, 9).unwrap();
+    let handle = server.submit("nerf", tiles, None).unwrap();
+    match handle.wait() {
+        Err(ServeError::Stage(msg)) => {
+            assert!(msg.contains("edge 1"), "failure names the dead edge: {msg}")
+        }
+        other => panic!("expected a typed stage failure, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.admitted, 1);
+    assert_eq!(stats.retried, 2, "the whole retry budget is consumed first");
+    assert_eq!(stats.failed, 1);
+    assert_eq!(
+        stats.admitted,
+        stats.resolved(),
+        "admitted == completed + failed + shed must survive faults: {stats:?}"
+    );
+    server.shutdown();
+    session.shutdown();
+}
+
+#[test]
+fn fault_spec_grammar_round_trips() {
+    let plan = FaultPlan::parse("panic:stage=2:tile=7, nan:loss:step=3; queue_close:edge=1")
+        .unwrap();
+    assert!(!plan.is_empty());
+    assert!(plan.take_panic(2, 7));
+    assert!(!plan.take_panic(2, 7), "specs are one-shot");
+    assert!(plan.take_nan_loss(3));
+    assert_eq!(plan.take_queue_closes(), vec![1]);
+    // Whole-string parse: one malformed spec rejects the plan.
+    assert!(FaultPlan::parse("panic:stage=two").is_err());
+    assert!(FaultPlan::parse("nan:loss").is_err());
+}

@@ -243,6 +243,123 @@ fn close_while_full_races_hand_values_back() {
 }
 
 #[test]
+fn close_racing_park_on_space_always_fires_waker() {
+    // A producer-side waker registered on a *full* queue races close():
+    // whichever side wins, the one-shot waker must fire exactly once —
+    // a lost wakeup here is a permanently stalled stage pump.
+    for trial in 0..200u64 {
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap(); // full: the waker cannot fire on space
+        let fired = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            {
+                let q = Arc::clone(&q);
+                let fired = Arc::clone(&fired);
+                s.spawn(move || {
+                    q.park_on_space(Box::new(move || {
+                        fired.fetch_add(1, Ordering::SeqCst);
+                    }));
+                });
+            }
+            {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    let mut rng = Rng(0xFACE + trial);
+                    let spins = rng.next() % 2_000;
+                    for _ in 0..spins {
+                        std::hint::spin_loop();
+                    }
+                    q.close();
+                });
+            }
+        });
+        // Both threads joined: close() fires registered wakers
+        // synchronously, so a zero here is a lost wakeup.
+        assert_eq!(
+            fired.load(Ordering::SeqCst),
+            1,
+            "trial {trial}: close-vs-park_on_space race lost or duplicated the waker"
+        );
+    }
+}
+
+#[test]
+fn close_racing_park_on_item_always_fires_waker() {
+    // Consumer mirror: a waker registered on an *empty* queue races
+    // close(); end-of-stream must always resume the parked consumer.
+    for trial in 0..200u64 {
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(2);
+        let fired = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            {
+                let q = Arc::clone(&q);
+                let fired = Arc::clone(&fired);
+                s.spawn(move || {
+                    q.park_on_item(Box::new(move || {
+                        fired.fetch_add(1, Ordering::SeqCst);
+                    }));
+                });
+            }
+            {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    let mut rng = Rng(0x17E4 + trial);
+                    let spins = rng.next() % 2_000;
+                    for _ in 0..spins {
+                        std::hint::spin_loop();
+                    }
+                    q.close();
+                });
+            }
+        });
+        assert_eq!(
+            fired.load(Ordering::SeqCst),
+            1,
+            "trial {trial}: close-vs-park_on_item race lost or duplicated the waker"
+        );
+    }
+}
+
+#[test]
+fn blocking_push_on_full_queue_unblocks_on_close() {
+    // A blocking push parked on a full queue with no consumer must be
+    // woken by close() and hand its value back — the shutdown path a
+    // feeder thread relies on to not hang when the pipeline dies.
+    for trial in 0..50u64 {
+        let q: Arc<RingQueue<u64>> = RingQueue::with_capacity(2);
+        q.try_push(10).unwrap();
+        q.try_push(11).unwrap();
+        std::thread::scope(|s| {
+            let pusher = {
+                let q = Arc::clone(&q);
+                s.spawn(move || q.push(42))
+            };
+            {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    let mut rng = Rng(0xB10C + trial);
+                    let spins = rng.next() % 10_000;
+                    for _ in 0..spins {
+                        std::hint::spin_loop();
+                    }
+                    q.close();
+                });
+            }
+            let res = pusher.join().unwrap();
+            assert!(
+                matches!(res, Err(PushError::Closed(42))),
+                "trial {trial}: blocking push neither delivered nor returned: {res:?}"
+            );
+        });
+        // Buffered items still drain after close (advisory close).
+        assert_eq!(q.try_pop().unwrap(), 10);
+        assert_eq!(q.try_pop().unwrap(), 11);
+        assert!(matches!(q.try_pop(), Err(PopError::Closed)));
+    }
+}
+
+#[test]
 fn pop_many_spsc_preserves_fifo_across_bursts() {
     // Batched dequeue at capacity 2: bursts of size <= max, strict FIFO
     // across thousands of wraparounds, clean end-of-stream.

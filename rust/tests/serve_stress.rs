@@ -29,6 +29,7 @@ fn fast_config(queue_depth: usize) -> ServeConfig {
         batch: BatchPolicy { max_tiles: 8, max_delay: Duration::from_micros(200) },
         queue_depth,
         default_deadline: None,
+        max_retries: 1,
     }
 }
 
