@@ -19,7 +19,9 @@ artifacts:
 # scheduler scaling (GEMM + warm pipeline + DAG training at 1/2/4/N
 # workers) into BENCH_sched.json; then the serving-tier load sweep
 # (latency percentiles vs offered load, saturation knee, shed rate)
-# into BENCH_serve.json.
+# into BENCH_serve.json; then dataflow-vs-serial-oracle off-chip traffic
+# accounting per app (+ telemetry harness overhead) into
+# BENCH_traffic.json.
 # BENCH_SMOKE=1 for a fast CI smoke run that still emits the JSONs.
 bench:
 	cargo bench --bench kernel_throughput
@@ -27,6 +29,7 @@ bench:
 	cargo bench --bench train_throughput
 	cargo bench --bench sched_scaling
 	cargo bench --bench serve_load
+	cargo bench --bench traffic_accounting
 
 # The full paper-figure bench suite (fig*/table*/ablation/...).
 bench-paper:

@@ -1,0 +1,191 @@
+//! Dataflow traffic accounting: per-app off-chip-analog byte movement
+//! under dataflow execution (source injection + sink drains + weight
+//! re-reads) vs the serial bulk-sync oracle (which additionally stores
+//! and re-loads every ring-queue intermediate), plus the telemetry
+//! harness overhead probe (counters-only vs tracing-armed throughput).
+//!
+//! Writes `BENCH_traffic.json` at the repo root.
+//! Run: `cargo bench --bench traffic_accounting` (`BENCH_SMOKE=1` for CI).
+
+use kitsune::apps::{dlrm, nerf};
+use kitsune::bench::{artifact_root, smoke};
+use kitsune::session::{nerf_trunk_graph, Session};
+use kitsune::telemetry::TrafficSnapshot;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct AppTraffic {
+    app: &'static str,
+    mode: &'static str,
+    tiles: u64,
+    traffic: TrafficSnapshot,
+}
+
+/// Stream `reps` batches of tiles through the warm NeRF trunk and
+/// return the accumulated traffic classes.
+fn trunk_inference(reps: usize) -> anyhow::Result<AppTraffic> {
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(512, 60, 64, 3))
+        .tile_rows(64)
+        .workers(2)
+        .build()?;
+    let tiles = session.make_tiles(16, 0xACC0)?;
+    let mut n = 0u64;
+    for _ in 0..reps {
+        n += session.run(tiles.clone())?.outputs.len() as u64;
+    }
+    let traffic = session
+        .telemetry()
+        .expect("warm session registers telemetry")
+        .traffic
+        .snapshot();
+    session.shutdown();
+    Ok(AppTraffic { app: "nerf-trunk", mode: "inference", tiles: n, traffic })
+}
+
+/// Run `steps` training steps on a warm DAG pipeline and return the
+/// accumulated traffic classes.
+fn train_traffic(
+    app: &'static str,
+    graph: kitsune::graph::Graph,
+    steps: usize,
+) -> anyhow::Result<AppTraffic> {
+    let session = Session::builder().graph(graph).tile_rows(16).build()?;
+    let batch = session.make_train_batch(0xACC1)?;
+    let mut trainer = session.trainer()?;
+    let mut n = 0u64;
+    for _ in 0..steps {
+        n += trainer.step(&batch)?.tiles as u64;
+    }
+    let traffic = session
+        .telemetry()
+        .expect("warm DAG registers telemetry")
+        .traffic
+        .snapshot();
+    session.shutdown();
+    Ok(AppTraffic { app, mode: "training", tiles: n, traffic })
+}
+
+/// Telemetry-overhead probe: the same trunk workload with (a) the
+/// always-on counters (production hot path) and (b) the span recorder
+/// armed, which does strictly more work per tile — string allocation and
+/// a mutex push per span — so it conservatively bounds the counter cost.
+/// Must run *after* every traffic measurement: the trace sink latches on
+/// and cannot be disarmed in-process.
+fn telemetry_overhead(smoke: bool) -> anyhow::Result<(f64, f64, f64)> {
+    let reps = if smoke { 4 } else { 16 };
+    let measure = || -> anyhow::Result<f64> {
+        let session = Session::builder()
+            .graph(nerf_trunk_graph(512, 60, 64, 3))
+            .tile_rows(64)
+            .workers(2)
+            .build()?;
+        session.run(session.make_tiles(4, 1)?)?; // prime the kernels
+        let tiles = session.make_tiles(32, 2)?;
+        let t0 = Instant::now();
+        let mut n = 0u64;
+        for _ in 0..reps {
+            n += session.run(tiles.clone())?.outputs.len() as u64;
+        }
+        let tps = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        session.shutdown();
+        Ok(tps)
+    };
+    let counters_tps = measure()?;
+    let trace_path = std::env::temp_dir().join("kitsune_bench_overhead_trace.json");
+    kitsune::telemetry::trace::enable(&trace_path)
+        .ok_or_else(|| anyhow::anyhow!("trace sink latched off (KITSUNE_TRACE set but empty)"))?;
+    let traced_tps = measure()?;
+    let _ = std::fs::remove_file(&trace_path);
+    Ok((counters_tps, traced_tps, counters_tps / traced_tps.max(1e-12) - 1.0))
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = smoke();
+    let (inf_reps, steps) = if smoke { (2, 1) } else { (8, 4) };
+    println!("dataflow traffic accounting ({inf_reps} inference reps, {steps} train steps):");
+
+    let tiny_nerf = nerf::training(&nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    });
+    let dense_dlrm = dlrm::dense_training(&dlrm::DlrmConfig {
+        batch: 64,
+        dense_features: 8,
+        bottom_mlp: vec![16, 8],
+        top_mlp: vec![16, 1],
+        ..dlrm::DlrmConfig::default()
+    });
+
+    let apps = vec![
+        trunk_inference(inf_reps)?,
+        train_traffic("nerf", tiny_nerf, steps)?,
+        train_traffic("dlrm-dense", dense_dlrm, steps)?,
+    ];
+    for a in &apps {
+        let t = &a.traffic;
+        println!(
+            "  {:<12} {:<9} {:>6} tiles: dataflow {:>10.1} KiB vs serial {:>10.1} KiB \
+             off-chip — {:>5.1}% reduction",
+            a.app,
+            a.mode,
+            a.tiles,
+            t.dataflow_offchip_bytes() as f64 / 1024.0,
+            t.serial_offchip_bytes() as f64 / 1024.0,
+            t.reduction() * 100.0
+        );
+        anyhow::ensure!(t.reduction() > 0.0, "{} must reduce off-chip traffic", a.app);
+    }
+
+    // Harness overhead, after all traffic runs (arming the trace sink is
+    // irreversible in-process).
+    let (counters_tps, traced_tps, overhead) = telemetry_overhead(smoke)?;
+    println!(
+        "  telemetry overhead: counters {counters_tps:.0} tiles/s vs traced {traced_tps:.0} \
+         tiles/s ({:+.2}%)",
+        overhead * 100.0
+    );
+
+    // ---- BENCH_traffic.json -------------------------------------------
+    let root = artifact_root();
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"traffic_accounting\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"apps\": [");
+    for (i, a) in apps.iter().enumerate() {
+        let comma = if i + 1 < apps.len() { "," } else { "" };
+        let t = &a.traffic;
+        let _ = writeln!(
+            json,
+            "    {{\"app\": \"{}\", \"mode\": \"{}\", \"tiles\": {}, \
+             \"source_bytes\": {}, \"onchip_bytes\": {}, \"sink_bytes\": {}, \
+             \"weight_bytes\": {}, \"dataflow_offchip_bytes\": {}, \
+             \"serial_offchip_bytes\": {}, \"reduction\": {:.4}}}{comma}",
+            a.app,
+            a.mode,
+            a.tiles,
+            t.source_bytes,
+            t.onchip_bytes,
+            t.sink_bytes,
+            t.weight_bytes,
+            t.dataflow_offchip_bytes(),
+            t.serial_offchip_bytes(),
+            t.reduction()
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"telemetry_overhead\": {{\"counters_tiles_per_sec\": {counters_tps:.2}, \
+         \"traced_tiles_per_sec\": {traced_tps:.2}, \"overhead_frac\": {overhead:.4}}}"
+    );
+    json.push_str("}\n");
+    let out_path = root.join("BENCH_traffic.json");
+    std::fs::write(&out_path, json)?;
+    println!("traffic accounting written to {}", out_path.display());
+    Ok(())
+}

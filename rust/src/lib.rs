@@ -22,6 +22,7 @@
 //! | §4 "keep every resource busy at once" on the host runtime | [`sched`] (one work-stealing pool under GEMM panels, stage pumps, DAG training) |
 //! | Many independent requests through one persistent pipeline | [`serve`] (continuous batching, EDF deadlines, multi-model residency, SLO stats) |
 //! | Failure as a first-class dataflow value | [`fault`] (typed `StageFailure`, poison tiles, health machine, supervised restart, deterministic injection) |
+//! | §6 traffic/utilization measurement (Figs 9/13) | [`telemetry`] (per-stage metrics, edge stalls, traffic accounting, `KITSUNE_TRACE` span export) |
 //!
 //! [`session`] is the **single public entry point** for running anything:
 //! `Session::builder().app("nerf").build()?` compiles once, lowers the
@@ -55,6 +56,7 @@ pub mod runtime;
 pub mod session;
 pub mod serve;
 pub mod train;
+pub mod telemetry;
 pub mod report;
 pub mod bench;
 

@@ -8,6 +8,7 @@
 //! kitsune apps [--dump]   # application graph inventory
 //! kitsune compile <app>   # show compiler output for one app
 //! kitsune serve ...       # serving tier: continuous batching + deadlines
+//! kitsune trace <app>     # Chrome-trace/Perfetto timeline of the warm pipeline
 //! ```
 
 use anyhow::{bail, Result};
@@ -44,8 +45,12 @@ fn main() -> Result<()> {
             )?
         }
         "serve" => kitsune::coordinator::cli::serve(&rest)?,
+        "trace" => kitsune::coordinator::cli::trace(&rest)?,
         "help" | "--help" | "-h" => print_help(),
-        other => bail!("unknown subcommand `{other}` (try `kitsune help`)"),
+        other => bail!(
+            "unknown subcommand `{other}` (expected one of: {})",
+            kitsune::coordinator::cli::SUBCOMMANDS.join(" ")
+        ),
     }
     Ok(())
 }
@@ -66,7 +71,12 @@ fn print_help() {
          \x20                     serving tier on the warm spatial pipeline:\n\
          \x20                     continuous batching, EDF deadlines + load shedding,\n\
          \x20                     multi-model registry, latency percentiles\n\
-         \x20                     (`serve --help` lists every flag)"
+         \x20                     (`serve --help` lists every flag)\n\
+         \x20 trace <APP> [--out PATH] [--tiles N] [--workers N] [--steps N]\n\
+         \x20                     record a Chrome-trace/Perfetto timeline of the\n\
+         \x20                     warm pipeline + a training step, with dataflow\n\
+         \x20                     traffic accounting (`trace --help` for flags;\n\
+         \x20                     env: KITSUNE_TRACE=<path> arms tracing anywhere)"
     );
 }
 

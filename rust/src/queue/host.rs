@@ -15,11 +15,12 @@
 //! multiple producers/consumers — one-to-many (multicast) and many-to-one
 //! (reduction) patterns use one queue per edge, as in the paper.
 
+use crate::telemetry::{EdgeStats, QUEUE};
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// A one-shot callback registered with [`RingQueue::park_on_item`] /
 /// [`RingQueue::park_on_space`]: fired (exactly once) when the queue
@@ -30,18 +31,13 @@ pub type Waker = Box<dyn FnOnce() + Send + 'static>;
 
 /// Spin iterations before a *blocking* `push`/`pop` parks on the queue's
 /// condvar (first a short `spin_loop` burst, then yields).
+///
+/// Blocking-path spin iterations are tallied process-wide in
+/// [`crate::telemetry::QUEUE`]`.idle_spins` — the observability hook
+/// behind the "an idle warm pipeline burns ~0 CPU" regression test
+/// (`tests/idle_cpu.rs`). Cooperative pumps never spin here (they park
+/// via wakers); only legacy blocking `push`/`pop` callers contribute.
 const SPIN_LIMIT: u32 = 256;
-
-/// Process-wide count of blocking-path spin iterations — the
-/// observability hook behind the "an idle warm pipeline burns ~0 CPU"
-/// regression test. Cooperative pumps never spin here (they park via
-/// wakers); only legacy blocking `push`/`pop` callers contribute.
-static IDLE_SPINS: AtomicU64 = AtomicU64::new(0);
-
-/// Total blocking-path spin iterations since process start.
-pub fn idle_spin_count() -> u64 {
-    IDLE_SPINS.load(Ordering::Relaxed)
-}
 
 /// Pad to a cache line to avoid false sharing (paper: "synchronization
 /// variables are all padded to the size of a cache line").
@@ -81,6 +77,10 @@ pub struct RingQueue<T> {
     /// `waiters`' mutex.
     item_cv: Condvar,
     space_cv: Condvar,
+    /// Per-edge telemetry, attached once by the owning service (the
+    /// queue is generic, so byte accounting stays with the producer —
+    /// push/pop/stall counts are recorded here).
+    stats: OnceLock<Arc<EdgeStats>>,
 }
 
 unsafe impl<T: Send> Send for RingQueue<T> {}
@@ -147,7 +147,20 @@ impl<T> RingQueue<T> {
             space_waiters: AtomicUsize::new(0),
             item_cv: Condvar::new(),
             space_cv: Condvar::new(),
+            stats: OnceLock::new(),
         })
+    }
+
+    /// Attach per-edge telemetry (first attach wins; later calls are
+    /// ignored — a queue belongs to exactly one pipeline edge).
+    pub fn attach_telemetry(&self, stats: Arc<EdgeStats>) {
+        let _ = self.stats.set(stats);
+    }
+
+    /// The edge telemetry attached to this queue, if any. Producers use
+    /// it to record payload bytes next to the queue's own push counts.
+    pub fn telemetry(&self) -> Option<&Arc<EdgeStats>> {
+        self.stats.get()
     }
 
     pub fn capacity(&self) -> usize {
@@ -186,6 +199,11 @@ impl<T> RingQueue<T> {
                         unsafe { (*slot.value.get()).write(value) };
                         // wr_release: publish to the consumer with ticket+1.
                         slot.seq.0.store(ticket + 1, Ordering::Release);
+                        QUEUE.pushes.inc();
+                        if let Some(s) = self.stats.get() {
+                            s.pushes.inc();
+                            s.sample_depth(self.len());
+                        }
                         self.notify_item();
                         return Ok(());
                     }
@@ -193,6 +211,10 @@ impl<T> RingQueue<T> {
                 }
             } else if seq < ticket {
                 // Ring is full (consumer hasn't freed this entry yet).
+                QUEUE.full_stalls.inc();
+                if let Some(s) = self.stats.get() {
+                    s.full_stalls.inc();
+                }
                 return Err(PushError::Full(value));
             } else {
                 ticket = self.tail.0.load(Ordering::Relaxed);
@@ -219,6 +241,10 @@ impl<T> RingQueue<T> {
                         // rd_release: free the entry for the producer one
                         // lap ahead.
                         slot.seq.0.store(ticket + self.mask + 1, Ordering::Release);
+                        QUEUE.pops.inc();
+                        if let Some(s) = self.stats.get() {
+                            s.pops.inc();
+                        }
                         self.notify_space();
                         return Ok(value);
                     }
@@ -228,6 +254,10 @@ impl<T> RingQueue<T> {
                 return if self.closed.load(Ordering::Acquire) && self.is_empty() {
                     Err(PopError::Closed)
                 } else {
+                    QUEUE.empty_stalls.inc();
+                    if let Some(s) = self.stats.get() {
+                        s.empty_stalls.inc();
+                    }
                     Err(PopError::Empty)
                 };
             } else {
@@ -252,7 +282,7 @@ impl<T> RingQueue<T> {
                     value = v;
                     if spins < SPIN_LIMIT {
                         spins += 1;
-                        IDLE_SPINS.fetch_add(1, Ordering::Relaxed);
+                        QUEUE.idle_spins.inc();
                         if spins < 64 {
                             std::hint::spin_loop();
                         } else {
@@ -278,7 +308,7 @@ impl<T> RingQueue<T> {
                 Err(PopError::Empty) => {
                     if spins < SPIN_LIMIT {
                         spins += 1;
-                        IDLE_SPINS.fetch_add(1, Ordering::Relaxed);
+                        QUEUE.idle_spins.inc();
                         if spins < 64 {
                             std::hint::spin_loop();
                         } else {
@@ -399,6 +429,7 @@ impl<T> RingQueue<T> {
     /// backpressure. Never misses a wakeup (same fence protocol as
     /// [`Self::park_on_space`]); the timeout only bounds the recheck.
     pub fn wait_space(&self) {
+        let t0 = Instant::now();
         let guard = self.waiters.lock().unwrap();
         self.space_waiters.fetch_add(1, Ordering::SeqCst);
         fence(Ordering::SeqCst);
@@ -406,12 +437,16 @@ impl<T> RingQueue<T> {
             let _ = self.space_cv.wait_timeout(guard, Duration::from_millis(20)).unwrap();
         }
         self.space_waiters.fetch_sub(1, Ordering::SeqCst);
+        if let Some(s) = self.stats.get() {
+            s.full_stall_ns.add(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
+        }
     }
 
     /// Park the calling thread until the queue is likely non-empty, the
     /// queue closes, or a short timeout elapses. Consumer mirror of
     /// [`Self::wait_space`].
     pub fn wait_item(&self) {
+        let t0 = Instant::now();
         let guard = self.waiters.lock().unwrap();
         self.item_waiters.fetch_add(1, Ordering::SeqCst);
         fence(Ordering::SeqCst);
@@ -419,6 +454,9 @@ impl<T> RingQueue<T> {
             let _ = self.item_cv.wait_timeout(guard, Duration::from_millis(20)).unwrap();
         }
         self.item_waiters.fetch_sub(1, Ordering::SeqCst);
+        if let Some(s) = self.stats.get() {
+            s.empty_stall_ns.add(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
+        }
     }
 
     /// Wake the item side: drain registered item wakers and signal

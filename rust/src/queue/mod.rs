@@ -11,5 +11,5 @@ pub mod host;
 pub mod model;
 
 pub use crate::fault::Envelope;
-pub use host::{idle_spin_count, PopError, PushError, RingQueue, Waker};
+pub use host::{PopError, PushError, RingQueue, Waker};
 pub use model::{QueueModel, QueuePoint, ATOMICS_PER_HANDOFF, DEFAULT_ENTRIES};

@@ -68,6 +68,8 @@ pub struct Scheduler {
     /// re-raise at the join point instead; this counts detached tasks).
     panics: AtomicUsize,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Per-worker busy/steal/park tallies (telemetry; relaxed counters).
+    worker_stats: Vec<crate::telemetry::WorkerStats>,
 }
 
 struct WorkerCtx {
@@ -79,6 +81,15 @@ struct WorkerCtx {
 
 thread_local! {
     static CURRENT: RefCell<Option<WorkerCtx>> = const { RefCell::new(None) };
+}
+
+static GLOBAL: OnceLock<Arc<Scheduler>> = OnceLock::new();
+
+/// Worker tallies of the *global* pool for [`crate::telemetry::snapshot`]
+/// — empty if the global pool has never been started (this never spawns
+/// it).
+pub fn worker_telemetry() -> Vec<crate::telemetry::WorkerSnapshot> {
+    GLOBAL.get().map(|s| s.worker_telemetry()).unwrap_or_default()
 }
 
 /// Warn (once per variable, process-wide) that an environment override
@@ -153,6 +164,7 @@ impl Scheduler {
             shutdown: AtomicBool::new(false),
             panics: AtomicUsize::new(0),
             threads: Mutex::new(Vec::new()),
+            worker_stats: (0..n).map(|_| crate::telemetry::WorkerStats::default()).collect(),
         });
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
@@ -170,8 +182,12 @@ impl Scheduler {
     /// The process-wide pool. Sized by `KITSUNE_WORKERS` if set, else the
     /// machine's available parallelism. Never shut down.
     pub fn global() -> Arc<Scheduler> {
-        static GLOBAL: OnceLock<Arc<Scheduler>> = OnceLock::new();
         Arc::clone(GLOBAL.get_or_init(|| Scheduler::with_workers(default_workers())))
+    }
+
+    /// Per-worker busy/steal/park tallies for this pool.
+    pub fn worker_telemetry(&self) -> Vec<crate::telemetry::WorkerSnapshot> {
+        self.worker_stats.iter().enumerate().map(|(i, s)| s.snapshot(i)).collect()
     }
 
     /// Number of worker threads in this pool.
@@ -247,6 +263,9 @@ impl Scheduler {
             }
             if let Some(t) = self.locals[i].lock().unwrap().pop_front() {
                 self.pending.fetch_sub(1, Ordering::SeqCst);
+                if let Some(h) = home {
+                    self.worker_stats[h].steals.inc();
+                }
                 return Some(t);
             }
         }
@@ -280,7 +299,11 @@ fn worker_loop(sched: Arc<Scheduler>, index: usize) {
     loop {
         if let Some(task) = sched.find_task(Some(index)) {
             idle = 0;
+            let stats = &sched.worker_stats[index];
+            stats.tasks.inc();
+            let t0 = std::time::Instant::now();
             sched.run_task(task);
+            stats.busy_ns.add(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
             continue;
         }
         if sched.shutdown.load(Ordering::SeqCst) {
@@ -302,6 +325,7 @@ fn worker_loop(sched: Arc<Scheduler>, index: usize) {
             if sched.pending.load(Ordering::SeqCst) == 0
                 && !sched.shutdown.load(Ordering::SeqCst)
             {
+                sched.worker_stats[index].parks.inc();
                 let _ = sched.idle_cv.wait_timeout(guard, Duration::from_millis(10)).unwrap();
             }
             sched.sleepers.fetch_sub(1, Ordering::SeqCst);

@@ -438,6 +438,44 @@ impl Server {
         )
     }
 
+    /// The serving tier + the whole process in the Prometheus text
+    /// exposition format (version 0.0.4): serve counters/latency
+    /// quantiles first, then every layer of
+    /// [`crate::telemetry::snapshot`] — queue aggregates, scheduler
+    /// workers, per-pipeline stage/edge/traffic series.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let s = self.stats();
+        let mut out = String::new();
+        out.push_str("# TYPE kitsune_serve_requests_total counter\n");
+        for (state, n) in [
+            ("admitted", s.admitted),
+            ("rejected", s.rejected),
+            ("refused_deadline", s.refused_deadline),
+            ("shed_deadline", s.shed_deadline),
+            ("shed_shutdown", s.shed_shutdown),
+            ("completed", s.completed),
+            ("failed", s.failed),
+            ("retried", s.retried),
+        ] {
+            let _ = writeln!(out, "kitsune_serve_requests_total{{state=\"{state}\"}} {n}");
+        }
+        out.push_str("# TYPE kitsune_serve_queue_depth gauge\n");
+        let _ = writeln!(out, "kitsune_serve_queue_depth {}", s.queue_depth);
+        out.push_str("# TYPE kitsune_serve_inflight_tiles gauge\n");
+        let _ = writeln!(out, "kitsune_serve_inflight_tiles {}", s.in_flight_tiles);
+        out.push_str("# TYPE kitsune_serve_latency_ms summary\n");
+        for (q, ms) in [
+            ("0.5", s.latency.p50_ms),
+            ("0.95", s.latency.p95_ms),
+            ("0.99", s.latency.p99_ms),
+        ] {
+            let _ = writeln!(out, "kitsune_serve_latency_ms{{quantile=\"{q}\"}} {ms:.6}");
+        }
+        out.push_str(&crate::telemetry::prometheus());
+        out
+    }
+
     /// Requests queued for dispatch right now.
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.len()

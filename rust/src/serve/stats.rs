@@ -1,119 +1,21 @@
-//! Serving observability: a lock-free log-bucketed latency histogram
-//! and the counter set behind [`crate::serve::Server::stats`].
+//! Serving observability: the counter set behind
+//! [`crate::serve::Server::stats`].
 //!
-//! The histogram uses 8 linear sub-buckets per power-of-two octave of
-//! nanoseconds (HDR-style), so percentile queries are accurate to
-//! ≤ 12.5% across the full ns..minutes range with a fixed 512-slot
-//! atomic array — recording is two atomic adds, cheap enough to sit on
-//! the per-request completion path.
+//! The latency histogram is the crate-wide log-bucketed
+//! [`crate::telemetry::Histogram`] (8 linear sub-buckets per
+//! power-of-two octave, ≤ 12.5% quantile error, lock-free) — re-exported
+//! here under its historical serving names. The serve tier was the
+//! first user of that histogram; `kitsune::telemetry` generalized it so
+//! per-stage compute/queue-wait timings and request latencies share one
+//! implementation (and its unit tests, which live in
+//! `telemetry::hist`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
 
-/// Buckets: 8 exact slots for 0..8 ns, then 8 sub-buckets per octave.
-const N_BUCKETS: usize = 512;
-
-/// Lock-free latency histogram (concurrent `record`, snapshot reads).
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_ns: AtomicU64,
-    max_ns: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_ns: AtomicU64::new(0),
-            max_ns: AtomicU64::new(0),
-        }
-    }
-}
-
-/// Bucket index for a nanosecond value: identity below 8, then
-/// `8 + octave*8 + top-3-bits-after-the-leading-1`.
-fn bucket_of(ns: u64) -> usize {
-    if ns < 8 {
-        return ns as usize;
-    }
-    let msb = 63 - ns.leading_zeros() as u64; // >= 3
-    let sub = (ns >> (msb - 3)) & 0x7;
-    (8 + (msb - 3) * 8 + sub) as usize
-}
-
-/// Upper bound (ns) of a bucket — the value percentile queries report.
-fn bucket_upper(idx: usize) -> u64 {
-    if idx < 8 {
-        return idx as u64 + 1;
-    }
-    let o = (idx - 8) / 8;
-    let sub = ((idx - 8) % 8) as u64;
-    ((8 + sub) << o) + (1u64 << o)
-}
-
-impl LatencyHistogram {
-    pub fn record(&self, d: Duration) {
-        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
-        let idx = bucket_of(ns).min(N_BUCKETS - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
-        self.max_ns.fetch_max(ns, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Latency at quantile `q` in `[0, 1]`, as the upper bound of the
-    /// bucket where the cumulative count crosses `q * count` (≤ 12.5%
-    /// overestimate). Zero when nothing has been recorded.
-    pub fn quantile_ns(&self, q: f64) -> u64 {
-        let total = self.count.load(Ordering::Relaxed);
-        if total == 0 {
-            return 0;
-        }
-        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (idx, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= rank {
-                return bucket_upper(idx);
-            }
-        }
-        self.max_ns.load(Ordering::Relaxed)
-    }
-
-    pub fn snapshot(&self) -> LatencySnapshot {
-        let count = self.count.load(Ordering::Relaxed);
-        let mean_ns = if count == 0 {
-            0.0
-        } else {
-            self.sum_ns.load(Ordering::Relaxed) as f64 / count as f64
-        };
-        LatencySnapshot {
-            count,
-            mean_ms: mean_ns * 1e-6,
-            p50_ms: self.quantile_ns(0.50) as f64 * 1e-6,
-            p95_ms: self.quantile_ns(0.95) as f64 * 1e-6,
-            p99_ms: self.quantile_ns(0.99) as f64 * 1e-6,
-            max_ms: self.max_ns.load(Ordering::Relaxed) as f64 * 1e-6,
-        }
-    }
-}
-
-/// Point-in-time percentile summary of one histogram.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct LatencySnapshot {
-    pub count: u64,
-    pub mean_ms: f64,
-    pub p50_ms: f64,
-    pub p95_ms: f64,
-    pub p99_ms: f64,
-    pub max_ms: f64,
-}
+/// The crate-wide log-bucketed duration histogram, under its historical
+/// serving-tier name.
+pub use crate::telemetry::Histogram as LatencyHistogram;
+pub use crate::telemetry::LatencySnapshot;
 
 /// The serve tier's counters + end-to-end latency histogram. All fields
 /// are updated lock-free by the submit path and the dispatcher.
@@ -209,48 +111,37 @@ impl ServeStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
+    // Bucket-shape unit tests moved to `crate::telemetry::hist` with the
+    // histogram itself; this exercises the serving-side re-export.
     #[test]
-    fn buckets_are_monotone_and_cover_range() {
-        let mut prev = 0u64;
-        for idx in 0..N_BUCKETS {
-            let up = bucket_upper(idx);
-            assert!(up > prev, "bucket {idx}: {up} <= {prev}");
-            prev = up;
-        }
-        // Round trip: a value lands in a bucket whose bound is within
-        // 12.5% above it.
-        for ns in [1u64, 7, 8, 100, 1_000, 55_555, 1_000_000, 123_456_789] {
-            let up = bucket_upper(bucket_of(ns));
-            assert!(up > ns, "{ns} -> {up}");
-            assert!((up as f64) <= ns as f64 * 1.125 + 1.0, "{ns} -> {up}");
-        }
-    }
-
-    #[test]
-    fn quantiles_track_recorded_distribution() {
+    fn latency_histogram_is_the_shared_telemetry_histogram() {
         let h = LatencyHistogram::default();
-        // 90 fast (1ms) + 10 slow (100ms).
         for _ in 0..90 {
             h.record(Duration::from_millis(1));
         }
         for _ in 0..10 {
             h.record(Duration::from_millis(100));
         }
-        let s = h.snapshot();
+        let s: LatencySnapshot = h.snapshot();
         assert_eq!(s.count, 100);
         assert!(s.p50_ms >= 1.0 && s.p50_ms < 1.2, "p50 {}", s.p50_ms);
         assert!(s.p99_ms >= 100.0 && s.p99_ms < 120.0, "p99 {}", s.p99_ms);
-        assert!(s.max_ms >= 100.0);
-        assert!(s.mean_ms > 1.0 && s.mean_ms < 100.0);
     }
 
     #[test]
-    fn empty_histogram_reports_zeros() {
-        let h = LatencyHistogram::default();
-        assert_eq!(h.quantile_ns(0.99), 0);
-        let s = h.snapshot();
-        assert_eq!(s.count, 0);
-        assert_eq!(s.p50_ms, 0.0);
+    fn resolved_counts_every_terminal_bucket() {
+        let stats = ServeStats::default();
+        stats.admitted.store(10, Ordering::Relaxed);
+        stats.completed.store(6, Ordering::Relaxed);
+        stats.failed.store(1, Ordering::Relaxed);
+        stats.shed_deadline.store(2, Ordering::Relaxed);
+        stats.shed_shutdown.store(1, Ordering::Relaxed);
+        stats.retried.store(4, Ordering::Relaxed);
+        let s = stats.snapshot(0, 0, 0.0);
+        assert_eq!(s.shed(), 3);
+        assert_eq!(s.resolved(), 10);
+        assert_eq!(s.admitted, s.resolved(), "retries are not terminal");
     }
 }

@@ -569,6 +569,20 @@ impl Session {
         self.service.as_ref().map(PipelineService::metrics).unwrap_or_default()
     }
 
+    /// Cross-layer telemetry for the warm pipeline (inference service or
+    /// training executor): per-stage tile counts and latency histograms,
+    /// per-edge occupancy/stall counters, and the dataflow traffic
+    /// accountant. `None` for cold / simulation-only sessions.
+    pub fn telemetry(&self) -> Option<&Arc<crate::telemetry::PipelineTelemetry>> {
+        if let Some(svc) = &self.service {
+            return Some(svc.telemetry());
+        }
+        if let Some(TrainState { service: Some(svc), .. }) = &self.train {
+            return Some(svc.telemetry());
+        }
+        None
+    }
+
     /// Current health of the warm pipeline (inference service or
     /// training executor): `Degraded` while a failed stage is being
     /// restarted, `Failed` once a restart budget is exhausted or a
@@ -630,6 +644,11 @@ impl Session {
         if let Some(TrainState { service: Some(svc), .. }) = &self.train {
             svc.shutdown();
         }
+        // If tracing is armed (`KITSUNE_TRACE` or `telemetry::trace::enable`),
+        // persist whatever spans accumulated so far. Idempotent: flush
+        // rewrites the complete file each time, so multiple sessions (or
+        // shutdown + Drop) just leave the latest superset on disk.
+        let _ = crate::telemetry::trace::flush();
     }
 
     fn no_stream_err(&self) -> anyhow::Error {

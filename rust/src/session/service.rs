@@ -49,10 +49,30 @@ use crate::graph::ResourceClass;
 use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::{ArtifactStore, Tensor};
 use crate::sched::{self, LiveCount, Scheduler};
+use crate::telemetry::{
+    trace, EdgeKind, EdgeStats, PipelineTelemetry, StageTelemetry, TrafficStats,
+};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Payload bytes of one envelope (poison records move no tensor data).
+fn env_bytes(env: &Envelope<Tensor>) -> u64 {
+    match env {
+        Envelope::Ok(t) => (t.data.len() * std::mem::size_of::<f32>()) as u64,
+        Envelope::Poison(_) => 0,
+    }
+}
+
+/// Account a successful push's payload against the queue's edge stats
+/// and the pipeline's traffic classification.
+fn account_push(q: &RingQueue<Tile>, traffic: &TrafficStats, bytes: u64) {
+    if let Some(e) = q.telemetry() {
+        e.bytes.add(bytes);
+        traffic.record_edge(e.kind, bytes);
+    }
+}
 
 /// One tile in flight: owning ticket, index within the batch, payload —
 /// a live tensor or the poison record of the failure that consumed it.
@@ -221,36 +241,18 @@ impl Ticket {
     }
 }
 
-/// Per-stage counters, updated lock-free by the stage's workers.
-struct StageStat {
-    name: String,
-    class: ResourceClass,
-    workers: usize,
-    tiles: AtomicUsize,
-    busy_ns: AtomicU64,
-    wait_ns: AtomicU64,
-}
-
-impl StageStat {
-    fn snapshot(&self) -> StageMetrics {
-        StageMetrics {
-            name: self.name.clone(),
-            class: self.class,
-            workers: self.workers,
-            tiles: self.tiles.load(Ordering::Relaxed),
-            busy_s: self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
-            wait_s: self.wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
-        }
-    }
-}
-
 /// Persistent stage pumps + ring queues for one pipeline.
 pub struct PipelineService {
     source: Arc<RingQueue<Tile>>,
     /// Countdown of live pump tasks; shutdown drains it to zero so no
     /// scheduler task still references stage state when it returns.
     live: Arc<LiveCount>,
-    stats: Arc<Vec<StageStat>>,
+    /// Per-stage/per-edge metrics and traffic accounting, registered
+    /// with [`crate::telemetry::snapshot`] for the service's lifetime.
+    telemetry: Arc<PipelineTelemetry>,
+    /// Resource class per stage (parallel to `telemetry.stages`), kept
+    /// for the [`StageMetrics`] view.
+    classes: Vec<ResourceClass>,
     spawned: Arc<AtomicUsize>,
     /// Submit/shutdown synchronization. `RingQueue::close` is advisory
     /// (a push racing the close may land a value no consumer will pop —
@@ -307,20 +309,50 @@ impl PipelineService {
             }
         }
         let policy = RestartPolicy::from_env();
-        let stats: Arc<Vec<StageStat>> = Arc::new(
-            pipeline
-                .stages
-                .iter()
-                .map(|s| StageStat {
-                    name: s.name.clone(),
-                    class: s.class,
-                    workers: s.workers,
-                    tiles: AtomicUsize::new(0),
-                    busy_ns: AtomicU64::new(0),
-                    wait_ns: AtomicU64::new(0),
-                })
-                .collect(),
-        );
+        let stage_telems: Vec<StageTelemetry> = pipeline
+            .stages
+            .iter()
+            .map(|s| {
+                let weight_bytes = s
+                    .weights
+                    .iter()
+                    .map(|w| (w.data.len() * std::mem::size_of::<f32>()) as u64)
+                    .sum();
+                StageTelemetry::new(
+                    s.name.clone(),
+                    format!("{:?}", s.class).to_lowercase(),
+                    s.workers,
+                    weight_bytes,
+                )
+            })
+            .collect();
+        // Edge telemetry: queue 0 is host injection (off-chip-analog),
+        // the last queue drains to the sink (off-chip-analog), everything
+        // between is a stage-to-stage crossing (on-chip-analog).
+        let edges: Vec<Arc<EdgeStats>> = (0..=n_stages)
+            .map(|i| {
+                let (label, kind) = if i == 0 {
+                    (format!("source->{}", pipeline.stages[0].name), EdgeKind::Source)
+                } else if i == n_stages {
+                    (format!("{}->sink", pipeline.stages[i - 1].name), EdgeKind::Sink)
+                } else {
+                    (
+                        format!(
+                            "{}->{}",
+                            pipeline.stages[i - 1].name,
+                            pipeline.stages[i].name
+                        ),
+                        EdgeKind::Interior,
+                    )
+                };
+                Arc::new(EdgeStats::new(label, kind, queues[i].capacity()))
+            })
+            .collect();
+        for (q, e) in queues.iter().zip(&edges) {
+            q.attach_telemetry(Arc::clone(e));
+        }
+        let telemetry = PipelineTelemetry::register(pipeline.name.clone(), stage_telems, edges);
+        let classes: Vec<ResourceClass> = pipeline.stages.iter().map(|s| s.class).collect();
         let scheduler = sched::current();
         let total_pumps = pipeline.stages.iter().map(|s| s.workers).sum::<usize>() + 1;
         let live = LiveCount::new(total_pumps);
@@ -336,7 +368,7 @@ impl PipelineService {
                 weights: Arc::clone(&stage.weights),
                 in_q: Arc::clone(&queues[si]),
                 out_q: Arc::clone(&queues[si + 1]),
-                stats: Arc::clone(&stats),
+                telemetry: Arc::clone(&telemetry),
                 si,
                 // Countdown latch: the stage's last pump to retire closes
                 // the downstream queue, so sibling pushes are never cut
@@ -380,7 +412,8 @@ impl PipelineService {
         Ok(PipelineService {
             source: Arc::clone(&queues[0]),
             live,
-            stats,
+            telemetry,
+            classes,
             spawned,
             gate: std::sync::RwLock::new(false),
             tile_dims,
@@ -411,7 +444,16 @@ impl PipelineService {
         let submitted = Instant::now();
         for (i, t) in inputs.into_iter().enumerate() {
             let item = (Arc::clone(&inner), i, Envelope::Ok(t));
-            if let Err(PushError::Closed(_)) = self.source.push(item) {
+            let bytes = env_bytes(&item.2);
+            match self.source.push(item) {
+                Ok(()) => {
+                    account_push(&self.source, &self.telemetry.traffic, bytes);
+                    continue;
+                }
+                Err(PushError::Full(_)) => unreachable!("blocking push returned Full"),
+                Err(PushError::Closed(_)) => {}
+            }
+            {
                 // The source is closed: either an injected edge-0 fault
                 // or (belt-and-braces — the gate makes it unreachable) a
                 // racing shutdown. Resolve this and every unpushed slot
@@ -425,9 +467,29 @@ impl PipelineService {
         Ok(Ticket { inner, submitted })
     }
 
-    /// Per-stage metrics accumulated since the service started.
+    /// Per-stage metrics accumulated since the service started (the
+    /// compact [`StageMetrics`] view; full histograms and edge/traffic
+    /// detail via [`PipelineService::telemetry`]).
     pub fn metrics(&self) -> Vec<StageMetrics> {
-        self.stats.iter().map(StageStat::snapshot).collect()
+        self.telemetry
+            .stages
+            .iter()
+            .zip(&self.classes)
+            .map(|(t, &class)| StageMetrics {
+                name: t.name.clone(),
+                class,
+                workers: t.workers,
+                tiles: t.compute.count() as usize,
+                busy_s: t.compute.sum_ns() as f64 * 1e-9,
+                wait_s: (t.queue_wait.sum_ns() + t.emit.sum_ns()) as f64 * 1e-9,
+            })
+            .collect()
+    }
+
+    /// This pipeline's full telemetry (stages, edges, traffic) — also
+    /// reachable process-wide via [`crate::telemetry::snapshot`].
+    pub fn telemetry(&self) -> &Arc<PipelineTelemetry> {
+        &self.telemetry
     }
 
     /// Tiles currently between `submit` and ticket resolution — the
@@ -505,7 +567,7 @@ struct StageShared {
     weights: Arc<Vec<Tensor>>,
     in_q: Arc<RingQueue<Tile>>,
     out_q: Arc<RingQueue<Tile>>,
-    stats: Arc<Vec<StageStat>>,
+    telemetry: Arc<PipelineTelemetry>,
     si: usize,
     latch: AtomicUsize,
     live: Arc<LiveCount>,
@@ -538,13 +600,26 @@ struct StagePump {
     /// but forward every tile as poison carrying this failure, so every
     /// ticket behind the dead stage still resolves typed.
     dead: Option<StageFailure>,
-    /// When the pump parked (for wait-time accounting on resume).
-    parked: Option<Instant>,
+    /// When and why the pump parked, for wait-time attribution on
+    /// resume: input starvation (queue-wait) vs downstream backpressure
+    /// (emit) vs supervised restart backoff.
+    parked: Option<(Instant, ParkKind)>,
+}
+
+/// Why a pump left the scheduler (see [`StagePump::parked`]).
+#[derive(Clone, Copy)]
+enum ParkKind {
+    /// Input edge empty: starvation — accounted as queue-wait.
+    Item,
+    /// Output edge full: backpressure — accounted as emit time.
+    Space,
+    /// Supervised restart backoff — accounted as queue-wait.
+    Backoff,
 }
 
 impl StagePump {
-    fn stat(&self) -> &StageStat {
-        &self.shared.stats[self.shared.si]
+    fn stat(&self) -> &StageTelemetry {
+        &self.shared.telemetry.stages[self.shared.si]
     }
 
     /// The typed failure for a tile this pump must drop (downstream or
@@ -562,16 +637,37 @@ impl StagePump {
     /// Run until out of work (park on a queue waker), out of input
     /// (retire), or out of time-slice (re-inject). Never blocks.
     fn run(mut self) {
-        if let Some(p0) = self.parked.take() {
-            self.stat().wait_ns.fetch_add(p0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some((p0, kind)) = self.parked.take() {
+            let waited = p0.elapsed();
+            match kind {
+                ParkKind::Item | ParkKind::Backoff => {
+                    self.stat().queue_wait.record(waited);
+                    if let Some(e) = self.shared.in_q.telemetry() {
+                        e.empty_stall_ns.add(waited.as_nanos() as u64);
+                    }
+                }
+                ParkKind::Space => {
+                    self.stat().emit.record(waited);
+                    if let Some(e) = self.shared.out_q.telemetry() {
+                        e.full_stall_ns.add(waited.as_nanos() as u64);
+                    }
+                }
+            }
         }
         let mut quota = PUMP_YIELD_TILES;
         loop {
             // 1. Flush the pending output first: it holds the loop
             // invariant that at most one computed tile is buffered.
             if let Some(tile) = self.pending.take() {
+                let live = matches!(tile.2, Envelope::Ok(_));
+                let bytes = env_bytes(&tile.2);
                 match self.shared.out_q.try_push(tile) {
-                    Ok(()) => {}
+                    Ok(()) => {
+                        account_push(&self.shared.out_q, &self.shared.telemetry.traffic, bytes);
+                        if live {
+                            self.stat().tiles_out.inc();
+                        }
+                    }
                     Err(PushError::Full(t)) => {
                         self.pending = Some(t);
                         return self.park_on_space();
@@ -617,6 +713,7 @@ impl StagePump {
                     }
                     Envelope::Ok(tile) => {
                         let seq = self.shared.tiles_seen.fetch_add(1, Ordering::Relaxed);
+                        self.stat().tiles_in.inc();
                         let b0 = Instant::now();
                         let shared = &self.shared;
                         let result =
@@ -634,11 +731,14 @@ impl StagePump {
                             });
                         match result {
                             Ok(out) => {
-                                self.stat().busy_ns.fetch_add(
-                                    b0.elapsed().as_nanos() as u64,
-                                    Ordering::Relaxed,
-                                );
-                                self.stat().tiles.fetch_add(1, Ordering::Relaxed);
+                                let stat = self.stat();
+                                stat.compute.record(b0.elapsed());
+                                self.shared
+                                    .telemetry
+                                    .traffic
+                                    .weight_bytes
+                                    .add(stat.weight_bytes_per_tile);
+                                trace::span("compute", &stat.name, Some(seq), b0);
                                 self.pending = Some((ticket, idx, Envelope::Ok(out)));
                             }
                             Err(failure) => {
@@ -672,7 +772,7 @@ impl StagePump {
         let attempt = shared.restarts.fetch_add(1, Ordering::SeqCst);
         if attempt < shared.policy.max_restarts {
             let delay = shared.policy.backoff(attempt);
-            self.parked = Some(Instant::now());
+            self.parked = Some((Instant::now(), ParkKind::Backoff));
             // A detached timer thread, not a pool task: sleeping must not
             // occupy a scheduler worker. Bounded by the restart budget.
             std::thread::spawn(move || {
@@ -695,7 +795,7 @@ impl StagePump {
     /// re-injects the pump; it is fired at most once, so exactly one
     /// incarnation of the pump ever exists.
     fn park_on_item(mut self) {
-        self.parked = Some(Instant::now());
+        self.parked = Some((Instant::now(), ParkKind::Item));
         let q = Arc::clone(&self.shared.in_q);
         let sched = Arc::clone(&self.shared.sched);
         q.park_on_item(Box::new(move || {
@@ -705,7 +805,7 @@ impl StagePump {
 
     /// Park until the output edge has space (or closes).
     fn park_on_space(mut self) {
-        self.parked = Some(Instant::now());
+        self.parked = Some((Instant::now(), ParkKind::Space));
         let q = Arc::clone(&self.shared.out_q);
         let sched = Arc::clone(&self.shared.sched);
         q.park_on_space(Box::new(move || {

@@ -1,0 +1,702 @@
+//! `kitsune::telemetry` — cross-layer observability: per-stage metrics,
+//! ring-queue edge accounting, scheduler worker tallies, dataflow
+//! traffic classification, and Chrome-trace span export.
+//!
+//! The paper's headline numbers are observability numbers — 41–98%
+//! off-chip traffic reduction and higher utilization from dataflow
+//! execution (Figs 9/13). This module is the host-level counterpart:
+//!
+//! - **Metrics core** — lock-free [`Counter`]s and log-bucket
+//!   [`Histogram`]s (shared with `serve::stats`) recording tile
+//!   queue-wait / compute / emit time per stage, push-full / pop-empty
+//!   stalls and occupancy per ring-queue edge, and busy/steal/park
+//!   tallies per scheduler worker. [`snapshot`] collects everything
+//!   into a [`TelemetrySnapshot`]; [`prometheus`] renders the
+//!   Prometheus text exposition served by the serve tier.
+//! - **Traffic accounting** — every byte a pipeline moves is classified
+//!   as *on-chip-analog* (crossing a ring-queue edge between resident
+//!   stages — traffic the paper's dataflow execution keeps in shared
+//!   memory/L2) or *off-chip-analog* (parameter reads, source
+//!   injection, sink drains — traffic that hits DRAM either way).
+//!   [`TrafficSnapshot::reduction`] reports the dataflow-vs-serial-
+//!   oracle reduction ratio: the serial baseline pays every on-chip
+//!   byte twice (producer store + consumer load to DRAM).
+//! - **Trace export** — see [`trace`]: spans behind `KITSUNE_TRACE`.
+//!
+//! Counters are always on; the overhead discipline (< 2% warm
+//! throughput, pinned by `benches/traffic_accounting.rs` as
+//! `telemetry_overhead`) matches the fault harness's `fault_overhead`.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, LatencySnapshot};
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+/// A lock-free monotonically-increasing counter (relaxed ordering:
+/// telemetry reads are statistical, never synchronizing).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the stored value to at least `n` (for high-water marks).
+    #[inline]
+    pub fn record_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global queue counters
+// ---------------------------------------------------------------------
+
+/// Aggregate ring-queue counters across every queue in the process
+/// (per-edge detail lives in [`EdgeStats`] on registered pipelines).
+pub struct QueueCounters {
+    /// Successful `try_push`es.
+    pub pushes: Counter,
+    /// Items delivered by `try_pop`/`try_pop_many`.
+    pub pops: Counter,
+    /// `try_push` attempts that found the ring full.
+    pub full_stalls: Counter,
+    /// `try_pop` attempts that found the ring empty.
+    pub empty_stalls: Counter,
+    /// Bounded-spin iterations burned inside blocking `push`/`pop`
+    /// before the caller parks (the idle-CPU contract in
+    /// `tests/idle_cpu.rs`: warm idle pipelines must not accumulate
+    /// these).
+    pub idle_spins: Counter,
+}
+
+/// The process-wide [`QueueCounters`] instance `queue::host` records into.
+pub static QUEUE: QueueCounters = QueueCounters {
+    pushes: Counter::new(),
+    pops: Counter::new(),
+    full_stalls: Counter::new(),
+    empty_stalls: Counter::new(),
+    idle_spins: Counter::new(),
+};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    pub pushes: u64,
+    pub pops: u64,
+    pub full_stalls: u64,
+    pub empty_stalls: u64,
+    pub idle_spins: u64,
+}
+
+impl QueueCounters {
+    pub fn snapshot(&self) -> QueueSnapshot {
+        QueueSnapshot {
+            pushes: self.pushes.get(),
+            pops: self.pops.get(),
+            full_stalls: self.full_stalls.get(),
+            empty_stalls: self.empty_stalls.get(),
+            idle_spins: self.idle_spins.get(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scheduler worker tallies
+// ---------------------------------------------------------------------
+
+/// Per-worker tallies owned by `sched::Scheduler` and updated by the
+/// worker loop.
+#[derive(Default)]
+pub struct WorkerStats {
+    /// Tasks executed (from any source).
+    pub tasks: Counter,
+    /// Tasks obtained by stealing from another worker's deque.
+    pub steals: Counter,
+    /// Times the worker gave up spinning and parked on the idle condvar.
+    pub parks: Counter,
+    /// Time spent inside task bodies.
+    pub busy_ns: Counter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    pub tasks: u64,
+    pub steals: u64,
+    pub parks: u64,
+    pub busy_s: f64,
+}
+
+impl WorkerStats {
+    pub fn snapshot(&self, worker: usize) -> WorkerSnapshot {
+        WorkerSnapshot {
+            worker,
+            tasks: self.tasks.get(),
+            steals: self.steals.get(),
+            parks: self.parks.get(),
+            busy_s: self.busy_ns.get() as f64 * 1e-9,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ring-queue edges
+// ---------------------------------------------------------------------
+
+/// How an edge's bytes are classified for traffic accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Host → first stage injection (off-chip-analog).
+    Source,
+    /// Stage → stage crossing between co-resident stages — the traffic
+    /// dataflow execution keeps on-chip.
+    Interior,
+    /// Last stage → host drain (off-chip-analog).
+    Sink,
+}
+
+impl EdgeKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EdgeKind::Source => "source",
+            EdgeKind::Interior => "interior",
+            EdgeKind::Sink => "sink",
+        }
+    }
+}
+
+/// Per-edge counters, attached to one `RingQueue` at service build
+/// time. Push/pop/stall counts are recorded by the queue itself; bytes
+/// are recorded by the producer (which knows the tile payload size).
+pub struct EdgeStats {
+    pub label: String,
+    pub kind: EdgeKind,
+    pub capacity: usize,
+    pub pushes: Counter,
+    pub pops: Counter,
+    /// Payload bytes pushed across this edge.
+    pub bytes: Counter,
+    /// `try_push` attempts that found the ring full.
+    pub full_stalls: Counter,
+    /// `try_pop` attempts that found the ring empty.
+    pub empty_stalls: Counter,
+    /// Time producers spent blocked/parked waiting for space.
+    pub full_stall_ns: Counter,
+    /// Time consumers spent blocked/parked waiting for items.
+    pub empty_stall_ns: Counter,
+    /// Sum of post-push occupancy samples (mean = depth_sum / pushes).
+    pub depth_sum: Counter,
+    pub max_depth: Counter,
+}
+
+impl EdgeStats {
+    pub fn new(label: impl Into<String>, kind: EdgeKind, capacity: usize) -> Self {
+        EdgeStats {
+            label: label.into(),
+            kind,
+            capacity,
+            pushes: Counter::new(),
+            pops: Counter::new(),
+            bytes: Counter::new(),
+            full_stalls: Counter::new(),
+            empty_stalls: Counter::new(),
+            full_stall_ns: Counter::new(),
+            empty_stall_ns: Counter::new(),
+            depth_sum: Counter::new(),
+            max_depth: Counter::new(),
+        }
+    }
+
+    /// Record a post-push occupancy observation.
+    #[inline]
+    pub fn sample_depth(&self, depth: usize) {
+        self.depth_sum.add(depth as u64);
+        self.max_depth.record_max(depth as u64);
+    }
+
+    pub fn snapshot(&self) -> EdgeSnapshot {
+        let pushes = self.pushes.get();
+        let mean_depth =
+            if pushes == 0 { 0.0 } else { self.depth_sum.get() as f64 / pushes as f64 };
+        EdgeSnapshot {
+            label: self.label.clone(),
+            kind: self.kind,
+            capacity: self.capacity,
+            pushes,
+            pops: self.pops.get(),
+            bytes: self.bytes.get(),
+            full_stalls: self.full_stalls.get(),
+            empty_stalls: self.empty_stalls.get(),
+            full_stall_s: self.full_stall_ns.get() as f64 * 1e-9,
+            empty_stall_s: self.empty_stall_ns.get() as f64 * 1e-9,
+            mean_depth,
+            max_depth: self.max_depth.get(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeSnapshot {
+    pub label: String,
+    pub kind: EdgeKind,
+    pub capacity: usize,
+    pub pushes: u64,
+    pub pops: u64,
+    pub bytes: u64,
+    pub full_stalls: u64,
+    pub empty_stalls: u64,
+    pub full_stall_s: f64,
+    pub empty_stall_s: f64,
+    pub mean_depth: f64,
+    pub max_depth: u64,
+}
+
+// ---------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------
+
+/// Per-stage metrics: tile conservation counters plus the three
+/// per-tile time histograms the paper's utilization argument needs
+/// (queue-wait = input starvation, compute = useful work, emit =
+/// downstream backpressure).
+pub struct StageTelemetry {
+    pub name: String,
+    pub class: String,
+    pub workers: usize,
+    /// Bytes of stage parameters re-read per tile (off-chip-analog).
+    pub weight_bytes_per_tile: u64,
+    /// Live tiles accepted for compute.
+    pub tiles_in: Counter,
+    /// Live tiles emitted downstream (or to the sink).
+    pub tiles_out: Counter,
+    /// Episodes parked waiting for input tiles.
+    pub queue_wait: Histogram,
+    /// Per-tile kernel execution time.
+    pub compute: Histogram,
+    /// Episodes parked waiting for downstream space.
+    pub emit: Histogram,
+}
+
+impl StageTelemetry {
+    pub fn new(
+        name: impl Into<String>,
+        class: impl Into<String>,
+        workers: usize,
+        weight_bytes_per_tile: u64,
+    ) -> Self {
+        StageTelemetry {
+            name: name.into(),
+            class: class.into(),
+            workers,
+            weight_bytes_per_tile,
+            tiles_in: Counter::new(),
+            tiles_out: Counter::new(),
+            queue_wait: Histogram::default(),
+            compute: Histogram::default(),
+            emit: Histogram::default(),
+        }
+    }
+
+    pub fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            name: self.name.clone(),
+            class: self.class.clone(),
+            workers: self.workers,
+            tiles_in: self.tiles_in.get(),
+            tiles_out: self.tiles_out.get(),
+            queue_wait: self.queue_wait.snapshot(),
+            compute: self.compute.snapshot(),
+            emit: self.emit.snapshot(),
+            busy_s: self.compute.sum_ns() as f64 * 1e-9,
+            wait_s: (self.queue_wait.sum_ns() + self.emit.sum_ns()) as f64 * 1e-9,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnapshot {
+    pub name: String,
+    pub class: String,
+    pub workers: usize,
+    pub tiles_in: u64,
+    pub tiles_out: u64,
+    pub queue_wait: LatencySnapshot,
+    pub compute: LatencySnapshot,
+    pub emit: LatencySnapshot,
+    /// Total compute time across workers.
+    pub busy_s: f64,
+    /// Total starvation + backpressure time across workers.
+    pub wait_s: f64,
+}
+
+// ---------------------------------------------------------------------
+// Traffic accounting
+// ---------------------------------------------------------------------
+
+/// Byte movement classified by locality analog. Recorded by the
+/// services (which know payload sizes); edges contribute via
+/// [`TrafficStats::record_edge`].
+#[derive(Default)]
+pub struct TrafficStats {
+    /// Host → pipeline injection (off-chip-analog).
+    pub source_bytes: Counter,
+    /// Stage → stage ring-queue crossings (on-chip-analog).
+    pub onchip_bytes: Counter,
+    /// Pipeline → host drains (off-chip-analog).
+    pub sink_bytes: Counter,
+    /// Parameter/weight reads per tile (off-chip-analog).
+    pub weight_bytes: Counter,
+}
+
+impl TrafficStats {
+    #[inline]
+    pub fn record_edge(&self, kind: EdgeKind, bytes: u64) {
+        match kind {
+            EdgeKind::Source => self.source_bytes.add(bytes),
+            EdgeKind::Interior => self.onchip_bytes.add(bytes),
+            EdgeKind::Sink => self.sink_bytes.add(bytes),
+        }
+    }
+
+    pub fn snapshot(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            source_bytes: self.source_bytes.get(),
+            onchip_bytes: self.onchip_bytes.get(),
+            sink_bytes: self.sink_bytes.get(),
+            weight_bytes: self.weight_bytes.get(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficSnapshot {
+    pub source_bytes: u64,
+    pub onchip_bytes: u64,
+    pub sink_bytes: u64,
+    pub weight_bytes: u64,
+}
+
+impl TrafficSnapshot {
+    /// Off-chip-analog bytes under dataflow execution: intermediates
+    /// ride the ring queues, so only injection, drains, and parameter
+    /// reads touch the DRAM analog.
+    pub fn dataflow_offchip_bytes(&self) -> u64 {
+        self.source_bytes + self.sink_bytes + self.weight_bytes
+    }
+
+    /// Off-chip-analog bytes for the serial oracle over the *same*
+    /// tile stream: every intermediate is stored by its producer and
+    /// re-loaded by its consumer, so each on-chip byte is paid twice.
+    pub fn serial_offchip_bytes(&self) -> u64 {
+        self.dataflow_offchip_bytes() + 2 * self.onchip_bytes
+    }
+
+    /// Fractional off-chip traffic reduction of dataflow over the
+    /// serial oracle — the repo's analog of the paper's 41–98% figures.
+    pub fn reduction(&self) -> f64 {
+        let serial = self.serial_offchip_bytes();
+        if serial == 0 {
+            return 0.0;
+        }
+        1.0 - self.dataflow_offchip_bytes() as f64 / serial as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline registry
+// ---------------------------------------------------------------------
+
+/// One pipeline's full telemetry: stages, edges, traffic. Created by
+/// `PipelineService`/`TrainService` at build time and registered
+/// process-wide (weakly — dropping the service unregisters it).
+pub struct PipelineTelemetry {
+    pub name: String,
+    pub stages: Vec<StageTelemetry>,
+    pub edges: Vec<Arc<EdgeStats>>,
+    pub traffic: TrafficStats,
+}
+
+impl PipelineTelemetry {
+    /// Build and register. The returned `Arc` is owned by the service;
+    /// [`snapshot`] sees it for as long as the service lives.
+    pub fn register(
+        name: impl Into<String>,
+        stages: Vec<StageTelemetry>,
+        edges: Vec<Arc<EdgeStats>>,
+    ) -> Arc<Self> {
+        let p = Arc::new(PipelineTelemetry {
+            name: name.into(),
+            stages,
+            edges,
+            traffic: TrafficStats::default(),
+        });
+        let mut reg = registry().lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.push(Arc::downgrade(&p));
+        p
+    }
+
+    pub fn snapshot(&self) -> PipelineSnapshot {
+        PipelineSnapshot {
+            name: self.name.clone(),
+            stages: self.stages.iter().map(StageTelemetry::snapshot).collect(),
+            edges: self.edges.iter().map(|e| e.snapshot()).collect(),
+            traffic: self.traffic.snapshot(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSnapshot {
+    pub name: String,
+    pub stages: Vec<StageSnapshot>,
+    pub edges: Vec<EdgeSnapshot>,
+    pub traffic: TrafficSnapshot,
+}
+
+fn registry() -> &'static Mutex<Vec<Weak<PipelineTelemetry>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Weak<PipelineTelemetry>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Point-in-time view of the whole process: queue aggregates, scheduler
+/// workers, and every live registered pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub queue: QueueSnapshot,
+    pub workers: Vec<WorkerSnapshot>,
+    pub pipelines: Vec<PipelineSnapshot>,
+}
+
+/// Collect a [`TelemetrySnapshot`] across all layers. Cheap (relaxed
+/// loads + one registry lock); never spawns the global scheduler.
+pub fn snapshot() -> TelemetrySnapshot {
+    let pipelines = registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .filter_map(Weak::upgrade)
+        .map(|p| p.snapshot())
+        .collect();
+    TelemetrySnapshot {
+        queue: QUEUE.snapshot(),
+        workers: crate::sched::worker_telemetry(),
+        pipelines,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl TelemetrySnapshot {
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (version 0.0.4) — the serve tier exposes this via
+    /// `Server::prometheus`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let q = &self.queue;
+        out.push_str("# TYPE kitsune_queue_ops_total counter\n");
+        let _ = writeln!(out, "kitsune_queue_ops_total{{op=\"push\"}} {}", q.pushes);
+        let _ = writeln!(out, "kitsune_queue_ops_total{{op=\"pop\"}} {}", q.pops);
+        out.push_str("# TYPE kitsune_queue_stalls_total counter\n");
+        let _ = writeln!(out, "kitsune_queue_stalls_total{{kind=\"full\"}} {}", q.full_stalls);
+        let _ = writeln!(out, "kitsune_queue_stalls_total{{kind=\"empty\"}} {}", q.empty_stalls);
+        out.push_str("# TYPE kitsune_queue_idle_spins_total counter\n");
+        let _ = writeln!(out, "kitsune_queue_idle_spins_total {}", q.idle_spins);
+
+        out.push_str("# TYPE kitsune_worker_tasks_total counter\n");
+        out.push_str("# TYPE kitsune_worker_steals_total counter\n");
+        out.push_str("# TYPE kitsune_worker_parks_total counter\n");
+        out.push_str("# TYPE kitsune_worker_busy_seconds_total counter\n");
+        for w in &self.workers {
+            let _ =
+                writeln!(out, "kitsune_worker_tasks_total{{worker=\"{}\"}} {}", w.worker, w.tasks);
+            let _ = writeln!(
+                out,
+                "kitsune_worker_steals_total{{worker=\"{}\"}} {}",
+                w.worker, w.steals
+            );
+            let _ =
+                writeln!(out, "kitsune_worker_parks_total{{worker=\"{}\"}} {}", w.worker, w.parks);
+            let _ = writeln!(
+                out,
+                "kitsune_worker_busy_seconds_total{{worker=\"{}\"}} {:.6}",
+                w.worker, w.busy_s
+            );
+        }
+
+        out.push_str("# TYPE kitsune_stage_tiles_total counter\n");
+        out.push_str("# TYPE kitsune_stage_seconds_total counter\n");
+        out.push_str("# TYPE kitsune_stage_compute_ms summary\n");
+        out.push_str("# TYPE kitsune_edge_bytes_total counter\n");
+        out.push_str("# TYPE kitsune_edge_stalls_total counter\n");
+        out.push_str("# TYPE kitsune_traffic_bytes_total counter\n");
+        for p in &self.pipelines {
+            let pl = escape_label(&p.name);
+            for s in &p.stages {
+                let sl = escape_label(&s.name);
+                let _ = writeln!(
+                    out,
+                    "kitsune_stage_tiles_total{{pipeline=\"{pl}\",stage=\"{sl}\",dir=\"in\"}} {}",
+                    s.tiles_in
+                );
+                let _ = writeln!(
+                    out,
+                    "kitsune_stage_tiles_total{{pipeline=\"{pl}\",stage=\"{sl}\",dir=\"out\"}} {}",
+                    s.tiles_out
+                );
+                for (phase, secs) in [
+                    ("compute", s.busy_s),
+                    ("queue_wait", s.queue_wait.count as f64 * s.queue_wait.mean_ms * 1e-3),
+                    ("emit", s.emit.count as f64 * s.emit.mean_ms * 1e-3),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "kitsune_stage_seconds_total{{pipeline=\"{pl}\",stage=\"{sl}\",\
+                         phase=\"{phase}\"}} {secs:.6}"
+                    );
+                }
+                for (qname, ms) in [
+                    ("0.5", s.compute.p50_ms),
+                    ("0.95", s.compute.p95_ms),
+                    ("0.99", s.compute.p99_ms),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "kitsune_stage_compute_ms{{pipeline=\"{pl}\",stage=\"{sl}\",\
+                         quantile=\"{qname}\"}} {ms:.6}"
+                    );
+                }
+            }
+            for e in &p.edges {
+                let el = escape_label(&e.label);
+                let _ = writeln!(
+                    out,
+                    "kitsune_edge_bytes_total{{pipeline=\"{pl}\",edge=\"{el}\",\
+                     kind=\"{}\"}} {}",
+                    e.kind.as_str(),
+                    e.bytes
+                );
+                let _ = writeln!(
+                    out,
+                    "kitsune_edge_stalls_total{{pipeline=\"{pl}\",edge=\"{el}\",\
+                     kind=\"full\"}} {}",
+                    e.full_stalls
+                );
+                let _ = writeln!(
+                    out,
+                    "kitsune_edge_stalls_total{{pipeline=\"{pl}\",edge=\"{el}\",\
+                     kind=\"empty\"}} {}",
+                    e.empty_stalls
+                );
+            }
+            let t = &p.traffic;
+            for (class, bytes) in [
+                ("source", t.source_bytes),
+                ("onchip", t.onchip_bytes),
+                ("sink", t.sink_bytes),
+                ("weights", t.weight_bytes),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "kitsune_traffic_bytes_total{{pipeline=\"{pl}\",class=\"{class}\"}} {bytes}"
+                );
+            }
+        }
+        out
+    }
+}
+
+/// [`snapshot`] rendered as Prometheus text — one call for exporters.
+pub fn prometheus() -> String {
+    snapshot().prometheus()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_reduction_matches_hand_computation() {
+        let t = TrafficStats::default();
+        t.record_edge(EdgeKind::Source, 100);
+        t.record_edge(EdgeKind::Interior, 400);
+        t.record_edge(EdgeKind::Sink, 50);
+        t.weight_bytes.add(150);
+        let s = t.snapshot();
+        assert_eq!(s.dataflow_offchip_bytes(), 300);
+        assert_eq!(s.serial_offchip_bytes(), 1100);
+        let expect = 1.0 - 300.0 / 1100.0;
+        assert!((s.reduction() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_traffic_reports_zero_reduction() {
+        let s = TrafficStats::default().snapshot();
+        assert_eq!(s.reduction(), 0.0);
+    }
+
+    #[test]
+    fn registry_drops_dead_pipelines() {
+        let p = PipelineTelemetry::register(
+            "reg-test-live",
+            vec![StageTelemetry::new("s0", "tensor", 1, 0)],
+            vec![Arc::new(EdgeStats::new("src->s0", EdgeKind::Source, 8))],
+        );
+        {
+            let dead = PipelineTelemetry::register("reg-test-dead", Vec::new(), Vec::new());
+            drop(dead);
+        }
+        let snap = snapshot();
+        assert!(snap.pipelines.iter().any(|x| x.name == "reg-test-live"));
+        assert!(!snap.pipelines.iter().any(|x| x.name == "reg-test-dead"));
+        drop(p);
+    }
+
+    #[test]
+    fn prometheus_exposition_names_every_layer() {
+        let p = PipelineTelemetry::register(
+            "prom-test",
+            vec![StageTelemetry::new("stage0", "tensor", 2, 64)],
+            vec![Arc::new(EdgeStats::new("source->stage0", EdgeKind::Source, 8))],
+        );
+        p.stages[0].tiles_in.add(3);
+        p.stages[0].compute.record(std::time::Duration::from_micros(10));
+        p.traffic.record_edge(EdgeKind::Interior, 1024);
+        let text = prometheus();
+        for needle in [
+            "kitsune_queue_ops_total{op=\"push\"}",
+            "kitsune_queue_idle_spins_total",
+            "kitsune_stage_tiles_total{pipeline=\"prom-test\",stage=\"stage0\",dir=\"in\"} 3",
+            "kitsune_edge_bytes_total{pipeline=\"prom-test\",edge=\"source->stage0\",kind=\"source\"}",
+            "kitsune_traffic_bytes_total{pipeline=\"prom-test\",class=\"onchip\"} 1024",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        drop(p);
+    }
+}

@@ -1,0 +1,191 @@
+//! Span recording behind the `KITSUNE_TRACE=<path>` knob, exported as
+//! Chrome-trace / Perfetto JSON (`chrome://tracing`, <https://ui.perfetto.dev>).
+//!
+//! When disabled (the default) every record call is one atomic load and
+//! a branch — cheap enough to leave in the per-tile hot path. When a
+//! trace path is armed (env knob or [`enable`] from the `kitsune trace`
+//! CLI), spans are buffered in memory and written on [`flush`]: one
+//! track per thread (scheduler workers keep their `kitsune-sched-N`
+//! names, so stage pumps show up on the worker that ran them), the
+//! stage/event name on the span, and the tile sequence number in
+//! `args`. The env knob follows the crate-wide warn-once policy
+//! ([`crate::sched::warn_env_once`]): a set-but-empty path warns once
+//! and disables tracing rather than erroring.
+
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Soft cap on buffered spans: beyond this the recorder drops (and
+/// counts) events instead of growing without bound on long runs.
+const MAX_EVENTS: usize = 1 << 20;
+
+struct Event {
+    tid: u64,
+    /// Span name — the stage or phase that ran.
+    name: String,
+    /// Category: "compute", "step", "dispatch", ...
+    cat: &'static str,
+    /// Tile sequence number, when the span covers one tile.
+    tile: Option<u64>,
+    ts_ns: u64,
+    dur_ns: u64,
+}
+
+#[derive(Default)]
+struct State {
+    events: Vec<Event>,
+    /// (tid, thread name) pairs, registered on a thread's first span.
+    threads: Vec<(u64, String)>,
+    dropped: u64,
+}
+
+struct Sink {
+    path: PathBuf,
+    epoch: Instant,
+    state: Mutex<State>,
+}
+
+static SINK: OnceLock<Option<Sink>> = OnceLock::new();
+
+fn sink() -> Option<&'static Sink> {
+    SINK.get_or_init(|| {
+        let raw = std::env::var("KITSUNE_TRACE").ok()?;
+        if raw.trim().is_empty() {
+            crate::sched::warn_env_once(
+                "KITSUNE_TRACE",
+                "kitsune: KITSUNE_TRACE is set but empty; tracing disabled",
+            );
+            return None;
+        }
+        Some(Sink { path: PathBuf::from(raw), epoch: Instant::now(), state: Mutex::default() })
+    })
+    .as_ref()
+}
+
+/// Arm tracing programmatically (the `kitsune trace` CLI path). Must be
+/// called before the first span is recorded — the sink latches on first
+/// use, so a later `enable` cannot redirect it. Returns the path
+/// actually in effect (the env knob wins if it latched first), or
+/// `None` if tracing was already latched off.
+pub fn enable(path: &Path) -> Option<PathBuf> {
+    let sink = SINK.get_or_init(|| {
+        Some(Sink {
+            path: path.to_path_buf(),
+            epoch: Instant::now(),
+            state: Mutex::default(),
+        })
+    });
+    sink.as_ref().map(|s| s.path.clone())
+}
+
+/// True when a trace path is armed (env knob or [`enable`]).
+pub fn enabled() -> bool {
+    sink().is_some()
+}
+
+thread_local! {
+    static TID: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+/// The calling thread's stable trace track id, registering the thread's
+/// name with the sink on first use.
+fn thread_tid(state: &mut State) -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    TID.with(|slot| match slot.get() {
+        Some(tid) => tid,
+        None => {
+            let tid = NEXT.fetch_add(1, Ordering::Relaxed);
+            slot.set(Some(tid));
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            state.threads.push((tid, name));
+            tid
+        }
+    })
+}
+
+/// Record a completed span that started at `start` on this thread. A
+/// no-op (one atomic load) when tracing is disabled.
+pub fn span(cat: &'static str, name: &str, tile: Option<u64>, start: Instant) {
+    let Some(s) = sink() else { return };
+    let dur_ns = start.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64;
+    let since_epoch = start.saturating_duration_since(s.epoch);
+    let ts_ns = since_epoch.as_nanos().min(u128::from(u64::MAX)) as u64;
+    let mut state = s.state.lock().unwrap();
+    if state.events.len() >= MAX_EVENTS {
+        state.dropped += 1;
+        return;
+    }
+    let tid = thread_tid(&mut state);
+    state.events.push(Event { tid, name: name.to_string(), cat, tile, ts_ns, dur_ns });
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write the buffered trace to the armed path as Chrome-trace JSON.
+/// Returns the path written, or `None` when tracing is disabled. The
+/// buffer is kept (not drained), so repeated flushes rewrite a complete
+/// file each time.
+pub fn flush() -> std::io::Result<Option<PathBuf>> {
+    let Some(s) = sink() else { return Ok(None) };
+    let state = s.state.lock().unwrap();
+    use std::fmt::Write as _;
+    let mut json = String::from("{\"traceEvents\": [\n");
+    let mut first = true;
+    for (tid, name) in &state.threads {
+        if !first {
+            json.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            json,
+            "  {{\"ph\": \"M\", \"pid\": 1, \"tid\": {tid}, \"name\": \"thread_name\", \
+             \"args\": {{\"name\": \"{}\"}}}}",
+            escape_json(name)
+        );
+    }
+    for e in &state.events {
+        if !first {
+            json.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            json,
+            "  {{\"ph\": \"X\", \"pid\": 1, \"tid\": {}, \"name\": \"{}\", \"cat\": \"{}\", \
+             \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{",
+            e.tid,
+            escape_json(&e.name),
+            e.cat,
+            e.ts_ns as f64 / 1e3,
+            e.dur_ns as f64 / 1e3,
+        );
+        if let Some(tile) = e.tile {
+            let _ = write!(json, "\"tile\": {tile}");
+        }
+        json.push_str("}}");
+    }
+    let _ = write!(
+        json,
+        "\n], \"displayTimeUnit\": \"ms\", \"otherData\": {{\"dropped_events\": {}}}}}\n",
+        state.dropped
+    );
+    drop(state);
+    std::fs::write(&s.path, json)?;
+    Ok(Some(s.path.clone()))
+}

@@ -48,11 +48,33 @@ use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::interp::{ExecPlan, Program};
 use crate::runtime::Tensor;
 use crate::sched::{self, LiveCount, Scheduler};
+use crate::telemetry::{
+    trace, EdgeKind, EdgeStats, PipelineTelemetry, StageTelemetry, TrafficStats,
+};
 use crate::Result;
 use anyhow::{anyhow, ensure};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
+
+/// Payload bytes of one envelope (poison moves no tensor data).
+fn env_payload_bytes(env: &Envelope<Tensor>) -> u64 {
+    match env {
+        Envelope::Ok(t) => (t.data.len() * std::mem::size_of::<f32>()) as u64,
+        Envelope::Poison(_) => 0,
+    }
+}
+
+/// Account a successful push's payload against the queue's attached
+/// edge stats and the pipeline's traffic classification. Generic over
+/// the queue's item type: the edge kind lives on the attached stats.
+fn account_push<T>(q: &RingQueue<T>, traffic: &TrafficStats, bytes: u64) {
+    if let Some(e) = q.telemetry() {
+        e.bytes.add(bytes);
+        traffic.record_edge(e.kind, bytes);
+    }
+}
 
 /// A sequence-tagged envelope on one queue edge: live tile or poison.
 type SeqTile = (usize, Envelope<Tensor>);
@@ -229,6 +251,9 @@ pub struct TrainService {
     /// Monotonic step counter — the coordinate `nan:loss:step=N` /
     /// `nan:grad:step=N` fault specs key on.
     steps: AtomicU64,
+    /// Per-stage/per-edge metrics and traffic accounting, registered
+    /// with [`crate::telemetry::snapshot`] for the service's lifetime.
+    telemetry: Arc<PipelineTelemetry>,
 }
 
 impl TrainService {
@@ -262,6 +287,11 @@ impl TrainService {
         let mut src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>> =
             vec![Vec::new(); plan.sources.len()];
         let mut edge_queues: Vec<(usize, Arc<RingQueue<SeqTile>>)> = Vec::new();
+        // Per-edge telemetry: source-feed edges are off-chip-analog
+        // injection, stage-to-stage edges are the on-chip-analog
+        // crossings dataflow execution saves, and the shared tap stream
+        // into the sink is the off-chip-analog drain.
+        let mut edge_stats: Vec<Arc<EdgeStats>> = Vec::new();
         let sink_q: Arc<RingQueue<SinkItem>> =
             RingQueue::with_capacity(plan.pipeline.queue_capacity * 4);
         for (ei, e) in plan.pipeline.edges.iter().enumerate() {
@@ -269,6 +299,17 @@ impl TrainService {
                 Some(to) => {
                     let q = RingQueue::with_capacity(e.capacity.max(2));
                     edge_queues.push((ei, Arc::clone(&q)));
+                    let (from_name, kind) = match e.from {
+                        Some(f) => (plan.stages[f].name.as_str(), EdgeKind::Interior),
+                        None => ("source", EdgeKind::Source),
+                    };
+                    let es = Arc::new(EdgeStats::new(
+                        format!("{from_name}->{}", plan.stages[to].name),
+                        kind,
+                        q.capacity(),
+                    ));
+                    q.attach_telemetry(Arc::clone(&es));
+                    edge_stats.push(es);
                     let slot = stage_in
                         .get_mut(to)
                         .and_then(|ports| ports.get_mut(e.to_port))
@@ -325,6 +366,34 @@ impl TrainService {
         let spawned = (0..n_stages).map(&workers_of).sum::<usize>() + 1;
         let svc_live = LiveCount::new(spawned);
 
+        let sink_stats =
+            Arc::new(EdgeStats::new("taps->sink", EdgeKind::Sink, sink_q.capacity()));
+        sink_q.attach_telemetry(Arc::clone(&sink_stats));
+        edge_stats.push(sink_stats);
+        let stage_telems: Vec<StageTelemetry> = plan
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(si, sp)| {
+                let class = plan
+                    .pipeline
+                    .stages
+                    .get(si)
+                    .map(|s| format!("{:?}", s.class).to_lowercase())
+                    .unwrap_or_else(|| "stage".to_string());
+                let weight_bytes = sp
+                    .param_idx
+                    .iter()
+                    .map(|&i| {
+                        (plan.params[i].init.data.len() * std::mem::size_of::<f32>()) as u64
+                    })
+                    .sum();
+                StageTelemetry::new(sp.name.clone(), class, workers_of(si), weight_bytes)
+            })
+            .collect();
+        let telemetry =
+            PipelineTelemetry::register(plan.pipeline.name.clone(), stage_telems, edge_stats);
+
         let mut out_routes_iter = out_routes.into_iter();
         let mut stage_in_iter = stage_in.into_iter();
         for (si, sp) in plan.stages.iter().enumerate() {
@@ -367,9 +436,11 @@ impl TrainService {
                 all_latch: Arc::clone(&all_latch),
                 svc_live: Arc::clone(&svc_live),
                 sched: Arc::clone(&scheduler),
+                telemetry: Arc::clone(&telemetry),
             });
             for _ in 0..workers {
-                let pump = TrainPump { shared: Arc::clone(&shared), closer: false };
+                let pump =
+                    TrainPump { shared: Arc::clone(&shared), closer: false, parked: None };
                 scheduler.spawn(Box::new(move || pump.run()));
             }
         }
@@ -396,6 +467,7 @@ impl TrainService {
             fault,
             health,
             steps: AtomicU64::new(0),
+            telemetry,
         })
     }
 
@@ -424,6 +496,12 @@ impl TrainService {
         Arc::clone(&self.health)
     }
 
+    /// This pipeline's full telemetry (stages, edges, traffic) — also
+    /// reachable process-wide via [`crate::telemetry::snapshot`].
+    pub fn telemetry(&self) -> &Arc<PipelineTelemetry> {
+        &self.telemetry
+    }
+
     /// Run one microbatch step: `tiles[port][seq]` per source port.
     /// Blocks until every tap drained, then folds gradients/loss in tile
     /// order. One step runs at a time; parameter updates happen outside
@@ -445,10 +523,15 @@ impl TrainService {
         'feed: for seq in 0..n_tiles {
             for (port, routes) in self.src_routes.iter().enumerate() {
                 for q in routes {
+                    let bytes =
+                        (tiles[port][seq].data.len() * std::mem::size_of::<f32>()) as u64;
                     let mut payload = (seq, Envelope::Ok(tiles[port][seq].clone()));
                     loop {
                         match q.try_push(payload) {
-                            Ok(()) => break,
+                            Ok(()) => {
+                                account_push(q, &self.telemetry.traffic, bytes);
+                                break;
+                            }
                             Err(PushError::Closed(_)) => {
                                 self.table.fail(StageFailure::closed("source feed"));
                                 break 'feed;
@@ -625,9 +708,14 @@ struct TrainStageShared {
     all_latch: Arc<AtomicUsize>,
     svc_live: Arc<LiveCount>,
     sched: Arc<Scheduler>,
+    telemetry: Arc<PipelineTelemetry>,
 }
 
 impl TrainStageShared {
+    fn stat(&self) -> &StageTelemetry {
+        &self.telemetry.stages[self.si]
+    }
+
     /// Try to gather one sequence-aligned tile set under the intake lock.
     fn gather(&self) -> GatherResult {
         let mut intake = self.intake.lock().unwrap();
@@ -751,9 +839,10 @@ impl TrainStageShared {
                 } else {
                     inf.outs[inf.port].as_ref().expect("checked above").clone()
                 };
+                let bytes = env_payload_bytes(&payload);
                 match &port_routes[inf.route] {
                     Route::Queue(q) => match q.try_push((inf.seq, payload)) {
-                        Ok(()) => {}
+                        Ok(()) => account_push(q, &self.telemetry.traffic, bytes),
                         Err(PushError::Closed(_)) => saw_closed = true,
                         Err(PushError::Full((_, p))) => {
                             if last {
@@ -763,7 +852,7 @@ impl TrainStageShared {
                         }
                     },
                     Route::Sink(tap) => match self.sink_q.try_push((*tap, inf.seq, payload)) {
-                        Ok(()) => {}
+                        Ok(()) => account_push(&self.sink_q, &self.telemetry.traffic, bytes),
                         Err(PushError::Closed(_)) => saw_closed = true,
                         Err(PushError::Full((_, _, p))) => {
                             if last {
@@ -793,10 +882,38 @@ impl TrainStageShared {
 struct TrainPump {
     shared: Arc<TrainStageShared>,
     closer: bool,
+    /// When and where the pump parked, for wait-time attribution on
+    /// resume: input starvation (queue-wait) vs downstream backpressure
+    /// (emit).
+    parked: Option<(Instant, Parked)>,
 }
 
 impl TrainPump {
     fn run(mut self) {
+        if let Some((p0, side)) = self.parked.take() {
+            let waited = p0.elapsed();
+            let ns = waited.as_nanos().min(u128::from(u64::MAX)) as u64;
+            match side {
+                Parked::Item(q) => {
+                    self.shared.stat().queue_wait.record(waited);
+                    if let Some(e) = q.telemetry() {
+                        e.empty_stall_ns.add(ns);
+                    }
+                }
+                Parked::Space(q) => {
+                    self.shared.stat().emit.record(waited);
+                    if let Some(e) = q.telemetry() {
+                        e.full_stall_ns.add(ns);
+                    }
+                }
+                Parked::SinkSpace(q) => {
+                    self.shared.stat().emit.record(waited);
+                    if let Some(e) = q.telemetry() {
+                        e.full_stall_ns.add(ns);
+                    }
+                }
+            }
+        }
         if self.closer {
             match self.shared.flush() {
                 // A gap at `next` here means the pump that owned that
@@ -834,8 +951,19 @@ impl TrainPump {
                         None => {
                             let tile_seq =
                                 self.shared.tiles_seen.fetch_add(1, Ordering::Relaxed);
+                            self.shared.stat().tiles_in.inc();
+                            let b0 = Instant::now();
                             match self.shared.compute(tile_seq, &live) {
                                 Ok(outs) if outs.len() == n_ports => {
+                                    let stat = self.shared.stat();
+                                    stat.compute.record(b0.elapsed());
+                                    stat.tiles_out.inc();
+                                    self.shared
+                                        .telemetry
+                                        .traffic
+                                        .weight_bytes
+                                        .add(stat.weight_bytes_per_tile);
+                                    trace::span("train", &stat.name, Some(tile_seq), b0);
                                     outs.into_iter().map(Envelope::Ok).collect()
                                 }
                                 Ok(outs) => {
@@ -900,7 +1028,16 @@ impl TrainPump {
     /// fires, then yield the pool thread. Parked pumps still count as
     /// live: `close()` fires all registered wakers, so a shutdown or
     /// failure cascade always resumes (and then retires) them.
-    fn park(self, parked: Parked) {
+    fn park(mut self, parked: Parked) {
+        // Stash a second handle to the stalled edge so the resume path
+        // can attribute the wait (stage queue-wait vs emit histogram,
+        // per-edge stall time).
+        let resume = match &parked {
+            Parked::Item(q) => Parked::Item(Arc::clone(q)),
+            Parked::Space(q) => Parked::Space(Arc::clone(q)),
+            Parked::SinkSpace(q) => Parked::SinkSpace(Arc::clone(q)),
+        };
+        self.parked = Some((Instant::now(), resume));
         let sched = Arc::clone(&self.shared.sched);
         let waker = Box::new(move || {
             sched.spawn(Box::new(move || self.run()));

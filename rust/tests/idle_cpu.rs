@@ -3,16 +3,20 @@
 //! Before the queue got real parking, blocking `push`/`pop` fell into a
 //! sleep-tiered spin loop, so a warm-but-idle session kept all stage
 //! threads spinning. Now waiters register wakers / park on a condvar
-//! after a short bounded spin, and [`kitsune::queue::idle_spin_count`]
-//! counts every spin iteration process-wide — so "idle burns CPU"
-//! regressions show up as a counter delta.
+//! after a short bounded spin, and the process-wide telemetry snapshot
+//! (`kitsune::telemetry::snapshot().queue.idle_spins`) counts every
+//! spin iteration — so "idle burns CPU" regressions show up as a
+//! counter delta.
 //!
 //! This lives in its own integration-test binary so no sibling test's
 //! queue traffic pollutes the process-wide counter window.
 
-use kitsune::queue::idle_spin_count;
 use kitsune::session::{nerf_trunk_graph, Session};
 use std::time::Duration;
+
+fn idle_spin_count() -> u64 {
+    kitsune::telemetry::snapshot().queue.idle_spins
+}
 
 #[test]
 fn idle_warm_pipeline_burns_no_spins() {

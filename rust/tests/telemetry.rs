@@ -1,0 +1,320 @@
+//! Cross-layer telemetry integration tests: counter reconciliation
+//! (tiles in == tiles out per stage, bytes accounted == bytes moved),
+//! Prometheus exposition content, and the Chrome-trace roundtrip
+//! (schema validity, per-track monotone non-overlapping spans, stage
+//! and worker name mapping).
+//!
+//! The trace sink is process-global and latches on first span, so every
+//! test arms it first thing via `armed_trace_path()` — whichever test
+//! thread wins the race sets one shared temp path, and spans from all
+//! tests land in the same buffer (the roundtrip assertions are
+//! "at least" style for exactly this reason). Tests also serialize on a
+//! gate mutex: `Session::shutdown` flushes the armed trace file, so a
+//! concurrent test could rewrite it mid-read otherwise.
+
+use kitsune::apps::nerf;
+use kitsune::session::{nerf_trunk_graph, Session};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn armed_trace_path() -> &'static PathBuf {
+    static TRACE_PATH: OnceLock<PathBuf> = OnceLock::new();
+    TRACE_PATH.get_or_init(|| {
+        let name = format!("kitsune_trace_test_{}.json", std::process::id());
+        let p = std::env::temp_dir().join(name);
+        kitsune::telemetry::trace::enable(&p)
+            .expect("trace sink latched off — is KITSUNE_TRACE set but empty?")
+    })
+}
+
+/// A NeRF training graph small enough for interpreter-speed steps.
+fn tiny_nerf_training() -> kitsune::graph::Graph {
+    nerf::training(&nerf::NerfConfig {
+        batch: 64,
+        pos_enc: 8,
+        dir_enc: 4,
+        hidden: 16,
+        depth: 3,
+        skip_at: 1,
+    })
+}
+
+#[test]
+fn counters_reconcile_with_tile_flow() {
+    let _gate = gate();
+    armed_trace_path();
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(2)
+        .build()
+        .unwrap();
+    let n = 16usize;
+    let tiles = session.make_tiles(n, 11).unwrap();
+    let bytes_per_tile = (tiles[0].data.len() * 4) as u64;
+    let out = session.submit(tiles).unwrap().wait().unwrap();
+    assert_eq!(out.outputs.len(), n);
+
+    let t = session.telemetry().expect("warm session registers telemetry");
+    assert!(!t.stages.is_empty());
+
+    // Tile conservation: every stage accepted and emitted exactly the
+    // batch, and timed exactly that many kernel executions.
+    for s in &t.stages {
+        assert_eq!(s.tiles_in.get(), n as u64, "stage {} tiles_in", s.name);
+        assert_eq!(s.tiles_out.get(), n as u64, "stage {} tiles_out", s.name);
+        assert_eq!(s.compute.count(), n as u64, "stage {} compute samples", s.name);
+    }
+
+    // Every edge drained: one envelope per tile, pushed and popped.
+    for e in &t.edges {
+        assert_eq!(e.pushes.get(), n as u64, "edge {} pushes", e.label);
+        assert_eq!(e.pops.get(), n as u64, "edge {} pops", e.label);
+        assert!(e.bytes.get() > 0, "edge {} moved no bytes", e.label);
+    }
+
+    // Bytes accounted == bytes moved: the traffic classes are exactly
+    // the per-kind edge byte sums (weights are accounted separately).
+    let traffic = t.traffic.snapshot();
+    let sum_kind = |k: kitsune::telemetry::EdgeKind| -> u64 {
+        t.edges.iter().filter(|e| e.kind == k).map(|e| e.bytes.get()).sum()
+    };
+    assert_eq!(traffic.source_bytes, sum_kind(kitsune::telemetry::EdgeKind::Source));
+    assert_eq!(traffic.onchip_bytes, sum_kind(kitsune::telemetry::EdgeKind::Interior));
+    assert_eq!(traffic.sink_bytes, sum_kind(kitsune::telemetry::EdgeKind::Sink));
+
+    // Source bytes are exactly the injected payloads, and weight bytes
+    // are one full parameter re-read per tile.
+    assert_eq!(traffic.source_bytes, bytes_per_tile * n as u64);
+    let weights_per_tile: u64 = t.stages.iter().map(|s| s.weight_bytes_per_tile).sum();
+    assert_eq!(traffic.weight_bytes, weights_per_tile * n as u64);
+
+    // Dataflow keeps the interior traffic on-chip, so it must beat the
+    // serial oracle (which pays every intermediate twice).
+    assert!(traffic.onchip_bytes > 0, "trunk pipeline has interior edges");
+    assert!(traffic.reduction() > 0.0, "reduction {}", traffic.reduction());
+    session.shutdown();
+}
+
+#[test]
+fn train_counters_reconcile_per_step() {
+    let _gate = gate();
+    armed_trace_path();
+    let session =
+        Session::builder().graph(tiny_nerf_training()).tile_rows(16).build().unwrap();
+    let batch = session.make_train_batch(7).unwrap();
+    let mut trainer = session.trainer().unwrap();
+    let stats = trainer.step(&batch).unwrap();
+    assert!(stats.tiles > 0);
+
+    let t = session.telemetry().expect("warm DAG registers telemetry");
+    let n_tiles = stats.tiles as u64;
+    // Tile-set conservation through the DAG: every stage consumed and
+    // produced one tile-set per streamed tile.
+    for s in &t.stages {
+        assert_eq!(s.tiles_in.get(), n_tiles, "stage {} tiles_in", s.name);
+        assert_eq!(s.tiles_out.get(), n_tiles, "stage {} tiles_out", s.name);
+    }
+    let traffic = t.traffic.snapshot();
+    assert!(traffic.source_bytes > 0, "feed loop accounts injected batches");
+    assert!(traffic.sink_bytes > 0, "taps drain gradients to the sink");
+    assert!(traffic.onchip_bytes > 0, "DAG edges carry intermediates");
+    assert!(traffic.reduction() > 0.0);
+    session.shutdown();
+}
+
+#[test]
+fn prometheus_exposition_covers_live_sessions() {
+    let _gate = gate();
+    armed_trace_path();
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(2)
+        .build()
+        .unwrap();
+    let tiles = session.make_tiles(4, 3).unwrap();
+    session.submit(tiles).unwrap().wait().unwrap();
+
+    let text = kitsune::telemetry::prometheus();
+    for family in [
+        "kitsune_queue_ops_total",
+        "kitsune_queue_idle_spins_total",
+        "kitsune_worker_tasks_total",
+        "kitsune_stage_tiles_total",
+        "kitsune_edge_bytes_total",
+        "kitsune_traffic_bytes_total",
+    ] {
+        assert!(text.contains(family), "exposition missing {family}");
+    }
+    let t = session.telemetry().unwrap();
+    assert!(text.contains(&format!("pipeline=\"{}\"", t.name)), "pipeline label missing");
+    for s in &t.stages {
+        assert!(text.contains(&format!("stage=\"{}\"", s.name)), "stage {} missing", s.name);
+    }
+    session.shutdown();
+}
+
+// ------------------------------------------------------------------
+// Chrome-trace roundtrip
+// ------------------------------------------------------------------
+
+/// One parsed trace line (the writer emits one event per line).
+struct TraceEvent {
+    ph: char,
+    tid: u64,
+    name: String,
+    cat: Option<String>,
+    ts: f64,
+    dur: f64,
+    /// For `M` thread_name metadata: the registered thread name.
+    thread_name: Option<String>,
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn field_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn parse_trace(content: &str) -> Vec<TraceEvent> {
+    content
+        .lines()
+        .filter_map(|raw| {
+            let line = raw.trim().trim_end_matches(',');
+            if !line.starts_with("{\"ph\"") {
+                return None;
+            }
+            let ph = field_str(line, "ph")?.chars().next()?;
+            Some(TraceEvent {
+                ph,
+                tid: field_num(line, "tid")? as u64,
+                name: field_str(line, "name")?,
+                cat: field_str(line, "cat"),
+                ts: field_num(line, "ts").unwrap_or(0.0),
+                dur: field_num(line, "dur").unwrap_or(0.0),
+                thread_name: line
+                    .find("\"args\": {\"name\": \"")
+                    .map(|i| i + "\"args\": {\"name\": \"".len())
+                    .and_then(|i| {
+                        let rest = &line[i..];
+                        Some(rest[..rest.find('"')?].to_string())
+                    }),
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn trace_roundtrip_schema_tracks_and_names() {
+    let _gate = gate();
+    armed_trace_path();
+
+    // Inference spans (cat "compute", one per stage kernel execution).
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(64, 6, 16, 3))
+        .tile_rows(4)
+        .workers(2)
+        .build()
+        .unwrap();
+    let tiles = session.make_tiles(8, 5).unwrap();
+    session.submit(tiles).unwrap().wait().unwrap();
+    let stage_names: Vec<String> = session.metrics().iter().map(|m| m.name.clone()).collect();
+    assert!(!stage_names.is_empty());
+    session.shutdown();
+
+    // Training spans (cat "train", one per stage tile-set).
+    let tsession =
+        Session::builder().graph(tiny_nerf_training()).tile_rows(16).build().unwrap();
+    let batch = tsession.make_train_batch(3).unwrap();
+    tsession.trainer().unwrap().step(&batch).unwrap();
+    tsession.shutdown();
+
+    let path = kitsune::telemetry::trace::flush().unwrap().expect("sink is armed");
+    let content = std::fs::read_to_string(&path).unwrap();
+
+    // Envelope shape.
+    assert!(content.starts_with("{\"traceEvents\": ["), "bad header");
+    assert!(content.contains("\"displayTimeUnit\": \"ms\""));
+    assert!(content.contains("\"dropped_events\": "));
+    assert!(content.trim_end().ends_with('}'), "unterminated JSON object");
+    // Balanced braces — cheap structural validity without a JSON parser
+    // (no string in the trace may contain unescaped braces or quotes).
+    let opens = content.matches('{').count();
+    let closes = content.matches('}').count();
+    assert_eq!(opens, closes, "unbalanced braces");
+
+    let events = parse_trace(&content);
+    let metas: Vec<&TraceEvent> = events.iter().filter(|e| e.ph == 'M').collect();
+    let spans: Vec<&TraceEvent> = events.iter().filter(|e| e.ph == 'X').collect();
+    assert!(!spans.is_empty(), "no spans recorded");
+
+    // Every span's track is a registered, named thread; the pumps run
+    // on the work-stealing pool, so its worker names must show up.
+    for m in &metas {
+        assert_eq!(m.name, "thread_name");
+        assert!(m.thread_name.is_some(), "metadata without a thread name");
+    }
+    let meta_tids: Vec<u64> = metas.iter().map(|m| m.tid).collect();
+    assert!(
+        metas
+            .iter()
+            .any(|m| m.thread_name.as_deref().is_some_and(|n| n.starts_with("kitsune-sched-"))),
+        "no scheduler worker track registered"
+    );
+    for s in &spans {
+        assert!(meta_tids.contains(&s.tid), "span on unregistered track tid={}", s.tid);
+        assert!(!s.name.is_empty());
+        assert!(s.ts >= 0.0 && s.dur >= 0.0);
+        let cat = s.cat.as_deref().unwrap_or("");
+        assert!(!cat.is_empty(), "span {} missing category", s.name);
+    }
+
+    // Name mapping: every inference stage traced at least one compute
+    // span, and the training step produced "train" spans.
+    for name in &stage_names {
+        assert!(
+            spans.iter().any(|s| &s.name == name && s.cat.as_deref() == Some("compute")),
+            "stage {name} has no compute span"
+        );
+    }
+    assert!(spans.iter().any(|s| s.cat.as_deref() == Some("train")), "no training spans");
+
+    // Per-track spans are monotone and non-overlapping once sorted by
+    // start time (pumps run synchronously on their worker thread).
+    // 2ns epsilon absorbs the 3-decimal rounding in the writer.
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let mut track: Vec<&&TraceEvent> = spans.iter().filter(|s| s.tid == tid).collect();
+        track.sort_by(|a, b| a.ts.total_cmp(&b.ts));
+        for w in track.windows(2) {
+            assert!(
+                w[1].ts + 0.002 >= w[0].ts + w[0].dur,
+                "overlapping spans on tid {tid}: {} [{} +{}] then {} [{}]",
+                w[0].name,
+                w[0].ts,
+                w[0].dur,
+                w[1].name,
+                w[1].ts
+            );
+        }
+    }
+}
