@@ -13,15 +13,16 @@ artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
 
 # Interpreter hot-path trajectory: kernel GFLOP/s first (stages a part
-# file), then session warm/cold/reference throughput, which folds both
+# file, incl. the simd_speedup vector-vs-scalar micro-kernel leg), then
+# session warm/cold/scalar/bf16/reference throughput, which folds both
 # into BENCH_interp.json at the repo root; then training steps/sec
 # (warm DAG pipeline vs serial baseline) into BENCH_train.json; then
 # scheduler scaling (GEMM + warm pipeline + DAG training at 1/2/4/N
 # workers) into BENCH_sched.json; then the serving-tier load sweep
 # (latency percentiles vs offered load, saturation knee, shed rate)
 # into BENCH_serve.json; then dataflow-vs-serial-oracle off-chip traffic
-# accounting per app (+ telemetry harness overhead) into
-# BENCH_traffic.json.
+# accounting per app (+ the half-width bf16 inference leg and telemetry
+# harness overhead) into BENCH_traffic.json.
 # BENCH_SMOKE=1 for a fast CI smoke run that still emits the JSONs.
 bench:
 	cargo bench --bench kernel_throughput

@@ -12,13 +12,13 @@
 
 use kitsune::bench::{artifact_root, smoke};
 use kitsune::runtime::interp::{Act, Instr, Program};
-use kitsune::runtime::{Rng, Tensor};
+use kitsune::runtime::{simd, Rng, Tensor};
 use std::fmt::Write as _;
 use std::time::Instant;
 
 fn tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
     let numel: usize = dims.iter().product();
-    Tensor { dims: dims.to_vec(), data: (0..numel).map(|_| rng.normal()).collect() }
+    Tensor::new(dims.to_vec(), (0..numel).map(|_| rng.normal()).collect()).unwrap()
 }
 
 /// Seconds per iteration, doubling the iteration count until the timed
@@ -68,6 +68,48 @@ fn main() -> anyhow::Result<()> {
         let _ = writeln!(part, "matmul_{n}_gflops {gf_opt:.4}");
         let _ = writeln!(part, "matmul_{n}_ref_gflops {gf_ref:.4}");
         let _ = writeln!(part, "matmul_{n}_speedup {:.4}", gf_opt / gf_ref.max(1e-12));
+    }
+
+    // SIMD dispatch on the matmul micro-kernel: the same blocked/parallel
+    // engine with the vector layer forced off (the exact pre-SIMD scalar
+    // kernels, what `KITSUNE_SIMD=0` runs) vs the runtime-dispatched
+    // vector path. Pure kernel-ISA comparison: same partitioning, same
+    // fusion, same buffers.
+    let simd_n = if smoke { 128 } else { 256 };
+    let simd_speedup = {
+        let p = Program { n_inputs: 2, instrs: vec![Instr::Matmul { a: 0, b: 1 }], outputs: vec![2] };
+        let inputs = [tensor(&mut rng, &[simd_n, simd_n]), tensor(&mut rng, &[simd_n, simd_n])];
+        let flops = 2.0 * (simd_n * simd_n * simd_n) as f64;
+        let prev = simd::vector_enabled();
+        simd::set_vector_enabled(false);
+        let scalar_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run(&inputs).unwrap());
+        });
+        simd::set_vector_enabled(true);
+        let vec_s = time_per_iter(min_time, || {
+            std::hint::black_box(p.run(&inputs).unwrap());
+        });
+        simd::set_vector_enabled(prev);
+        let (gf_vec, gf_scalar) = (flops / vec_s / 1e9, flops / scalar_s / 1e9);
+        let speedup = gf_vec / gf_scalar.max(1e-12);
+        println!(
+            "  simd matmul {simd_n:>3}^3 [{}]  vector {gf_vec:>7.2} GFLOP/s   scalar {gf_scalar:>7.2} GFLOP/s   {speedup:.2}x",
+            simd::dispatch_label()
+        );
+        let _ = writeln!(part, "simd_matmul_{simd_n}_gflops {gf_vec:.4}");
+        let _ = writeln!(part, "simd_matmul_{simd_n}_scalar_gflops {gf_scalar:.4}");
+        let _ = writeln!(part, "simd_speedup {speedup:.4}");
+        speedup
+    };
+    // Acceptance gate: the vector micro-kernel must clearly beat the
+    // scalar one. Only meaningful where an FMA vector ISA actually
+    // dispatched, and skipped in the CI smoke tier (timings too short
+    // to trust).
+    if !smoke && simd::fused_madd() {
+        assert!(
+            simd_speedup > 1.5,
+            "simd matmul micro-kernel speedup {simd_speedup:.2}x <= 1.5x on an FMA host"
+        );
     }
 
     // Transpose specializations (the train-step gradient GEMMs) at one

@@ -39,7 +39,11 @@ const OUT_DIM: usize = 3;
 
 fn tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
     let numel: usize = dims.iter().product();
-    Tensor { dims: dims.to_vec(), data: (0..numel).map(|_| rng.normal()).collect() }
+    Tensor {
+        dims: dims.to_vec(),
+        data: (0..numel).map(|_| rng.normal()).collect(),
+        prec: kitsune::runtime::Precision::F32,
+    }
 }
 
 fn make_tiles(n: usize, seed: u64, rows: usize, dim: usize) -> Vec<Tensor> {
@@ -48,6 +52,7 @@ fn make_tiles(n: usize, seed: u64, rows: usize, dim: usize) -> Vec<Tensor> {
         .map(|_| Tensor {
             dims: vec![rows, dim],
             data: (0..rows * dim).map(|_| rng.normal()).collect(),
+            prec: kitsune::runtime::Precision::F32,
         })
         .collect()
 }

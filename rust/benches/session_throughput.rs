@@ -9,7 +9,9 @@
 //! before the blocked/fused/in-place overhaul, with no extra copies
 //! inflating the baseline), so the recorded `warm_over_reference` ratio
 //! is the hot-path speedup measured on this machine, pipeline overheads
-//! held equal.
+//! held equal. Two more warm legs bracket the storage/ISA axes: the
+//! vector layer forced off (what `KITSUNE_SIMD=0` runs) and bf16 tile
+//! storage (what `KITSUNE_PRECISION=bf16` runs).
 //!
 //! Writes `BENCH_interp.json` at the repo root, folding in the
 //! `BENCH_interp.kernel.part` staged by `benches/kernel_throughput.rs`
@@ -20,7 +22,7 @@
 use kitsune::bench::{artifact_root, smoke};
 use kitsune::compiler::{compile, SelectOptions};
 use kitsune::runtime::interp::Program;
-use kitsune::runtime::{ArtifactStore, EntrySpec, Executable, Rng, Tensor};
+use kitsune::runtime::{simd, ArtifactStore, EntrySpec, Executable, Precision, Rng, Tensor};
 use kitsune::session::{lower_app, nerf_trunk_graph, LowerOptions, PipelineService, Session};
 use kitsune::sim::GpuConfig;
 use std::fmt::Write as _;
@@ -68,6 +70,7 @@ fn make_tiles(n: usize, seed: u64, rows: usize, dim: usize) -> Vec<Tensor> {
         .map(|_| Tensor {
             dims: vec![rows, dim],
             data: (0..rows * dim).map(|_| rng.normal()).collect(),
+            prec: kitsune::runtime::Precision::F32,
         })
         .collect()
 }
@@ -97,6 +100,39 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(out.outputs.len(), tiles_per_batch);
     }
     let warm_s = t0.elapsed().as_secs_f64();
+    session.shutdown();
+
+    // Warm again with the vector layer forced off (`KITSUNE_SIMD=0`):
+    // same engine, scalar kernels — isolates the SIMD dispatch win on
+    // the full pipeline, overheads held equal.
+    let prev = simd::vector_enabled();
+    simd::set_vector_enabled(false);
+    let session = build()?;
+    session.run(session.make_tiles(tiles_per_batch, 999)?)?;
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let out = session.run(session.make_tiles(tiles_per_batch, b as u64)?)?;
+        assert_eq!(out.outputs.len(), tiles_per_batch);
+    }
+    let scalar_s = t0.elapsed().as_secs_f64();
+    session.shutdown();
+    simd::set_vector_enabled(prev);
+
+    // Warm bf16: the same trunk with 16-bit tile/weight storage (f32
+    // accumulate inside the kernels) — the reduced-width leg.
+    let session = Session::builder()
+        .graph(nerf_trunk_graph(ROWS, IN_DIM, HIDDEN, OUT_DIM))
+        .tile_rows(TILE_ROWS)
+        .workers(2)
+        .precision(Precision::Bf16)
+        .build()?;
+    session.run(session.make_tiles(tiles_per_batch, 999)?)?;
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let out = session.run(session.make_tiles(tiles_per_batch, b as u64)?)?;
+        assert_eq!(out.outputs.len(), tiles_per_batch);
+    }
+    let bf16_s = t0.elapsed().as_secs_f64();
     session.shutdown();
 
     // Reference warm: identical pipeline topology and worker counts, but
@@ -139,6 +175,8 @@ fn main() -> anyhow::Result<()> {
 
     let cold_tps = total_tiles / cold_s.max(1e-12);
     let warm_tps = total_tiles / warm_s.max(1e-12);
+    let scalar_tps = total_tiles / scalar_s.max(1e-12);
+    let bf16_tps = total_tiles / bf16_s.max(1e-12);
     let ref_tps = total_tiles / ref_s.max(1e-12);
 
     println!(
@@ -149,6 +187,17 @@ fn main() -> anyhow::Result<()> {
         "  warm (persistent pool):     {:>8.1} ms  {warm_tps:>8.1} tiles/s  ({:.2}x vs cold)",
         warm_s * 1e3,
         cold_s / warm_s.max(1e-12)
+    );
+    println!(
+        "  warm, KITSUNE_SIMD=0:       {:>8.1} ms  {scalar_tps:>8.1} tiles/s  (simd [{}] is {:.2}x)",
+        scalar_s * 1e3,
+        simd::dispatch_label(),
+        warm_tps / scalar_tps.max(1e-12)
+    );
+    println!(
+        "  warm, bf16 storage:         {:>8.1} ms  {bf16_tps:>8.1} tiles/s  ({:.2}x vs f32)",
+        bf16_s * 1e3,
+        bf16_tps / warm_tps.max(1e-12)
     );
     println!(
         "  warm, pre-overhaul engine:  {:>8.1} ms  {ref_tps:>8.1} tiles/s  (optimized is {:.2}x)",
@@ -168,6 +217,19 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(json, "    \"cold_tiles_per_sec\": {cold_tps:.2},");
     let _ = writeln!(json, "    \"warm_tiles_per_sec\": {warm_tps:.2},");
     let _ = writeln!(json, "    \"warm_over_cold\": {:.3},", warm_tps / cold_tps.max(1e-12));
+    let _ = writeln!(json, "    \"simd_dispatch\": \"{}\",", simd::dispatch_label());
+    let _ = writeln!(json, "    \"scalar_warm_tiles_per_sec\": {scalar_tps:.2},");
+    let _ = writeln!(
+        json,
+        "    \"simd_speedup_warm\": {:.3},",
+        warm_tps / scalar_tps.max(1e-12)
+    );
+    let _ = writeln!(json, "    \"bf16_warm_tiles_per_sec\": {bf16_tps:.2},");
+    let _ = writeln!(
+        json,
+        "    \"bf16_over_f32_warm\": {:.3},",
+        bf16_tps / warm_tps.max(1e-12)
+    );
     let _ = writeln!(json, "    \"reference_warm_tiles_per_sec\": {ref_tps:.2},");
     let _ = writeln!(
         json,

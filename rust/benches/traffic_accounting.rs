@@ -9,6 +9,7 @@
 
 use kitsune::apps::{dlrm, nerf};
 use kitsune::bench::{artifact_root, smoke};
+use kitsune::runtime::Precision;
 use kitsune::session::{nerf_trunk_graph, Session};
 use kitsune::telemetry::TrafficSnapshot;
 use std::fmt::Write as _;
@@ -21,13 +22,20 @@ struct AppTraffic {
     traffic: TrafficSnapshot,
 }
 
-/// Stream `reps` batches of tiles through the warm NeRF trunk and
-/// return the accumulated traffic classes.
-fn trunk_inference(reps: usize) -> anyhow::Result<AppTraffic> {
+/// Stream `reps` batches of tiles through the warm NeRF trunk at the
+/// given storage precision and return the accumulated traffic classes —
+/// edges are charged at storage width, so the bf16 leg moves half the
+/// per-tile bytes of the f32 leg.
+fn trunk_inference(
+    reps: usize,
+    prec: Precision,
+    mode: &'static str,
+) -> anyhow::Result<AppTraffic> {
     let session = Session::builder()
         .graph(nerf_trunk_graph(512, 60, 64, 3))
         .tile_rows(64)
         .workers(2)
+        .precision(prec)
         .build()?;
     let tiles = session.make_tiles(16, 0xACC0)?;
     let mut n = 0u64;
@@ -40,7 +48,7 @@ fn trunk_inference(reps: usize) -> anyhow::Result<AppTraffic> {
         .traffic
         .snapshot();
     session.shutdown();
-    Ok(AppTraffic { app: "nerf-trunk", mode: "inference", tiles: n, traffic })
+    Ok(AppTraffic { app: "nerf-trunk", mode, tiles: n, traffic })
 }
 
 /// Run `steps` training steps on a warm DAG pipeline and return the
@@ -122,7 +130,8 @@ fn main() -> anyhow::Result<()> {
     });
 
     let apps = vec![
-        trunk_inference(inf_reps)?,
+        trunk_inference(inf_reps, Precision::F32, "inference")?,
+        trunk_inference(inf_reps, Precision::Bf16, "inference-bf16")?,
         train_traffic("nerf", tiny_nerf, steps)?,
         train_traffic("dlrm-dense", dense_dlrm, steps)?,
     ];
@@ -140,6 +149,21 @@ fn main() -> anyhow::Result<()> {
         );
         anyhow::ensure!(t.reduction() > 0.0, "{} must reduce off-chip traffic", a.app);
     }
+
+    // The bf16 leg ran the identical tile stream: per-tile edge bytes
+    // must come in at exactly half the f32 width.
+    let edge = |t: &TrafficSnapshot| t.source_bytes + t.onchip_bytes + t.sink_bytes;
+    let (f32_edge, bf16_edge) = (edge(&apps[0].traffic), edge(&apps[1].traffic));
+    println!(
+        "  bf16 edge bytes: {:.1} KiB vs f32 {:.1} KiB ({:.2}x)",
+        bf16_edge as f64 / 1024.0,
+        f32_edge as f64 / 1024.0,
+        f32_edge as f64 / bf16_edge.max(1) as f64
+    );
+    anyhow::ensure!(
+        bf16_edge * 2 == f32_edge,
+        "bf16 tiles must cross edges at half width (bf16 {bf16_edge} vs f32 {f32_edge})"
+    );
 
     // Harness overhead, after all traffic runs (arming the trace sink is
     // irreversible in-process).

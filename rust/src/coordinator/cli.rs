@@ -77,6 +77,7 @@ pub fn input_tiles(store: &ArtifactStore, entry: &str, n: usize) -> Result<Vec<T
             Tensor {
                 dims: dims.clone(),
                 data: (0..numel).map(|_| rng.normal()).collect(),
+                prec: crate::runtime::Precision::F32,
             }
         })
         .collect())

@@ -24,6 +24,8 @@ pub mod interp;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod precision;
+pub mod simd;
 pub mod tensor;
 
 pub use backend::{default_backend, Backend, Executable, BACKEND_ENV};
@@ -31,4 +33,6 @@ pub use client::ArtifactStore;
 pub use error::RuntimeError;
 pub use interp::{bound_executable, program_executable, InterpBackend};
 pub use manifest::{parse_manifest, EntrySpec, TensorSpec};
+pub use precision::Precision;
+pub use simd::{engine_equivalence, ulp_diff, Equivalence};
 pub use tensor::{Rng, Tensor};

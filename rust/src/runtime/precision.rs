@@ -1,0 +1,286 @@
+//! Storage precision for tensors crossing pipeline edges: `f32` (the
+//! default), or the two 16-bit floating formats — `bf16` (f32's top 16
+//! bits: 8 exponent bits, 7 mantissa bits) and IEEE `f16` (5 exponent
+//! bits, 10 mantissa bits).
+//!
+//! The host analog keeps every [`crate::runtime::Tensor`] payload as
+//! `Vec<f32>` — a 16-bit storage mode means the *values* are rounded to
+//! the 16-bit grid (round-to-nearest-even, exactly the bit conversions
+//! below) at the storage boundaries — weight creation and ring-queue
+//! pushes — while kernels accumulate in full f32 and the optimizer keeps
+//! f32 master weights. Byte accounting (`Tensor::payload_bytes`,
+//! telemetry edge counters, the serve registry) charges the reduced
+//! width, so `BENCH_traffic.json` shows the bandwidth the narrower
+//! format buys. Rounding twice to the same grid is the identity, so
+//! re-quantizing at every edge crossing is safe.
+//!
+//! The conversions are exact reimplementations of the IEEE-754
+//! `binary32 -> binary16`/`bfloat16` round-to-nearest-even narrowing,
+//! including subnormals, signed zero, overflow-to-infinity, and NaN
+//! quieting (payload top bits preserved, never collapsed to infinity).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Storage width for weights and inter-stage tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 storage — values untouched, 4 bytes/element.
+    #[default]
+    F32,
+    /// bfloat16 storage: f32 range, 8 bits of mantissa (incl. hidden).
+    Bf16,
+    /// IEEE binary16 storage: ±65504 range, 11 bits of mantissa.
+    F16,
+}
+
+impl Precision {
+    /// Bytes per element at this storage width.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Canonical lowercase name (the `KITSUNE_PRECISION` vocabulary).
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Parse a precision name (case-insensitive; `fp32`/`fp16` aliases
+    /// accepted). `None` for anything else.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Precision::F32),
+            "bf16" | "bfloat16" => Some(Precision::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Some(Precision::F16),
+            _ => None,
+        }
+    }
+
+    /// Round one value to this storage grid (round-to-nearest-even).
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+            Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        }
+    }
+
+    /// Round a slice in place to this storage grid.
+    pub fn quantize_slice(self, xs: &mut [f32]) {
+        match self {
+            Precision::F32 => {}
+            Precision::Bf16 => {
+                for x in xs {
+                    *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+                }
+            }
+            Precision::F16 => {
+                for x in xs {
+                    *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+                }
+            }
+        }
+    }
+}
+
+/// Resolve one precision environment override against its raw string
+/// value: a recognized name wins, anything else warns once (via the
+/// shared [`crate::sched::warn_env_once`] policy) and yields `fallback`.
+/// Split from [`env_precision`] so the parse/warn policy is unit
+/// testable without mutating the process environment.
+pub fn resolve_env_precision(var: &str, raw: &str, fallback: Precision) -> Precision {
+    match Precision::parse(raw) {
+        Some(p) => p,
+        None => {
+            crate::sched::warn_env_once(var, &precision_warn_msg(var, raw, fallback));
+            fallback
+        }
+    }
+}
+
+/// The exact warning line [`resolve_env_precision`] emits — split out so
+/// the message contract (bad value named, expected vocabulary, fallback)
+/// is unit testable without capturing stderr.
+pub fn precision_warn_msg(var: &str, raw: &str, fallback: Precision) -> String {
+    format!(
+        "kitsune: ignoring {var}={raw:?} (expected f32|bf16|f16); falling back to {}",
+        fallback.label()
+    )
+}
+
+/// Read a precision knob from the environment: unset yields `fallback`,
+/// set-but-unrecognized warns once and yields `fallback`.
+pub fn env_precision(var: &str, fallback: Precision) -> Precision {
+    match std::env::var(var) {
+        Ok(raw) => resolve_env_precision(var, &raw, fallback),
+        Err(_) => fallback,
+    }
+}
+
+/// The process-default storage precision (`KITSUNE_PRECISION`, default
+/// f32), resolved once — [`crate::session::SessionBuilder`] seeds its
+/// precision from this, `.precision(..)` overrides per session.
+pub fn default_precision() -> Precision {
+    // 0 = unresolved, else 1 + discriminant.
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => Precision::F32,
+        2 => Precision::Bf16,
+        3 => Precision::F16,
+        _ => {
+            let p = env_precision("KITSUNE_PRECISION", Precision::F32);
+            let code = match p {
+                Precision::F32 => 1,
+                Precision::Bf16 => 2,
+                Precision::F16 => 3,
+            };
+            CACHE.store(code, Ordering::Relaxed);
+            p
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> bf16
+// ---------------------------------------------------------------------
+
+/// Narrow f32 to bfloat16 bits with round-to-nearest-even. NaNs are
+/// quieted with their top payload bits preserved (never rounded up into
+/// an infinity); everything else — including subnormals, which bf16
+/// represents at the same exponents as f32 — goes through the RNE
+/// increment, with overflow carrying naturally into the Inf encoding.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep sign + top mantissa bits; force a quiet, nonzero payload.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (((bits + 0x7FFF + lsb) >> 16) & 0xFFFF) as u16
+}
+
+/// Widen bfloat16 bits to f32 — exact (bf16 is f32's top half).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> f16
+// ---------------------------------------------------------------------
+
+/// Narrow f32 to IEEE binary16 bits with round-to-nearest-even,
+/// handling subnormal results, underflow to signed zero, overflow to
+/// infinity (the RNE cutover is 65520, not the max finite 65504), and
+/// NaN quieting with the top payload bits preserved.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+
+    if abs > 0x7F80_0000 {
+        // NaN: quiet bit forced, top 9 payload bits kept.
+        return sign | 0x7E00 | ((abs >> 13) & 0x01FF) as u16;
+    }
+    if abs >= 0x477F_F000 {
+        // Inf, or finite >= 65520 (rounds up past the max finite 65504).
+        return sign | 0x7C00;
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    let man = abs & 0x007F_FFFF;
+    if exp >= -14 {
+        // Normal f16. Drop 13 mantissa bits with RNE; a mantissa carry
+        // overflows into the exponent field, which is exactly right.
+        let half = (((exp + 15) as u32) << 10) | (man >> 13);
+        let round = (man >> 12) & 1;
+        let sticky = u32::from(man & 0x0FFF != 0);
+        let lsb = (man >> 13) & 1;
+        sign | (half + (round & (sticky | lsb))) as u16
+    } else if exp >= -25 {
+        // Subnormal f16: the hidden bit becomes explicit, then RNE on
+        // the variable-width shift. `kept + up` may carry into the
+        // smallest normal — also exactly right.
+        let man = man | 0x0080_0000;
+        let shift = (13 - 14 - exp) as u32;
+        let kept = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let up = u32::from(rem > halfway || (rem == halfway && kept & 1 == 1));
+        sign | (kept + up) as u16
+    } else {
+        // Below half the smallest subnormal: signed zero.
+        sign
+    }
+}
+
+/// Widen IEEE binary16 bits to f32 — exact for every f16 value,
+/// including subnormals (renormalized) and NaN payloads.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: value = m * 2^-24; renormalize around the
+            // highest set bit p (0..=9).
+            let p = 31 - m.leading_zeros();
+            sign | ((p + 103) << 23) | ((m << (23 - p)) & 0x007F_FFFF)
+        }
+        (31, 0) => sign | 0x7F80_0000,
+        (31, m) => sign | 0x7F80_0000 | 0x0040_0000 | (m << 13),
+        (e, m) => sign | ((e + 112) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels_round_trip() {
+        for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+            assert_eq!(Precision::parse(p.label()), Some(p));
+        }
+        assert_eq!(Precision::parse(" FP16 "), Some(Precision::F16));
+        assert_eq!(Precision::parse("bfloat16"), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("int8"), None);
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::Bf16.bytes(), 2);
+        assert_eq!(Precision::F16.bytes(), 2);
+    }
+
+    #[test]
+    fn unparseable_precision_env_warns_with_fallback_in_message() {
+        let p = resolve_env_precision("KITSUNE_PRECISION_TEST_BAD", "int8", Precision::F32);
+        assert_eq!(p, Precision::F32);
+        let p = resolve_env_precision("KITSUNE_PRECISION_TEST_OK", "bf16", Precision::F32);
+        assert_eq!(p, Precision::Bf16);
+        // The message names the variable, the bad value, the expected
+        // vocabulary, and the fallback actually in use (the once-per-var
+        // contract lives in sched's tests).
+        let msg = precision_warn_msg("KITSUNE_PRECISION", "int8", Precision::F32);
+        assert!(msg.contains("KITSUNE_PRECISION=\"int8\""), "{msg}");
+        assert!(msg.contains("f32|bf16|f16"), "{msg}");
+        assert!(msg.contains("falling back to f32"), "{msg}");
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut rng = crate::runtime::Rng::new(0xBEEF);
+        for p in [Precision::Bf16, Precision::F16] {
+            for _ in 0..2000 {
+                let x = (rng.normal()) * 100.0;
+                let q = p.quantize(x);
+                assert_eq!(q.to_bits(), p.quantize(q).to_bits(), "{p:?} {x}");
+            }
+        }
+    }
+}

@@ -1,0 +1,920 @@
+//! Explicit 8-lane f32 vector layer for the interpreter's hot kernels.
+//!
+//! Two dispatch levels, both decided at run time:
+//!
+//! 1. **Engine level** — [`vector_enabled`] reads `KITSUNE_SIMD=0|1`
+//!    (default on) through the shared warn-once env policy. When off,
+//!    `runtime::interp` executes its original scalar kernels untouched,
+//!    preserving the bitwise-oracle contract exactly as before this
+//!    layer existed ([`Equivalence::Bitwise`]).
+//! 2. **CPU level** — on x86_64 with AVX2+FMA detected
+//!    (`is_x86_feature_detected!`), each kernel runs a
+//!    `#[target_feature]` intrinsics path (256-bit loads, fused
+//!    multiply-add); everywhere else a portable 8-lane-chunked Rust
+//!    path that the compiler is free to autovectorize.
+//!
+//! The FMA paths fuse each multiply-add into a single rounding, which
+//! re-associates nothing but *does* change low-order bits versus the
+//! scalar `mul` + `add` sequence — the accumulation still runs
+//! `kk = 0..k` in order, so the divergence is bounded to a few ULP per
+//! element. [`Equivalence::Ulp`] is the explicit contract for that tier:
+//! `tests/kernel_equivalence.rs` verifies the vector engine ULP-bounded
+//! against the scalar oracle, and bitwise with `KITSUNE_SIMD=0`.
+//! [`engine_equivalence`] returns the tier matching the live dispatch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lanes per vector: one 256-bit register of f32.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------
+
+/// `KITSUNE_SIMD` state: 0 unresolved, 1 forced off, 2 on.
+static VECTOR_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the vector kernels are selected (the `KITSUNE_SIMD` knob,
+/// default on). Resolved from the environment once; override with
+/// [`set_vector_enabled`].
+pub fn vector_enabled() -> bool {
+    match VECTOR_MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let on = crate::sched::env_switch("KITSUNE_SIMD", true);
+            VECTOR_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the engine-level dispatch (tests and benches compare both
+/// paths in one process; mirrors `interp::set_matmul_par_threshold`).
+pub fn set_vector_enabled(on: bool) {
+    VECTOR_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_fused() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_fused() -> bool {
+    false
+}
+
+/// Whether the CPU-level AVX2+FMA paths are active (single-rounding
+/// fused multiply-add — the only numeric divergence from scalar).
+pub fn fused_madd() -> bool {
+    // 0 unresolved, 1 no, 2 yes.
+    static FUSED: AtomicU8 = AtomicU8::new(0);
+    match FUSED.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let f = detect_fused();
+            FUSED.store(if f { 2 } else { 1 }, Ordering::Relaxed);
+            f
+        }
+    }
+}
+
+/// The live kernel path, for bench/telemetry labels.
+pub fn dispatch_label() -> &'static str {
+    if !vector_enabled() {
+        "scalar"
+    } else if fused_madd() {
+        "avx2+fma"
+    } else {
+        "portable"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Equivalence contract
+// ---------------------------------------------------------------------
+
+/// ULP bound for the vector engine against the scalar oracle. Each
+/// fused multiply-add differs from mul+add by at most one rounding and
+/// the contraction order is unchanged, so per-kernel drift is a few ULP;
+/// 64 leaves headroom for values flowing through several fused GEMMs.
+pub const VECTOR_ULP_BOUND: u32 = 64;
+
+/// Absolute escape hatch under [`Equivalence::Ulp`]: when two
+/// accumulations cancel to near zero, an eps-scale absolute difference
+/// can be millions of ULP (subnormal spacing) while being numerically
+/// meaningless. Differences at or below this magnitude always pass.
+pub const ULP_ABS_FLOOR: f32 = 1e-6;
+
+/// How strongly an engine's results must match the scalar oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Equivalence {
+    /// Every element identical down to the bit pattern (NaN included) —
+    /// the scalar engine's retained contract.
+    Bitwise,
+    /// Every element within `bound` ULP of the oracle (NaN must pair
+    /// with NaN; differences ≤ [`ULP_ABS_FLOOR`] always pass) — the
+    /// vector engine's contract.
+    Ulp(u32),
+}
+
+/// Distance between two f32s in units-in-the-last-place, via the
+/// monotonic sign-magnitude integer mapping (so the measure is exact
+/// across exponent boundaries, and ±0 are 0 apart). `Some(0)` when both
+/// are NaN (any payloads); `None` when exactly one is — incomparable.
+pub fn ulp_diff(a: f32, b: f32) -> Option<u64> {
+    if a.is_nan() || b.is_nan() {
+        return if a.is_nan() && b.is_nan() { Some(0) } else { None };
+    }
+    fn key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7FFF_FFFF) as i64)
+        } else {
+            b as i64
+        }
+    }
+    Some((key(a) - key(b)).unsigned_abs())
+}
+
+impl Equivalence {
+    /// Check `got` against the oracle `want`, reporting the first
+    /// violating element.
+    pub fn check(&self, got: &[f32], want: &[f32]) -> std::result::Result<(), String> {
+        if got.len() != want.len() {
+            return Err(format!("length mismatch: got {} want {}", got.len(), want.len()));
+        }
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            match *self {
+                Equivalence::Bitwise => {
+                    if g.to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "bitwise mismatch at [{i}]: got {g:?} ({:#010x}) want {w:?} ({:#010x})",
+                            g.to_bits(),
+                            w.to_bits()
+                        ));
+                    }
+                }
+                Equivalence::Ulp(bound) => match ulp_diff(g, w) {
+                    Some(d) if d <= u64::from(bound) => {}
+                    d => {
+                        if (g - w).abs() <= ULP_ABS_FLOOR {
+                            continue;
+                        }
+                        return Err(format!(
+                            "ulp mismatch at [{i}]: got {g:?} want {w:?} \
+                             ({} ULP, bound {bound})",
+                            d.map_or_else(|| "NaN vs number".to_string(), |d| d.to_string())
+                        ));
+                    }
+                },
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The equivalence tier the *current* optimized engine owes the scalar
+/// oracle: bitwise when the vector layer is disabled (or running the
+/// portable fallback, which keeps scalar op order), ULP-bounded when
+/// the FMA paths are live.
+pub fn engine_equivalence() -> Equivalence {
+    if vector_enabled() && fused_madd() {
+        Equivalence::Ulp(VECTOR_ULP_BOUND)
+    } else {
+        Equivalence::Bitwise
+    }
+}
+
+// ---------------------------------------------------------------------
+// Matmul micro-kernel panel
+// ---------------------------------------------------------------------
+
+const MR: usize = 4;
+const NR: usize = LANES;
+
+/// Vector twin of `interp::matmul_panel`: compute output rows `i0..i1`
+/// into `out` (row-major `[i1-i0, n]`), contraction strictly `kk = 0..k`
+/// in order per element, no zero-skip (NaN propagates), optional fused
+/// bias epilogue after the full sum. Full MR×NR blocks run 8-wide; edge
+/// blocks and the transposed-B lane gather stay scalar.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_panel(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ta: bool,
+    tb: bool,
+    bias: Option<&[f32]>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2+FMA presence checked at run time.
+        unsafe { matmul_panel_avx(a, b, out, i0, i1, k, n, lda, ldb, ta, tb, bias) };
+        return;
+    }
+    matmul_panel_portable(a, b, out, i0, i1, k, n, lda, ldb, ta, tb, bias);
+}
+
+/// Scalar edge block shared by both vector paths: rows `ib0..ib1`
+/// (panel-relative) × cols `jb..jb+nr`, identical accumulation order to
+/// the scalar engine's edge handling.
+#[allow(clippy::too_many_arguments)]
+fn edge_block(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    ib0: usize,
+    ib1: usize,
+    jb: usize,
+    nr: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ta: bool,
+    tb: bool,
+) {
+    for r in ib0..ib1 {
+        let i = i0 + r;
+        for c in 0..nr {
+            let j = jb + c;
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                let av = if ta { a[kk * lda + i] } else { a[i * lda + kk] };
+                let bvc = if tb { b[j * ldb + kk] } else { b[kk * ldb + j] };
+                acc += av * bvc;
+            }
+            out[r * n + j] = acc;
+        }
+    }
+}
+
+/// Bias epilogue shared by both vector paths — one exact add per
+/// element after the full contraction, same as the scalar engine.
+fn bias_epilogue(out: &mut [f32], n: usize, bias: Option<&[f32]>) {
+    if n == 0 {
+        return;
+    }
+    if let Some(bias) = bias {
+        for row in out.chunks_exact_mut(n) {
+            add_rows_portable(row, bias);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn matmul_panel_avx(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ta: bool,
+    tb: bool,
+    bias: Option<&[f32]>,
+) {
+    use core::arch::x86_64::*;
+    let rows = i1 - i0;
+    let mut jb = 0;
+    while jb + NR <= n {
+        let mut ib = 0;
+        while ib + MR <= rows {
+            let mut acc = [_mm256_setzero_ps(); MR];
+            for kk in 0..k {
+                let bv = if tb {
+                    // Lane gather down the transposed columns (high lane
+                    // first in `set_ps` operand order).
+                    _mm256_set_ps(
+                        b[(jb + 7) * ldb + kk],
+                        b[(jb + 6) * ldb + kk],
+                        b[(jb + 5) * ldb + kk],
+                        b[(jb + 4) * ldb + kk],
+                        b[(jb + 3) * ldb + kk],
+                        b[(jb + 2) * ldb + kk],
+                        b[(jb + 1) * ldb + kk],
+                        b[jb * ldb + kk],
+                    )
+                } else {
+                    _mm256_loadu_ps(b.as_ptr().add(kk * ldb + jb))
+                };
+                for (r, slot) in acc.iter_mut().enumerate() {
+                    let i = i0 + ib + r;
+                    let av =
+                        _mm256_set1_ps(if ta { a[kk * lda + i] } else { a[i * lda + kk] });
+                    *slot = _mm256_fmadd_ps(av, bv, *slot);
+                }
+            }
+            for (r, slot) in acc.iter().enumerate() {
+                _mm256_storeu_ps(out.as_mut_ptr().add((ib + r) * n + jb), *slot);
+            }
+            ib += MR;
+        }
+        edge_block(a, b, out, i0, ib, rows, jb, NR, k, n, lda, ldb, ta, tb);
+        jb += NR;
+    }
+    if jb < n {
+        edge_block(a, b, out, i0, 0, rows, jb, n - jb, k, n, lda, ldb, ta, tb);
+    }
+    bias_epilogue(out, n, bias);
+}
+
+/// Portable fallback: the same MR×NR register blocking with plain
+/// mul+add over `[f32; 8]` chunks — bitwise-identical to the scalar
+/// engine (same op sequence), and autovectorizable where the target
+/// allows.
+#[allow(clippy::too_many_arguments)]
+fn matmul_panel_portable(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ta: bool,
+    tb: bool,
+    bias: Option<&[f32]>,
+) {
+    let rows = i1 - i0;
+    let mut jb = 0;
+    while jb + NR <= n {
+        let mut ib = 0;
+        while ib + MR <= rows {
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let mut bv = [0.0f32; NR];
+                if tb {
+                    for (c, slot) in bv.iter_mut().enumerate() {
+                        *slot = b[(jb + c) * ldb + kk];
+                    }
+                } else {
+                    bv.copy_from_slice(&b[kk * ldb + jb..kk * ldb + jb + NR]);
+                }
+                for (r, acc_row) in acc.iter_mut().enumerate() {
+                    let i = i0 + ib + r;
+                    let av = if ta { a[kk * lda + i] } else { a[i * lda + kk] };
+                    for (o, &bvc) in acc_row.iter_mut().zip(&bv) {
+                        *o += av * bvc;
+                    }
+                }
+            }
+            for (r, acc_row) in acc.iter().enumerate() {
+                let base = (ib + r) * n + jb;
+                out[base..base + NR].copy_from_slice(acc_row);
+            }
+            ib += MR;
+        }
+        edge_block(a, b, out, i0, ib, rows, jb, NR, k, n, lda, ldb, ta, tb);
+        jb += NR;
+    }
+    if jb < n {
+        edge_block(a, b, out, i0, 0, rows, jb, n - jb, k, n, lda, ldb, ta, tb);
+    }
+    bias_epilogue(out, n, bias);
+}
+
+// ---------------------------------------------------------------------
+// Elementwise assign-kernels
+// ---------------------------------------------------------------------
+//
+// All elementwise vector kernels are *assign* style: the destination
+// slice arrives holding the first operand's values (in-place execution
+// passes the owned buffer directly; out-of-place copies first — a
+// memcpy plus one vector sweep still beats the scalar element loop).
+// AVX remainder lanes (< 8 trailing elements) use `f32::mul_add` where
+// the vector op fuses, keeping one rounding semantics per element
+// across the whole slice.
+
+/// Per-row bias add: `x[r*n + j] += bias[j]` — `x.len()` must be a
+/// multiple of `bias.len()`.
+pub fn add_bias_assign(x: &mut [f32], bias: &[f32]) {
+    debug_assert!(!bias.is_empty() && x.len() % bias.len() == 0);
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        for row in x.chunks_exact_mut(bias.len()) {
+            // SAFETY: AVX2 presence checked at run time.
+            unsafe { add_rows_avx(row, bias) };
+        }
+        return;
+    }
+    for row in x.chunks_exact_mut(bias.len()) {
+        add_rows_portable(row, bias);
+    }
+}
+
+fn add_rows_portable(x: &mut [f32], b: &[f32]) {
+    for (v, &bv) in x.iter_mut().zip(b) {
+        *v += bv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_rows_avx(x: &mut [f32], b: &[f32]) {
+    use core::arch::x86_64::*;
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let v = _mm256_add_ps(
+            _mm256_loadu_ps(x.as_ptr().add(i)),
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    while i < x.len() {
+        x[i] += b[i];
+        i += 1;
+    }
+}
+
+/// `x[i] = if x[i] > 0 { x[i] } else { 0.0 }` — the Relu sweep.
+/// NaN maps to 0.0, exactly like the scalar `Act::apply`.
+pub fn relu_assign(x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { relu_avx(x) };
+        return;
+    }
+    for v in x {
+        *v = if *v > 0.0 { *v } else { 0.0 };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_avx(x: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let zero = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        // Mask of lanes strictly > 0 (NaN compares false -> 0.0, the
+        // scalar kernel's NaN behavior).
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero);
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_and_ps(v, mask));
+        i += LANES;
+    }
+    while i < x.len() {
+        x[i] = if x[i] > 0.0 { x[i] } else { 0.0 };
+        i += 1;
+    }
+}
+
+/// `g[i] = if x[i] > 0 { g[i] } else { 0.0 }` — the ReluGrad sweep.
+pub fn relu_grad_assign(g: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(g.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { relu_grad_avx(g, x) };
+        return;
+    }
+    for (gv, &xv) in g.iter_mut().zip(x) {
+        *gv = if xv > 0.0 { *gv } else { 0.0 };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_grad_avx(g: &mut [f32], x: &[f32]) {
+    use core::arch::x86_64::*;
+    let zero = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= g.len() {
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(xv, zero);
+        _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_and_ps(gv, mask));
+        i += LANES;
+    }
+    while i < g.len() {
+        g[i] = if x[i] > 0.0 { g[i] } else { 0.0 };
+        i += 1;
+    }
+}
+
+/// `g[i] = g[i] * (if x[i] > 0 { 1.0 } else { 0.0 })` — the ActGradI
+/// sweep for Relu. Unlike [`relu_grad_assign`] this *multiplies* by the
+/// 0/1 gate (the scalar `g * Act::grad_at(x)` sequence), so `g = NaN`
+/// stays NaN and negative `g` yields `-0.0` in the dead region — exact.
+pub fn relu_act_grad_assign(g: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(g.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { relu_act_grad_avx(g, x) };
+        return;
+    }
+    for (gv, &xv) in g.iter_mut().zip(x) {
+        *gv *= if xv > 0.0 { 1.0 } else { 0.0 };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relu_act_grad_avx(g: &mut [f32], x: &[f32]) {
+    use core::arch::x86_64::*;
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_ps(1.0);
+    let mut i = 0;
+    while i + LANES <= g.len() {
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        // 1.0/0.0 gate, then a real multiply — keeps gv's NaN and sign.
+        let gate = _mm256_and_ps(one, _mm256_cmp_ps::<_CMP_GT_OQ>(xv, zero));
+        _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_mul_ps(gv, gate));
+        i += LANES;
+    }
+    while i < g.len() {
+        g[i] *= if x[i] > 0.0 { 1.0 } else { 0.0 };
+        i += 1;
+    }
+}
+
+/// `x[i] = x[i] + c * b[i]` — the Axpy kernel (fused on AVX).
+pub fn axpy_assign(x: &mut [f32], b: &[f32], c: f32) {
+    debug_assert_eq!(x.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2+FMA presence checked at run time.
+        unsafe { axpy_avx(x, b, c) };
+        return;
+    }
+    for (xv, &bv) in x.iter_mut().zip(b) {
+        *xv += c * bv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx(x: &mut [f32], b: &[f32], c: f32) {
+    use core::arch::x86_64::*;
+    let cv = _mm256_set1_ps(c);
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let v = _mm256_fmadd_ps(
+            cv,
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+            _mm256_loadu_ps(x.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    while i < x.len() {
+        x[i] = c.mul_add(b[i], x[i]);
+        i += 1;
+    }
+}
+
+/// `x[i] = c * x[i]` — the Scale sweep (exact; no fusion involved).
+pub fn scale_assign(x: &mut [f32], c: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { scale_avx(x, c) };
+        return;
+    }
+    for v in x {
+        *v = c * *v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx(x: &mut [f32], c: f32) {
+    use core::arch::x86_64::*;
+    let cv = _mm256_set1_ps(c);
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let v = _mm256_mul_ps(cv, _mm256_loadu_ps(x.as_ptr().add(i)));
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    while i < x.len() {
+        x[i] = c * x[i];
+        i += 1;
+    }
+}
+
+/// `x[i] = x[i] * b[i]` — the Mul sweep (exact).
+pub fn mul_assign(x: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(x.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { mul_avx(x, b) };
+        return;
+    }
+    for (xv, &bv) in x.iter_mut().zip(b) {
+        *xv *= bv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_avx(x: &mut [f32], b: &[f32]) {
+    use core::arch::x86_64::*;
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let v = _mm256_mul_ps(
+            _mm256_loadu_ps(x.as_ptr().add(i)),
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    while i < x.len() {
+        x[i] *= b[i];
+        i += 1;
+    }
+}
+
+/// `x[i] = beta * x[i] + (1 - beta) * b[i]` — the Blend (momentum)
+/// kernel; the second product fuses into the first on AVX.
+pub fn blend_assign(x: &mut [f32], b: &[f32], beta: f32) {
+    debug_assert_eq!(x.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2+FMA presence checked at run time.
+        unsafe { blend_avx(x, b, beta) };
+        return;
+    }
+    let ib = 1.0 - beta;
+    for (xv, &bv) in x.iter_mut().zip(b) {
+        *xv = beta * *xv + ib * bv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn blend_avx(x: &mut [f32], b: &[f32], beta: f32) {
+    use core::arch::x86_64::*;
+    let betav = _mm256_set1_ps(beta);
+    let ibv = _mm256_set1_ps(1.0 - beta);
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let tail = _mm256_mul_ps(ibv, _mm256_loadu_ps(b.as_ptr().add(i)));
+        let v = _mm256_fmadd_ps(betav, _mm256_loadu_ps(x.as_ptr().add(i)), tail);
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    let ib = 1.0 - beta;
+    while i < x.len() {
+        x[i] = beta.mul_add(x[i], ib * b[i]);
+        i += 1;
+    }
+}
+
+/// `d[i] = d[i] * y[i] * (1 - y[i])` — the SigmoidGrad sweep, same op
+/// order as the scalar kernel (exact: no fusion).
+pub fn sigmoid_grad_assign(d: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(d.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { sigmoid_grad_avx(d, y) };
+        return;
+    }
+    for (dv, &yv) in d.iter_mut().zip(y) {
+        *dv = *dv * yv * (1.0 - yv);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sigmoid_grad_avx(d: &mut [f32], y: &[f32]) {
+    use core::arch::x86_64::*;
+    let one = _mm256_set1_ps(1.0);
+    let mut i = 0;
+    while i + LANES <= d.len() {
+        let dv = _mm256_loadu_ps(d.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        let v = _mm256_mul_ps(_mm256_mul_ps(dv, yv), _mm256_sub_ps(one, yv));
+        _mm256_storeu_ps(d.as_mut_ptr().add(i), v);
+        i += LANES;
+    }
+    while i < d.len() {
+        d[i] = d[i] * y[i] * (1.0 - y[i]);
+        i += 1;
+    }
+}
+
+/// `p[i] = p[i] - lr * (m[i] / bc1) / (sqrt(v[i] / bc2) + eps)` — the
+/// AdamStep update. Division and square root are correctly rounded, so
+/// the vector path is exact versus the scalar kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_assign(p: &mut [f32], m: &[f32], v: &[f32], lr: f32, bc1: f32, bc2: f32, eps: f32) {
+    debug_assert!(p.len() == m.len() && p.len() == v.len());
+    #[cfg(target_arch = "x86_64")]
+    if fused_madd() {
+        // SAFETY: AVX2 presence checked at run time.
+        unsafe { adam_avx(p, m, v, lr, bc1, bc2, eps) };
+        return;
+    }
+    for ((pv, &mv), &vv) in p.iter_mut().zip(m).zip(v) {
+        *pv -= lr * (mv / bc1) / ((vv / bc2).sqrt() + eps);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn adam_avx(p: &mut [f32], m: &[f32], v: &[f32], lr: f32, bc1: f32, bc2: f32, eps: f32) {
+    use core::arch::x86_64::*;
+    let lrv = _mm256_set1_ps(lr);
+    let bc1v = _mm256_set1_ps(bc1);
+    let bc2v = _mm256_set1_ps(bc2);
+    let epsv = _mm256_set1_ps(eps);
+    let mut i = 0;
+    while i + LANES <= p.len() {
+        let pv = _mm256_loadu_ps(p.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        let mhat = _mm256_div_ps(mv, bc1v);
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(_mm256_div_ps(vv, bc2v)), epsv);
+        let step = _mm256_div_ps(_mm256_mul_ps(lrv, mhat), denom);
+        _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_sub_ps(pv, step));
+        i += LANES;
+    }
+    while i < p.len() {
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vals(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = crate::runtime::Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn ulp_diff_properties() {
+        assert_eq!(ulp_diff(1.0, 1.0), Some(0));
+        assert_eq!(ulp_diff(0.0, -0.0), Some(0));
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), Some(1));
+        // Monotonic across the sign boundary.
+        assert_eq!(ulp_diff(f32::from_bits(1), -f32::from_bits(1)), Some(2));
+        assert_eq!(ulp_diff(f32::NAN, f32::NAN), Some(0));
+        assert_eq!(ulp_diff(f32::NAN, 1.0), None);
+    }
+
+    #[test]
+    fn equivalence_tiers_accept_and_reject() {
+        let a = [1.0f32, 2.0, f32::NAN];
+        let b = [1.0f32, 2.0, f32::NAN];
+        Equivalence::Bitwise.check(&a, &b).unwrap();
+        Equivalence::Ulp(0).check(&a, &b).unwrap();
+        let nudged = [1.0f32, f32::from_bits(2.0f32.to_bits() + 3), f32::NAN];
+        assert!(Equivalence::Bitwise.check(&nudged, &b).is_err());
+        Equivalence::Ulp(4).check(&nudged, &b).unwrap();
+        assert!(Equivalence::Ulp(2).check(&nudged, &b).is_err());
+        // Near-zero cancellation passes on the absolute floor.
+        Equivalence::Ulp(1).check(&[1e-8], &[-1e-8]).unwrap();
+        // One-sided NaN never passes.
+        assert!(Equivalence::Ulp(u32::MAX).check(&[f32::NAN], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_within_ulp() {
+        let n = 61; // force remainder lanes
+        let x0 = vals(1, n);
+        let b = vals(2, n);
+        let tol = Equivalence::Ulp(1);
+
+        let mut x = x0.clone();
+        axpy_assign(&mut x, &b, 0.37);
+        let want: Vec<f32> = x0.iter().zip(&b).map(|(&a, &bv)| a + 0.37 * bv).collect();
+        tol.check(&x, &want).unwrap();
+
+        let mut x = x0.clone();
+        blend_assign(&mut x, &b, 0.9);
+        let want: Vec<f32> =
+            x0.iter().zip(&b).map(|(&a, &bv)| 0.9 * a + (1.0 - 0.9) * bv).collect();
+        tol.check(&x, &want).unwrap();
+
+        // Exact sweeps: mul/scale/relu/relu-grad/sigmoid-grad/adam are
+        // unfused, so the vector paths must be bitwise.
+        let exact = Equivalence::Bitwise;
+        let mut x = x0.clone();
+        mul_assign(&mut x, &b);
+        let want: Vec<f32> = x0.iter().zip(&b).map(|(&a, &bv)| a * bv).collect();
+        exact.check(&x, &want).unwrap();
+
+        let mut x = x0.clone();
+        scale_assign(&mut x, -1.25);
+        let want: Vec<f32> = x0.iter().map(|&a| -1.25 * a).collect();
+        exact.check(&x, &want).unwrap();
+
+        let mut x = x0.clone();
+        x[3] = f32::NAN; // NaN lane must map to 0.0 like the scalar kernel
+        let nan_in = x.clone();
+        relu_assign(&mut x);
+        let want: Vec<f32> =
+            nan_in.iter().map(|&a| if a > 0.0 { a } else { 0.0 }).collect();
+        exact.check(&x, &want).unwrap();
+
+        let mut g = x0.clone();
+        relu_grad_assign(&mut g, &b);
+        let want: Vec<f32> = x0
+            .iter()
+            .zip(&b)
+            .map(|(&gv, &xv)| if xv > 0.0 { gv } else { 0.0 })
+            .collect();
+        exact.check(&g, &want).unwrap();
+
+        let mut g = x0.clone();
+        g[5] = f32::NAN; // ActGradI keeps g's NaN even in the dead region
+        let g_in = g.clone();
+        relu_act_grad_assign(&mut g, &b);
+        let want: Vec<f32> = g_in
+            .iter()
+            .zip(&b)
+            .map(|(&gv, &xv)| gv * if xv > 0.0 { 1.0 } else { 0.0 })
+            .collect();
+        exact.check(&g, &want).unwrap();
+
+        let mut d = x0.clone();
+        let y: Vec<f32> = b.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect();
+        sigmoid_grad_assign(&mut d, &y);
+        let want: Vec<f32> =
+            x0.iter().zip(&y).map(|(&dv, &yv)| dv * yv * (1.0 - yv)).collect();
+        exact.check(&d, &want).unwrap();
+
+        let mut p = x0.clone();
+        let m = vals(3, n);
+        let v: Vec<f32> = vals(4, n).iter().map(|&x| x * x).collect();
+        adam_assign(&mut p, &m, &v, 1e-3, 0.9, 0.99, 1e-8);
+        let want: Vec<f32> = x0
+            .iter()
+            .zip(&m)
+            .zip(&v)
+            .map(|((&pv, &mv), &vv)| pv - 1e-3 * (mv / 0.9) / ((vv / 0.99).sqrt() + 1e-8))
+            .collect();
+        exact.check(&p, &want).unwrap();
+
+        let bias = vals(5, 7);
+        let mut x = vals(6, 7 * 9);
+        let want: Vec<f32> = x
+            .chunks_exact(7)
+            .flat_map(|row| row.iter().zip(&bias).map(|(&v, &bv)| v + bv))
+            .collect();
+        add_bias_assign(&mut x, &bias);
+        exact.check(&x, &want).unwrap();
+    }
+
+    #[test]
+    fn vector_matmul_panel_is_ulp_bounded_against_scalar_order() {
+        for (m, k, n, ta, tb) in
+            [(13, 31, 23, false, false), (9, 17, 11, true, false), (12, 19, 16, false, true)]
+        {
+            // Entries scaled to ~[-0.25, 0.25]: worst-case FMA drift at
+            // k<=31 then sits far inside the tier's absolute floor, so
+            // the bound holds even on outputs that cancel toward zero.
+            let shrink = |v: Vec<f32>| -> Vec<f32> { v.iter().map(|x| x * 0.03125).collect() };
+            let a = shrink(vals(10 + m as u64, m * k));
+            let b = shrink(vals(20 + n as u64, k * n));
+            let bias = shrink(vals(30, n));
+            let (lda, ldb) = if ta { (m, n) } else { (k, n) };
+            let (lda, ldb) = if tb { (lda, k) } else { (lda, ldb) };
+            let mut got = vec![0.0f32; m * n];
+            matmul_panel(&a, &b, &mut got, 0, m, k, n, lda, ldb, ta, tb, Some(&bias));
+            // Scalar oracle: plain kk-order triple loop + bias.
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        let av = if ta { a[kk * lda + i] } else { a[i * lda + kk] };
+                        let bv = if tb { b[j * ldb + kk] } else { b[kk * ldb + j] };
+                        acc += av * bv;
+                    }
+                    want[i * n + j] = acc + bias[j];
+                }
+            }
+            Equivalence::Ulp(VECTOR_ULP_BOUND).check(&got, &want).unwrap();
+        }
+    }
+}

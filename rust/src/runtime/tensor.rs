@@ -2,15 +2,23 @@
 //! the value types crossing the queue/runtime boundary. Backend-agnostic:
 //! both the interpreter and the PJRT backend consume and produce these.
 
+use super::precision::Precision;
 use anyhow::{anyhow, Result};
 
 /// Plain-old-data f32 tensor crossing the queue/runtime boundary.
 /// (Queues carry `Tensor`, never backend-native buffers — PJRT literals
 /// wrap raw pointers and stay thread-local inside the `pjrt` backend.)
+///
+/// `data` is always `Vec<f32>`; a 16-bit storage mode ([`Precision`])
+/// means the values have been rounded to that format's grid and `prec`
+/// tags the width every byte accountant (telemetry edge counters, the
+/// serve registry) must charge for this payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub dims: Vec<usize>,
     pub data: Vec<f32>,
+    /// Storage width this payload is held at (values on that grid).
+    pub prec: Precision,
 }
 
 impl Tensor {
@@ -19,12 +27,12 @@ impl Tensor {
         if data.len() != numel {
             return Err(anyhow!("tensor data {} != numel {numel}", data.len()));
         }
-        Ok(Tensor { dims, data })
+        Ok(Tensor { dims, data, prec: Precision::F32 })
     }
 
     pub fn zeros(dims: &[usize]) -> Self {
         let numel: usize = dims.iter().product::<usize>().max(1);
-        Tensor { dims: dims.to_vec(), data: vec![0.0; numel] }
+        Tensor { dims: dims.to_vec(), data: vec![0.0; numel], prec: Precision::F32 }
     }
 
     pub fn scalar_value(&self) -> f32 {
@@ -36,6 +44,35 @@ impl Tensor {
     /// never extra length).
     pub fn numel(&self) -> usize {
         self.data.len()
+    }
+
+    /// Bytes one element occupies at this tensor's storage width.
+    pub fn element_bytes(&self) -> usize {
+        self.prec.bytes()
+    }
+
+    /// Bytes this payload occupies at its storage width — what an edge
+    /// crossing or a resident-memory accountant should charge.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.numel() * self.element_bytes()) as u64
+    }
+
+    /// Round the values to `prec`'s storage grid and tag the tensor.
+    /// Idempotent (re-rounding a grid value is the identity); a no-op
+    /// for [`Precision::F32`].
+    pub fn quantize(&mut self, prec: Precision) {
+        if prec != Precision::F32 {
+            prec.quantize_slice(&mut self.data);
+        }
+        self.prec = prec;
+    }
+
+    /// A copy rounded to `prec`'s grid (no copy avoidance for F32 — use
+    /// at lowering boundaries, not per element).
+    pub fn quantized(&self, prec: Precision) -> Tensor {
+        let mut t = self.clone();
+        t.quantize(prec);
+        t
     }
 }
 
@@ -80,7 +117,7 @@ impl Rng {
         let scale = (2.0 / fan_in).sqrt();
         let numel: usize = dims.iter().product();
         let data = (0..numel).map(|_| self.normal() * scale).collect();
-        Tensor { dims: dims.to_vec(), data }
+        Tensor { dims: dims.to_vec(), data, prec: Precision::F32 }
     }
 }
 

@@ -145,6 +145,42 @@ pub fn env_usize(var: &str, fallback: usize, max: usize) -> usize {
     }
 }
 
+/// Resolve one on/off environment override against its raw string value.
+/// Accepts `1`/`true`/`on`/`yes` and `0`/`false`/`off`/`no`
+/// (case-insensitive, trimmed); anything else warns once (naming the
+/// expected vocabulary and the fallback) and yields `fallback`. Split
+/// out from [`env_switch`] for the same unit-testability reason as
+/// [`resolve_env_usize`].
+pub fn resolve_env_switch(var: &str, raw: &str, fallback: bool) -> bool {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => true,
+        "0" | "false" | "off" | "no" => false,
+        _ => {
+            warn_env_once(var, &switch_warn_msg(var, raw, fallback));
+            fallback
+        }
+    }
+}
+
+/// The exact warning line [`resolve_env_switch`] emits — split out so
+/// the message contract (bad value named, expected vocabulary, fallback)
+/// is unit testable without capturing stderr.
+pub fn switch_warn_msg(var: &str, raw: &str, fallback: bool) -> String {
+    format!(
+        "kitsune: ignoring {var}={raw:?} (expected 0|1|true|false|on|off); \
+         falling back to {fallback}"
+    )
+}
+
+/// Read an on/off knob from the environment: unset yields `fallback`,
+/// set-but-unparseable warns once and yields `fallback`.
+pub fn env_switch(var: &str, fallback: bool) -> bool {
+    match std::env::var(var) {
+        Ok(raw) => resolve_env_switch(var, &raw, fallback),
+        Err(_) => fallback,
+    }
+}
+
 fn default_workers() -> usize {
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     env_usize("KITSUNE_WORKERS", host, MAX_WORKERS)
@@ -619,6 +655,25 @@ mod tests {
         assert_eq!(resolve_env_usize("KITSUNE_WORKERS", "banana", 4, MAX_WORKERS), 4);
         assert_eq!(resolve_env_usize("KITSUNE_WORKERS", "0", 4, MAX_WORKERS), 4);
         assert_eq!(resolve_env_usize("KITSUNE_SERVE_QUEUE_DEPTH", "-3", 256, 1 << 20), 256);
+    }
+
+    #[test]
+    fn env_switch_vocabulary_and_warn_message() {
+        for raw in ["1", "true", "ON", " yes "] {
+            assert!(resolve_env_switch("KITSUNE_SIMD", raw, false), "{raw:?}");
+        }
+        for raw in ["0", "false", "Off", "no"] {
+            assert!(!resolve_env_switch("KITSUNE_SIMD", raw, true), "{raw:?}");
+        }
+        // Unrecognized values warn (once) and fall back — both ways.
+        assert!(resolve_env_switch("KITSUNE_SIMD_TEST_A", "fast", true));
+        assert!(!resolve_env_switch("KITSUNE_SIMD_TEST_B", "2", false));
+        // The message names the variable, the bad value, the expected
+        // vocabulary, and the fallback actually in use.
+        let msg = switch_warn_msg("KITSUNE_SIMD", "fast", true);
+        assert!(msg.contains("KITSUNE_SIMD=\"fast\""), "{msg}");
+        assert!(msg.contains("0|1|true|false|on|off"), "{msg}");
+        assert!(msg.contains("falling back to true"), "{msg}");
     }
 
     #[test]

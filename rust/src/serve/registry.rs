@@ -17,6 +17,8 @@ use std::sync::{Arc, Mutex};
 /// Bytes a warm session pins: stage weights + inter-stage queue pool.
 /// Tile bytes are estimated from the input tile spec (stage output dims
 /// vary but stay within the same order for the suite's pipelines).
+/// Both terms are charged at the session's storage precision — a bf16
+/// model pins half the bytes of its f32 twin.
 pub fn session_resident_bytes(session: &Session) -> u64 {
     let Some(pipeline) = session.pipeline() else {
         return 0;
@@ -24,12 +26,11 @@ pub fn session_resident_bytes(session: &Session) -> u64 {
     let weight_bytes: u64 = pipeline
         .stages
         .iter()
-        .map(|s| {
-            s.weights.iter().map(|w| w.data.len() as u64 * 4).sum::<u64>()
-        })
+        .map(|s| s.weights.iter().map(|w| w.payload_bytes()).sum::<u64>())
         .sum();
+    let elem = session.precision().bytes() as u64;
     let tile_bytes: u64 =
-        session.tile_dims().map(|d| d.iter().product::<usize>() as u64 * 4).unwrap_or(0);
+        session.tile_dims().map(|d| d.iter().product::<usize>() as u64 * elem).unwrap_or(0);
     let n_edges = pipeline.stages.len() as u64 + 1;
     weight_bytes + n_edges * pipeline.queue_capacity as u64 * tile_bytes
 }

@@ -51,7 +51,7 @@ use crate::fault::{FaultPlan, Health};
 use crate::coordinator::{run_serial, PipelineRun, SpatialPipeline, StageMetrics};
 use crate::graph::{EwKind, Graph, GraphBuilder, GraphKind};
 use crate::report::{evaluate_compiled, AppEval};
-use crate::runtime::{bound_executable, ArtifactStore, Backend, Rng, Tensor};
+use crate::runtime::{bound_executable, ArtifactStore, Backend, Precision, Rng, Tensor};
 use crate::sim::GpuConfig;
 use crate::train::{
     lower_training, OptimizerKind, TrainBatch, TrainPlan, TrainService, Trainer,
@@ -135,6 +135,7 @@ pub struct SessionBuilder {
     train_workers: usize,
     warm: bool,
     fault: Option<Arc<FaultPlan>>,
+    precision: Precision,
 }
 
 impl Default for SessionBuilder {
@@ -154,6 +155,7 @@ impl Default for SessionBuilder {
             train_workers: 1,
             warm: true,
             fault: None,
+            precision: crate::runtime::precision::default_precision(),
         }
     }
 }
@@ -250,6 +252,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Storage precision for stage weights and inter-stage tiles
+    /// (default: the process-wide `KITSUNE_PRECISION`, itself defaulting
+    /// to f32). In a 16-bit mode, values are rounded to the bf16/f16
+    /// grid at weight creation and every queue push while kernels still
+    /// accumulate in f32 — halving per-tile edge bytes in telemetry and
+    /// the serve registry's resident-byte accounting.
+    pub fn precision(mut self, prec: Precision) -> Self {
+        self.precision = prec;
+        self
+    }
+
     /// Install a programmatic fault-injection plan for this session's
     /// pipelines (see [`crate::fault::FaultPlan`]). Defaults to the
     /// process-wide plan parsed from `KITSUNE_FAULT` (empty when unset),
@@ -278,6 +291,7 @@ impl SessionBuilder {
             train_workers,
             warm,
             fault,
+            precision,
         } = self;
         let fault_plan = fault.unwrap_or_else(FaultPlan::from_env);
 
@@ -323,8 +337,14 @@ impl SessionBuilder {
         let mut not_streamable = None;
         if let Some(g) = &graph {
             let c = compile(g, &cfg, &select)?;
-            let opts =
-                LowerOptions { gemm_workers, queue_capacity, tile_rows, seed, train_workers };
+            let opts = LowerOptions {
+                gemm_workers,
+                queue_capacity,
+                tile_rows,
+                seed,
+                train_workers,
+                precision,
+            };
             if g.backward_start.is_some() {
                 // Training graphs lower onto the DAG pipeline (multicast +
                 // skip links); the linear lowering below can never stream a
@@ -370,11 +390,12 @@ impl SessionBuilder {
                             .collect();
                         let store = Arc::new(ArtifactStore::from_executables("session", execs));
                         if warm {
-                            service = Some(PipelineService::start(
+                            service = Some(PipelineService::start_with_precision(
                                 Arc::clone(&store),
                                 &pipeline,
                                 vec![tile_rows, in_dim],
                                 Arc::clone(&fault_plan),
+                                precision,
                             )?);
                         }
                         lowered = Some(LoweredState {
@@ -400,7 +421,18 @@ impl SessionBuilder {
             }
         }
 
-        Ok(Session { name, cfg, graph, compiled, lowered, service, train, aot, not_streamable })
+        Ok(Session {
+            name,
+            cfg,
+            graph,
+            compiled,
+            lowered,
+            service,
+            train,
+            aot,
+            not_streamable,
+            precision,
+        })
     }
 }
 
@@ -435,6 +467,7 @@ pub struct Session {
     train: Option<TrainState>,
     aot: Option<Arc<ArtifactStore>>,
     not_streamable: Option<String>,
+    precision: Precision,
 }
 
 impl Session {
@@ -448,6 +481,12 @@ impl Session {
 
     pub fn config(&self) -> &GpuConfig {
         &self.cfg
+    }
+
+    /// Storage precision this session keeps weights and inter-stage
+    /// tiles at (see [`SessionBuilder::precision`]).
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     pub fn graph(&self) -> Option<&Graph> {
@@ -631,6 +670,7 @@ impl Session {
             .map(|_| Tensor {
                 dims: vec![l.tile_rows, l.in_dim],
                 data: (0..l.tile_rows * l.in_dim).map(|_| rng.normal()).collect(),
+                prec: crate::runtime::Precision::F32,
             })
             .collect())
     }

@@ -47,7 +47,7 @@ use crate::fault::{
 };
 use crate::graph::ResourceClass;
 use crate::queue::{PopError, PushError, RingQueue};
-use crate::runtime::{ArtifactStore, Tensor};
+use crate::runtime::{ArtifactStore, Precision, Tensor};
 use crate::sched::{self, LiveCount, Scheduler};
 use crate::telemetry::{
     trace, EdgeKind, EdgeStats, PipelineTelemetry, StageTelemetry, TrafficStats,
@@ -58,9 +58,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Payload bytes of one envelope (poison records move no tensor data).
+/// Charged at the tensor's *storage* width — a bf16/f16 tile crossing an
+/// edge moves half the bytes of its f32 twin.
 fn env_bytes(env: &Envelope<Tensor>) -> u64 {
     match env {
-        Envelope::Ok(t) => (t.data.len() * std::mem::size_of::<f32>()) as u64,
+        Envelope::Ok(t) => t.payload_bytes(),
         Envelope::Poison(_) => 0,
     }
 }
@@ -268,6 +270,9 @@ pub struct PipelineService {
     inflight: Arc<AtomicUsize>,
     /// `Healthy → Degraded (restarting) → Failed` for the whole pipeline.
     health: Arc<HealthState>,
+    /// Storage width applied to tiles at the submit push (stage outputs
+    /// are re-quantized by each pump; see [`StageShared::prec`]).
+    prec: Precision,
 }
 
 impl PipelineService {
@@ -286,6 +291,22 @@ impl PipelineService {
         pipeline: &SpatialPipeline,
         tile_dims: Vec<usize>,
         plan: Arc<FaultPlan>,
+    ) -> Result<PipelineService> {
+        Self::start_with_precision(store, pipeline, tile_dims, plan, Precision::F32)
+    }
+
+    /// [`PipelineService::start`] with an explicit storage precision for
+    /// tiles crossing the pipeline's edges: in a 16-bit mode every tile
+    /// is rounded to the bf16/f16 grid at the submit push and at each
+    /// stage's output emission, so edge traffic is accounted (and the
+    /// ring queues conceptually carry) the reduced width while stage
+    /// kernels still compute in f32.
+    pub fn start_with_precision(
+        store: Arc<ArtifactStore>,
+        pipeline: &SpatialPipeline,
+        tile_dims: Vec<usize>,
+        plan: Arc<FaultPlan>,
+        prec: Precision,
     ) -> Result<PipelineService> {
         let n_stages = pipeline.stages.len();
         ensure!(n_stages > 0, "pipeline service needs at least one stage");
@@ -313,11 +334,7 @@ impl PipelineService {
             .stages
             .iter()
             .map(|s| {
-                let weight_bytes = s
-                    .weights
-                    .iter()
-                    .map(|w| (w.data.len() * std::mem::size_of::<f32>()) as u64)
-                    .sum();
+                let weight_bytes = s.weights.iter().map(Tensor::payload_bytes).sum();
                 StageTelemetry::new(
                     s.name.clone(),
                     format!("{:?}", s.class).to_lowercase(),
@@ -381,6 +398,7 @@ impl PipelineService {
                 policy: policy.clone(),
                 restarts: AtomicUsize::new(0),
                 tiles_seen: AtomicU64::new(0),
+                prec,
             });
             for _ in 0..stage.workers {
                 let pump = StagePump {
@@ -419,6 +437,7 @@ impl PipelineService {
             tile_dims,
             inflight: Arc::new(AtomicUsize::new(0)),
             health,
+            prec,
         })
     }
 
@@ -442,7 +461,10 @@ impl PipelineService {
         let n = inputs.len();
         let inner = Arc::new(TicketInner::new(n, Arc::clone(&self.inflight)));
         let submitted = Instant::now();
-        for (i, t) in inputs.into_iter().enumerate() {
+        for (i, mut t) in inputs.into_iter().enumerate() {
+            // Storage boundary: the tile enters the pipeline at the
+            // session's storage width (identity for f32).
+            t.quantize(self.prec);
             let item = (Arc::clone(&inner), i, Envelope::Ok(t));
             let bytes = env_bytes(&item.2);
             match self.source.push(item) {
@@ -582,6 +604,9 @@ struct StageShared {
     /// Per-stage tile ordinal: the `tile=` coordinate of the injection
     /// grammar counts *computed* tiles on this stage, in pop order.
     tiles_seen: AtomicU64,
+    /// Storage width for the stage's output tiles: quantized once per
+    /// tile at emission, before the push is byte-accounted.
+    prec: Precision,
 }
 
 /// One cooperative stage worker. Owns its in-flight tiles; moves itself
@@ -730,7 +755,10 @@ impl StagePump {
                                 })
                             });
                         match result {
-                            Ok(out) => {
+                            Ok(mut out) => {
+                                // Storage boundary: stage outputs cross
+                                // the ring queue at the session's width.
+                                out.quantize(self.shared.prec);
                                 let stat = self.stat();
                                 stat.compute.record(b0.elapsed());
                                 self.shared

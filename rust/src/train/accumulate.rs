@@ -43,7 +43,7 @@ mod tests {
     use super::*;
 
     fn t(v: &[f32]) -> Option<Tensor> {
-        Some(Tensor { dims: vec![v.len()], data: v.to_vec() })
+        Some(Tensor { dims: vec![v.len()], data: v.to_vec(), prec: crate::runtime::Precision::F32 })
     }
 
     #[test]
@@ -56,7 +56,7 @@ mod tests {
     fn missing_or_mismatched_tiles_are_errors() {
         assert!(mean_in_order(vec![t(&[1.0]), None]).is_err());
         assert!(mean_in_order(Vec::new()).is_err());
-        let bad = vec![t(&[1.0, 2.0]), Some(Tensor { dims: vec![1], data: vec![3.0] })];
+        let bad = vec![t(&[1.0, 2.0]), Some(Tensor::new(vec![1], vec![3.0]).unwrap())];
         assert!(mean_in_order(bad).is_err());
     }
 

@@ -46,7 +46,7 @@ use crate::fault::{
 };
 use crate::queue::{PopError, PushError, RingQueue};
 use crate::runtime::interp::{ExecPlan, Program};
-use crate::runtime::Tensor;
+use crate::runtime::{Precision, Tensor};
 use crate::sched::{self, LiveCount, Scheduler};
 use crate::telemetry::{
     trace, EdgeKind, EdgeStats, PipelineTelemetry, StageTelemetry, TrafficStats,
@@ -59,9 +59,11 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 /// Payload bytes of one envelope (poison moves no tensor data).
+/// Charged at the tensor's *storage* width — a bf16/f16 tile crossing an
+/// edge moves half the bytes of its f32 twin.
 fn env_payload_bytes(env: &Envelope<Tensor>) -> u64 {
     match env {
-        Envelope::Ok(t) => (t.data.len() * std::mem::size_of::<f32>()) as u64,
+        Envelope::Ok(t) => t.payload_bytes(),
         Envelope::Poison(_) => 0,
     }
 }
@@ -233,7 +235,14 @@ impl StepTable {
 /// into the step table, and the shared mutable parameter store.
 pub struct TrainService {
     plan: Arc<TrainPlan>,
+    /// Master parameters — always full f32; the trainer's optimizer
+    /// updates these between steps.
     pub(crate) params: Arc<RwLock<Vec<Tensor>>>,
+    /// The *compute* copy of the parameters stage kernels bind: the same
+    /// store as `params` when the plan runs f32, a separate store
+    /// quantized to the plan's 16-bit grid otherwise (refreshed from the
+    /// masters at every step start, after the optimizer has run).
+    cparams: Arc<RwLock<Vec<Tensor>>>,
     /// Per source port: the queues its tiles fan out to.
     src_routes: Vec<Vec<Arc<RingQueue<SeqTile>>>>,
     table: Arc<StepTable>,
@@ -352,6 +361,18 @@ impl TrainService {
         let params = Arc::new(RwLock::new(
             plan.params.iter().map(|p| p.init.clone()).collect::<Vec<Tensor>>(),
         ));
+        // f32 plans bind kernels straight to the master store (an Arc
+        // bump); 16-bit plans get a distinct quantized compute store.
+        let cparams = if plan.prec == Precision::F32 {
+            Arc::clone(&params)
+        } else {
+            Arc::new(RwLock::new(
+                plan.params
+                    .iter()
+                    .map(|p| p.init.quantized(plan.prec))
+                    .collect::<Vec<Tensor>>(),
+            ))
+        };
         let table = Arc::new(StepTable::new());
         let dead = Arc::new(AtomicBool::new(false));
         let all_latch = Arc::new(AtomicUsize::new(n_stages));
@@ -381,12 +402,12 @@ impl TrainService {
                     .get(si)
                     .map(|s| format!("{:?}", s.class).to_lowercase())
                     .unwrap_or_else(|| "stage".to_string());
+                // Weight traffic is charged at the *compute copy*'s
+                // storage width — the masters stay f32 but never move.
                 let weight_bytes = sp
                     .param_idx
                     .iter()
-                    .map(|&i| {
-                        (plan.params[i].init.data.len() * std::mem::size_of::<f32>()) as u64
-                    })
+                    .map(|&i| (plan.params[i].init.data.len() * plan.prec.bytes()) as u64)
                     .sum();
                 StageTelemetry::new(sp.name.clone(), class, workers_of(si), weight_bytes)
             })
@@ -412,7 +433,8 @@ impl TrainService {
                 program: sp.program.clone(),
                 exec_plan: sp.program.plan(),
                 param_idx: sp.param_idx.clone(),
-                params: Arc::clone(&params),
+                params: Arc::clone(&cparams),
+                prec: plan.prec,
                 in_queues,
                 routes,
                 sink_q: Arc::clone(&sink_q),
@@ -457,6 +479,7 @@ impl TrainService {
         Ok(TrainService {
             plan,
             params,
+            cparams,
             src_routes,
             table,
             svc_live,
@@ -518,13 +541,32 @@ impl TrainService {
             "training pipeline is shut down"
         );
         let step = self.steps.fetch_add(1, Ordering::Relaxed);
+        let mut tiles = tiles;
         let n_tiles = validate_tiles(&self.plan, &tiles)?;
+        if self.plan.prec != Precision::F32 {
+            // Storage boundaries: refresh the stages' compute copy from
+            // the f32 masters (the optimizer ran since the last step),
+            // and round the source tiles to the storage grid before they
+            // enter the pipeline. The pipeline is drained between steps,
+            // so no kernel holds the compute store here.
+            {
+                let master = self.params.read().unwrap();
+                let mut compute = self.cparams.write().unwrap();
+                for (c, m) in compute.iter_mut().zip(master.iter()) {
+                    *c = m.quantized(self.plan.prec);
+                }
+            }
+            for per_src in &mut tiles {
+                for t in per_src {
+                    t.quantize(self.plan.prec);
+                }
+            }
+        }
         self.table.begin(self.plan.taps.len(), n_tiles);
         'feed: for seq in 0..n_tiles {
             for (port, routes) in self.src_routes.iter().enumerate() {
                 for q in routes {
-                    let bytes =
-                        (tiles[port][seq].data.len() * std::mem::size_of::<f32>()) as u64;
+                    let bytes = tiles[port][seq].payload_bytes();
                     let mut payload = (seq, Envelope::Ok(tiles[port][seq].clone()));
                     loop {
                         match q.try_push(payload) {
@@ -689,6 +731,9 @@ struct TrainStageShared {
     exec_plan: ExecPlan,
     param_idx: Vec<usize>,
     params: Arc<RwLock<Vec<Tensor>>>,
+    /// Storage width for this stage's emitted tiles (tiles are rounded
+    /// to the grid before crossing any edge; identity for f32).
+    prec: Precision,
     in_queues: Vec<Arc<RingQueue<SeqTile>>>,
     routes: Vec<Vec<Route>>,
     sink_q: Arc<RingQueue<SinkItem>>,
@@ -964,7 +1009,14 @@ impl TrainPump {
                                         .weight_bytes
                                         .add(stat.weight_bytes_per_tile);
                                     trace::span("train", &stat.name, Some(tile_seq), b0);
-                                    outs.into_iter().map(Envelope::Ok).collect()
+                                    // Storage boundary: outputs cross
+                                    // edges at the plan's storage width.
+                                    outs.into_iter()
+                                        .map(|mut t| {
+                                            t.quantize(self.shared.prec);
+                                            Envelope::Ok(t)
+                                        })
+                                        .collect()
                                 }
                                 Ok(outs) => {
                                     // Wrong arity is a wiring bug, not a
@@ -1194,6 +1246,20 @@ pub fn serial_step(
         plan.params.len()
     );
     let n_tiles = validate_tiles(plan, tiles)?;
+    // Mirror the pipeline's storage boundaries exactly: quantized
+    // compute copies of the params, quantized source tiles, and (below)
+    // quantized stage outputs — so pipeline == serial stays bitwise in
+    // every precision mode. All three are identity for f32.
+    let qparams: Option<Vec<Tensor>> = (plan.prec != Precision::F32)
+        .then(|| params.iter().map(|p| p.quantized(plan.prec)).collect());
+    let params: &[Tensor] = qparams.as_deref().unwrap_or(params);
+    let qtiles: Option<Vec<Vec<Tensor>>> = (plan.prec != Precision::F32).then(|| {
+        tiles
+            .iter()
+            .map(|per_src| per_src.iter().map(|t| t.quantized(plan.prec)).collect())
+            .collect()
+    });
+    let tiles: &[Vec<Tensor>] = qtiles.as_deref().unwrap_or(tiles);
     let exec_plans: Vec<ExecPlan> = plan.stages.iter().map(|s| s.program.plan()).collect();
     // Per-stage input edges by port, plus the sink edges.
     let mut in_edges: Vec<Vec<&crate::coordinator::PipeEdge>> =
@@ -1230,7 +1296,8 @@ pub fn serial_step(
                 })
                 .map_err(|f| f.into_error())?
             };
-            for (p, o) in outs.into_iter().enumerate() {
+            for (p, mut o) in outs.into_iter().enumerate() {
+                o.quantize(plan.prec);
                 vals.insert((si, p), o);
             }
         }

@@ -29,7 +29,7 @@
 use crate::coordinator::{PipeEdge, SpatialPipeline, StageSpec};
 use crate::graph::{EwKind, Graph, NodeId, OpKind, ReduceAxis, ResourceClass};
 use crate::runtime::interp::{Act, Instr, Program, Reg};
-use crate::runtime::{Rng, Tensor};
+use crate::runtime::{Precision, Rng, Tensor};
 use crate::session::lower::{fuse_program, not_streamable, LowerOptions};
 use crate::Result;
 use std::collections::{HashMap, HashSet};
@@ -98,6 +98,11 @@ pub struct TrainPlan {
     pub tile_rows: usize,
     /// Full-batch rows (every source's leading dim).
     pub batch_rows: usize,
+    /// Storage width for streamed tiles and the stages' *compute* copy
+    /// of the parameters. The optimizer always keeps f32 master weights
+    /// ([`ParamSpec::init`] is never quantized); in a 16-bit mode the
+    /// executor re-quantizes the compute copy after each update.
+    pub prec: Precision,
 }
 
 impl TrainPlan {
@@ -488,6 +493,7 @@ pub fn lower_training(g: &Graph, opts: &LowerOptions) -> Result<TrainPlan> {
         taps,
         tile_rows,
         batch_rows,
+        prec: opts.precision,
     })
 }
 

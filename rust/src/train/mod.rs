@@ -78,7 +78,7 @@ impl TrainBatch {
                 } else {
                     (0..numel).map(|_| rng.normal()).collect()
                 };
-                Tensor { dims: src.dims.clone(), data }
+                Tensor { dims: src.dims.clone(), data, prec: crate::runtime::Precision::F32 }
             })
             .collect();
         TrainBatch { inputs }
@@ -110,7 +110,11 @@ pub fn split_batch(plan: &TrainPlan, batch: &TrainBatch) -> Result<Vec<Vec<Tenso
         let tiles: Vec<Tensor> = t
             .data
             .chunks(rows * d)
-            .map(|chunk| Tensor { dims: vec![rows, d], data: chunk.to_vec() })
+            .map(|chunk| Tensor {
+                dims: vec![rows, d],
+                data: chunk.to_vec(),
+                prec: crate::runtime::Precision::F32,
+            })
             .collect();
         out.push(tiles);
     }

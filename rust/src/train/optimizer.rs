@@ -152,7 +152,7 @@ mod tests {
     use super::*;
 
     fn t(v: &[f32]) -> Tensor {
-        Tensor { dims: vec![v.len()], data: v.to_vec() }
+        Tensor { dims: vec![v.len()], data: v.to_vec(), prec: crate::runtime::Precision::F32 }
     }
 
     #[test]

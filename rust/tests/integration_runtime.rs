@@ -66,6 +66,7 @@ fn pallas_kernel_path_matches_reference_through_pjrt() {
                 Tensor {
                     dims: t.dims.clone(),
                     data: (0..numel).map(|_| rng.normal()).collect(),
+                    prec: kitsune::runtime::Precision::F32,
                 }
             } else {
                 rng.he_tensor(&t.dims)
@@ -100,6 +101,7 @@ fn outputs_in_unit_range() {
                 Tensor {
                     dims: t.dims.clone(),
                     data: (0..numel).map(|_| rng.normal()).collect(),
+                    prec: kitsune::runtime::Precision::F32,
                 }
             } else {
                 rng.he_tensor(&t.dims)
@@ -120,10 +122,12 @@ fn train_step_descends_through_pjrt() {
     let x = Tensor {
         dims: x_dims.clone(),
         data: (0..x_dims.iter().product::<usize>()).map(|_| rng.normal()).collect(),
+        prec: kitsune::runtime::Precision::F32,
     };
     let y = Tensor {
         dims: y_dims.clone(),
         data: (0..y_dims.iter().product::<usize>()).map(|_| rng.uniform()).collect(),
+        prec: kitsune::runtime::Precision::F32,
     };
     let mut params: Vec<Tensor> =
         spec.inputs[2..].iter().map(|t| rng.he_tensor(&t.dims)).collect();

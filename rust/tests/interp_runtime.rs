@@ -113,6 +113,7 @@ fn forward_outputs_in_unit_range_and_pallas_variant_matches() {
                 Tensor {
                     dims: t.dims.clone(),
                     data: (0..numel).map(|_| rng.normal()).collect(),
+                    prec: kitsune::runtime::Precision::F32,
                 }
             } else {
                 rng.he_tensor(&t.dims)
@@ -138,10 +139,12 @@ fn train_step_descends_through_store() {
     let x = Tensor {
         dims: spec.inputs[0].dims.clone(),
         data: (0..spec.inputs[0].numel()).map(|_| rng.normal()).collect(),
+        prec: kitsune::runtime::Precision::F32,
     };
     let y = Tensor {
         dims: spec.inputs[1].dims.clone(),
         data: (0..spec.inputs[1].numel()).map(|_| rng.uniform()).collect(),
+        prec: kitsune::runtime::Precision::F32,
     };
     let mut params: Vec<Tensor> =
         spec.inputs[2..].iter().map(|t| rng.he_tensor(&t.dims)).collect();

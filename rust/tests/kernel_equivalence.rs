@@ -1,17 +1,60 @@
-//! Property tests proving the optimized interpreter engine — blocked /
-//! parallel matmul micro-kernels, fused `MatmulBias`/`BiasAct`
-//! instructions, in-place elementwise execution, pooled buffers —
-//! **bitwise-identical** to the retained scalar reference oracle
-//! ([`Program::run_reference`]) over randomized programs and shapes,
-//! including NaN propagation (the kernels have no zero-skip).
+//! Property tests pinning the optimized interpreter engine to the
+//! retained scalar reference oracle ([`Program::run_reference`]) under
+//! the two-tier equivalence contract:
 //!
-//! Also proves the last-use liveness pass honest: an in-place write can
-//! only target a register that no later instruction reads and that is
-//! not a program output.
+//! * **Scalar path** (`KITSUNE_SIMD=0`, forced here via
+//!   `simd::set_vector_enabled(false)`): blocked/parallel matmul
+//!   micro-kernels, fused `MatmulBias`/`BiasAct` instructions, in-place
+//!   elementwise execution and pooled buffers stay **bitwise-identical**
+//!   to the oracle over randomized programs and shapes, including NaN
+//!   propagation (the kernels have no zero-skip).
+//! * **Vector path** (`simd::set_vector_enabled(true)`): results stay
+//!   within [`simd::VECTOR_ULP_BOUND`] ULP of the same oracle
+//!   ([`simd::engine_equivalence`] — bitwise again on hosts whose
+//!   portable fallback keeps scalar op order), and fusion still never
+//!   changes the *engine's* bits.
+//!
+//! Also proves the `Equivalence::Ulp` harness honest (an out-of-bound
+//! kernel is rejected, not absorbed), the bf16/f16 storage conversions
+//! exact (RNE, subnormals, NaN/Inf), a bf16 session end-to-end halves
+//! its edge traffic, and the last-use liveness pass honest: an in-place
+//! write can only target a register that no later instruction reads and
+//! that is not a program output.
 
-use kitsune::runtime::interp::{Act, Instr, Program, Reg};
-use kitsune::runtime::Tensor;
-use kitsune::session::fuse_program;
+use kitsune::runtime::interp::{Act, ExecPlan, Instr, Program, Reg};
+use kitsune::runtime::precision::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+};
+use kitsune::runtime::simd::{self, Equivalence};
+use kitsune::runtime::{Precision, Tensor};
+use kitsune::session::{fuse_program, nerf_trunk_graph, Session};
+use std::sync::Mutex;
+
+/// `set_vector_enabled` is process-global; every test that executes
+/// programs while pinning a specific engine mode serializes on this.
+static ENGINE_LOCK: Mutex<()> = Mutex::new(());
+
+fn engine_lock() -> std::sync::MutexGuard<'static, ()> {
+    ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Scoped engine-mode override: restores the previous mode on drop
+/// (also on panic, so one failing test cannot skew its siblings).
+struct VectorMode(bool);
+
+impl VectorMode {
+    fn set(on: bool) -> Self {
+        let prev = simd::vector_enabled();
+        simd::set_vector_enabled(on);
+        VectorMode(prev)
+    }
+}
+
+impl Drop for VectorMode {
+    fn drop(&mut self) {
+        simd::set_vector_enabled(self.0);
+    }
+}
 
 /// Deterministic xorshift (proptest is unavailable offline).
 struct Rng(u64);
@@ -45,8 +88,16 @@ impl Rng {
     }
 
     fn tensor(&mut self, dims: &[usize]) -> Tensor {
+        self.tensor_scaled(dims, 1.0)
+    }
+
+    /// Entries in [-2·scale, 2·scale]. Vector-tier tests shrink the
+    /// magnitudes so worst-case FMA drift provably sits inside the
+    /// contract's absolute floor (a relative ULP bound is meaningless
+    /// on a contraction output that cancelled toward zero).
+    fn tensor_scaled(&mut self, dims: &[usize], scale: f32) -> Tensor {
         let numel: usize = dims.iter().product::<usize>().max(1);
-        Tensor::new(dims.to_vec(), (0..numel).map(|_| self.val()).collect()).unwrap()
+        Tensor::new(dims.to_vec(), (0..numel).map(|_| self.val() * scale).collect()).unwrap()
     }
 }
 
@@ -68,7 +119,17 @@ fn act_instr(act: Act, a: Reg) -> Instr {
 /// against earlier same-shape registers, gram/colsum/loss side chains,
 /// and randomized outputs (including duplicates and echoed inputs, which
 /// exercise the engine's clone-on-output paths).
-fn gen_case(rng: &mut Rng) -> (Program, Vec<Tensor>) {
+///
+/// `vector_safe` shapes the case for an element-wise tier check against
+/// the scalar oracle on the FMA vector path: entries shrink to
+/// [-1/32, 1/32] (activations then keep every register O(1), so each
+/// kernel's worst-case FMA drift provably stays inside the tier's
+/// absolute floor or its ULP headroom) and the gram side-products are
+/// skipped — they contract squared activations, the one construct whose
+/// rounding drift scales with the term magnitudes while the output can
+/// cancel toward zero, where no relative bound is meaningful.
+fn gen_case(rng: &mut Rng, vector_safe: bool) -> (Program, Vec<Tensor>) {
+    let scale = if vector_safe { 1.0 / 64.0 } else { 1.0 };
     let rows = 1 + rng.below(8);
     let layers = 1 + rng.below(3);
     let mut dims = Vec::with_capacity(layers + 1);
@@ -78,10 +139,10 @@ fn gen_case(rng: &mut Rng) -> (Program, Vec<Tensor>) {
 
     let n_inputs = 1 + 2 * layers;
     let mut inputs: Vec<Tensor> = Vec::with_capacity(n_inputs);
-    inputs.push(rng.tensor(&[rows, dims[0]]));
+    inputs.push(rng.tensor_scaled(&[rows, dims[0]], scale));
     for l in 0..layers {
-        inputs.push(rng.tensor(&[dims[l], dims[l + 1]]));
-        inputs.push(rng.tensor(&[dims[l + 1]]));
+        inputs.push(rng.tensor_scaled(&[dims[l], dims[l + 1]], scale));
+        inputs.push(rng.tensor_scaled(&[dims[l + 1]], scale));
     }
     // NaN injection: diverged values must propagate identically through
     // both engines (no zero-skip, bit-equal payloads).
@@ -194,11 +255,11 @@ fn gen_case(rng: &mut Rng) -> (Program, Vec<Tensor>) {
             instrs.push(Instr::ColSum { a: cur });
             shapes.push(vec![shapes[cur][1]]);
         }
-        if rng.chance(15) {
+        if !vector_safe && rng.chance(15) {
             instrs.push(Instr::MatmulNt { a: cur, b: cur });
             shapes.push(vec![rows, rows]);
         }
-        if rng.chance(15) {
+        if !vector_safe && rng.chance(15) {
             instrs.push(Instr::MatmulTn { a: cur, b: cur });
             let d = shapes[cur][1];
             shapes.push(vec![d, d]);
@@ -237,11 +298,22 @@ fn assert_same(tag: &str, p: &Program, want: &[Tensor], got: &[Tensor]) {
     }
 }
 
+fn assert_tier(tag: &str, p: &Program, tier: Equivalence, want: &[Tensor], got: &[Tensor]) {
+    assert_eq!(want.len(), got.len(), "{tag}: output count\n{p:?}");
+    for (oi, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.dims, g.dims, "{tag}: output {oi} dims\n{p:?}");
+        tier.check(&g.data, &w.data)
+            .unwrap_or_else(|e| panic!("{tag}: output {oi}: {e}\n{p:?}"));
+    }
+}
+
 #[test]
-fn randomized_programs_bitwise_match_reference() {
+fn randomized_programs_scalar_path_bitwise_matches_reference() {
+    let _serial = engine_lock();
+    let _mode = VectorMode::set(false);
     let mut rng = Rng::new(0xA11CE);
     for trial in 0..150 {
-        let (p, inputs) = gen_case(&mut rng);
+        let (p, inputs) = gen_case(&mut rng, false);
         let want = p.run_reference(&inputs).unwrap();
         let got = p.run(&inputs).unwrap();
         assert_same(&format!("trial {trial} optimized"), &p, &want, &got);
@@ -263,47 +335,259 @@ fn randomized_programs_bitwise_match_reference() {
 }
 
 #[test]
-fn large_parallel_kernels_bitwise_match_reference() {
+fn randomized_programs_vector_path_is_ulp_bounded() {
+    let _serial = engine_lock();
+    let _mode = VectorMode::set(true);
+    // Ulp(VECTOR_ULP_BOUND) on FMA hosts; Bitwise where the portable
+    // fallback (plain mul+add, scalar op order) is what actually runs.
+    let tier = simd::engine_equivalence();
+    let mut rng = Rng::new(0x5EED5);
+    // Tier checks against the scalar oracle use vector-safe cases (see
+    // `gen_case`), where the FMA paths' worst-case drift provably fits
+    // the contract even on outputs that cancel toward zero.
+    for trial in 0..80 {
+        let (p, inputs) = gen_case(&mut rng, true);
+        let want = p.run_reference(&inputs).unwrap();
+        let got = p.run(&inputs).unwrap();
+        assert_tier(&format!("trial {trial} vector"), &p, tier, &want, &got);
+
+        // The fused form sits inside the same tier: fused kernels
+        // decompose into exactly the unfused vector sweeps.
+        let fused = fuse_program(&p);
+        let got_fused = fused.run(&inputs).unwrap();
+        assert_tier(&format!("trial {trial} vector fused"), &fused, tier, &want, &got_fused);
+
+        // Determinism: a second vector run reproduces the first.
+        let again = p.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} vector rerun"), &p, &got, &again);
+    }
+    // Engine-internal invariants hold bitwise at ANY magnitude (the
+    // same sweeps run in the same order): fusion must not change the
+    // engine's bits, and reruns must reproduce the first answer —
+    // NaN injection and full [-2, 2] dynamics included.
+    for trial in 0..80 {
+        let (p, inputs) = gen_case(&mut rng, false);
+        let got = p.run(&inputs).unwrap();
+        let fused = fuse_program(&p);
+        let got_fused = fused.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} full-range fused"), &fused, &got, &got_fused);
+        let again = p.run(&inputs).unwrap();
+        assert_same(&format!("trial {trial} full-range rerun"), &p, &got, &again);
+    }
+}
+
+#[test]
+fn large_parallel_kernels_hold_their_tier() {
     // Shapes above the kernel's FLOP threshold, so the row-panel
     // scoped-thread path engages on multi-core hosts (and the blocked
-    // serial path everywhere else) — the bits must match either way.
-    // One NaN is planted to prove the parallel path has no zero-skip.
+    // serial path everywhere else) — scalar mode must match the oracle
+    // bitwise either way, vector mode within its ULP tier. Entries are
+    // scaled to [-1/32, 1/32] so the k=128..144 contractions' worst-case
+    // FMA drift provably sits inside the tier's absolute floor even on
+    // cancelled outputs (scalar-mode bitwise is scale-independent). One
+    // NaN is planted to prove neither path has a zero-skip.
+    const SCALE: f32 = 1.0 / 64.0;
+    let _serial = engine_lock();
     let mut rng = Rng::new(0xBEEF);
     let cases: Vec<(Instr, Vec<usize>, Vec<usize>)> = vec![
         (Instr::Matmul { a: 0, b: 1 }, vec![160, 128], vec![128, 96]),
         (Instr::MatmulTn { a: 0, b: 1 }, vec![128, 160], vec![128, 96]),
         (Instr::MatmulNt { a: 0, b: 1 }, vec![160, 128], vec![96, 128]),
     ];
+    let mut programs: Vec<(String, Program, Vec<Tensor>)> = Vec::new();
     for (instr, da, db) in cases {
-        let p = Program { n_inputs: 2, instrs: vec![instr], outputs: vec![2] };
-        let mut a = rng.tensor(&da);
+        let p = Program { n_inputs: 2, instrs: vec![instr.clone()], outputs: vec![2] };
+        let mut a = rng.tensor_scaled(&da, SCALE);
         a.data[7] = f32::NAN;
-        let b = rng.tensor(&db);
-        let inputs = [a, b];
-        let want = p.run_reference(&inputs).unwrap();
-        let got = p.run(&inputs).unwrap();
-        assert_same(&format!("{instr:?}"), &p, &want, &got);
-        assert!(
-            got[0].data.iter().any(|v| v.is_nan()),
-            "{instr:?}: NaN must propagate through the contraction"
-        );
+        let b = rng.tensor_scaled(&db, SCALE);
+        programs.push((format!("{instr:?}"), p, vec![a, b]));
+    }
+    // Fused bias epilogue at parallel scale.
+    programs.push((
+        "MatmulBias(parallel)".to_string(),
+        Program {
+            n_inputs: 3,
+            instrs: vec![Instr::MatmulBias { a: 0, b: 1, bias: 2 }],
+            outputs: vec![3],
+        },
+        vec![
+            rng.tensor_scaled(&[192, 144], SCALE),
+            rng.tensor_scaled(&[144, 80], SCALE),
+            rng.tensor_scaled(&[80], SCALE),
+        ],
+    ));
+
+    for (tag, p, inputs) in &programs {
+        let want = p.run_reference(inputs).unwrap();
+        {
+            let _mode = VectorMode::set(false);
+            let got = p.run(inputs).unwrap();
+            assert_same(&format!("{tag} scalar"), p, &want, &got);
+        }
+        {
+            let _mode = VectorMode::set(true);
+            let tier = simd::engine_equivalence();
+            let got = p.run(inputs).unwrap();
+            assert_tier(&format!("{tag} vector"), p, tier, &want, &got);
+            assert!(
+                got[0].data.iter().any(|v| v.is_nan()),
+                "{tag}: NaN must propagate through the vector contraction"
+            );
+        }
+    }
+}
+
+#[test]
+fn ulp_tier_rejects_out_of_bound_kernels() {
+    // Harness honesty: the Ulp tier is a bound, not a rubber stamp. A
+    // "kernel" drifting past VECTOR_ULP_BOUND (well above the absolute
+    // floor) must be rejected.
+    let want = [1.0f32, 2.0, 3.0];
+    let mut broken = want;
+    broken[1] = f32::from_bits(want[1].to_bits() + simd::VECTOR_ULP_BOUND + 1);
+    assert!(
+        (broken[1] - want[1]).abs() > simd::ULP_ABS_FLOOR,
+        "test premise: drift must clear the absolute floor"
+    );
+    assert!(Equivalence::Ulp(simd::VECTOR_ULP_BOUND).check(&broken, &want).is_err());
+    assert!(Equivalence::Bitwise.check(&broken, &want).is_err());
+
+    // Within the bound: Ulp passes, Bitwise still refuses.
+    let mut close = want;
+    close[2] = f32::from_bits(want[2].to_bits() + 3);
+    assert!(Equivalence::Ulp(simd::VECTOR_ULP_BOUND).check(&close, &want).is_ok());
+    assert!(Equivalence::Bitwise.check(&close, &want).is_err());
+
+    // NaN discipline: one-sided NaN never passes (even with an infinite
+    // bound); paired NaNs are 0 ULP apart regardless of payload.
+    assert!(Equivalence::Ulp(u32::MAX).check(&[f32::NAN], &[1.0]).is_err());
+    assert!(Equivalence::Ulp(0).check(&[f32::NAN], &[-f32::NAN]).is_ok());
+
+    // The absolute floor only absorbs sub-1e-6 cancellation noise.
+    assert!(Equivalence::Ulp(0).check(&[5.0e-7], &[1.0e-7]).is_ok());
+    assert!(Equivalence::Ulp(0).check(&[5.0e-3], &[1.0e-3]).is_err());
+
+    // Length mismatches are structural failures, not element noise.
+    assert!(Equivalence::Ulp(u32::MAX).check(&[1.0, 2.0], &[1.0]).is_err());
+}
+
+#[test]
+fn f16_conversion_is_exact_rne_with_specials() {
+    // Exhaustive involution: every f16 bit pattern widens exactly and
+    // narrows back to itself — except signaling NaNs, which come back
+    // quieted with their payload preserved.
+    for h in 0..=u16::MAX {
+        let x = f16_bits_to_f32(h);
+        let h2 = f32_to_f16_bits(x);
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x03FF;
+        if exp == 31 && man != 0 && man & 0x0200 == 0 {
+            assert_eq!(h2, h | 0x0200, "sNaN {h:#06x} must quiet, payload kept");
+        } else {
+            assert_eq!(h2, h, "f16 {h:#06x} must round-trip exactly");
+        }
     }
 
-    // Fused bias epilogue at parallel scale.
-    let p = Program {
-        n_inputs: 3,
-        instrs: vec![Instr::MatmulBias { a: 0, b: 1, bias: 2 }],
-        outputs: vec![3],
+    // Round-to-nearest-even at the mantissa boundary.
+    assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+    let tie_down = 1.0 + 0.5f32.powi(11); // halfway to 1+2^-10 -> even (down)
+    assert_eq!(f32_to_f16_bits(tie_down), 0x3C00);
+    let tie_up = 1.0 + 3.0 * 0.5f32.powi(11); // halfway -> even (up)
+    assert_eq!(f32_to_f16_bits(tie_up), 0x3C02);
+
+    // Subnormals: smallest subnormal, underflow-to-zero tie, and the
+    // value just past the tie.
+    assert_eq!(f32_to_f16_bits(0.5f32.powi(24)), 0x0001);
+    assert_eq!(f32_to_f16_bits(0.5f32.powi(25)), 0x0000); // tie -> even (zero)
+    assert_eq!(f32_to_f16_bits(1.5 * 0.5f32.powi(25)), 0x0001);
+    assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+
+    // Overflow: max finite is 65504; the RNE cutover to Inf is 65520.
+    assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+    assert_eq!(f32_to_f16_bits(65519.0), 0x7BFF);
+    assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+    assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+    assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+    let n = f32_to_f16_bits(f32::NAN);
+    assert_eq!(n & 0x7C00, 0x7C00, "NaN keeps the all-ones exponent");
+    assert_ne!(n & 0x03FF, 0, "NaN must not collapse to infinity");
+
+    // Quantize is idempotent on specials too.
+    for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 65519.0, 1.0e-8] {
+        let q = Precision::F16.quantize(x);
+        assert_eq!(q.to_bits(), Precision::F16.quantize(q).to_bits(), "{x}");
+    }
+}
+
+#[test]
+fn bf16_conversion_is_exact_rne_with_specials() {
+    // Exhaustive involution over every bf16 bit pattern; NaNs without
+    // the quiet bit come back quieted with their payload preserved.
+    for b in 0..=u16::MAX {
+        let x = bf16_bits_to_f32(b);
+        let b2 = f32_to_bf16_bits(x);
+        let exp = (b >> 7) & 0xFF;
+        let man = b & 0x7F;
+        if exp == 0xFF && man != 0 && b & 0x0040 == 0 {
+            assert_eq!(b2, b | 0x0040, "sNaN {b:#06x} must quiet, payload kept");
+        } else {
+            assert_eq!(b2, b, "bf16 {b:#06x} must round-trip exactly");
+        }
+    }
+
+    // RNE at the bf16 mantissa boundary (tie exactly between steps).
+    assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80); // tie -> even
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82); // tie -> even
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8001)), 0x3F81); // past tie
+
+    // bf16 shares f32's subnormal exponents: a representable subnormal
+    // survives exactly; overflow carries into the Inf encoding.
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x0001_0000)), 0x0001);
+    assert_eq!(bf16_bits_to_f32(0x0001), f32::from_bits(0x0001_0000));
+    assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7F80); // rounds up to +Inf
+    assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+    assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+    let n = f32_to_bf16_bits(f32::NAN);
+    assert_eq!(n & 0x7F80, 0x7F80);
+    assert_ne!(n & 0x007F, 0, "NaN must not collapse to infinity");
+}
+
+#[test]
+fn bf16_inference_halves_edge_traffic_end_to_end() {
+    // The NeRF trunk, streamed warm, once per storage mode: bf16 must
+    // run end to end and move exactly half the edge bytes (same tile
+    // count, same dims, every payload charged at its storage width).
+    let traffic = |prec: Precision| {
+        let session = Session::builder()
+            .graph(nerf_trunk_graph(64, 6, 16, 3))
+            .tile_rows(4)
+            .precision(prec)
+            .build()
+            .unwrap();
+        assert_eq!(session.precision(), prec);
+        let tiles = session.make_tiles(8, 0xF00D).unwrap();
+        let out = session.run(tiles).unwrap();
+        assert_eq!(out.outputs.len(), 8);
+        for t in &out.outputs {
+            assert!(
+                t.data.iter().all(|v| v.is_finite()),
+                "{prec:?} inference produced non-finite output"
+            );
+        }
+        let snap = session.telemetry().expect("warm session").traffic.snapshot();
+        session.shutdown();
+        snap.source_bytes + snap.onchip_bytes + snap.sink_bytes
     };
-    let inputs = [rng.tensor(&[192, 144]), rng.tensor(&[144, 80]), rng.tensor(&[80])];
-    let want = p.run_reference(&inputs).unwrap();
-    let got = p.run(&inputs).unwrap();
-    assert_same("MatmulBias(parallel)", &p, &want, &got);
+    let full = traffic(Precision::F32);
+    let half = traffic(Precision::Bf16);
+    assert!(full > 0, "f32 run must account edge traffic");
+    assert_eq!(half * 2, full, "bf16 tiles must cross every edge at half width");
 }
 
 /// Replicates the engine's in-place eligibility test for instruction
 /// `idx` consuming operand `r` (see `take_if_dead` in runtime/interp.rs).
-fn would_take_in_place(p: &Program, plan: &kitsune::runtime::interp::ExecPlan, idx: usize, r: Reg) -> bool {
+fn would_take_in_place(p: &Program, plan: &ExecPlan, idx: usize, r: Reg) -> bool {
     r >= p.n_inputs && plan.last_read[r] == Some(idx) && !plan.is_output[r]
 }
 
@@ -311,7 +595,7 @@ fn would_take_in_place(p: &Program, plan: &kitsune::runtime::interp::ExecPlan, i
 fn liveness_pass_never_aliases_a_live_register() {
     let mut rng = Rng::new(0x11FE);
     for trial in 0..150 {
-        let (p, _inputs) = gen_case(&mut rng);
+        let (p, _inputs) = gen_case(&mut rng, false);
         let plan = p.plan();
         let n_regs = p.n_inputs + p.instrs.len();
         assert_eq!(plan.last_read.len(), n_regs);
